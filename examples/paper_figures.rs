@@ -1,0 +1,40 @@
+//! Regenerate every paper figure and table into `results/` and print the
+//! paper-vs-measured summary used by EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example paper_figures [-- batch]`
+
+use std::path::Path;
+
+use agos::report::{generate, ReportCtx};
+
+fn main() -> anyhow::Result<()> {
+    let batch = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let ctx = ReportCtx::with_batch(batch);
+    let out = Path::new("results");
+    std::fs::create_dir_all(out)?;
+
+    for fig in generate("all", &ctx)? {
+        print!("{}", fig.render());
+        fig.save(out)?;
+        println!("-> results/{}.json\n", fig.id);
+    }
+
+    // Headline summary (paper band vs ours).
+    let fig15 = &generate("fig15", &ctx)?[0];
+    println!("== headline check (paper Fig 15 overall speedups) ==");
+    let expected = [
+        ("vgg16", 2.00),
+        ("googlenet", 2.18),
+        ("resnet18", 1.66),
+        ("densenet121", 1.70),
+        ("mobilenet_v1", 2.13),
+    ];
+    for (net, paper) in expected {
+        let ours = fig15.value(net, "speedup").unwrap_or(f64::NAN);
+        println!("  {net:<14} paper {paper:.2}x   ours {ours:.2}x");
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT artifacts (JAX/Pallas, compiled once by `make
+//!    artifacts`) into the rust PJRT runtime.
+//! 2. Execute the Pallas GEMM from rust — no python on the request path.
+//! 3. Run one real training step of the small CNN.
+//! 4. Simulate the paper's accelerator on a VGG-16 backward pass.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::nn::{zoo, Phase};
+use agos::runtime::{HostTensor, Runtime};
+use agos::sim::simulate_network;
+use agos::sparsity::SparsityModel;
+use agos::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1+2: PJRT runtime executes the Pallas GEMM artifact ------------
+    let mut rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+    let n = 64;
+    let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.25).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32) * 0.5).collect();
+    let out = rt.run(
+        "gemm_demo",
+        &[
+            HostTensor::f32(vec![n, n], a)?,
+            HostTensor::f32(vec![n, n], b)?,
+        ],
+    )?;
+    println!(
+        "pallas GEMM: {}x{} result, first element {:.3}",
+        out[0].shape()[0],
+        out[0].shape()[1],
+        out[0].as_f32()?[0]
+    );
+
+    // ---- 3: one real training step ---------------------------------------
+    let params = rt.manifest.load_initial_params()?;
+    let (batch, img, ch) = (rt.manifest.batch, rt.manifest.img, rt.manifest.in_ch);
+    let mut rng = Pcg32::new(1);
+    let x: Vec<f32> = (0..batch * img * img * ch).map(|_| rng.gauss() as f32).collect();
+    let labels: Vec<i32> =
+        (0..batch).map(|_| rng.below(rt.manifest.num_classes as u32) as i32).collect();
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::f32(vec![batch, img, img, ch], x)?);
+    inputs.push(HostTensor::i32(vec![batch], labels)?);
+    let step_out = rt.run("train_step", &inputs)?;
+    println!(
+        "train_step: loss {:.4} ({} params updated)",
+        step_out[params.len()].as_f32()?[0],
+        params.len()
+    );
+
+    // ---- 4: accelerator simulation ---------------------------------------
+    let net = zoo::vgg16();
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 4, ..SimOptions::default() };
+    let model = SparsityModel::synthetic(opts.seed);
+    let dc = simulate_network(&net, &cfg, &opts, &model, Scheme::Dense);
+    let best = simulate_network(&net, &cfg, &opts, &model, Scheme::InOutWr);
+    println!(
+        "VGG-16 BP on the accelerator: {:.2}x speedup from IN+OUT+WR \
+         ({:.0} -> {:.0} kcycles)",
+        dc.phase(Phase::Backward).cycles / best.phase(Phase::Backward).cycles,
+        dc.phase(Phase::Backward).cycles / 1e3,
+        best.phase(Phase::Backward).cycles / 1e3,
+    );
+    Ok(())
+}

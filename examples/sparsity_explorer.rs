@@ -1,0 +1,63 @@
+//! Sparsity-sweep ablation: how does the speedup of each scheme scale
+//! with the activation-sparsity level, and where does output sparsity
+//! overtake input sparsity? (The design-choice sweep DESIGN.md calls out:
+//! the paper's §3.2 intuition, quantified on our model.)
+//!
+//! Run with: `cargo run --release --example sparsity_explorer`
+
+use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::sim::{simulate_layer, LayerTask};
+use agos::util::rng::Pcg32;
+
+fn main() {
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions::default();
+
+    // A representative mid-network conv: 128ch 28x28, 3x3 filters.
+    let mk = |s: f64| LayerTask {
+        name: "sweep".into(),
+        m: 128,
+        u: 28,
+        v: 28,
+        crs: 1152.0,
+        in_sparsity: Some(s),
+        out_sparsity: Some(s),
+        input_elems: 128.0 * 30.0 * 30.0,
+        weight_elems: 128.0 * 1152.0,
+    };
+
+    println!("{:>9} {:>10} {:>10} {:>10} {:>14}", "sparsity", "IN", "IN+OUT", "IN+OUT+WR", "OUT-only gain");
+    for pct in (10..=90).step_by(10) {
+        let s = pct as f64 / 100.0;
+        let task = mk(s);
+        let mut cycles = std::collections::BTreeMap::new();
+        for scheme in Scheme::ALL {
+            let mut rng = Pcg32::new(99);
+            let r = simulate_layer(&task, &cfg, &opts, scheme, &mut rng);
+            cycles.insert(scheme.label(), r.cycles);
+        }
+        let dc = cycles["DC"];
+        println!(
+            "{:>8}% {:>10.2} {:>10.2} {:>10.2} {:>14.2}",
+            pct,
+            dc / cycles["IN"],
+            dc / cycles["IN+OUT"],
+            dc / cycles["IN+OUT+WR"],
+            cycles["IN"] / cycles["IN+OUT"],
+        );
+    }
+
+    println!("\nBN-network scenario (gradient input is dense, only OUT applies):");
+    println!("{:>9} {:>10} {:>10}", "sparsity", "IN(=DC)", "OUT");
+    for pct in (10..=90).step_by(20) {
+        let s = pct as f64 / 100.0;
+        let task = LayerTask { in_sparsity: None, ..mk(s) };
+        let mut rng = Pcg32::new(99);
+        let dc = simulate_layer(&task, &cfg, &opts, Scheme::Dense, &mut rng).cycles;
+        let mut rng = Pcg32::new(99);
+        let inp = simulate_layer(&task, &cfg, &opts, Scheme::In, &mut rng).cycles;
+        let mut rng = Pcg32::new(99);
+        let out = simulate_layer(&task, &cfg, &opts, Scheme::InOut, &mut rng).cycles;
+        println!("{:>8}% {:>10.2} {:>10.2}", pct, dc / inp, dc / out);
+    }
+}

@@ -1,0 +1,125 @@
+"""AOT-lower the L2 entry points to HLO text for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Outputs (under ``--out-dir``, default ``../artifacts``):
+
+    train_step.hlo.txt    -- (10 params, x, labels) -> (10 params, loss)
+    step_traces.hlo.txt   -- (10 params, x, labels) -> (loss, a1..a4, g1..g4)
+    gemm_demo.hlo.txt     -- (a, b) -> (a @ b,)    [quickstart]
+    params/<name>.bin     -- initial parameters, raw little-endian f32
+    manifest.json         -- entry metadata: inputs/outputs, shapes,
+                             dtypes, hyper-parameters
+
+Run via ``make artifacts`` (python is never on the rust request path).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_entry(fn, example_args, path: pathlib.Path) -> dict:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    out_tree = jax.eval_shape(fn, *example_args)
+    flat_out = jax.tree_util.tree_leaves(out_tree)
+    return {
+        "file": path.name,
+        "inputs": [spec_of(a) for a in example_args],
+        "outputs": [spec_of(o) for o in flat_out],
+        "hlo_bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    (out / "params").mkdir(parents=True, exist_ok=True)
+
+    params = M.init_params(args.seed)
+    flat = M.params_list(params)
+    x, labels = M.example_batch(M.BATCH, args.seed)
+
+    manifest = {
+        "format": "hlo-text",
+        "hyperparams": {
+            "img": M.IMG,
+            "in_ch": M.IN_CH,
+            "num_classes": M.NUM_CLASSES,
+            "batch": M.BATCH,
+            "lr": M.LR,
+            "seed": args.seed,
+            "param_order": M.PARAM_ORDER,
+            "conv_specs": [
+                {"name": n, "rscm": list(spec), "stride": s}
+                for (n, spec, s) in M.CONV_SPECS
+            ],
+        },
+        "entries": {},
+        "params": {},
+    }
+
+    # --- initial parameters -------------------------------------------------
+    for name, arr in zip(M.PARAM_ORDER, flat):
+        arr_np = np.asarray(arr, dtype=np.float32)
+        fname = f"params/{name}.bin"
+        (out / fname).write_bytes(arr_np.astype("<f4").tobytes())
+        manifest["params"][name] = {"file": fname, "shape": list(arr_np.shape)}
+
+    # --- entries -------------------------------------------------------------
+    spec_args = tuple(flat) + (x, labels)
+
+    def train_step_entry(*a):
+        return M.train_step(*a)
+
+    def step_traces_entry(*a):
+        return M.step_traces(*a)
+
+    manifest["entries"]["train_step"] = lower_entry(
+        train_step_entry, spec_args, out / "train_step.hlo.txt"
+    )
+    manifest["entries"]["step_traces"] = lower_entry(
+        step_traces_entry, spec_args, out / "step_traces.hlo.txt"
+    )
+
+    a = jnp.zeros((64, 64), jnp.float32)
+    b = jnp.zeros((64, 64), jnp.float32)
+    manifest["entries"]["gemm_demo"] = lower_entry(
+        M.gemm_demo, (a, b), out / "gemm_demo.hlo.txt"
+    )
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    total = sum(e["hlo_bytes"] for e in manifest["entries"].values())
+    print(f"wrote {len(manifest['entries'])} entries ({total} HLO bytes) to {out}")
+
+
+if __name__ == "__main__":
+    main()

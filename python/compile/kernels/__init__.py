@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for the AGOS reproduction.
+
+Every kernel is authored for TPU-style execution (VMEM tiles, MXU matmul)
+but lowered with ``interpret=True`` so the CPU PJRT client can execute the
+resulting HLO -- see DESIGN.md "Hardware-Adaptation".
+
+Modules:
+    gemm             -- tiled dense GEMM (the workhorse behind conv/fc)
+    masked_bwd_gemm  -- the paper's contribution at kernel level: backward
+                        GEMM with ReLU-mask *output sparsity* block skipping
+    relu             -- fused ReLU forward + zero-footprint mask emission
+    ref              -- pure-jnp oracles for all of the above
+"""

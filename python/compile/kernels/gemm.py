@@ -1,0 +1,115 @@
+"""Tiled dense GEMM as a Pallas kernel.
+
+This is the MXU-shaped building block behind every conv (via im2col) and
+fully-connected layer in the L2 model. The grid is (M/bm, N/bn, K/bk) with
+a VMEM accumulator tile revisited across the K axis — the canonical TPU
+matmul schedule. Block shapes default to (128, 128, 128)-capped tiles so a
+double-buffered pair of input tiles plus the accumulator stays well under
+VMEM (see DESIGN.md section 8 for the footprint arithmetic).
+
+Lowered with ``interpret=True``: on CPU the same HLO executes through the
+PJRT CPU client; on a real TPU the identical kernel body would lower to a
+Mosaic custom call.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bk) x (bk, bn) contribution into the (bm, bn) output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU path: bf16/f32 matmul with f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_block(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is <= cap (prefers powers of two)."""
+    for cand in (cap, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= cap and dim % cand == 0:
+            return cand
+    return 1
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def _ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def auto_blocks(m: int, k: int, n: int, cap: int = 128):
+    """Block shapes adapted to the problem: never pad an axis beyond the
+    next power of two (a 27-deep im2col GEMM must not be padded to 128 —
+    that inflated CPU interpret-mode work ~5x; see EXPERIMENTS.md §Perf)."""
+    return (
+        min(cap, _ceil_pow2(m)),
+        min(cap, _ceil_pow2(n)),
+        min(cap, _ceil_pow2(k)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 0, bn: int = 0, bk: int = 0):
+    """``x @ y`` via the Pallas kernel.
+
+    Arbitrary (M, K) x (K, N) shapes: inputs are zero-padded up to block
+    multiples (zero rows/cols contribute nothing) and the result is sliced
+    back. Accumulation is always f32. Block sizes default to
+    `auto_blocks` (pass explicit values to override).
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shapes {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    abm, abn, abk = auto_blocks(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n].astype(jnp.promote_types(x.dtype, jnp.float32))
+
+
+def vmem_footprint_bytes(bm: int = 128, bn: int = 128, bk: int = 128,
+                         bytes_per_elem: int = 4, double_buffered: bool = True):
+    """Estimated VMEM bytes for the chosen block shapes (for DESIGN.md §8).
+
+    Two input tiles + one accumulator tile; double buffering doubles the
+    *input* tiles only (the accumulator is revisited, not re-fetched).
+    """
+    inputs = (bm * bk + bk * bn) * bytes_per_elem
+    acc = bm * bn * 4  # f32 accumulator
+    return inputs * (2 if double_buffered else 1) + acc

@@ -1,0 +1,112 @@
+"""Masked backward GEMM — the paper's *output sparsity*, TPU-adapted.
+
+Paper setting (section 3.2, Fig 5): in the chain ``CONV1 -> ReLU -> CONV2``
+the backward pass computes ``delta2 = delta3 @ W2^T`` and then
+``delta1 = delta2 * relu_mask`` where ``relu_mask`` is the zero footprint
+of the *forward* activation. Every output location where the mask is zero
+is wasted work — it can be skipped *before* it is computed, because the
+mask is known from the forward pass.
+
+The ASIC skips individual output neurons per computation lane. A TPU has
+no per-lane skip, so the insight is re-tiled (DESIGN.md Hardware-
+Adaptation): the mask is consulted at *block* granularity. For each
+(bm, bn) output tile we reduce its mask block to an occupancy bit; dead
+tiles skip the whole K-loop of MXU passes and write zeros. Live tiles
+compute densely and apply the mask element-wise on the final K step —
+per-element skipping does not pay on a systolic array, but a skipped tile
+saves both the MXU passes and (with scalar-prefetch grid filtering on real
+hardware) the HBM->VMEM transfers of its operand tiles.
+
+The occupancy test uses the mask block already mapped into VMEM; the MXU
+work inside a dead tile is fully elided by ``pl.when``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import _pad_to, auto_blocks
+
+
+def _masked_kernel(dy_ref, wt_ref, mask_ref, o_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Occupancy of this output tile: any surviving (non-masked) element?
+    occupied = jnp.any(mask_ref[...] != 0)
+
+    @pl.when(occupied)
+    def _compute():
+        o_ref[...] += jnp.dot(
+            dy_ref[...], wt_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+    @pl.when(k == nk - 1)
+    def _apply_mask():
+        # Element-wise ReLU-derivative application (Hadamard with the
+        # 0/1 mask). Dead tiles stay at their zero initialization.
+        o_ref[...] *= mask_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def masked_bwd_matmul(dy, wt, mask, *, bm: int = 0, bn: int = 0, bk: int = 0):
+    """``(dy @ wt) * mask`` with block-granular output skipping.
+
+    Args:
+        dy:   (M, K) incoming gradient (may itself be sparse — input
+              sparsity; on TPU that is exploited upstream, not here).
+        wt:   (K, N) transposed weights.
+        mask: (M, N) 0/1 ReLU zero-footprint from the forward pass.
+
+    Returns:
+        (M, N) f32 gradient with the mask applied.
+    """
+    if dy.ndim != 2 or wt.ndim != 2 or mask.ndim != 2:
+        raise ValueError("masked_bwd_matmul expects 2-D operands")
+    m, k = dy.shape
+    k2, n = wt.shape
+    if k != k2 or mask.shape != (m, n):
+        raise ValueError(f"shape mismatch dy={dy.shape} wt={wt.shape} mask={mask.shape}")
+    abm, abn, abk = auto_blocks(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
+    dyp = _pad_to(_pad_to(dy, bm, 0), bk, 1)
+    wtp = _pad_to(_pad_to(wt, bk, 0), bn, 1)
+    maskp = _pad_to(_pad_to(mask, bm, 0), bn, 1)
+    mp, kp = dyp.shape
+    _, np_ = wtp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(dyp, wtp, maskp)
+    return out[:m, :n]
+
+
+def block_skip_fraction(mask, bm: int = 128, bn: int = 128):
+    """Fraction of (bm, bn) output tiles that are entirely dead.
+
+    This is the structural speedup the TPU adaptation realizes (the ASIC
+    realizes the *element*-level fraction; see sim/ for that model).
+    """
+    mask = jnp.asarray(mask)
+    m, n = mask.shape
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    padded = jnp.pad(mask, ((0, mp - m), (0, np_ - n)))
+    blocks = padded.reshape(mp // bm, bm, np_ // bn, bn)
+    occupancy = jnp.any(blocks != 0, axis=(1, 3))
+    return 1.0 - jnp.mean(occupancy.astype(jnp.float32))

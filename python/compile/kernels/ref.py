@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: `python/tests/` asserts the Pallas
+kernels match these within float tolerance across hypothesis-driven
+shape/dtype/sparsity sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Dense GEMM oracle (f32 accumulation, like the kernel)."""
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def masked_bwd_matmul_ref(dy, wt, mask):
+    """(dy @ wt) * mask -- what output sparsity must be numerically
+    indistinguishable from."""
+    return matmul_ref(dy, wt) * mask.astype(jnp.float32)
+
+
+def relu_with_mask_ref(x):
+    mask = (x > 0).astype(x.dtype)
+    return x * mask, mask

@@ -1,0 +1,61 @@
+"""Fused ReLU forward + zero-footprint mask emission, as a Pallas kernel.
+
+The forward pass must record *where* activations were zeroed: that
+footprint is exactly the backward-pass output-sparsity oracle (paper
+section 3.2). Fusing the mask emission into the ReLU avoids a second pass
+over the activation tensor — on the ASIC this is the "pool and encoder
+unit" attached to the PE register array; on TPU it is a second VMEM output
+written in the same grid step.
+
+The mask is emitted as f32 0/1 (not bool) so it feeds the Hadamard in
+``masked_bwd_gemm`` and the NZ-encoder path downstream without a cast.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relu_mask_kernel(x_ref, y_ref, m_ref):
+    x = x_ref[...]
+    mask = (x > 0).astype(y_ref.dtype)
+    y_ref[...] = x * mask
+    m_ref[...] = mask
+
+
+def _flat_block(n: int) -> int:
+    for cand in (4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+@jax.jit
+def relu_with_mask(x):
+    """ReLU(x) and its 0/1 zero-footprint mask, any shape.
+
+    Returns ``(y, mask)`` with ``y = max(x, 0)`` and
+    ``mask = (x > 0)`` as the same dtype as ``y``.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = _flat_block(n)
+    grid = (n // block,)
+    y, m = pl.pallas_call(
+        _relu_mask_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=True,
+    )(flat)
+    return y.reshape(shape), m.reshape(shape)

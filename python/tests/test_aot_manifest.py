@@ -1,0 +1,60 @@
+"""AOT artifact contract: manifest matches the files and the model config."""
+
+import json
+import pathlib
+
+import pytest
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_entries_present_with_files(manifest):
+    for name in ("train_step", "step_traces", "gemm_demo"):
+        entry = manifest["entries"][name]
+        f = ART / entry["file"]
+        assert f.exists() and f.stat().st_size == entry["hlo_bytes"]
+
+
+def test_hlo_is_text_not_proto(manifest):
+    head = (ART / manifest["entries"]["train_step"]["file"]).read_text()[:200]
+    assert "HloModule" in head
+
+
+def test_train_step_signature(manifest):
+    from compile import model as M
+
+    e = manifest["entries"]["train_step"]
+    # 10 params + x + labels
+    assert len(e["inputs"]) == len(M.PARAM_ORDER) + 2
+    # 10 params + loss
+    assert len(e["outputs"]) == len(M.PARAM_ORDER) + 1
+    assert e["outputs"][-1]["shape"] == []
+    x_spec = e["inputs"][-2]
+    assert x_spec["shape"] == [M.BATCH, M.IMG, M.IMG, M.IN_CH]
+
+
+def test_step_traces_signature(manifest):
+    e = manifest["entries"]["step_traces"]
+    assert len(e["outputs"]) == 9
+    # a_i and g_i shapes pair up
+    for i in range(1, 5):
+        assert e["outputs"][i]["shape"] == e["outputs"][i + 4]["shape"]
+
+
+def test_params_files_match_shapes(manifest):
+    for name, meta in manifest["params"].items():
+        f = ART / meta["file"]
+        n = 1
+        for d in meta["shape"]:
+            n *= d
+        assert f.stat().st_size == 4 * n, name

@@ -1,0 +1,87 @@
+"""Pallas GEMM kernel vs the pure-jnp oracle, hypothesis-driven."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm import matmul, vmem_footprint_bytes, _pick_block, _pad_to
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    x = rand(seed, (m, k), jnp.float32)
+    y = rand(seed + 1, (k, n), jnp.float32)
+    got = matmul(x, y, bm=32, bn=32, bk=32)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 17, 64]),
+    k=st.sampled_from([8, 33, 64]),
+    n=st.sampled_from([8, 19, 64]),
+    seed=st.integers(0, 100),
+)
+def test_matmul_matches_ref_bf16(m, k, n, seed):
+    x = rand(seed, (m, k), jnp.bfloat16)
+    y = rand(seed + 7, (k, n), jnp.bfloat16)
+    got = matmul(x, y, bm=32, bn=32, bk=32)
+    want = matmul_ref(x, y)
+    # bf16 inputs, f32 accumulation: tolerance driven by input rounding.
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (64, 64, 64)])
+def test_matmul_block_shape_independent(blocks):
+    bm, bn, bk = blocks
+    x = rand(3, (40, 24), jnp.float32)
+    y = rand(4, (24, 56), jnp.float32)
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, y)), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((3, 4))
+    y = jnp.zeros((5, 6))
+    with pytest.raises(ValueError):
+        matmul(x, y)
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3,)), y)
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 32, 96, 100, 1024]:
+        b = _pick_block(dim, 128)
+        assert dim % b == 0 and b <= 128
+
+
+def test_pad_to_shapes():
+    x = jnp.ones((5, 7))
+    assert _pad_to(x, 8, 0).shape == (8, 7)
+    assert _pad_to(x, 7, 1).shape == (5, 7)
+    # padded region is zero
+    assert float(_pad_to(x, 8, 0)[5:].sum()) == 0.0
+
+
+def test_vmem_footprint_under_budget():
+    # default blocks with double buffering must fit a 16 MB VMEM easily
+    assert vmem_footprint_bytes() < 16 * 1024 * 1024
+    assert vmem_footprint_bytes(double_buffered=False) < vmem_footprint_bytes()

@@ -1,0 +1,96 @@
+"""Output-sparsity masked backward GEMM vs oracle + skip-accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.masked_bwd_gemm import masked_bwd_matmul, block_skip_fraction
+from compile.kernels.ref import masked_bwd_matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def rand_mask(key, shape, sparsity):
+    u = jax.random.uniform(jax.random.PRNGKey(key), shape)
+    return (u >= sparsity).astype(jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 64),
+    n=st.integers(1, 80),
+    sparsity=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_matches_ref(m, k, n, sparsity, seed):
+    dy = rand(seed, (m, k))
+    wt = rand(seed + 1, (k, n))
+    mask = rand_mask(seed + 2, (m, n), sparsity)
+    got = masked_bwd_matmul(dy, wt, mask, bm=16, bn=16, bk=16)
+    want = masked_bwd_matmul_ref(dy, wt, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_all_dead_mask_yields_zero():
+    dy, wt = rand(0, (64, 32)), rand(1, (32, 64))
+    mask = jnp.zeros((64, 64))
+    out = masked_bwd_matmul(dy, wt, mask, bm=16, bn=16, bk=16)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_all_live_mask_equals_dense():
+    dy, wt = rand(2, (48, 32)), rand(3, (32, 48))
+    mask = jnp.ones((48, 48))
+    out = masked_bwd_matmul(dy, wt, mask, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(dy @ wt), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_footprint_containment():
+    """Output zero-footprint must contain the mask's zero-footprint."""
+    dy, wt = rand(4, (64, 16)), rand(5, (16, 64))
+    mask = rand_mask(6, (64, 64), 0.6)
+    out = np.asarray(masked_bwd_matmul(dy, wt, mask, bm=16, bn=16, bk=16))
+    assert np.all(out[np.asarray(mask) == 0] == 0.0)
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        masked_bwd_matmul(jnp.zeros((4, 4)), jnp.zeros((5, 4)), jnp.zeros((4, 4)))
+    with pytest.raises(ValueError):
+        masked_bwd_matmul(jnp.zeros((4, 4)), jnp.zeros((4, 4)), jnp.zeros((3, 4)))
+
+
+@pytest.mark.parametrize("sparsity,expect_lo,expect_hi", [
+    (0.0, 0.0, 0.0),
+    (1.0, 1.0, 1.0),
+])
+def test_block_skip_extremes(sparsity, expect_lo, expect_hi):
+    mask = rand_mask(7, (256, 256), sparsity)
+    frac = float(block_skip_fraction(mask, 16, 16))
+    assert expect_lo <= frac <= expect_hi
+
+
+def test_block_skip_structured():
+    """A mask dead in exactly half its tiles reports 0.5 skip."""
+    mask = jnp.ones((64, 64))
+    mask = mask.at[:32, :].set(0.0)
+    assert abs(float(block_skip_fraction(mask, 32, 32)) - 0.5) < 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(sparsity=st.floats(0.1, 0.9), seed=st.integers(0, 1000))
+def test_block_skip_monotone_in_block_size(sparsity, seed):
+    """Smaller tiles can only skip more (finer granularity)."""
+    mask = rand_mask(seed, (128, 128), sparsity)
+    small = float(block_skip_fraction(mask, 8, 8))
+    large = float(block_skip_fraction(mask, 64, 64))
+    assert small >= large - 1e-6

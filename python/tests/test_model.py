@@ -1,0 +1,140 @@
+"""L2 model: hand-written backward vs jax.grad, shapes, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+BATCH = 4  # small batch keeps interpret-mode tests quick
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(0)
+    x, labels = M.example_batch(BATCH, 0)
+    logits, acts, masks, cols, pooled = M.forward(params, x)
+    return params, x, labels, logits, acts, masks, cols, pooled
+
+
+def test_forward_shapes(setup):
+    params, x, labels, logits, acts, masks, cols, pooled = setup
+    assert logits.shape == (BATCH, M.NUM_CLASSES)
+    assert acts[1].shape == (BATCH, 32, 32, 16)
+    assert acts[2].shape == (BATCH, 16, 16, 32)
+    assert acts[3].shape == (BATCH, 16, 16, 32)
+    assert acts[4].shape == (BATCH, 8, 8, 64)
+    assert pooled.shape == (BATCH, M.FC_IN)
+    for i in range(1, 5):
+        assert masks[i].shape == acts[i].shape
+
+
+def test_loss_matches_reference_model(setup):
+    params, x, labels, *_ = setup
+    l1 = float(M.loss_fn(params, x, labels))
+    l2 = float(M.loss_ref(params, x, labels))
+    assert abs(l1 - l2) < 1e-4, (l1, l2)
+
+
+def test_handwritten_grads_match_autodiff(setup):
+    params, x, labels, logits, acts, masks, cols, pooled = setup
+    grads, _ = M.backward(params, x, labels, logits, acts, masks, cols, pooled)
+    ref = jax.grad(M.loss_ref)(params, x, labels)
+    for k in M.PARAM_ORDER:
+        a, b = np.asarray(grads[k]), np.asarray(ref[k])
+        denom = np.max(np.abs(b)) + 1e-8
+        assert np.max(np.abs(a - b)) / denom < 1e-4, k
+
+
+def test_masks_record_zero_footprint(setup):
+    _, _, _, _, acts, masks, _, _ = setup
+    for i in range(1, 5):
+        a, m = np.asarray(acts[i]), np.asarray(masks[i])
+        assert np.all((a > 0) == (m == 1.0))
+        assert np.all(a[m == 0] == 0)
+
+
+def test_train_step_decreases_loss():
+    params = M.init_params(0)
+    flat = M.params_list(params)
+    x, labels = M.example_batch(BATCH, 1)
+    out = M.train_step(*flat, x, labels)
+    loss0 = float(out[-1])
+    flat = list(out[:-1])
+    # a few more steps on the same batch must reduce the loss
+    for _ in range(3):
+        out = M.train_step(*flat, x, labels)
+        flat = list(out[:-1])
+    loss3 = float(out[-1])
+    assert loss3 < loss0, (loss0, loss3)
+
+
+def test_step_traces_output_contract():
+    params = M.init_params(0)
+    flat = M.params_list(params)
+    x, labels = M.example_batch(BATCH, 2)
+    out = M.step_traces(*flat, x, labels)
+    assert len(out) == 1 + 4 + 4
+    loss = out[0]
+    assert loss.shape == ()
+    for i in range(1, 5):
+        assert out[i].shape == out[i + 4].shape  # a_i matches g_i
+
+
+def test_im2col_feature_order():
+    """im2col feature order must be (r, s, c) to match W.reshape."""
+    x = jnp.arange(2 * 4 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 4, 3)
+    cols = M.im2col(x, 3, 3, 1, 1)
+    assert cols.shape == (2, 4, 4, 27)
+    # centre tap (r=1,s=1) of the patch at (1,1) is x[:,1,1,:]
+    np.testing.assert_array_equal(
+        np.asarray(cols[:, 1, 1, 4 * 3 : 5 * 3]), np.asarray(x[:, 1, 1, :])
+    )
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_matches_lax(stride):
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5))
+    y, _ = M.conv2d(x, w, jnp.zeros(5), stride)
+    ref = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), ((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_bwd_input_matches_vjp(stride):
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, 3, 5))
+    f = lambda xx: jax.lax.conv_general_dilated(
+        xx, w, (stride, stride), ((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = f(x)
+    dy = jax.random.normal(jax.random.PRNGKey(4), y.shape)
+    _, vjp = jax.vjp(f, x)
+    want = vjp(dy)[0]
+    got = M.conv2d_bwd_input(dy, w, stride, (8, 8))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_bwd_weights_matches_vjp(stride):
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 3, 5))
+    f = lambda ww: jax.lax.conv_general_dilated(
+        x, ww, (stride, stride), ((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = f(w)
+    dy = jax.random.normal(jax.random.PRNGKey(7), y.shape)
+    _, vjp = jax.vjp(f, w)
+    want = vjp(dy)[0]
+    _, cols = M.conv2d(x, w, jnp.zeros(5), stride)
+    got = M.conv2d_bwd_weights(cols, dy).reshape(3, 3, 3, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

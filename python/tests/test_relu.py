@@ -1,0 +1,37 @@
+"""Fused ReLU+mask kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.relu import relu_with_mask
+from compile.kernels.ref import relu_with_mask_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(7,), (4, 5), (2, 3, 4), (2, 8, 8, 3), (1, 1)]),
+    seed=st.integers(0, 2**16),
+)
+def test_relu_mask_matches_ref(shape, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    y, m = relu_with_mask(x)
+    yr, mr = relu_with_mask_ref(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+
+def test_mask_is_zero_footprint():
+    x = jnp.array([[-1.0, 0.0, 2.0], [3.0, -4.0, 0.0]])
+    y, m = relu_with_mask(x)
+    np.testing.assert_array_equal(np.asarray(m), [[0, 0, 1], [1, 0, 0]])
+    assert np.all(np.asarray(y)[np.asarray(m) == 0] == 0)
+
+
+def test_mask_dtype_follows_input():
+    x = jnp.ones((8,), jnp.bfloat16)
+    y, m = relu_with_mask(x)
+    assert y.dtype == jnp.bfloat16 and m.dtype == jnp.bfloat16

@@ -1,0 +1,53 @@
+"""The paper's core law (section 3.2): the backward gradient after ReLU has
+the *identical* zero footprint as the forward activation.
+
+Exactly: footprint(g_i) == footprint(a_i) up to elements where the
+incoming gradient happens to be exactly zero (a measure-zero event for
+continuous inputs, plus structurally-zero rows from upstream masking).
+We therefore assert containment footprint(a_i)==0 => g_i == 0 exactly,
+and near-equality of the sparsity fractions.
+"""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_traces(seed, batch=4):
+    params = M.init_params(seed)
+    flat = M.params_list(params)
+    x, labels = M.example_batch(batch, seed)
+    out = M.step_traces(*flat, x, labels)
+    acts = [np.asarray(a) for a in out[1:5]]
+    gmaps = [np.asarray(g) for g in out[5:9]]
+    return acts, gmaps
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_gradient_zero_wherever_activation_zero(seed):
+    acts, gmaps = run_traces(seed)
+    for a, g in zip(acts, gmaps):
+        assert np.all(g[a == 0] == 0.0)
+
+
+def test_sparsity_fractions_nearly_identical():
+    acts, gmaps = run_traces(0)
+    for i, (a, g) in enumerate(zip(acts, gmaps)):
+        sa = (a == 0).mean()
+        sg = (g == 0).mean()
+        # g can only be MORE sparse (numerically-zero gradients)
+        assert sg >= sa - 1e-6, (i, sa, sg)
+        assert sg - sa < 0.05, f"layer {i}: act {sa:.3f} vs grad {sg:.3f}"
+
+
+def test_sparsity_in_papers_observed_band():
+    """Fig 3d: dynamic sparsity of ReLU CNNs sits in the ~30-70% band."""
+    acts, _ = run_traces(0, batch=8)
+    for i, a in enumerate(acts):
+        s = (a == 0).mean()
+        assert 0.2 < s < 0.8, f"layer {i} sparsity {s:.3f} outside band"

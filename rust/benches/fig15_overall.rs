@@ -1,0 +1,29 @@
+//! Bench + regeneration harness for: Fig 15 overall normalized time.
+//!
+//! Prints the paper artifact (same rows/series the paper reports) and
+//! measures the end-to-end generation cost. `AGOS_BENCH_QUICK=1` for a
+//! smoke run.
+
+use agos::report::{generate, ReportCtx};
+use agos::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::var("AGOS_BENCH_QUICK").is_ok();
+    let batch = if quick { 2 } else { 16 };
+    let ctx = ReportCtx::with_batch(batch);
+
+    // Regenerate and print the paper artifact once.
+    for id in "fig15".split_whitespace() {
+        for fig in generate(id, &ctx).expect("generate") {
+            print!("{}", fig.render());
+            println!();
+        }
+    }
+
+    // Measure the generation cost.
+    let mut b = Bench::new("fig15_overall");
+    for id in "fig15".split_whitespace() {
+        b.case(id, || generate(id, &ctx).unwrap().len());
+    }
+    b.finish();
+}

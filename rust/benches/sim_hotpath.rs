@@ -1,0 +1,62 @@
+//! Micro-benchmarks of the simulator hot paths — the targets of the
+//! performance pass (EXPERIMENTS.md §Perf).
+
+use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::nn::zoo;
+use agos::sim::{redistribute, simulate_layer, simulate_network, LayerTask, PeModel};
+use agos::sparsity::SparsityModel;
+use agos::util::bench::{black_box, Bench};
+use agos::util::rng::Pcg32;
+
+fn main() {
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions::default();
+    let mut b = Bench::new("sim_hotpath");
+
+    // PE per-output model — called once per (tile, layer, image).
+    let pe = PeModel::from_config(&cfg);
+    b.case("pe_cycles_per_output_x1000", || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            let s = (i % 10) as f64 / 10.0;
+            acc += pe.cycles_per_output(black_box(1152.0), black_box(s)).0;
+        }
+        acc
+    });
+
+    // Layer execution — 256 tiles with jitter.
+    let task = LayerTask {
+        name: "bench".into(),
+        m: 128,
+        u: 28,
+        v: 28,
+        crs: 1152.0,
+        in_sparsity: Some(0.5),
+        out_sparsity: Some(0.5),
+        input_elems: 128.0 * 30.0 * 30.0,
+        weight_elems: 128.0 * 1152.0,
+    };
+    b.case("simulate_layer_inoutwr", || {
+        let mut rng = Pcg32::new(7);
+        simulate_layer(&task, &cfg, &opts, Scheme::InOutWr, &mut rng).cycles
+    });
+
+    // WDU event loop on a skewed 256-tile workload.
+    let mut rng = Pcg32::new(5);
+    let work: Vec<f64> = (0..256).map(|_| 1000.0 * (1.0 + 0.3 * rng.gauss()).max(0.05)).collect();
+    b.case("wdu_redistribute_256", || redistribute(black_box(&work), 0.3, 0.05).makespan);
+
+    // Whole-network sweeps (the figure-generation workhorse).
+    let model = SparsityModel::synthetic(1);
+    let small_opts = SimOptions { batch: 1, ..SimOptions::default() };
+    for net in [zoo::resnet18(), zoo::vgg16()] {
+        b.case(&format!("simulate_{}_b1", net.name), || {
+            simulate_network(&net, &cfg, &small_opts, &model, Scheme::InOutWr).total_cycles()
+        });
+    }
+    let dn = zoo::densenet121();
+    b.case("simulate_densenet121_b1", || {
+        simulate_network(&dn, &cfg, &small_opts, &model, Scheme::InOutWr).total_cycles()
+    });
+    b.finish();
+}

@@ -1,0 +1,29 @@
+//! Bench + regeneration harness for: Table 2 platform comparison.
+//!
+//! Prints the paper artifact (same rows/series the paper reports) and
+//! measures the end-to-end generation cost. `AGOS_BENCH_QUICK=1` for a
+//! smoke run.
+
+use agos::report::{generate, ReportCtx};
+use agos::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::var("AGOS_BENCH_QUICK").is_ok();
+    let batch = if quick { 2 } else { 16 };
+    let ctx = ReportCtx::with_batch(batch);
+
+    // Regenerate and print the paper artifact once.
+    for id in "table2".split_whitespace() {
+        for fig in generate(id, &ctx).expect("generate") {
+            print!("{}", fig.render());
+            println!();
+        }
+    }
+
+    // Measure the generation cost.
+    let mut b = Bench::new("table2_platforms");
+    for id in "table2".split_whitespace() {
+        b.case(id, || generate(id, &ctx).unwrap().len());
+    }
+    b.finish();
+}

@@ -1,0 +1,16 @@
+//! Baseline platforms for the Table 2 comparison.
+//!
+//! Two families:
+//!
+//! * **Simulator-backed** — DaDianNao (dense) and CNVLUTIN (input-sparse)
+//!   are modeled by running *our* simulator under the matching scheme and
+//!   applying their published clock and a mapping-efficiency penalty
+//!   (§6: "dense variants of our architecture perform 1.9×/1.7× better
+//!   than DaDianNao … primarily due to efficient mapping strategies").
+//! * **Analytic** — CPU, GPU, LNPU, SparTANN and Selective-Grad are
+//!   modeled from their published peak throughput, utilization and the
+//!   sparsity phases they support (Table 2 footnotes).
+
+mod platforms;
+
+pub use platforms::{all_platforms, iteration_latency_ms, Platform, PlatformKind};

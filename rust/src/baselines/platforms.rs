@@ -1,0 +1,234 @@
+//! Platform models with the paper's Table 2 specifications.
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::{network_macs, Network, Phase};
+use crate::sim::simulate_network;
+use crate::sparsity::SparsityModel;
+
+/// How a platform's iteration latency is obtained.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlatformKind {
+    /// Published spec sheet + utilization model (CPU/GPU/small accs).
+    Analytic {
+        /// Achievable fraction of peak on conv workloads.
+        utilization: f64,
+        /// Execution-time reduction from the sparsity the platform
+        /// supports (1.0 = dense execution).
+        sparsity_gain: f64,
+    },
+    /// Run our simulator under this scheme with a mapping-efficiency
+    /// penalty (relative PE utilization vs our design).
+    SimulatorBacked { scheme: Scheme, mapping_penalty: f64 },
+    /// This work: our simulator, full scheme, no penalty.
+    ThisWork,
+}
+
+/// One row of Table 2.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub tech_nm: u32,
+    pub freq_mhz: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    pub peak_gops: f64,
+    pub energy_eff_gops_w: f64,
+    pub exec_mode: &'static str,
+    pub kind: PlatformKind,
+}
+
+/// The Table 2 platform list, in the paper's row order.
+pub fn all_platforms() -> Vec<Platform> {
+    vec![
+        Platform {
+            name: "Dual Xeon E5 2560 v3",
+            tech_nm: 22,
+            freq_mhz: 2400.0,
+            area_mm2: f64::NAN,
+            power_w: 85.0,
+            peak_gops: 614.4,
+            energy_eff_gops_w: 7.22,
+            exec_mode: "CPU, Dense",
+            // Calibrated to the paper's published 8495 ms VGG-16 iteration.
+            kind: PlatformKind::Analytic { utilization: 0.29, sparsity_gain: 1.0 },
+        },
+        Platform {
+            name: "NVidia GTX 1080 Ti",
+            tech_nm: 16,
+            freq_mhz: 706.0,
+            area_mm2: 400.0,
+            power_w: 225.0,
+            peak_gops: 11000.0,
+            energy_eff_gops_w: 48.8,
+            exec_mode: "GPU, Dense",
+            // Calibrated to the published 128 ms VGG-16 iteration — the
+            // effective rate is near peak because cuDNN's Winograd path
+            // reduces the arithmetic the GPU actually performs.
+            kind: PlatformKind::Analytic { utilization: 0.95, sparsity_gain: 1.0 },
+        },
+        Platform {
+            name: "DaDianNao",
+            tech_nm: 65,
+            freq_mhz: 606.0,
+            area_mm2: 67.3,
+            power_w: 16.3,
+            peak_gops: 4964.0,
+            energy_eff_gops_w: 304.0,
+            exec_mode: "Acc, Dense",
+            kind: PlatformKind::SimulatorBacked { scheme: Scheme::Dense, mapping_penalty: 1.8 },
+        },
+        Platform {
+            name: "CNVLUTIN",
+            tech_nm: 65,
+            freq_mhz: 606.0,
+            area_mm2: 70.1,
+            power_w: 17.4,
+            peak_gops: 4964.0,
+            energy_eff_gops_w: 304.0,
+            exec_mode: "Acc, Input Sparse",
+            kind: PlatformKind::SimulatorBacked { scheme: Scheme::In, mapping_penalty: 1.8 },
+        },
+        Platform {
+            name: "LNPU",
+            tech_nm: 65,
+            freq_mhz: 200.0,
+            area_mm2: 16.0,
+            power_w: 0.367,
+            peak_gops: 638.0,
+            energy_eff_gops_w: 25800.0,
+            exec_mode: "Acc, Input Sparse",
+            // Tiny on-chip buffer (320 KB vs our 32 MB) forces repeated
+            // DRAM traffic; application-level utilization collapses (§6).
+            kind: PlatformKind::Analytic { utilization: 0.35, sparsity_gain: 1.55 },
+        },
+        Platform {
+            name: "SparTANN",
+            tech_nm: 65,
+            freq_mhz: 250.0,
+            area_mm2: 4.32,
+            power_w: 0.59,
+            peak_gops: 380.0,
+            energy_eff_gops_w: 648.0,
+            exec_mode: "Acc, Input Sparse (BP & WG)",
+            kind: PlatformKind::Analytic { utilization: 0.55, sparsity_gain: 1.45 },
+        },
+        Platform {
+            name: "Selective Grad",
+            tech_nm: 65,
+            freq_mhz: 606.0,
+            area_mm2: 67.3,
+            power_w: 16.3,
+            peak_gops: 4964.0,
+            energy_eff_gops_w: 304.0,
+            exec_mode: "Acc, Output Sparse (BP)",
+            // DaDianNao-class datapath; skips ReLU-masked gradient outputs
+            // in BP but ignores input sparsity everywhere (§6 ≈2.6× gap).
+            kind: PlatformKind::Analytic { utilization: 0.57, sparsity_gain: 1.25 },
+        },
+        Platform {
+            name: "This Work",
+            tech_nm: 32,
+            freq_mhz: 667.0,
+            area_mm2: 292.0,
+            power_w: 19.2,
+            peak_gops: 5466.0,
+            energy_eff_gops_w: 325.0,
+            exec_mode: "Acc, In + Out Sparse",
+            kind: PlatformKind::ThisWork,
+        },
+    ]
+}
+
+/// Training-iteration latency (ms) of `platform` on `net` at `batch`.
+pub fn iteration_latency_ms(
+    platform: &Platform,
+    net: &Network,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    model: &SparsityModel,
+) -> f64 {
+    match platform.kind {
+        PlatformKind::Analytic { utilization, sparsity_gain } => {
+            let macs: u64 = Phase::ALL.iter().map(|p| network_macs(net, *p)).sum();
+            let flops = 2.0 * macs as f64 * opts.batch as f64;
+            let secs = flops / (platform.peak_gops * 1e9 * utilization * sparsity_gain);
+            secs * 1e3
+        }
+        PlatformKind::SimulatorBacked { scheme, mapping_penalty } => {
+            let r = simulate_network(net, cfg, opts, model, scheme);
+            let cycles = r.total_cycles() * mapping_penalty;
+            cycles / (platform.freq_mhz * 1e6) * 1e3
+        }
+        PlatformKind::ThisWork => {
+            let r = simulate_network(net, cfg, opts, model, Scheme::InOutWr);
+            r.total_cycles() / cfg.freq_hz * 1e3
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn setup() -> (AcceleratorConfig, SimOptions, SparsityModel) {
+        (
+            AcceleratorConfig::default(),
+            SimOptions { batch: 16, ..SimOptions::default() },
+            SparsityModel::synthetic(2021),
+        )
+    }
+
+    #[test]
+    fn cpu_latency_matches_published_order() {
+        let (cfg, opts, model) = setup();
+        let net = zoo::vgg16();
+        let cpu = &all_platforms()[0];
+        let ms = iteration_latency_ms(cpu, &net, &cfg, &opts, &model);
+        // Paper: 8495 ms. Same order of magnitude required.
+        assert!((5000.0..14000.0).contains(&ms), "CPU VGG {ms} ms");
+    }
+
+    #[test]
+    fn gpu_latency_matches_published_order() {
+        let (cfg, opts, model) = setup();
+        let net = zoo::vgg16();
+        let gpu = &all_platforms()[1];
+        let ms = iteration_latency_ms(gpu, &net, &cfg, &opts, &model);
+        // Paper: 128 ms.
+        assert!((80.0..200.0).contains(&ms), "GPU VGG {ms} ms");
+    }
+
+    #[test]
+    fn this_work_beats_dense_baselines() {
+        let (cfg, opts, model) = setup();
+        let net = zoo::resnet18();
+        let platforms = all_platforms();
+        let ours = iteration_latency_ms(platforms.last().unwrap(), &net, &cfg, &opts, &model);
+        let ddn = iteration_latency_ms(&platforms[2], &net, &cfg, &opts, &model);
+        let cnv = iteration_latency_ms(&platforms[3], &net, &cfg, &opts, &model);
+        // Paper: 2.65× vs DaDianNao, 2.07× vs CNVLUTIN on ResNet-18.
+        let vs_ddn = ddn / ours;
+        let vs_cnv = cnv / ours;
+        assert!((1.8..4.5).contains(&vs_ddn), "vs DaDianNao {vs_ddn:.2}");
+        assert!((1.4..3.8).contains(&vs_cnv), "vs CNVLUTIN {vs_cnv:.2}");
+        assert!(vs_ddn > vs_cnv, "input-sparse baseline must sit between");
+    }
+
+    #[test]
+    fn energy_efficiency_order_of_magnitude_vs_gpu() {
+        // Paper: ~7× energy-efficiency vs the GPU on these benchmarks.
+        let platforms = all_platforms();
+        let ours = platforms.last().unwrap();
+        let gpu = &platforms[1];
+        assert!(ours.energy_eff_gops_w / gpu.energy_eff_gops_w > 5.0);
+    }
+
+    #[test]
+    fn table_has_eight_rows_in_order() {
+        let p = all_platforms();
+        assert_eq!(p.len(), 8);
+        assert_eq!(p[0].exec_mode, "CPU, Dense");
+        assert_eq!(p.last().unwrap().name, "This Work");
+    }
+}

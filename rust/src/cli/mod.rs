@@ -1,0 +1,325 @@
+//! The `agos` command-line interface.
+//!
+//! ```text
+//! agos train     --steps 300 --trace-every 50 --out results/train.json
+//! agos simulate  --network vgg16 --scheme in+out+wr --batch 16
+//! agos figure    fig11a --out results/
+//! agos table     table2
+//! agos sparsity  --network resnet18
+//! agos cosim     --traces results/traces.json
+//! agos info
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions, TrainOptions};
+use crate::coordinator::{cosim_from_traces, run_training_pipeline};
+use crate::nn::{zoo, Phase};
+use crate::report::{generate, ReportCtx};
+use crate::sim::simulate_network;
+use crate::sparsity::{analyze_network, SparsityModel};
+use crate::trace::TraceFile;
+use crate::util::cli::{App, Args, Command, OptSpec};
+use crate::util::json::Json;
+
+fn opt(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: true, help }
+}
+
+fn app() -> App {
+    App {
+        name: "agos",
+        about: "activation-based gradient output sparsity accelerator (paper reproduction)",
+        commands: vec![
+            Command {
+                name: "train",
+                about: "train the small CNN through the AOT artifacts (PJRT)",
+                opts: vec![
+                    opt("steps", "optimizer steps (default 300)"),
+                    opt("trace-every", "extract sparsity traces every N steps (default 50)"),
+                    opt("seed", "dataset seed (default 7)"),
+                    opt("artifacts", "artifacts directory (default artifacts)"),
+                    opt("out", "write loss curve + traces JSON here"),
+                ],
+            },
+            Command {
+                name: "simulate",
+                about: "simulate a network on the accelerator",
+                opts: vec![
+                    opt("network", "vgg16|resnet18|googlenet|densenet121|mobilenet|agos_cnn"),
+                    opt("scheme", "DC|IN|IN+OUT|IN+OUT+WR (default IN+OUT+WR)"),
+                    opt("batch", "batch size (default 16)"),
+                    opt("seed", "sparsity model seed"),
+                    opt("config", "accelerator config JSON file"),
+                ],
+            },
+            Command {
+                name: "figure",
+                about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b fig13 fig15 fig16 fig17 | ablations | all)",
+                opts: vec![
+                    opt("out", "also write results JSON into this directory"),
+                    opt("batch", "batch size (default 16)"),
+                    opt("seed", "sparsity model seed"),
+                ],
+            },
+            Command {
+                name: "table",
+                about: "regenerate a paper table (table1 | table2)",
+                opts: vec![
+                    opt("out", "also write results JSON into this directory"),
+                    opt("batch", "batch size (default 16)"),
+                ],
+            },
+            Command {
+                name: "sparsity",
+                about: "print the per-layer sparsity-opportunity analysis",
+                opts: vec![opt("network", "network name"), opt("seed", "model seed")],
+            },
+            Command {
+                name: "cosim",
+                about: "co-simulate measured traces on the accelerator",
+                opts: vec![
+                    opt("traces", "trace JSON from `agos train --out`"),
+                    opt("batch", "batch size (default 16)"),
+                ],
+            },
+            Command {
+                name: "info",
+                about: "show artifact manifest and design-point summary",
+                opts: vec![opt("artifacts", "artifacts directory (default artifacts)")],
+            },
+        ],
+    }
+}
+
+/// CLI entry point; returns the exit code.
+pub fn run(argv: &[String]) -> anyhow::Result<i32> {
+    let parsed = match app().parse(argv) {
+        Ok(Some(p)) => p,
+        Ok(None) => return Ok(0), // help shown
+        Err(msg) => {
+            eprintln!("{msg}");
+            return Ok(2);
+        }
+    };
+    let args = &parsed.args;
+    match parsed.command.as_str() {
+        "train" => cmd_train(args),
+        "simulate" => cmd_simulate(args),
+        "figure" => cmd_figure(args),
+        "table" => cmd_figure(args), // same dispatch: ids disambiguate
+        "sparsity" => cmd_sparsity(args),
+        "cosim" => cmd_cosim(args),
+        "info" => cmd_info(args),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn ctx_from(args: &Args) -> anyhow::Result<ReportCtx> {
+    let mut ctx = ReportCtx::default();
+    ctx.opts.batch = args.opt_usize("batch", 16)?;
+    ctx.opts.seed = args.opt_u64("seed", ctx.opts.seed)?;
+    ctx.model = SparsityModel::synthetic(ctx.opts.seed);
+    Ok(ctx)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<i32> {
+    let opts = TrainOptions {
+        steps: args.opt_usize("steps", 300)?,
+        trace_every: args.opt_usize("trace-every", 50)?,
+        seed: args.opt_u64("seed", 7)?,
+        artifacts_dir: PathBuf::from(args.opt_or("artifacts", "artifacts")),
+        ..TrainOptions::default()
+    };
+    let log = run_training_pipeline(&opts)?;
+    println!("trained {} steps at {:.2} steps/s", opts.steps, log.steps_per_sec);
+    for (step, loss) in &log.losses {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!(
+        "traces: {} steps, identity holds: {}",
+        log.traces.steps.len(),
+        log.traces.identity_holds()
+    );
+    if let Some(out) = args.opt("out") {
+        let path = Path::new(out);
+        let mut j = Json::obj();
+        j.set(
+            "losses",
+            Json::Arr(
+                log.losses
+                    .iter()
+                    .map(|(s, l)| Json::Arr(vec![(*s).into(), (*l).into()]))
+                    .collect(),
+            ),
+        );
+        j.set("steps_per_sec", log.steps_per_sec.into());
+        j.set("traces", log.traces.to_json());
+        j.write_file(path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
+    let name = args.opt("network").unwrap_or("vgg16");
+    let net = if name == "agos_cnn" { zoo::agos_cnn() } else { zoo::by_name(name)? };
+    let scheme = Scheme::parse(args.opt_or("scheme", "IN+OUT+WR"))?;
+    let cfg = match args.opt("config") {
+        Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
+        None => AcceleratorConfig::default(),
+    };
+    let mut opts = SimOptions::default();
+    opts.batch = args.opt_usize("batch", 16)?;
+    opts.seed = args.opt_u64("seed", opts.seed)?;
+    let model = SparsityModel::synthetic(opts.seed);
+
+    let dc = simulate_network(&net, &cfg, &opts, &model, Scheme::Dense);
+    let r = simulate_network(&net, &cfg, &opts, &model, scheme);
+    println!("network {} scheme {} batch {}", net.name, scheme.label(), opts.batch);
+    for phase in Phase::ALL {
+        let t = r.phase(phase);
+        let d = dc.phase(phase);
+        println!(
+            "  {}: {:>14.0} cycles  ({:.2}x vs DC)  {:.3} J",
+            phase.label(),
+            t.cycles,
+            d.cycles / t.cycles.max(1.0),
+            t.energy.total()
+        );
+    }
+    println!(
+        "  total: {:>11.0} cycles  ({:.2}x vs DC)  iteration {:.2} ms",
+        r.total_cycles(),
+        dc.total_cycles() / r.total_cycles(),
+        r.iteration_seconds(&cfg) * 1e3
+    );
+    Ok(0)
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<i32> {
+    let ids = args.positional();
+    anyhow::ensure!(!ids.is_empty(), "give a figure/table id (or 'all')");
+    let ctx = ctx_from(args)?;
+    for id in ids {
+        for fig in generate(id, &ctx)? {
+            print!("{}", fig.render());
+            println!();
+            if let Some(dir) = args.opt("out") {
+                fig.save(Path::new(dir))?;
+                println!("wrote {}/{}.json", dir, fig.id);
+            }
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_sparsity(args: &Args) -> anyhow::Result<i32> {
+    let name = args.opt("network").unwrap_or("vgg16");
+    let net = if name == "agos_cnn" { zoo::agos_cnn() } else { zoo::by_name(name)? };
+    let model = SparsityModel::synthetic(args.opt_u64("seed", 0xA605)?);
+    let fwd = model.assign(&net);
+    let opps = analyze_network(&net, &fwd);
+    println!(
+        "{:<28} {:>8} {:>8} {:>8} {:>10}",
+        "layer", "FP-in", "BP-in", "BP-out", "BP kind"
+    );
+    let fmt = |o: Option<f64>| o.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
+    for o in &opps {
+        println!(
+            "{:<28} {:>8} {:>8} {:>8} {:>10}",
+            o.name,
+            fmt(o.fp_input),
+            fmt(o.bp_input),
+            fmt(o.bp_output),
+            format!("{:?}", o.bp_kind())
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
+    let path = args.opt("traces").ok_or_else(|| anyhow::anyhow!("--traces required"))?;
+    let traces = TraceFile::load(Path::new(path))?;
+    let mut opts = SimOptions::default();
+    opts.batch = args.opt_usize("batch", 16)?;
+    let report = cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts)?;
+    println!(
+        "co-simulation of '{}' (mean measured sparsity {:.2})",
+        report.network, report.mean_sparsity
+    );
+    for (scheme, total, bp, energy) in &report.rows {
+        println!("  {scheme:<10} total {total:>14.0} cycles  BP {bp:>12.0}  {energy:.4} J");
+    }
+    println!(
+        "  speedup: total {:.2}x, BP {:.2}x",
+        report.total_speedup, report.bp_speedup
+    );
+    Ok(0)
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<i32> {
+    let cfg = AcceleratorConfig::default();
+    println!("design point: {}x{} PEs, {} lanes, {:.0} MHz", cfg.tx, cfg.ty, cfg.lanes, cfg.freq_hz / 1e6);
+    println!(
+        "  peak {:.0} GFLOPs/s, {:.1} W node power, PE capacity {}",
+        cfg.peak_flops() / 1e9,
+        cfg.node_power_w(),
+        cfg.pe_capacity()
+    );
+    let dir = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    match crate::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts at {}:", dir.display());
+            for (name, e) in &m.entries {
+                println!(
+                    "  {name}: {} inputs -> {} outputs ({})",
+                    e.inputs.len(),
+                    e.outputs.len(),
+                    e.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            println!("  model: batch {}, {}x{}x{} input", m.batch, m.img, m.img, m.in_ch);
+        }
+        Err(e) => println!("artifacts not available: {e} (run `make artifacts`)"),
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_command_is_exit_2() {
+        assert_eq!(run(&sv(&["bogus"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn sparsity_command_runs() {
+        assert_eq!(run(&sv(&["sparsity", "--network", "resnet18"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn simulate_small_network_runs() {
+        assert_eq!(
+            run(&sv(&["simulate", "--network", "agos_cnn", "--batch", "2"])).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn figure_requires_id() {
+        assert!(run(&sv(&["figure"])).is_err());
+        assert!(run(&sv(&["figure", "fig99"])).is_err());
+    }
+
+    #[test]
+    fn fig16_fast_path_runs() {
+        assert_eq!(run(&sv(&["figure", "fig16", "--batch", "1"])).unwrap(), 0);
+    }
+}

@@ -1,0 +1,287 @@
+//! Accelerator hardware description — defaults are the paper's evaluated
+//! design point (Table 1 and §5.2): a node of 16×16 PEs at 667 MHz, each
+//! PE with 16 computation lanes × 2 double-buffer groups × 32 entries,
+//! 5-bit NZ offsets, a 16-input reconfigurable adder tree, 32 KB × 4 SRAM
+//! banks, H-tree broadcast at 512 GB/s and 16-channel DDR3-1600 DRAM.
+
+use crate::util::json::Json;
+
+/// Per-component energy/power constants (Table 1), 32 nm, 667 MHz.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyTable {
+    /// Dynamic power of the neuron/synapse register files (W per PE).
+    pub regfile_power_w: f64,
+    /// Dynamic power of the non-zero index register file (W per PE).
+    pub idx_regfile_power_w: f64,
+    /// Dynamic power of the 16 fp16 MAC units (W per PE).
+    pub mac_power_w: f64,
+    /// Dynamic power of the reconfigurable adder tree (W per PE).
+    pub adder_tree_power_w: f64,
+    /// Dynamic power of the non-zero encoder (W per PE).
+    pub encoder_power_w: f64,
+    /// PE control logic power (W per PE).
+    pub control_power_w: f64,
+    /// SRAM read energy (J per 128 B line read).
+    pub sram_read_j: f64,
+    /// SRAM write energy (J per 128 B line write).
+    pub sram_write_j: f64,
+    /// SRAM dynamic power (W per PE buffer).
+    pub sram_dynamic_w: f64,
+    /// SRAM static power (W per PE buffer).
+    pub sram_static_w: f64,
+    /// Whole-PE power budget (W) — Table 1 "PE total".
+    pub pe_total_w: f64,
+    /// DRAM energy per byte transferred (J/B), DDR3-1600 class.
+    pub dram_j_per_byte: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        EnergyTable {
+            regfile_power_w: 20.1e-3,
+            idx_regfile_power_w: 3.44e-3,
+            mac_power_w: 10.56e-3,
+            adder_tree_power_w: 5.5127e-3,
+            encoder_power_w: 0.7714e-3,
+            control_power_w: 2.0955e-3,
+            sram_read_j: 0.035e-9,
+            sram_write_j: 0.040e-9,
+            sram_dynamic_w: 25e-3,
+            sram_static_w: 8.1e-3,
+            pe_total_w: 75e-3,
+            // ~70 pJ/bit for DDR3 → 560 pJ/byte is a common figure; use
+            // 520 pJ/B to include channel utilization effects.
+            dram_j_per_byte: 520e-12,
+        }
+    }
+}
+
+/// Memory-system description (§4.3, §6 "DRAM considerations").
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryConfig {
+    /// SRAM bank size per PE (bytes). Table 1: 32 KB.
+    pub sram_bank_bytes: usize,
+    /// SRAM banks per PE. Table 1: 4.
+    pub sram_banks: usize,
+    /// SRAM line size (bytes). Table 1: 128 B.
+    pub sram_line_bytes: usize,
+    /// Peak SRAM feed into the lanes (bytes/cycle). §4.3: 64 B neuron +
+    /// 64 B synapse on refill plus 20 B offsets ⇒ 84 B/cycle quoted.
+    pub sram_feed_bytes_per_cycle: usize,
+    /// DRAM channels. §6: 16.
+    pub dram_channels: usize,
+    /// Bandwidth per DRAM channel (bytes/s). DDR3-1600: 12.6 GB/s.
+    pub dram_channel_bw: f64,
+    /// H-tree broadcast bandwidth (bytes/s). §5.2: 512 GB/s.
+    pub htree_bw: f64,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            sram_bank_bytes: 32 * 1024,
+            sram_banks: 4,
+            sram_line_bytes: 128,
+            sram_feed_bytes_per_cycle: 84,
+            dram_channels: 16,
+            dram_channel_bw: 12.6e9,
+            htree_bw: 512e9,
+        }
+    }
+}
+
+/// Full accelerator design point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// PEs along x (output-width tiling). §5.2: 16.
+    pub tx: usize,
+    /// PEs along y (output-height tiling). §5.2: 16.
+    pub ty: usize,
+    /// Computation lanes per PE. §4.3: 16.
+    pub lanes: usize,
+    /// Entries per lane buffer group. §4.3: 32.
+    pub group_entries: usize,
+    /// Buffer groups per lane (double buffering). §4.3: 2.
+    pub groups: usize,
+    /// Bits per NZ offset entry. §4.3: 5 (indexes 32 entries).
+    pub offset_bits: usize,
+    /// Clock frequency (Hz). §5.2: 667 MHz.
+    pub freq_hz: f64,
+    /// Operand width (bytes); fp16 ⇒ 2.
+    pub operand_bytes: usize,
+    /// WDU redistribution threshold: steal only while the victim's
+    /// remaining work fraction exceeds this. §4.6: 0.30.
+    pub wr_threshold: f64,
+    /// Cycles to transfer + merge per stolen output row during WDU
+    /// redistribution (overhead model).
+    pub wr_overhead_cycles_per_output: f64,
+    pub memory: MemoryConfig,
+    pub energy: EnergyTable,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            tx: 16,
+            ty: 16,
+            lanes: 16,
+            group_entries: 32,
+            groups: 2,
+            offset_bits: 5,
+            freq_hz: 667e6,
+            operand_bytes: 2,
+            wr_threshold: 0.30,
+            wr_overhead_cycles_per_output: 4.0,
+            memory: MemoryConfig::default(),
+            energy: EnergyTable::default(),
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// Total PE count in the node.
+    pub fn pe_count(&self) -> usize {
+        self.tx * self.ty
+    }
+
+    /// Receptive-field capacity of one PE pass: lanes × entries × groups
+    /// (= 1024 for the paper's design point, §4.3).
+    pub fn pe_capacity(&self) -> usize {
+        self.lanes * self.group_entries * self.groups
+    }
+
+    /// Peak MACs per cycle for the node (8192 for the default: 256 PEs ×
+    /// 16 lanes × 2 ops/MAC counted as 2 FLOPs in the paper's 5464-GFLOPs
+    /// figure; here we count MACs).
+    pub fn peak_macs_per_cycle(&self) -> usize {
+        self.pe_count() * self.lanes
+    }
+
+    /// Peak throughput in FLOPs/s (2 FLOPs per MAC).
+    pub fn peak_flops(&self) -> f64 {
+        2.0 * self.peak_macs_per_cycle() as f64 * self.freq_hz
+    }
+
+    /// Node power (W): PE totals (Table 1 row "Proposed design node").
+    pub fn node_power_w(&self) -> f64 {
+        self.energy.pe_total_w * self.pe_count() as f64
+    }
+
+    /// Aggregate DRAM bandwidth (bytes/s).
+    pub fn dram_bw(&self) -> f64 {
+        self.memory.dram_channels as f64 * self.memory.dram_channel_bw
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("tx", self.tx.into()),
+            ("ty", self.ty.into()),
+            ("lanes", self.lanes.into()),
+            ("group_entries", self.group_entries.into()),
+            ("groups", self.groups.into()),
+            ("offset_bits", self.offset_bits.into()),
+            ("freq_hz", self.freq_hz.into()),
+            ("operand_bytes", self.operand_bytes.into()),
+            ("wr_threshold", self.wr_threshold.into()),
+            ("wr_overhead_cycles_per_output", self.wr_overhead_cycles_per_output.into()),
+            ("dram_channels", self.memory.dram_channels.into()),
+            ("dram_channel_bw", self.memory.dram_channel_bw.into()),
+            ("htree_bw", self.memory.htree_bw.into()),
+        ])
+    }
+
+    /// Build from JSON, applying defaults for missing keys. Unknown keys
+    /// are rejected to catch config typos.
+    pub fn from_json(j: &Json) -> anyhow::Result<AcceleratorConfig> {
+        let mut c = AcceleratorConfig::default();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("accelerator config must be a JSON object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "tx" => c.tx = req_usize(v, k)?,
+                "ty" => c.ty = req_usize(v, k)?,
+                "lanes" => c.lanes = req_usize(v, k)?,
+                "group_entries" => c.group_entries = req_usize(v, k)?,
+                "groups" => c.groups = req_usize(v, k)?,
+                "offset_bits" => c.offset_bits = req_usize(v, k)?,
+                "freq_hz" => c.freq_hz = req_f64(v, k)?,
+                "operand_bytes" => c.operand_bytes = req_usize(v, k)?,
+                "wr_threshold" => c.wr_threshold = req_f64(v, k)?,
+                "wr_overhead_cycles_per_output" => {
+                    c.wr_overhead_cycles_per_output = req_f64(v, k)?
+                }
+                "dram_channels" => c.memory.dram_channels = req_usize(v, k)?,
+                "dram_channel_bw" => c.memory.dram_channel_bw = req_f64(v, k)?,
+                "htree_bw" => c.memory.htree_bw = req_f64(v, k)?,
+                other => anyhow::bail!("unknown accelerator config key '{other}'"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.tx > 0 && self.ty > 0, "tx/ty must be positive");
+        anyhow::ensure!(self.lanes.is_power_of_two(), "lanes must be a power of two (adder tree)");
+        anyhow::ensure!(self.groups >= 1, "need at least one buffer group");
+        anyhow::ensure!(
+            (1usize << self.offset_bits) >= self.group_entries,
+            "offset_bits ({}) cannot index group_entries ({})",
+            self.offset_bits,
+            self.group_entries
+        );
+        anyhow::ensure!((0.0..=1.0).contains(&self.wr_threshold), "wr_threshold in [0,1]");
+        Ok(())
+    }
+}
+
+fn req_usize(v: &Json, k: &str) -> anyhow::Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow::anyhow!("'{k}' must be a non-negative integer"))
+}
+
+fn req_f64(v: &Json, k: &str) -> anyhow::Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("'{k}' must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point() {
+        let c = AcceleratorConfig::default();
+        assert_eq!(c.pe_count(), 256);
+        assert_eq!(c.pe_capacity(), 1024);
+        assert_eq!(c.peak_macs_per_cycle(), 4096);
+        // Paper: 8192 half-precision FLOPs/cycle, 5464 GFLOPs/s.
+        assert!((c.peak_flops() - 5.465e12).abs() / 5.465e12 < 0.01);
+        // Paper node power: 19.2 W.
+        assert!((c.node_power_w() - 19.2).abs() < 0.01);
+        // DRAM: 16 × 12.6 GB/s.
+        assert!((c.dram_bw() - 201.6e9).abs() < 1.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_and_unknown_key() {
+        let c = AcceleratorConfig::default();
+        let j = c.to_json();
+        let c2 = AcceleratorConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+        let bad = Json::parse(r#"{"txx": 4}"#).unwrap();
+        assert!(AcceleratorConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_offsets() {
+        let mut c = AcceleratorConfig::default();
+        c.offset_bits = 4; // 16 < 32 entries
+        assert!(c.validate().is_err());
+        c.offset_bits = 5;
+        c.lanes = 12; // not a power of two
+        assert!(c.validate().is_err());
+    }
+}

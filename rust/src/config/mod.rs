@@ -1,0 +1,11 @@
+//! Configuration system: accelerator hardware parameters (paper Table 1),
+//! simulation options and training options, loadable from JSON with
+//! defaults matching the paper's evaluated configuration.
+
+mod accel;
+mod sim_opts;
+mod train_opts;
+
+pub use accel::{AcceleratorConfig, EnergyTable, MemoryConfig};
+pub use sim_opts::{Scheme, SimOptions};
+pub use train_opts::TrainOptions;

@@ -1,0 +1,148 @@
+//! Simulation options: the execution scheme under evaluation and the
+//! knobs for stochastic trace sampling.
+
+use crate::util::json::Json;
+
+/// Execution scheme — the four bars of Fig 11/12/13.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Dense compute: every MAC is performed (baseline, "DC").
+    Dense,
+    /// Input sparsity only ("IN"): zero input operands are skipped via
+    /// through-channel NZ offset indexing.
+    In,
+    /// Input + output sparsity ("IN+OUT"): additionally, output locations
+    /// whose ReLU backward mask is zero are never computed.
+    InOut,
+    /// IN+OUT plus WDU work redistribution ("IN+OUT+WR").
+    InOutWr,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 4] = [Scheme::Dense, Scheme::In, Scheme::InOut, Scheme::InOutWr];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::Dense => "DC",
+            Scheme::In => "IN",
+            Scheme::InOut => "IN+OUT",
+            Scheme::InOutWr => "IN+OUT+WR",
+        }
+    }
+
+    pub fn uses_input_sparsity(&self) -> bool {
+        !matches!(self, Scheme::Dense)
+    }
+
+    pub fn uses_output_sparsity(&self) -> bool {
+        matches!(self, Scheme::InOut | Scheme::InOutWr)
+    }
+
+    pub fn uses_work_redistribution(&self) -> bool {
+        matches!(self, Scheme::InOutWr)
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+        match s.to_ascii_uppercase().as_str() {
+            "DC" | "DENSE" => Ok(Scheme::Dense),
+            "IN" => Ok(Scheme::In),
+            "IN+OUT" | "INOUT" => Ok(Scheme::InOut),
+            "IN+OUT+WR" | "INOUTWR" | "ALL" => Ok(Scheme::InOutWr),
+            other => anyhow::bail!("unknown scheme '{other}' (DC|IN|IN+OUT|IN+OUT+WR)"),
+        }
+    }
+}
+
+/// Options controlling a simulation run.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// RNG seed for synthetic sparsity sampling.
+    pub seed: u64,
+    /// Batch size being simulated (paper: 16).
+    pub batch: usize,
+    /// Spatial sparsity imbalance: coefficient of variation of the
+    /// per-tile sparsity around the layer mean (drives WDU gains).
+    pub tile_sparsity_cv: f64,
+    /// Output locations sampled exactly per tile up to this many; beyond
+    /// it the executor switches to grouped sampling (see sim::layer_exec).
+    pub exact_outputs_per_tile: usize,
+    /// Model DRAM-compute overlap (true per §6 "DRAM considerations").
+    pub overlap_dram: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            seed: 0xA605,
+            batch: 16,
+            tile_sparsity_cv: 0.10,
+            exact_outputs_per_tile: 4096,
+            overlap_dram: true,
+        }
+    }
+}
+
+impl SimOptions {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("seed", self.seed.into()),
+            ("batch", self.batch.into()),
+            ("tile_sparsity_cv", self.tile_sparsity_cv.into()),
+            ("exact_outputs_per_tile", self.exact_outputs_per_tile.into()),
+            ("overlap_dram", self.overlap_dram.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SimOptions> {
+        let mut o = SimOptions::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("sim options must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "seed" => o.seed = v.as_u64().ok_or_else(|| anyhow::anyhow!("seed: u64"))?,
+                "batch" => o.batch = v.as_usize().ok_or_else(|| anyhow::anyhow!("batch: usize"))?,
+                "tile_sparsity_cv" => {
+                    o.tile_sparsity_cv = v.as_f64().ok_or_else(|| anyhow::anyhow!("cv: f64"))?
+                }
+                "exact_outputs_per_tile" => {
+                    o.exact_outputs_per_tile =
+                        v.as_usize().ok_or_else(|| anyhow::anyhow!("exact: usize"))?
+                }
+                "overlap_dram" => {
+                    o.overlap_dram = v.as_bool().ok_or_else(|| anyhow::anyhow!("overlap: bool"))?
+                }
+                other => anyhow::bail!("unknown sim option '{other}'"),
+            }
+        }
+        Ok(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_capabilities() {
+        assert!(!Scheme::Dense.uses_input_sparsity());
+        assert!(Scheme::In.uses_input_sparsity());
+        assert!(!Scheme::In.uses_output_sparsity());
+        assert!(Scheme::InOut.uses_output_sparsity());
+        assert!(!Scheme::InOut.uses_work_redistribution());
+        assert!(Scheme::InOutWr.uses_work_redistribution());
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("dc").unwrap(), Scheme::Dense);
+        assert_eq!(Scheme::parse("in+out+wr").unwrap(), Scheme::InOutWr);
+        assert!(Scheme::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn options_roundtrip() {
+        let o = SimOptions { seed: 42, batch: 8, ..SimOptions::default() };
+        let o2 = SimOptions::from_json(&o.to_json()).unwrap();
+        assert_eq!(o2.seed, 42);
+        assert_eq!(o2.batch, 8);
+    }
+}

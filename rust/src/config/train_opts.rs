@@ -1,0 +1,61 @@
+//! Training-loop options for the end-to-end coordinator example.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    /// Number of optimizer steps to run.
+    pub steps: usize,
+    /// Batch size (must match the AOT artifact's example batch).
+    pub batch: usize,
+    /// SGD learning rate (baked into the artifact; recorded for logging).
+    pub lr: f64,
+    /// Dataset RNG seed.
+    pub seed: u64,
+    /// Extract sparsity traces every N steps (0 = never).
+    pub trace_every: usize,
+    /// Directory containing AOT artifacts.
+    pub artifacts_dir: std::path::PathBuf,
+    /// Log loss every N steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 300,
+            batch: 32,
+            lr: 0.05,
+            seed: 7,
+            trace_every: 50,
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainOptions {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("steps", self.steps.into()),
+            ("batch", self.batch.into()),
+            ("lr", self.lr.into()),
+            ("seed", self.seed.into()),
+            ("trace_every", self.trace_every.into()),
+            ("log_every", self.log_every.into()),
+            ("artifacts_dir", self.artifacts_dir.to_string_lossy().to_string().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let t = TrainOptions::default();
+        assert!(t.steps > 0 && t.batch > 0);
+        assert!(t.to_json().get("steps").as_usize().unwrap() == t.steps);
+    }
+}

@@ -1,0 +1,163 @@
+//! Co-simulation driver: feed *measured* sparsity traces from real
+//! training into the accelerator simulator and report per-scheme
+//! speedups — the end-to-end composition of all three layers.
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::{zoo, Phase};
+use crate::sim::simulate_network;
+use crate::sparsity::SparsityModel;
+use crate::trace::TraceFile;
+use crate::util::json::Json;
+
+/// Per-scheme results of co-simulating measured traces.
+#[derive(Clone, Debug)]
+pub struct CosimReport {
+    pub network: String,
+    /// (scheme label, total cycles, BP cycles, energy J).
+    pub rows: Vec<(String, f64, f64, f64)>,
+    /// Speedup of IN+OUT+WR over dense, total / BP-only.
+    pub total_speedup: f64,
+    pub bp_speedup: f64,
+    /// Measured mean activation sparsity fed to the model.
+    pub mean_sparsity: f64,
+}
+
+impl CosimReport {
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(s, t, b, e)| {
+                Json::from_pairs(vec![
+                    ("scheme", s.as_str().into()),
+                    ("total_cycles", (*t).into()),
+                    ("bp_cycles", (*b).into()),
+                    ("energy_j", (*e).into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("network", self.network.as_str().into()),
+            ("rows", Json::Arr(rows)),
+            ("total_speedup", self.total_speedup.into()),
+            ("bp_speedup", self.bp_speedup.into()),
+            ("mean_sparsity", self.mean_sparsity.into()),
+        ])
+    }
+}
+
+/// Run the simulator over the trace file's measured sparsity.
+pub fn cosim_from_traces(
+    traces: &TraceFile,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+) -> anyhow::Result<CosimReport> {
+    anyhow::ensure!(!traces.steps.is_empty(), "trace file has no steps");
+    anyhow::ensure!(
+        traces.identity_holds(),
+        "sparsity identity violated in traces — cannot exploit output sparsity"
+    );
+    let net = match traces.network.as_str() {
+        "agos_cnn" => zoo::agos_cnn(),
+        other => zoo::by_name(other)?,
+    };
+    let measured = traces.mean_act_sparsity();
+    let mean_sparsity = if measured.is_empty() {
+        0.0
+    } else {
+        measured.values().sum::<f64>() / measured.len() as f64
+    };
+    let model = SparsityModel::measured(opts.seed, measured);
+
+    let mut rows = Vec::new();
+    let mut dense_total = 0.0;
+    let mut dense_bp = 0.0;
+    let mut wr_total = 0.0;
+    let mut wr_bp = 0.0;
+    for scheme in Scheme::ALL {
+        let r = simulate_network(&net, cfg, opts, &model, scheme);
+        let total = r.total_cycles();
+        let bp = r.phase(Phase::Backward).cycles;
+        if scheme == Scheme::Dense {
+            dense_total = total;
+            dense_bp = bp;
+        }
+        if scheme == Scheme::InOutWr {
+            wr_total = total;
+            wr_bp = bp;
+        }
+        rows.push((scheme.label().to_string(), total, bp, r.total_energy_j()));
+    }
+    Ok(CosimReport {
+        network: net.name,
+        rows,
+        total_speedup: dense_total / wr_total,
+        bp_speedup: dense_bp / wr_bp,
+        mean_sparsity,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{LayerTrace, StepTrace};
+
+    fn fake_traces(sparsity: f64) -> TraceFile {
+        TraceFile {
+            network: "agos_cnn".into(),
+            steps: vec![StepTrace {
+                step: 0,
+                loss: 2.0,
+                layers: (1..=4)
+                    .map(|i| LayerTrace {
+                        name: format!("relu{i}"),
+                        act_sparsity: sparsity,
+                        grad_sparsity: sparsity,
+                        identity_ok: true,
+                    })
+                    .collect(),
+            }],
+        }
+    }
+
+    #[test]
+    fn cosim_produces_speedup_from_measured_sparsity() {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 2, ..SimOptions::default() };
+        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts).unwrap();
+        assert_eq!(report.rows.len(), 4);
+        assert!(report.total_speedup > 1.1, "{}", report.total_speedup);
+        assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
+        assert!((report.mean_sparsity - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_sparsity_more_speedup() {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 2, ..SimOptions::default() };
+        let lo = cosim_from_traces(&fake_traces(0.3), &cfg, &opts).unwrap();
+        let hi = cosim_from_traces(&fake_traces(0.7), &cfg, &opts).unwrap();
+        assert!(hi.total_speedup > lo.total_speedup);
+    }
+
+    #[test]
+    fn empty_or_violating_traces_rejected() {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions::default();
+        let empty = TraceFile::new("agos_cnn");
+        assert!(cosim_from_traces(&empty, &cfg, &opts).is_err());
+        let mut bad = fake_traces(0.5);
+        bad.steps[0].layers[0].identity_ok = false;
+        assert!(cosim_from_traces(&bad, &cfg, &opts).is_err());
+    }
+
+    #[test]
+    fn report_serializes() {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 1, ..SimOptions::default() };
+        let report = cosim_from_traces(&fake_traces(0.4), &cfg, &opts).unwrap();
+        let j = report.to_json();
+        assert_eq!(j.get("network").as_str(), Some("agos_cnn"));
+        assert_eq!(j.get("rows").as_arr().unwrap().len(), 4);
+    }
+}

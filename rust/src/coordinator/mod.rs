@@ -1,0 +1,16 @@
+//! Training coordinator: drives the PJRT runtime through training steps,
+//! extracts sparsity traces from real activations/gradients, and feeds
+//! them to the simulator (co-simulation).
+//!
+//! Python never appears here — the artifacts were AOT-compiled once by
+//! `make artifacts` and the request path is pure rust.
+
+mod dataset;
+mod trainer;
+mod pipeline;
+mod driver;
+
+pub use dataset::SyntheticDataset;
+pub use driver::{cosim_from_traces, CosimReport};
+pub use pipeline::run_training_pipeline;
+pub use trainer::{TrainLog, Trainer};

@@ -1,0 +1,111 @@
+//! Threaded training pipeline: batch generation and trace analysis run on
+//! worker threads so the PJRT execute loop never waits on either.
+//!
+//! Topology (std threads + mpsc channels; tokio is unavailable offline
+//! and a simulator-bound workload gains nothing from an async runtime):
+//!
+//! ```text
+//!   [producer] --batches--> [main: PJRT execute] --outputs--> [analyst]
+//! ```
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainOptions;
+use crate::runtime::{HostTensor, Runtime};
+use crate::trace::{LayerTrace, StepTrace, TraceFile};
+
+use super::dataset::SyntheticDataset;
+use super::trainer::TrainLog;
+
+/// Depth of the batch prefetch queue.
+const PREFETCH: usize = 4;
+
+/// Run training with prefetch + off-thread trace analysis.
+pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
+    let mut runtime = Runtime::load(&opts.artifacts_dir)
+        .context("loading runtime (run `make artifacts` first)")?;
+    let mut params = runtime.manifest.load_initial_params()?;
+    let m = &runtime.manifest;
+    let (img, in_ch, classes, batch) = (m.img, m.in_ch, m.num_classes, m.batch);
+    let n_params = params.len();
+
+    // --- producer: synthetic batches --------------------------------------
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<(HostTensor, HostTensor)>(PREFETCH);
+    let steps = opts.steps;
+    let seed = opts.seed;
+    let producer = thread::spawn(move || {
+        let mut ds = SyntheticDataset::new(img, in_ch, classes, seed);
+        for _ in 0..steps + steps.div_ceil(1) {
+            // (extra batches cover traced steps; surplus is dropped)
+            if batch_tx.send(ds.batch(batch)).is_err() {
+                break;
+            }
+        }
+    });
+
+    // --- analyst: sparsity extraction off the hot path --------------------
+    let (trace_tx, trace_rx) = mpsc::channel::<(usize, f64, Vec<HostTensor>)>();
+    let analyst = thread::spawn(move || -> Vec<StepTrace> {
+        let mut out = Vec::new();
+        while let Ok((step, loss, tensors)) = trace_rx.recv() {
+            let relu_count = tensors.len() / 2;
+            let mut layers = Vec::with_capacity(relu_count);
+            for i in 0..relu_count {
+                let a = &tensors[i];
+                let g = &tensors[i + relu_count];
+                let (av, gv) = (a.as_f32().unwrap(), g.as_f32().unwrap());
+                let identity_ok =
+                    av.iter().zip(gv).all(|(aa, gg)| *aa != 0.0 || *gg == 0.0);
+                layers.push(LayerTrace {
+                    name: format!("relu{}", i + 1),
+                    act_sparsity: a.zero_fraction(),
+                    grad_sparsity: g.zero_fraction(),
+                    identity_ok,
+                });
+            }
+            out.push(StepTrace { step, loss, layers });
+        }
+        out
+    });
+
+    // --- main loop: PJRT execution ----------------------------------------
+    let mut log = TrainLog { traces: TraceFile::new("agos_cnn"), ..TrainLog::default() };
+    let t0 = Instant::now();
+    for step in 0..opts.steps {
+        if opts.trace_every > 0 && step % opts.trace_every == 0 {
+            let (x, y) = batch_rx.recv().context("producer hung up")?;
+            let mut inputs = params.clone();
+            inputs.push(x);
+            inputs.push(y);
+            let out = runtime.run("step_traces", &inputs)?;
+            let loss = out[0].as_f32()?[0] as f64;
+            trace_tx
+                .send((step, loss, out[1..].to_vec()))
+                .ok();
+        }
+        let (x, y) = batch_rx.recv().context("producer hung up")?;
+        let mut inputs = params.clone();
+        inputs.push(x);
+        inputs.push(y);
+        let out = runtime.run("train_step", &inputs)?;
+        let loss = out[n_params].as_f32()?[0] as f64;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        params = out[..n_params].to_vec();
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            crate::info!("step {step:>5}  loss {loss:.4}");
+            log.losses.push((step, loss));
+        }
+    }
+    log.steps_per_sec = opts.steps as f64 / t0.elapsed().as_secs_f64();
+
+    drop(batch_rx);
+    drop(trace_tx);
+    producer.join().ok();
+    log.traces.steps = analyst.join().unwrap_or_default();
+    log.traces.steps.sort_by_key(|s| s.step);
+    Ok(log)
+}

@@ -1,0 +1,120 @@
+//! The training loop over the AOT `train_step`/`step_traces` artifacts.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainOptions;
+use crate::runtime::{HostTensor, Runtime};
+use crate::trace::{LayerTrace, StepTrace, TraceFile};
+
+use super::dataset::SyntheticDataset;
+
+/// Record of a completed training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<(usize, f64)>,
+    pub traces: TraceFile,
+    pub steps_per_sec: f64,
+}
+
+/// Owns the runtime, parameters and dataset for one training run.
+pub struct Trainer {
+    runtime: Runtime,
+    params: Vec<HostTensor>,
+    dataset: SyntheticDataset,
+    opts: TrainOptions,
+}
+
+impl Trainer {
+    pub fn new(opts: TrainOptions) -> Result<Trainer> {
+        let runtime = Runtime::load(&opts.artifacts_dir)
+            .context("loading runtime (run `make artifacts` first)")?;
+        let params = runtime.manifest.load_initial_params()?;
+        let m = &runtime.manifest;
+        anyhow::ensure!(
+            m.batch > 0 && m.img > 0,
+            "manifest hyperparameters incomplete"
+        );
+        let dataset = SyntheticDataset::new(m.img, m.in_ch, m.num_classes, opts.seed);
+        Ok(Trainer { runtime, params, dataset, opts })
+    }
+
+    pub fn manifest_batch(&self) -> usize {
+        self.runtime.manifest.batch
+    }
+
+    /// One SGD step; returns the loss.
+    pub fn step(&mut self) -> Result<f64> {
+        let batch = self.runtime.manifest.batch;
+        let (x, y) = self.dataset.batch(batch);
+        let n_params = self.params.len();
+        let mut inputs = self.params.clone();
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.runtime.run("train_step", &inputs)?;
+        let loss = out[n_params].as_f32()?[0] as f64;
+        self.params = out[..n_params].to_vec();
+        Ok(loss)
+    }
+
+    /// One traced step: returns (loss, per-relu traces) without updating
+    /// parameters (the trace artifact is read-only on params).
+    pub fn traced_step(&mut self, step: usize) -> Result<StepTrace> {
+        let batch = self.runtime.manifest.batch;
+        let (x, y) = self.dataset.batch(batch);
+        let mut inputs = self.params.clone();
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.runtime.run("step_traces", &inputs)?;
+        // outputs: loss, a1..a4, g1..g4
+        let loss = out[0].as_f32()?[0] as f64;
+        let relu_count = (out.len() - 1) / 2;
+        let mut layers = Vec::with_capacity(relu_count);
+        for i in 1..=relu_count {
+            let a = &out[i];
+            let g = &out[i + relu_count];
+            let av = a.as_f32()?;
+            let gv = g.as_f32()?;
+            let identity_ok = av
+                .iter()
+                .zip(gv)
+                .all(|(aa, gg)| *aa != 0.0 || *gg == 0.0);
+            layers.push(LayerTrace {
+                name: format!("relu{i}"),
+                act_sparsity: a.zero_fraction(),
+                grad_sparsity: g.zero_fraction(),
+                identity_ok,
+            });
+        }
+        Ok(StepTrace { step, loss, layers })
+    }
+
+    /// Run the configured number of steps, tracing every
+    /// `opts.trace_every` steps.
+    pub fn run(&mut self) -> Result<TrainLog> {
+        let mut log = TrainLog {
+            traces: TraceFile::new("agos_cnn"),
+            ..TrainLog::default()
+        };
+        let t0 = Instant::now();
+        for step in 0..self.opts.steps {
+            if self.opts.trace_every > 0 && step % self.opts.trace_every == 0 {
+                let trace = self.traced_step(step)?;
+                anyhow::ensure!(
+                    trace.layers.iter().all(|l| l.identity_ok),
+                    "sparsity identity violated at step {step}"
+                );
+                log.traces.steps.push(trace);
+            }
+            let loss = self.step()?;
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+            if step % self.opts.log_every == 0 || step + 1 == self.opts.steps {
+                crate::info!("step {step:>5}  loss {loss:.4}");
+                log.losses.push((step, loss));
+            }
+        }
+        log.steps_per_sec = self.opts.steps as f64 / t0.elapsed().as_secs_f64();
+        Ok(log)
+    }
+}

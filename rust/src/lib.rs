@@ -1,0 +1,31 @@
+//! # AGOS — Activation-based Gradient Output Sparsity accelerator
+//!
+//! Reproduction of *"Exploiting Activation based Gradient Output Sparsity
+//! to Accelerate Backpropagation in CNNs"* (Sarma et al., 2021).
+//!
+//! The crate is the L3 (rust) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the masked
+//!   backward GEMM that realizes output-sparsity skipping on TPU-style
+//!   hardware, checked against a pure-`jnp` oracle.
+//! * **L2** — a JAX CNN model (`python/compile/model.py`) whose forward,
+//!   backward and train-step graphs are AOT-lowered once to HLO text.
+//! * **L3** — this crate: the PJRT runtime that executes those artifacts,
+//!   the training coordinator that extracts activation/gradient sparsity
+//!   traces, and — the paper's contribution — a cycle-level simulator of
+//!   the proposed sparse-training accelerator, its baselines, and the
+//!   report generators for every figure and table in the evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod util;
+pub mod config;
+pub mod nn;
+pub mod sparsity;
+pub mod sim;
+pub mod baselines;
+pub mod trace;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod cli;

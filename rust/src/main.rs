@@ -1,0 +1,15 @@
+//! `agos` — CLI entrypoint for the AGOS reproduction.
+//!
+//! Subcommands (see `agos --help`): train, simulate, figure, table,
+//! sparsity, artifacts. Everything routes through `agos::cli`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match agos::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! MAC accounting per layer and training phase.
+//!
+//! The paper's cost model (§2.1): a conv `[C,H,W] --[M,C,R,S]--> [M,U,V]`
+//! costs `M·U·V·C·R·S` MACs in the forward pass. The backward input-
+//! gradient pass and the weight-gradient pass perform the same multiset
+//! of multiply-accumulates (each (weight, activation/gradient) pairing is
+//! visited exactly once in each phase), so their dense MAC counts equal
+//! the forward count. Pooling/ReLU/BN are not MAC work for the
+//! accelerator's GEMM datapath and count zero here.
+
+use super::{Layer, LayerKind, Network};
+
+/// Training phase (§1 Fig 1): forward, backward (input gradients),
+/// weight gradients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Forward,
+    Backward,
+    WeightGrad,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Forward, Phase::Backward, Phase::WeightGrad];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Forward => "FP",
+            Phase::Backward => "BP",
+            Phase::WeightGrad => "WG",
+        }
+    }
+}
+
+/// Dense MACs for one layer in one phase (per single input image).
+pub fn layer_macs(net: &Network, layer: &Layer, phase: Phase) -> u64 {
+    let dense = match layer.kind {
+        LayerKind::Conv { m, r, s, .. } => {
+            let cin = net.input_shape(layer.id).c;
+            (m * layer.out.h * layer.out.w) as u64 * (cin * r * s) as u64
+        }
+        LayerKind::DwConv { r, s, .. } => {
+            (layer.out.c * layer.out.h * layer.out.w) as u64 * (r * s) as u64
+        }
+        LayerKind::Fc { out } => {
+            let cin = net.input_shape(layer.id).len();
+            (out as u64) * (cin as u64)
+        }
+        _ => 0,
+    };
+    match phase {
+        Phase::Forward => dense,
+        // Same pairing count; the first compute layer has no backward
+        // input-gradient to produce (nothing consumes d(image)).
+        Phase::Backward => {
+            if is_first_compute(net, layer) {
+                0
+            } else {
+                dense
+            }
+        }
+        Phase::WeightGrad => dense,
+    }
+}
+
+fn is_first_compute(net: &Network, layer: &Layer) -> bool {
+    net.compute_layers().first().map(|l| l.id) == Some(layer.id)
+}
+
+/// Total dense MACs for a whole network in one phase.
+pub fn network_macs(net: &Network, phase: Phase) -> u64 {
+    net.layers().iter().map(|l| layer_macs(net, l, phase)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_match_formula() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 224, 224);
+        let c = n.conv("c1", x, 64, 3, 1, 1);
+        let l = n.layer(c);
+        // 64·224·224·3·3·3
+        assert_eq!(
+            layer_macs(&n, l, Phase::Forward),
+            64 * 224 * 224 * 27
+        );
+        // first compute layer: no BP input gradient
+        assert_eq!(layer_macs(&n, l, Phase::Backward), 0);
+        assert_eq!(layer_macs(&n, l, Phase::WeightGrad), 64 * 224 * 224 * 27);
+    }
+
+    #[test]
+    fn bp_equals_fp_for_inner_layers() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 32, 32);
+        let c1 = n.conv("c1", x, 16, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let c2 = n.conv("c2", r1, 32, 3, 1, 1);
+        let l2 = n.layer(c2);
+        assert_eq!(
+            layer_macs(&n, l2, Phase::Forward),
+            layer_macs(&n, l2, Phase::Backward)
+        );
+    }
+
+    #[test]
+    fn dwconv_and_fc() {
+        let mut n = Network::new("t");
+        let x = n.input(32, 8, 8);
+        let d = n.dwconv("dw", x, 3, 1, 1);
+        assert_eq!(layer_macs(&n, n.layer(d), Phase::Forward), 32 * 8 * 8 * 9);
+        let g = n.gap("g", d);
+        let f = n.fc("fc", g, 10);
+        assert_eq!(layer_macs(&n, n.layer(f), Phase::Forward), 320);
+        // relu/pool cost nothing
+        let r = n.relu("r", f);
+        assert_eq!(layer_macs(&n, n.layer(r), Phase::Forward), 0);
+    }
+
+    #[test]
+    fn network_total_sums() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 4, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        n.conv("c2", r1, 8, 3, 1, 1);
+        let total = network_macs(&n, Phase::Forward);
+        assert_eq!(total, (4 * 64 * 27 + 8 * 64 * 36) as u64);
+    }
+}

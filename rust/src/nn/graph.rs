@@ -1,0 +1,297 @@
+//! The network DAG with builder API and shape inference.
+//!
+//! Layers are appended in topological order (a layer's inputs must
+//! already exist), which every later traversal exploits: forward order is
+//! insertion order, backward order is the reverse.
+
+use anyhow::{ensure, Result};
+
+use super::{Layer, LayerId, LayerKind, Shape};
+
+/// A CNN as a DAG of layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str) -> Network {
+        Network { name: name.to_string(), layers: Vec::new() }
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Consumer adjacency for the whole graph in one O(edges) pass —
+    /// use this instead of per-layer `consumers()` in traversals (the
+    /// per-layer scan is O(L²) over DenseNet's ~800 layers).
+    pub fn consumer_map(&self) -> Vec<Vec<LayerId>> {
+        let mut map = vec![Vec::new(); self.layers.len()];
+        for l in &self.layers {
+            for &i in &l.inputs {
+                map[i].push(l.id);
+            }
+        }
+        map
+    }
+
+    /// All layers consuming `id`'s output.
+    pub fn consumers(&self, id: LayerId) -> Vec<LayerId> {
+        self.layers
+            .iter()
+            .filter(|l| l.inputs.contains(&id))
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Input shape of a single-input layer.
+    pub fn input_shape(&self, id: LayerId) -> Shape {
+        let l = &self.layers[id];
+        assert!(!l.inputs.is_empty(), "layer '{}' has no inputs", l.name);
+        self.layers[l.inputs[0]].out
+    }
+
+    // ---- builder ---------------------------------------------------------
+
+    fn push(&mut self, name: &str, kind: LayerKind, inputs: Vec<LayerId>, out: Shape) -> LayerId {
+        let id = self.layers.len();
+        for &i in &inputs {
+            assert!(i < id, "layer '{name}' references future layer {i}");
+        }
+        assert!(
+            self.by_name(name).is_none(),
+            "duplicate layer name '{name}' in network '{}'",
+            self.name
+        );
+        self.layers.push(Layer { id, name: name.to_string(), kind, inputs, out });
+        id
+    }
+
+    pub fn input(&mut self, c: usize, h: usize, w: usize) -> LayerId {
+        assert!(self.layers.is_empty(), "input must be the first layer");
+        self.push("input", LayerKind::Input, vec![], Shape::new(c, h, w))
+    }
+
+    pub fn conv(
+        &mut self,
+        name: &str,
+        from: LayerId,
+        m: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> LayerId {
+        let in_shape = self.layers[from].out;
+        let (u, v) = in_shape.conv_out(k, stride, pad);
+        self.push(
+            name,
+            LayerKind::Conv { m, r: k, s: k, stride, pad },
+            vec![from],
+            Shape::new(m, u, v),
+        )
+    }
+
+    pub fn dwconv(&mut self, name: &str, from: LayerId, k: usize, stride: usize, pad: usize) -> LayerId {
+        let in_shape = self.layers[from].out;
+        let (u, v) = in_shape.conv_out(k, stride, pad);
+        self.push(
+            name,
+            LayerKind::DwConv { r: k, s: k, stride, pad },
+            vec![from],
+            Shape::new(in_shape.c, u, v),
+        )
+    }
+
+    pub fn relu(&mut self, name: &str, from: LayerId) -> LayerId {
+        let out = self.layers[from].out;
+        self.push(name, LayerKind::ReLU, vec![from], out)
+    }
+
+    pub fn bn(&mut self, name: &str, from: LayerId) -> LayerId {
+        let out = self.layers[from].out;
+        self.push(name, LayerKind::BatchNorm, vec![from], out)
+    }
+
+    pub fn maxpool(&mut self, name: &str, from: LayerId, k: usize, stride: usize, pad: usize) -> LayerId {
+        let in_shape = self.layers[from].out;
+        let (u, v) = in_shape.conv_out(k, stride, pad);
+        self.push(
+            name,
+            LayerKind::MaxPool { k, stride, pad },
+            vec![from],
+            Shape::new(in_shape.c, u, v),
+        )
+    }
+
+    pub fn avgpool(&mut self, name: &str, from: LayerId, k: usize, stride: usize, pad: usize) -> LayerId {
+        let in_shape = self.layers[from].out;
+        let (u, v) = in_shape.conv_out(k, stride, pad);
+        self.push(
+            name,
+            LayerKind::AvgPool { k, stride, pad },
+            vec![from],
+            Shape::new(in_shape.c, u, v),
+        )
+    }
+
+    pub fn gap(&mut self, name: &str, from: LayerId) -> LayerId {
+        let in_shape = self.layers[from].out;
+        self.push(name, LayerKind::GlobalAvgPool, vec![from], Shape::new(in_shape.c, 1, 1))
+    }
+
+    pub fn fc(&mut self, name: &str, from: LayerId, out: usize) -> LayerId {
+        self.push(name, LayerKind::Fc { out }, vec![from], Shape::new(out, 1, 1))
+    }
+
+    pub fn add(&mut self, name: &str, a: LayerId, b: LayerId) -> LayerId {
+        let sa = self.layers[a].out;
+        let sb = self.layers[b].out;
+        assert_eq!(sa, sb, "Add '{name}': shapes {sa} vs {sb}");
+        self.push(name, LayerKind::Add, vec![a, b], sa)
+    }
+
+    pub fn concat(&mut self, name: &str, from: &[LayerId]) -> LayerId {
+        assert!(from.len() >= 2, "Concat '{name}' needs >= 2 inputs");
+        let first = self.layers[from[0]].out;
+        let mut c = 0;
+        for &i in from {
+            let s = self.layers[i].out;
+            assert_eq!((s.h, s.w), (first.h, first.w), "Concat '{name}': spatial mismatch");
+            c += s.c;
+        }
+        self.push(name, LayerKind::Concat, from.to_vec(), Shape::new(c, first.h, first.w))
+    }
+
+    pub fn softmax(&mut self, name: &str, from: LayerId) -> LayerId {
+        let out = self.layers[from].out;
+        self.push(name, LayerKind::Softmax, vec![from], out)
+    }
+
+    // ---- validation --------------------------------------------------------
+
+    /// Structural sanity: connectivity, single input, shapes consistent.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "empty network");
+        ensure!(
+            matches!(self.layers[0].kind, LayerKind::Input),
+            "first layer must be Input"
+        );
+        for l in &self.layers[1..] {
+            ensure!(!l.inputs.is_empty(), "layer '{}' is disconnected", l.name);
+            ensure!(
+                !matches!(l.kind, LayerKind::Input),
+                "second Input layer '{}'",
+                l.name
+            );
+        }
+        // every non-terminal layer should be consumed
+        for l in &self.layers {
+            if self.consumers(l.id).is_empty() && l.id != self.layers.len() - 1 {
+                // allow multiple heads only if explicitly terminal kinds
+                ensure!(
+                    matches!(l.kind, LayerKind::Softmax),
+                    "dangling layer '{}' (id {})",
+                    l.name,
+                    l.id
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Conv/DwConv/Fc layers in forward order (what the accelerator runs).
+    pub fn compute_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.kind.is_compute()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 16, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let c2 = n.conv("c2", r1, 32, 3, 2, 1);
+        let r2 = n.relu("r2", c2);
+        let g = n.gap("gap", r2);
+        let f = n.fc("fc", g, 10);
+        n.softmax("sm", f);
+        n
+    }
+
+    #[test]
+    fn shapes_infer() {
+        let n = tiny();
+        assert_eq!(n.by_name("c1").unwrap().out, Shape::new(16, 8, 8));
+        assert_eq!(n.by_name("c2").unwrap().out, Shape::new(32, 4, 4));
+        assert_eq!(n.by_name("gap").unwrap().out, Shape::new(32, 1, 1));
+        assert_eq!(n.by_name("fc").unwrap().out, Shape::new(10, 1, 1));
+        n.validate().unwrap();
+    }
+
+    #[test]
+    fn consumers_and_compute() {
+        let n = tiny();
+        let c1 = n.by_name("c1").unwrap().id;
+        assert_eq!(n.consumers(c1), vec![n.by_name("r1").unwrap().id]);
+        assert_eq!(n.compute_layers().len(), 3); // c1, c2, fc
+        // consumer_map agrees with per-layer consumers
+        let map = n.consumer_map();
+        for l in n.layers() {
+            assert_eq!(map[l.id], n.consumers(l.id), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn add_and_concat_shapes() {
+        let mut n = Network::new("resblock");
+        let x = n.input(64, 56, 56);
+        let c1 = n.conv("c1", x, 64, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let c2 = n.conv("c2", r1, 64, 3, 1, 1);
+        let a = n.add("add", c2, x);
+        assert_eq!(n.layer(a).out, Shape::new(64, 56, 56));
+        let cat = n.concat("cat", &[a, r1]);
+        assert_eq!(n.layer(cat).out, Shape::new(128, 56, 56));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate layer name")]
+    fn duplicate_names_panic() {
+        let mut n = Network::new("dup");
+        let x = n.input(3, 4, 4);
+        n.conv("c", x, 8, 3, 1, 1);
+        n.conv("c", x, 8, 3, 1, 1);
+    }
+
+    #[test]
+    fn validate_catches_dangling() {
+        let mut n = Network::new("dangle");
+        let x = n.input(3, 4, 4);
+        let c1 = n.conv("c1", x, 8, 3, 1, 1);
+        n.conv("c2", x, 8, 3, 1, 1); // dangling — never consumed
+        n.relu("r", c1);
+        assert!(n.validate().is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Layer kinds and the `Layer` node of the network DAG.
+
+use super::Shape;
+
+/// Index of a layer within its `Network`.
+pub type LayerId = usize;
+
+/// Every layer kind appearing in the five evaluated CNNs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Network input (the image).
+    Input,
+    /// Standard convolution: `m` filters of `r × s` over all input
+    /// channels. `[C,H,W] --[M,C,R,S]--> [M,U,V]`.
+    Conv { m: usize, r: usize, s: usize, stride: usize, pad: usize },
+    /// Depthwise convolution (MobileNet): one `r × s` filter per channel.
+    DwConv { r: usize, s: usize, stride: usize, pad: usize },
+    /// Fully-connected layer (`out` neurons over the flattened input).
+    Fc { out: usize },
+    /// Rectified linear unit — the sparsity source (§3.1).
+    ReLU,
+    /// Batch normalization — re-densifies gradients in BP (§2.1, Fig 3c).
+    BatchNorm,
+    /// Max pooling. At a MaxPool–CONV boundary output sparsity is lost
+    /// (§6, Fig 11 discussion).
+    MaxPool { k: usize, stride: usize, pad: usize },
+    /// Average pooling.
+    AvgPool { k: usize, stride: usize, pad: usize },
+    /// Global average pooling to `[C,1,1]`.
+    GlobalAvgPool,
+    /// Element-wise residual addition (ResNet) — dilutes sparsity (§6).
+    Add,
+    /// Channel concatenation (GoogLeNet/DenseNet) — preserves sparsity.
+    Concat,
+    /// Classifier head (no MACs of interest).
+    Softmax,
+}
+
+impl LayerKind {
+    /// Does this layer perform GEMM-shaped work the accelerator executes?
+    pub fn is_compute(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. } | LayerKind::DwConv { .. } | LayerKind::Fc { .. })
+    }
+
+    /// Does this layer's *output* carry a ReLU zero footprint?
+    pub fn is_relu(&self) -> bool {
+        matches!(self, LayerKind::ReLU)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "input",
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::DwConv { .. } => "dwconv",
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::ReLU => "relu",
+            LayerKind::BatchNorm => "bn",
+            LayerKind::MaxPool { .. } => "maxpool",
+            LayerKind::AvgPool { .. } => "avgpool",
+            LayerKind::GlobalAvgPool => "gap",
+            LayerKind::Add => "add",
+            LayerKind::Concat => "concat",
+            LayerKind::Softmax => "softmax",
+        }
+    }
+}
+
+/// A node in the network DAG.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub id: LayerId,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Producer layers (1 for most, 2+ for Add/Concat).
+    pub inputs: Vec<LayerId>,
+    /// Inferred output shape.
+    pub out: Shape,
+}
+
+impl Layer {
+    /// Receptive-field size `C·R·S` per output value (the quantity the
+    /// PE capacity of 1024 is compared against, §4.4/4.5). `None` for
+    /// non-compute layers.
+    pub fn receptive_field(&self, in_shape: Shape) -> Option<usize> {
+        match self.kind {
+            LayerKind::Conv { r, s, .. } => Some(in_shape.c * r * s),
+            LayerKind::DwConv { r, s, .. } => Some(r * s),
+            LayerKind::Fc { .. } => Some(in_shape.len()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_classification() {
+        assert!(LayerKind::Conv { m: 1, r: 3, s: 3, stride: 1, pad: 1 }.is_compute());
+        assert!(LayerKind::Fc { out: 10 }.is_compute());
+        assert!(!LayerKind::ReLU.is_compute());
+        assert!(LayerKind::ReLU.is_relu());
+        assert!(!LayerKind::BatchNorm.is_relu());
+    }
+
+    #[test]
+    fn receptive_fields() {
+        let conv = Layer {
+            id: 0,
+            name: "c".into(),
+            kind: LayerKind::Conv { m: 64, r: 3, s: 3, stride: 1, pad: 1 },
+            inputs: vec![],
+            out: Shape::new(64, 56, 56),
+        };
+        assert_eq!(conv.receptive_field(Shape::new(128, 56, 56)), Some(128 * 9));
+        let dw = Layer {
+            id: 0,
+            name: "d".into(),
+            kind: LayerKind::DwConv { r: 3, s: 3, stride: 1, pad: 1 },
+            inputs: vec![],
+            out: Shape::new(128, 56, 56),
+        };
+        assert_eq!(dw.receptive_field(Shape::new(128, 56, 56)), Some(9));
+        let relu = Layer {
+            id: 0,
+            name: "r".into(),
+            kind: LayerKind::ReLU,
+            inputs: vec![],
+            out: Shape::new(1, 1, 1),
+        };
+        assert_eq!(relu.receptive_field(Shape::new(1, 1, 1)), None);
+    }
+}

@@ -1,0 +1,17 @@
+//! CNN layer-graph IR: layers, DAG with shape inference, MAC accounting,
+//! and the ImageNet model zoo the paper evaluates (VGG-16, ResNet-18,
+//! GoogLeNet, DenseNet-121, MobileNet-v1).
+//!
+//! Shapes use the paper's notation: feature maps are `[C, H, W]`, conv
+//! filters `[M, C, R, S]`, outputs `[M, U, V]` (§2.1).
+
+mod tensor;
+mod layer;
+mod graph;
+mod flops;
+pub mod zoo;
+
+pub use tensor::Shape;
+pub use layer::{Layer, LayerId, LayerKind};
+pub use graph::Network;
+pub use flops::{layer_macs, network_macs, Phase};

@@ -1,0 +1,64 @@
+//! Feature-map shapes in the paper's `[C, H, W]` notation.
+
+/// A 3-D feature-map shape (channels, height, width).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Shape {
+        Shape { c, h, w }
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spatial output size after a k×k window with given stride/pad.
+    pub fn conv_out(&self, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+        assert!(self.h + 2 * pad >= k && self.w + 2 * pad >= k, "window larger than input");
+        ((self.h + 2 * pad - k) / stride + 1, (self.w + 2 * pad - k) / stride + 1)
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{},{},{}]", self.c, self.h, self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn len_and_display() {
+        let s = Shape::new(64, 56, 56);
+        assert_eq!(s.len(), 64 * 56 * 56);
+        assert_eq!(s.to_string(), "[64,56,56]");
+    }
+
+    #[test]
+    fn conv_out_same_and_strided() {
+        let s = Shape::new(3, 224, 224);
+        assert_eq!(s.conv_out(3, 1, 1), (224, 224));
+        assert_eq!(s.conv_out(7, 2, 3), (112, 112));
+        assert_eq!(s.conv_out(3, 2, 1), (112, 112));
+        let p = Shape::new(64, 112, 112);
+        assert_eq!(p.conv_out(3, 2, 1), (56, 56)); // maxpool 3x3/2 style
+    }
+
+    #[test]
+    #[should_panic]
+    fn window_too_large_panics() {
+        Shape::new(3, 2, 2).conv_out(5, 1, 0);
+    }
+}

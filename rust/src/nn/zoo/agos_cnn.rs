@@ -1,0 +1,45 @@
+//! The small CNN trained end-to-end through the AOT artifacts
+//! (`python/compile/model.py`) — mirrored here as an `nn::Network` so
+//! measured traces can drive the simulator (co-simulation).
+//!
+//! Layer names match the trace keys emitted by the coordinator
+//! (`relu1..relu4`).
+
+use crate::nn::Network;
+
+/// Build the 4-conv AGOS demo CNN at 32×32×3 (must stay in sync with
+/// `python/compile/model.py::CONV_SPECS`).
+pub fn agos_cnn() -> Network {
+    let mut net = Network::new("agos_cnn");
+    let x = net.input(3, 32, 32);
+    let c1 = net.conv("conv1", x, 16, 3, 1, 1);
+    let r1 = net.relu("relu1", c1);
+    let c2 = net.conv("conv2", r1, 32, 3, 2, 1);
+    let r2 = net.relu("relu2", c2);
+    let c3 = net.conv("conv3", r2, 32, 3, 1, 1);
+    let r3 = net.relu("relu3", c3);
+    let c4 = net.conv("conv4", r3, 64, 3, 2, 1);
+    let r4 = net.relu("relu4", c4);
+    let g = net.gap("gap", r4);
+    let f = net.fc("fc", g, 10);
+    net.softmax("prob", f);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Shape;
+
+    #[test]
+    fn matches_python_model() {
+        let n = agos_cnn();
+        n.validate().unwrap();
+        assert_eq!(n.by_name("relu1").unwrap().out, Shape::new(16, 32, 32));
+        assert_eq!(n.by_name("relu2").unwrap().out, Shape::new(32, 16, 16));
+        assert_eq!(n.by_name("relu3").unwrap().out, Shape::new(32, 16, 16));
+        assert_eq!(n.by_name("relu4").unwrap().out, Shape::new(64, 8, 8));
+        assert_eq!(n.by_name("fc").unwrap().out, Shape::new(10, 1, 1));
+        assert_eq!(n.compute_layers().len(), 5);
+    }
+}

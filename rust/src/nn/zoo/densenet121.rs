@@ -1,0 +1,106 @@
+//! DenseNet-121 (Huang et al.) — dense blocks with channel concatenation.
+//!
+//! Pre-activation ordering (BN–ReLU–conv): every conv's *input* is a ReLU
+//! output (concatenated), so output sparsity applies throughout BP even
+//! though BN kills gradient input sparsity; concatenation (unlike
+//! ResNet's Add) preserves high sparsity (Fig 12a discussion).
+
+use crate::nn::{LayerId, Network};
+
+const GROWTH: usize = 32;
+const BLOCK_LAYERS: [usize; 4] = [6, 12, 24, 16];
+
+/// One dense layer: BN-ReLU-conv1x1(4k)-BN-ReLU-conv3x3(k); its output is
+/// concatenated onto the running feature map by the caller.
+fn dense_layer(net: &mut Network, from: LayerId, name: &str) -> LayerId {
+    let b1 = net.bn(&format!("{name}_bn1"), from);
+    let r1 = net.relu(&format!("{name}_relu1"), b1);
+    let c1 = net.conv(&format!("{name}_conv1"), r1, 4 * GROWTH, 1, 1, 0);
+    let b2 = net.bn(&format!("{name}_bn2"), c1);
+    let r2 = net.relu(&format!("{name}_relu2"), b2);
+    net.conv(&format!("{name}_conv2"), r2, GROWTH, 3, 1, 1)
+}
+
+/// Transition: BN-ReLU-conv1x1(half)-avgpool2.
+fn transition(net: &mut Network, from: LayerId, name: &str) -> LayerId {
+    let c_in = net.layer(from).out.c;
+    let b = net.bn(&format!("{name}_bn"), from);
+    let r = net.relu(&format!("{name}_relu"), b);
+    let c = net.conv(&format!("{name}_conv"), r, c_in / 2, 1, 1, 0);
+    net.avgpool(&format!("{name}_pool"), c, 2, 2, 0)
+}
+
+/// Build DenseNet-121 at 224×224.
+pub fn densenet121() -> Network {
+    let mut net = Network::new("densenet121");
+    let x = net.input(3, 224, 224);
+    let c0 = net.conv("conv0", x, 64, 7, 2, 3); // 112
+    let b0 = net.bn("bn0", c0);
+    let r0 = net.relu("relu0", b0);
+    let mut cur = net.maxpool("pool0", r0, 3, 2, 1); // 56
+
+    for (bi, &layers) in BLOCK_LAYERS.iter().enumerate() {
+        for li in 0..layers {
+            let out = dense_layer(&mut net, cur, &format!("dense{}_{li}", bi + 1));
+            cur = net.concat(&format!("dense{}_{li}_cat", bi + 1), &[cur, out]);
+        }
+        if bi + 1 < BLOCK_LAYERS.len() {
+            cur = transition(&mut net, cur, &format!("trans{}", bi + 1));
+        }
+    }
+    let bf = net.bn("bn_final", cur);
+    let rf = net.relu("relu_final", bf);
+    let g = net.gap("gap", rf);
+    let f = net.fc("fc", g, 1000);
+    net.softmax("prob", f);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{network_macs, Phase};
+
+    #[test]
+    fn structure() {
+        let n = densenet121();
+        n.validate().unwrap();
+        // stem 1 + 58 dense layers × 2 + 3 transitions + fc = 121 weighted
+        // layers (that's the "121").
+        assert_eq!(n.compute_layers().len(), 121);
+        // channel arithmetic: 64 + 6·32 = 256, /2 = 128; 128+12·32=512,/2=256;
+        // 256+24·32=1024,/2=512; 512+16·32=1024.
+        assert_eq!(n.by_name("trans1_conv").unwrap().out.c, 128);
+        assert_eq!(n.by_name("trans2_conv").unwrap().out.c, 256);
+        assert_eq!(n.by_name("trans3_conv").unwrap().out.c, 512);
+        assert_eq!(n.by_name("bn_final").unwrap().out.c, 1024);
+        assert_eq!(n.by_name("bn_final").unwrap().out.h, 7);
+    }
+
+    #[test]
+    fn mac_count_matches_literature() {
+        // DenseNet-121 forward ≈2.8-2.9 GMACs.
+        let n = densenet121();
+        let total = network_macs(&n, Phase::Forward) as f64;
+        assert!((2.6e9..3.1e9).contains(&total), "DenseNet-121 FP MACs {total}");
+    }
+
+    #[test]
+    fn every_conv_input_is_relu() {
+        // pre-activation: each conv's producer is a ReLU (output sparsity
+        // applicable on every conv in BP despite BN).
+        let n = densenet121();
+        for l in n.compute_layers() {
+            if l.name == "fc" || l.name == "conv0" {
+                continue;
+            }
+            let prod = n.layer(l.inputs[0]);
+            assert!(
+                prod.kind.is_relu(),
+                "{} input is {} not relu",
+                l.name,
+                prod.name
+            );
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! GoogLeNet (Szegedy et al. 2015) — inception modules, no BatchNorm.
+//!
+//! Like VGG, the conv–ReLU structure admits joint input+output sparsity
+//! in BP. Fig 3a/3b and Fig 11b study the inception-3b module; Fig 17
+//! studies inception-4d node utilization.
+
+use crate::nn::{LayerId, Network};
+
+/// Inception module parameters `(c1, c3r, c3, c5r, c5, pp)`.
+pub struct InceptionCfg {
+    pub c1: usize,
+    pub c3r: usize,
+    pub c3: usize,
+    pub c5r: usize,
+    pub c5: usize,
+    pub pp: usize,
+}
+
+/// Build one inception module; every conv is followed by ReLU, the pool
+/// branch is maxpool3x3/1 + 1×1 conv. Returns the concat output.
+pub fn inception(net: &mut Network, from: LayerId, name: &str, cfg: &InceptionCfg) -> LayerId {
+    // branch 1: 1x1
+    let b1c = net.conv(&format!("{name}_1x1"), from, cfg.c1, 1, 1, 0);
+    let b1 = net.relu(&format!("{name}_relu_1x1"), b1c);
+    // branch 2: 1x1 reduce -> 3x3
+    let b2r = net.conv(&format!("{name}_3x3_reduce"), from, cfg.c3r, 1, 1, 0);
+    let b2rr = net.relu(&format!("{name}_relu_3x3_reduce"), b2r);
+    let b2c = net.conv(&format!("{name}_3x3"), b2rr, cfg.c3, 3, 1, 1);
+    let b2 = net.relu(&format!("{name}_relu_3x3"), b2c);
+    // branch 3: 1x1 reduce -> 5x5
+    let b3r = net.conv(&format!("{name}_5x5_reduce"), from, cfg.c5r, 1, 1, 0);
+    let b3rr = net.relu(&format!("{name}_relu_5x5_reduce"), b3r);
+    let b3c = net.conv(&format!("{name}_5x5"), b3rr, cfg.c5, 5, 1, 2);
+    let b3 = net.relu(&format!("{name}_relu_5x5"), b3c);
+    // branch 4: maxpool -> 1x1 proj
+    let b4p = net.maxpool(&format!("{name}_pool"), from, 3, 1, 1);
+    let b4c = net.conv(&format!("{name}_pool_proj"), b4p, cfg.pp, 1, 1, 0);
+    let b4 = net.relu(&format!("{name}_relu_pool_proj"), b4c);
+    net.concat(&format!("{name}_output"), &[b1, b2, b3, b4])
+}
+
+const CFGS: [(&str, InceptionCfg); 9] = [
+    ("inception_3a", InceptionCfg { c1: 64, c3r: 96, c3: 128, c5r: 16, c5: 32, pp: 32 }),
+    ("inception_3b", InceptionCfg { c1: 128, c3r: 128, c3: 192, c5r: 32, c5: 96, pp: 64 }),
+    ("inception_4a", InceptionCfg { c1: 192, c3r: 96, c3: 208, c5r: 16, c5: 48, pp: 64 }),
+    ("inception_4b", InceptionCfg { c1: 160, c3r: 112, c3: 224, c5r: 24, c5: 64, pp: 64 }),
+    ("inception_4c", InceptionCfg { c1: 128, c3r: 128, c3: 256, c5r: 24, c5: 64, pp: 64 }),
+    ("inception_4d", InceptionCfg { c1: 112, c3r: 144, c3: 288, c5r: 32, c5: 64, pp: 64 }),
+    ("inception_4e", InceptionCfg { c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pp: 128 }),
+    ("inception_5a", InceptionCfg { c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pp: 128 }),
+    ("inception_5b", InceptionCfg { c1: 384, c3r: 192, c3: 384, c5r: 48, c5: 128, pp: 128 }),
+];
+
+/// Build GoogLeNet at 224×224 (main branch; auxiliary heads, which exist
+/// only for training-time regularization of the original, are omitted as
+/// they are not part of the paper's evaluated blocks).
+pub fn googlenet() -> Network {
+    let mut net = Network::new("googlenet");
+    let x = net.input(3, 224, 224);
+    let c1 = net.conv("conv1", x, 64, 7, 2, 3); // 112
+    let r1 = net.relu("relu_conv1", c1);
+    let p1 = net.maxpool("pool1", r1, 3, 2, 1); // 56
+    let c2r = net.conv("conv2_reduce", p1, 64, 1, 1, 0);
+    let r2r = net.relu("relu_conv2_reduce", c2r);
+    let c2 = net.conv("conv2", r2r, 192, 3, 1, 1);
+    let r2 = net.relu("relu_conv2", c2);
+    let p2 = net.maxpool("pool2", r2, 3, 2, 1); // 28
+
+    let mut cur = p2;
+    for (name, cfg) in CFGS.iter() {
+        cur = inception(&mut net, cur, name, cfg);
+        if *name == "inception_3b" {
+            cur = net.maxpool("pool3", cur, 3, 2, 1); // 14
+        } else if *name == "inception_4e" {
+            cur = net.maxpool("pool4", cur, 3, 2, 1); // 7
+        }
+    }
+    let g = net.gap("gap", cur);
+    let f = net.fc("fc", g, 1000);
+    net.softmax("prob", f);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{network_macs, Phase, Shape};
+
+    #[test]
+    fn structure() {
+        let n = googlenet();
+        n.validate().unwrap();
+        // stem 3 convs + 9 modules × 6 convs + fc = 58 compute layers
+        assert_eq!(n.compute_layers().len(), 58);
+        assert_eq!(n.by_name("inception_3a_output").unwrap().out, Shape::new(256, 28, 28));
+        assert_eq!(n.by_name("inception_3b_output").unwrap().out, Shape::new(480, 28, 28));
+        assert_eq!(n.by_name("inception_4d_output").unwrap().out, Shape::new(528, 14, 14));
+        assert_eq!(n.by_name("inception_5b_output").unwrap().out, Shape::new(1024, 7, 7));
+    }
+
+    #[test]
+    fn mac_count_matches_literature() {
+        // GoogLeNet forward ≈1.5 GMACs (1.43–1.6 depending on aux heads).
+        let n = googlenet();
+        let total = network_macs(&n, Phase::Forward) as f64;
+        assert!((1.35e9..1.7e9).contains(&total), "GoogLeNet FP MACs {total}");
+    }
+}

@@ -1,0 +1,91 @@
+//! MobileNet-v1 (Howard et al.) — depthwise-separable convolutions, BN.
+//!
+//! Linear structure like VGG but every "conv" is dw3x3 + pw1x1, each with
+//! BN+ReLU. The paper reports results for the pointwise (pw) convs only
+//! (the dw layers are not a compute bottleneck — Fig 12b), with output
+//! sparsity + WR giving 1.25–2.1×.
+
+use crate::nn::{LayerId, Network};
+
+/// One depthwise-separable unit: dw3x3(+BN+ReLU) then pw1x1(+BN+ReLU).
+fn ds_block(net: &mut Network, from: LayerId, idx: usize, out_ch: usize, stride: usize) -> LayerId {
+    let d = net.dwconv(&format!("dw{idx}"), from, 3, stride, 1);
+    let db = net.bn(&format!("dw{idx}_bn"), d);
+    let dr = net.relu(&format!("dw{idx}_relu"), db);
+    let p = net.conv(&format!("pw{idx}"), dr, out_ch, 1, 1, 0);
+    let pb = net.bn(&format!("pw{idx}_bn"), p);
+    net.relu(&format!("pw{idx}_relu"), pb)
+}
+
+/// Build MobileNet-v1 (width 1.0) at 224×224.
+pub fn mobilenet_v1() -> Network {
+    let mut net = Network::new("mobilenet_v1");
+    let x = net.input(3, 224, 224);
+    let c1 = net.conv("conv1", x, 32, 3, 2, 1); // 112
+    let b1 = net.bn("conv1_bn", c1);
+    let mut cur = net.relu("conv1_relu", b1);
+
+    // (out_ch, stride) for the 13 depthwise-separable blocks.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, (ch, stride)) in blocks.into_iter().enumerate() {
+        cur = ds_block(&mut net, cur, i + 1, ch, stride);
+    }
+    let g = net.gap("gap", cur);
+    let f = net.fc("fc", g, 1000);
+    net.softmax("prob", f);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{network_macs, LayerKind, Phase, Shape};
+
+    #[test]
+    fn structure() {
+        let n = mobilenet_v1();
+        n.validate().unwrap();
+        // 1 stem + 13 dw + 13 pw + 1 fc = 28 compute layers
+        assert_eq!(n.compute_layers().len(), 28);
+        assert_eq!(n.by_name("pw13_relu").unwrap().out, Shape::new(1024, 7, 7));
+    }
+
+    #[test]
+    fn mac_count_matches_literature() {
+        // MobileNet-v1 forward ≈569 MMACs.
+        let n = mobilenet_v1();
+        let total = network_macs(&n, Phase::Forward) as f64;
+        assert!((5.3e8..6.1e8).contains(&total), "MobileNet FP MACs {total}");
+    }
+
+    #[test]
+    fn pw_dominates_compute() {
+        // Paper: dw layers are not the bottleneck. Check pw ≥ 90% of MACs.
+        let n = mobilenet_v1();
+        let mut pw = 0u64;
+        let mut dw = 0u64;
+        for l in n.compute_layers() {
+            let macs = crate::nn::layer_macs(&n, l, Phase::Forward);
+            match l.kind {
+                LayerKind::DwConv { .. } => dw += macs,
+                LayerKind::Conv { .. } if l.name.starts_with("pw") => pw += macs,
+                _ => {}
+            }
+        }
+        assert!(pw > 9 * dw, "pw {pw} vs dw {dw}");
+    }
+}

@@ -1,0 +1,62 @@
+//! The five ImageNet CNNs the paper evaluates (§5.1), built layer-by-layer
+//! with the `Network` builder at 224×224×3 input resolution.
+//!
+//! VGG-16 and GoogLeNet are BN-free (conv–ReLU chains ⇒ both input and
+//! output sparsity in BP); ResNet-18, DenseNet-121 and MobileNet-v1 carry
+//! BatchNorm (conv–BN–ReLU ⇒ only *output* sparsity in BP) — the
+//! structural distinction §6 organizes its results around.
+
+mod agos_cnn;
+mod vgg16;
+mod resnet18;
+mod googlenet;
+mod densenet121;
+mod mobilenetv1;
+
+pub use agos_cnn::agos_cnn;
+pub use densenet121::densenet121;
+pub use googlenet::googlenet;
+pub use mobilenetv1::mobilenet_v1;
+pub use resnet18::resnet18;
+pub use vgg16::vgg16;
+
+use super::Network;
+
+/// All five evaluated networks, in the paper's reporting order.
+pub fn all_networks() -> Vec<Network> {
+    vec![vgg16(), resnet18(), googlenet(), densenet121(), mobilenet_v1()]
+}
+
+/// Look a network up by (case-insensitive) name.
+pub fn by_name(name: &str) -> anyhow::Result<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg" | "vgg16" | "vgg-16" => Ok(vgg16()),
+        "resnet" | "resnet18" | "resnet-18" => Ok(resnet18()),
+        "googlenet" | "inception" => Ok(googlenet()),
+        "densenet" | "densenet121" | "densenet-121" => Ok(densenet121()),
+        "mobilenet" | "mobilenetv1" | "mobilenet-v1" | "mobilenet_v1" => Ok(mobilenet_v1()),
+        other => anyhow::bail!(
+            "unknown network '{other}' (vgg16|resnet18|googlenet|densenet121|mobilenet)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["vgg16", "resnet18", "googlenet", "densenet121", "mobilenet"] {
+            assert!(by_name(n).is_ok(), "{n}");
+        }
+        assert!(by_name("alexnet").is_err());
+    }
+
+    #[test]
+    fn all_networks_validate() {
+        for net in all_networks() {
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        }
+    }
+}

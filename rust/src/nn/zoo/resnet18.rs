@@ -1,0 +1,98 @@
+//! ResNet-18 (He et al.) — BasicBlock residual network with BatchNorm.
+//!
+//! conv–BN–ReLU ordering: in the backward pass the BN layer re-densifies
+//! gradients, so the only sparsity the accelerator can use on the conv
+//! input-gradient GEMMs is *output* sparsity (§6 "Networks with the BN
+//! layer"); the element-wise shortcut Add dilutes activation sparsity of
+//! the post-add ReLU to ≈30% (Fig 13 discussion).
+
+use crate::nn::{LayerId, Network};
+
+/// One BasicBlock: conv3x3-BN-ReLU-conv3x3-BN (+ projection) → Add → ReLU.
+fn basic_block(
+    net: &mut Network,
+    from: LayerId,
+    name: &str,
+    ch: usize,
+    stride: usize,
+) -> LayerId {
+    let c1 = net.conv(&format!("{name}_conv1"), from, ch, 3, stride, 1);
+    let b1 = net.bn(&format!("{name}_bn1"), c1);
+    let r1 = net.relu(&format!("{name}_relu1"), b1);
+    let c2 = net.conv(&format!("{name}_conv2"), r1, ch, 3, 1, 1);
+    let b2 = net.bn(&format!("{name}_bn2"), c2);
+    let shortcut = if stride != 1 || net.layer(from).out.c != ch {
+        let cs = net.conv(&format!("{name}_proj"), from, ch, 1, stride, 0);
+        net.bn(&format!("{name}_proj_bn"), cs)
+    } else {
+        from
+    };
+    let a = net.add(&format!("{name}_add"), b2, shortcut);
+    net.relu(&format!("{name}_relu2"), a)
+}
+
+/// Build ResNet-18 at 224×224.
+pub fn resnet18() -> Network {
+    let mut net = Network::new("resnet18");
+    let x = net.input(3, 224, 224);
+    let c1 = net.conv("conv1", x, 64, 7, 2, 3); // 112
+    let b1 = net.bn("bn1", c1);
+    let r1 = net.relu("relu1", b1);
+    let p1 = net.maxpool("pool1", r1, 3, 2, 1); // 56
+
+    let mut cur = p1;
+    for (stage, (ch, blocks)) in [(64usize, 2usize), (128, 2), (256, 2), (512, 2)]
+        .into_iter()
+        .enumerate()
+    {
+        for b in 0..blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            cur = basic_block(&mut net, cur, &format!("layer{}_{b}", stage + 1), ch, stride);
+        }
+    }
+    let g = net.gap("gap", cur);
+    let f = net.fc("fc", g, 1000);
+    net.softmax("prob", f);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{network_macs, Phase, Shape};
+
+    #[test]
+    fn structure() {
+        let n = resnet18();
+        n.validate().unwrap();
+        // 1 stem + 8 blocks × 2 convs + 3 projections + 1 fc = 21 compute
+        assert_eq!(n.compute_layers().len(), 21);
+        assert_eq!(n.by_name("layer1_0_conv1").unwrap().out, Shape::new(64, 56, 56));
+        assert_eq!(n.by_name("layer4_1_relu2").unwrap().out, Shape::new(512, 7, 7));
+    }
+
+    #[test]
+    fn mac_count_matches_literature() {
+        // ResNet-18 forward ≈1.82 GMACs.
+        let n = resnet18();
+        let total = network_macs(&n, Phase::Forward) as f64;
+        assert!((1.7e9..1.95e9).contains(&total), "ResNet-18 FP MACs {total}");
+    }
+
+    #[test]
+    fn every_conv_followed_by_bn() {
+        let n = resnet18();
+        for l in n.compute_layers() {
+            if l.name == "fc" {
+                continue;
+            }
+            let cons = n.consumers(l.id);
+            assert_eq!(cons.len(), 1, "{}", l.name);
+            assert!(
+                matches!(n.layer(cons[0]).kind, crate::nn::LayerKind::BatchNorm),
+                "{} not followed by BN",
+                l.name
+            );
+        }
+    }
+}

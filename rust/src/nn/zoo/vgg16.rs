@@ -1,0 +1,61 @@
+//! VGG-16 (Simonyan & Zisserman 2014) — 13 conv + 3 FC, no BatchNorm.
+//!
+//! The BN-free conv–ReLU chain makes every inner conv a candidate for
+//! *both* input and output sparsity in the backward pass (Fig 11a); the
+//! convs directly after MaxPool lose output sparsity (bars 3/5/8/11).
+
+use crate::nn::{LayerId, Network};
+
+fn block(net: &mut Network, mut from: LayerId, stage: usize, convs: usize, ch: usize) -> LayerId {
+    for i in 1..=convs {
+        let c = net.conv(&format!("conv{stage}_{i}"), from, ch, 3, 1, 1);
+        from = net.relu(&format!("relu{stage}_{i}"), c);
+    }
+    net.maxpool(&format!("pool{stage}"), from, 2, 2, 0)
+}
+
+/// Build VGG-16 at 224×224.
+pub fn vgg16() -> Network {
+    let mut net = Network::new("vgg16");
+    let x = net.input(3, 224, 224);
+    let p1 = block(&mut net, x, 1, 2, 64); // 112
+    let p2 = block(&mut net, p1, 2, 2, 128); // 56
+    let p3 = block(&mut net, p2, 3, 3, 256); // 28
+    let p4 = block(&mut net, p3, 4, 3, 512); // 14
+    let p5 = block(&mut net, p4, 5, 3, 512); // 7
+    let f6 = net.fc("fc6", p5, 4096);
+    let r6 = net.relu("relu6", f6);
+    let f7 = net.fc("fc7", r6, 4096);
+    let r7 = net.relu("relu7", f7);
+    let f8 = net.fc("fc8", r7, 1000);
+    net.softmax("prob", f8);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{network_macs, Phase, Shape};
+
+    #[test]
+    fn structure() {
+        let n = vgg16();
+        n.validate().unwrap();
+        // 13 convs + 3 fc
+        assert_eq!(n.compute_layers().len(), 16);
+        assert_eq!(n.by_name("conv1_1").unwrap().out, Shape::new(64, 224, 224));
+        assert_eq!(n.by_name("pool5").unwrap().out, Shape::new(512, 7, 7));
+        assert_eq!(n.by_name("fc6").unwrap().out, Shape::new(4096, 1, 1));
+    }
+
+    #[test]
+    fn mac_count_matches_literature() {
+        // VGG-16 forward: ≈15.47 GMACs conv + ≈0.124 GMACs FC.
+        let n = vgg16();
+        let total = network_macs(&n, Phase::Forward);
+        assert!(
+            (15.3e9..15.8e9).contains(&(total as f64)),
+            "VGG-16 FP MACs {total}"
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! The tabular result container every generator produces.
+
+use crate::util::json::Json;
+
+/// A figure/table: labeled rows of numeric columns.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    /// Paper artifact id, e.g. "fig11a".
+    pub id: String,
+    pub title: String,
+    /// Column headers (not counting the row label).
+    pub columns: Vec<String>,
+    /// (row label, one value per column).
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Free-form provenance notes (series definition, units).
+    pub notes: String,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Figure {
+        Figure {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            notes: String::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row '{label}' arity");
+        self.rows.push((label.to_string(), values));
+    }
+
+    /// Aligned text rendering for the terminal.
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} — {} ==\n", self.id, self.title);
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(5))
+            .max()
+            .unwrap()
+            .max(5);
+        s.push_str(&format!("{:<label_w$}", "layer"));
+        for c in &self.columns {
+            s.push_str(&format!(" {c:>12}"));
+        }
+        s.push('\n');
+        for (label, values) in &self.rows {
+            s.push_str(&format!("{label:<label_w$}"));
+            for v in values {
+                if v.abs() >= 1000.0 {
+                    s.push_str(&format!(" {v:>12.1}"));
+                } else {
+                    s.push_str(&format!(" {v:>12.3}"));
+                }
+            }
+            s.push('\n');
+        }
+        if !self.notes.is_empty() {
+            s.push_str(&format!("note: {}\n", self.notes));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(l, vs)| {
+                Json::from_pairs(vec![
+                    ("label", l.as_str().into()),
+                    ("values", Json::Arr(vs.iter().map(|v| Json::Num(*v)).collect())),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("id", self.id.as_str().into()),
+            ("title", self.title.as_str().into()),
+            ("columns", Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect())),
+            ("rows", Json::Arr(rows)),
+            ("notes", self.notes.as_str().into()),
+        ])
+    }
+
+    /// Write `results/<id>.json`.
+    pub fn save(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        self.to_json().write_file(&dir.join(format!("{}.json", self.id)))
+    }
+
+    /// Column index by header name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Value lookup by row label + column name.
+    pub fn value(&self, row: &str, col: &str) -> Option<f64> {
+        let ci = self.col(col)?;
+        self.rows.iter().find(|(l, _)| l == row).map(|(_, vs)| vs[ci])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_render_lookup() {
+        let mut f = Figure::new("figX", "test", &["IN", "IN+OUT"]);
+        f.row("conv1", vec![1.5, 2.5]);
+        f.row("conv2", vec![1.2, 3.0]);
+        let r = f.render();
+        assert!(r.contains("figX") && r.contains("conv2"));
+        assert_eq!(f.value("conv1", "IN+OUT"), Some(2.5));
+        assert_eq!(f.value("conv3", "IN"), None);
+        assert_eq!(f.value("conv1", "BOGUS"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut f = Figure::new("f", "t", &["a"]);
+        f.row("r", vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut f = Figure::new("f", "t", &["a"]);
+        f.row("r", vec![1.0]);
+        let j = f.to_json();
+        assert_eq!(j.get("id").as_str(), Some("f"));
+        assert_eq!(j.get("rows").as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,356 @@
+//! One generator per paper figure (see DESIGN.md §4 for the mapping).
+
+use std::collections::BTreeMap;
+
+use crate::config::Scheme;
+use crate::nn::{zoo, Network, Phase};
+use crate::sim::{simulate_network, NetworkSimResult, PeModel, ReconfigMode};
+use crate::sparsity::gradient_sparsity;
+
+use super::{Figure, ReportCtx};
+
+/// Run all four schemes over one network (the common sweep).
+fn sweep(net: &Network, ctx: &ReportCtx) -> BTreeMap<&'static str, NetworkSimResult> {
+    Scheme::ALL
+        .into_iter()
+        .map(|s| (s.label(), simulate_network(net, &ctx.cfg, &ctx.opts, &ctx.model, s)))
+        .collect()
+}
+
+/// Layer-wise BP speedup bars (the Fig 11/12/13 shape): one row per conv
+/// layer in `layers`, columns IN / IN+OUT / IN+OUT+WR vs the DC baseline.
+fn layerwise_bp_speedup(
+    id: &str,
+    title: &str,
+    net: &Network,
+    layers: &[&str],
+    ctx: &ReportCtx,
+) -> Figure {
+    let runs = sweep(net, ctx);
+    let mut fig = Figure::new(id, title, &["IN", "IN+OUT", "IN+OUT+WR"]);
+    fig.notes = format!(
+        "BP speedup over dense baseline, batch {}; seed {}",
+        ctx.opts.batch, ctx.opts.seed
+    );
+    for name in layers {
+        let dc = runs["DC"]
+            .layer(name, Phase::Backward)
+            .unwrap_or_else(|| panic!("layer '{name}' has no BP entry"))
+            .cycles;
+        let vals = ["IN", "IN+OUT", "IN+OUT+WR"]
+            .iter()
+            .map(|s| dc / runs[*s].layer(name, Phase::Backward).unwrap().cycles)
+            .collect();
+        fig.row(name, vals);
+    }
+    fig
+}
+
+/// Fig 3b: feature & gradient sparsity across the inception-3b block.
+pub fn fig3b_inception_sparsity(ctx: &ReportCtx) -> Figure {
+    let net = zoo::googlenet();
+    let fwd = ctx.model.assign(&net);
+    let gs = gradient_sparsity(&net, &fwd);
+    let mut fig = Figure::new(
+        "fig3b",
+        "Inception-3b feature/gradient sparsity",
+        &["feature", "gradient"],
+    );
+    fig.notes = "fraction of zeros at each layer output (FP feature map, BP gradient)".into();
+    for l in net.layers() {
+        if !l.name.starts_with("inception_3b") {
+            continue;
+        }
+        // Report ReLU and pool outputs (where sparsity lives), like Fig 3b.
+        if l.kind.is_relu() || matches!(l.kind, crate::nn::LayerKind::MaxPool { .. }) {
+            fig.row(&l.name, vec![fwd[l.id], gs[l.id]]);
+        }
+    }
+    fig
+}
+
+/// Fig 3d: min / avg / max sparsity across a batch of 16, per network.
+pub fn fig3d_batch_sparsity(ctx: &ReportCtx) -> Figure {
+    let mut fig = Figure::new("fig3d", "Batch sparsity min/avg/max", &["min", "avg", "max"]);
+    fig.notes = format!("across batch of {} images, ReLU outputs only", ctx.opts.batch);
+    for net in zoo::all_networks() {
+        let batch = ctx.model.assign_batch(&net, ctx.opts.batch);
+        let mut per_image: Vec<f64> = Vec::new();
+        for img in &batch {
+            let relus: Vec<f64> = net
+                .layers()
+                .iter()
+                .filter(|l| l.kind.is_relu())
+                .map(|l| img[l.id])
+                .collect();
+            per_image.push(relus.iter().sum::<f64>() / relus.len() as f64);
+        }
+        let min = per_image.iter().cloned().fold(f64::MAX, f64::min);
+        let max = per_image.iter().cloned().fold(f64::MIN, f64::max);
+        let avg = per_image.iter().sum::<f64>() / per_image.len() as f64;
+        fig.row(&net.name, vec![min, avg, max]);
+    }
+    fig
+}
+
+/// Fig 11a: VGG-16 layer-wise BP speedups.
+pub fn fig11a_vgg(ctx: &ReportCtx) -> Figure {
+    let net = zoo::vgg16();
+    let layers: Vec<String> = net
+        .compute_layers()
+        .iter()
+        .filter(|l| l.name.starts_with("conv") && l.name != "conv1_1")
+        .map(|l| l.name.clone())
+        .collect();
+    let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
+    layerwise_bp_speedup("fig11a", "VGG-16 layer-wise BP speedup", &net, &refs, ctx)
+}
+
+/// Fig 11b: GoogLeNet inception-3b layer-wise BP speedups.
+pub fn fig11b_googlenet(ctx: &ReportCtx) -> Figure {
+    let net = zoo::googlenet();
+    let layers: Vec<String> = net
+        .compute_layers()
+        .iter()
+        .filter(|l| l.name.starts_with("inception_3b"))
+        .map(|l| l.name.clone())
+        .collect();
+    let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
+    layerwise_bp_speedup("fig11b", "Inception-3b layer-wise BP speedup", &net, &refs, ctx)
+}
+
+/// Fig 12a: DenseNet dense-block-1 layer-wise BP speedups.
+pub fn fig12a_densenet(ctx: &ReportCtx) -> Figure {
+    let net = zoo::densenet121();
+    let layers: Vec<String> = net
+        .compute_layers()
+        .iter()
+        .filter(|l| l.name.starts_with("dense1_"))
+        .map(|l| l.name.clone())
+        .collect();
+    let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
+    layerwise_bp_speedup("fig12a", "DenseNet block-1 layer-wise BP speedup", &net, &refs, ctx)
+}
+
+/// Fig 12b: MobileNet pointwise-conv layer-wise BP speedups.
+pub fn fig12b_mobilenet(ctx: &ReportCtx) -> Figure {
+    let net = zoo::mobilenet_v1();
+    let layers: Vec<String> = net
+        .compute_layers()
+        .iter()
+        .filter(|l| l.name.starts_with("pw"))
+        .map(|l| l.name.clone())
+        .collect();
+    let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
+    layerwise_bp_speedup("fig12b", "MobileNet pw-conv layer-wise BP speedup", &net, &refs, ctx)
+}
+
+/// Fig 13: ResNet-18 residual-block-2 layer-wise BP speedups.
+pub fn fig13_resnet(ctx: &ReportCtx) -> Figure {
+    let net = zoo::resnet18();
+    let layers = [
+        "layer2_0_conv1",
+        "layer2_0_conv2",
+        "layer2_1_conv1",
+        "layer2_1_conv2",
+    ];
+    layerwise_bp_speedup("fig13", "ResNet-18 block-2 layer-wise BP speedup", &net, &layers, ctx)
+}
+
+/// Fig 15: normalized end-to-end execution time with FP/BP/WG breakdown.
+pub fn fig15_overall(ctx: &ReportCtx) -> Figure {
+    let mut fig = Figure::new(
+        "fig15",
+        "Normalized CNN execution time (FP+BP+WG)",
+        &["DC", "IN", "IN+OUT", "IN+OUT+WR", "speedup", "FP_frac", "BP_frac", "WG_frac"],
+    );
+    fig.notes = "execution time normalized to DC; *_frac is the phase breakdown of IN+OUT+WR".into();
+    for net in zoo::all_networks() {
+        let runs = sweep(&net, ctx);
+        let dc = runs["DC"].total_cycles();
+        let best = runs["IN+OUT+WR"].total_cycles();
+        let fp = runs["IN+OUT+WR"].phase(Phase::Forward).cycles;
+        let bp = runs["IN+OUT+WR"].phase(Phase::Backward).cycles;
+        let wg = runs["IN+OUT+WR"].phase(Phase::WeightGrad).cycles;
+        fig.row(
+            &net.name,
+            vec![
+                1.0,
+                runs["IN"].total_cycles() / dc,
+                runs["IN+OUT"].total_cycles() / dc,
+                best / dc,
+                dc / best,
+                fp / best,
+                bp / best,
+                wg / best,
+            ],
+        );
+    }
+    fig
+}
+
+/// Fig 16: impact of adder-tree reconfiguration on small receptive fields.
+pub fn fig16_reconfig(ctx: &ReportCtx) -> Figure {
+    let pe_base = PeModel::from_config(&ctx.cfg);
+    let mut fig = Figure::new(
+        "fig16",
+        "Lane-reconfiguration impact (per-output speedup vs no reconfig)",
+        &["none", "direct", "hierarchical"],
+    );
+    fig.notes = "DenseNet receptive fields: 1x1x64 -> CRS 64, 3x3x64 -> CRS 576".into();
+    for (label, crs) in [("1x1x64", 64.0), ("3x3x64", 576.0)] {
+        let mut vals = Vec::new();
+        let base = {
+            let mut pe = pe_base.clone();
+            pe.reconfig = ReconfigMode::None;
+            pe.dense_cycles_per_output(crs)
+        };
+        for mode in [ReconfigMode::None, ReconfigMode::Direct, ReconfigMode::Hierarchical] {
+            let mut pe = pe_base.clone();
+            pe.reconfig = mode;
+            vals.push(base / pe.dense_cycles_per_output(crs));
+        }
+        fig.row(label, vals);
+    }
+    fig
+}
+
+/// Fig 17: inception-4d tile-latency min/avg/max under each scheme.
+pub fn fig17_node(ctx: &ReportCtx) -> Figure {
+    let net = zoo::googlenet();
+    let mut fig = Figure::new(
+        "fig17",
+        "Inception-4d tile latency (normalized to DC max)",
+        &["min", "avg", "max", "avg/max"],
+    );
+    fig.notes = "sum over the module's conv layers, FP+BP; rows are schemes".into();
+    let mut norm = None;
+    for scheme in Scheme::ALL {
+        let r = simulate_network(&net, &ctx.cfg, &ctx.opts, &ctx.model, scheme);
+        let mut min = 0.0;
+        let mut mean = 0.0;
+        let mut max = 0.0;
+        let mut n = 0usize;
+        for l in &r.per_layer {
+            if !l.name.starts_with("inception_4d") || l.phase == Phase::WeightGrad {
+                continue;
+            }
+            min += l.tile_min;
+            mean += l.tile_mean;
+            max += l.tile_max;
+            n += 1;
+        }
+        assert!(n > 0, "no inception_4d layers found");
+        let norm_v = *norm.get_or_insert(max);
+        fig.row(
+            scheme.label(),
+            vec![min / norm_v, mean / norm_v, max / norm_v, mean / max],
+        );
+    }
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ReportCtx {
+        ReportCtx::with_batch(2)
+    }
+
+    #[test]
+    fn fig3b_reports_sparsity_in_band() {
+        let f = fig3b_inception_sparsity(&ctx());
+        assert!(f.rows.len() >= 5);
+        for (label, vals) in &f.rows {
+            assert!((0.0..=1.0).contains(&vals[0]), "{label}: {}", vals[0]);
+            assert!((0.0..=1.0).contains(&vals[1]), "{label}");
+        }
+        // ReLU rows: paper band 25–55%
+        let relu_rows: Vec<_> =
+            f.rows.iter().filter(|(l, _)| l.contains("relu")).collect();
+        assert!(!relu_rows.is_empty());
+        for (l, vals) in relu_rows {
+            assert!((0.2..0.65).contains(&vals[0]), "{l}: {}", vals[0]);
+        }
+    }
+
+    #[test]
+    fn fig3d_min_le_avg_le_max() {
+        let f = fig3d_batch_sparsity(&ctx());
+        assert_eq!(f.rows.len(), 5);
+        for (l, v) in &f.rows {
+            assert!(v[0] <= v[1] && v[1] <= v[2], "{l}: {v:?}");
+            assert!((0.2..0.8).contains(&v[1]), "{l} avg {}", v[1]);
+        }
+    }
+
+    #[test]
+    fn fig11a_speedups_shaped_like_paper() {
+        let f = fig11a_vgg(&ctx());
+        assert_eq!(f.rows.len(), 12); // 12 convs (conv1_1 has no BP)
+        for (l, v) in &f.rows {
+            let (inp, both, wr) = (v[0], v[1], v[2]);
+            assert!(inp >= 0.95, "{l}: IN {inp}");
+            // 5% slack: schemes draw different per-tile jitter sequences
+            assert!(both >= inp * 0.95, "{l}: IN+OUT {both} < IN {inp}");
+            assert!(wr >= both * 0.95, "{l}: WR {wr} < IN+OUT {both}");
+            assert!(wr < 9.0, "{l}: implausible speedup {wr}");
+        }
+        // post-pool conv rows lose OUT: conv2_1 follows pool1
+        let pool_row = f.value("conv2_1", "IN+OUT").unwrap();
+        let pool_in = f.value("conv2_1", "IN").unwrap();
+        assert!((pool_row / pool_in - 1.0).abs() < 0.06, "post-pool conv gained OUT");
+        // inner convs DO gain from OUT
+        let inner_gain =
+            f.value("conv3_2", "IN+OUT").unwrap() / f.value("conv3_2", "IN").unwrap();
+        assert!(inner_gain > 1.3, "inner conv OUT gain {inner_gain}");
+    }
+
+    #[test]
+    fn fig13_resnet_out_only() {
+        let f = fig13_resnet(&ctx());
+        for (l, v) in &f.rows {
+            // BN blocks input sparsity: IN ≈ 1.0
+            assert!((0.9..1.1).contains(&v[0]), "{l}: IN {} should be ~1", v[0]);
+            // output sparsity gives the gain (paper: 16–73%)
+            assert!(v[2] > 1.05, "{l}: total {} should gain", v[2]);
+        }
+    }
+
+    #[test]
+    fn fig16_matches_paper_ratio() {
+        let f = fig16_reconfig(&ctx());
+        let hier = f.value("3x3x64", "hierarchical").unwrap();
+        let direct = f.value("3x3x64", "direct").unwrap();
+        assert!((1.5..2.0).contains(&(hier / direct)), "{}", hier / direct);
+        // 1x1x64 is already fine with direct
+        let d1 = f.value("1x1x64", "direct").unwrap();
+        let h1 = f.value("1x1x64", "hierarchical").unwrap();
+        assert!((h1 / d1) < 1.1);
+    }
+
+    #[test]
+    fn fig17_wr_improves_avg_over_max() {
+        let f = fig17_node(&ctx());
+        let no_wr = f.value("IN+OUT", "avg/max").unwrap();
+        let wr = f.value("IN+OUT+WR", "avg/max").unwrap();
+        assert!(wr > no_wr, "WR {wr:.3} !> no-WR {no_wr:.3}");
+        assert!(wr > 0.75, "WR utilization {wr:.3} (paper ~0.83)");
+    }
+
+    #[test]
+    fn fig15_totals_normalized() {
+        let f = fig15_overall(&ctx());
+        assert_eq!(f.rows.len(), 5);
+        for (l, v) in &f.rows {
+            assert_eq!(v[0], 1.0);
+            assert!(v[3] <= v[2] && v[2] <= v[1] && v[1] <= 1.0, "{l}: {v:?}");
+            let speedup = v[4];
+            assert!((1.2..3.2).contains(&speedup), "{l}: overall {speedup}");
+            // breakdown sums to 1
+            let s = v[5] + v[6] + v[7];
+            assert!((s - 1.0).abs() < 1e-9, "{l}: breakdown {s}");
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Report generation: one function per paper figure/table (the
+//! per-experiment index in DESIGN.md §4), each returning a [`Figure`]
+//! that renders as an aligned text table and serializes to JSON under
+//! `results/`.
+
+mod ablations;
+mod figure;
+mod figures;
+mod tables;
+
+pub use figure::Figure;
+pub use figures::{
+    fig11a_vgg, fig11b_googlenet, fig12a_densenet, fig12b_mobilenet, fig13_resnet,
+    fig15_overall, fig16_reconfig, fig17_node, fig3b_inception_sparsity, fig3d_batch_sparsity,
+};
+pub use ablations::{
+    ablation_double_buffering, ablation_grid_scaling, ablation_reconfig_spectrum,
+    ablation_tile_cv, ablation_wr_threshold,
+};
+pub use tables::{table1_components, table2_platforms};
+
+use crate::config::{AcceleratorConfig, SimOptions};
+use crate::sparsity::SparsityModel;
+
+/// Everything a figure generator needs.
+pub struct ReportCtx {
+    pub cfg: AcceleratorConfig,
+    pub opts: SimOptions,
+    pub model: SparsityModel,
+}
+
+impl Default for ReportCtx {
+    fn default() -> Self {
+        let opts = SimOptions::default();
+        let model = SparsityModel::synthetic(opts.seed);
+        ReportCtx { cfg: AcceleratorConfig::default(), opts, model }
+    }
+}
+
+impl ReportCtx {
+    pub fn with_batch(batch: usize) -> ReportCtx {
+        let mut ctx = ReportCtx::default();
+        ctx.opts.batch = batch;
+        ctx
+    }
+}
+
+/// All figure generators by id, in paper order.
+pub fn generate(id: &str, ctx: &ReportCtx) -> anyhow::Result<Vec<Figure>> {
+    let one = |f: Figure| Ok(vec![f]);
+    match id {
+        "fig3b" => one(fig3b_inception_sparsity(ctx)),
+        "fig3d" => one(fig3d_batch_sparsity(ctx)),
+        "fig11a" => one(fig11a_vgg(ctx)),
+        "fig11b" => one(fig11b_googlenet(ctx)),
+        "fig12a" => one(fig12a_densenet(ctx)),
+        "fig12b" => one(fig12b_mobilenet(ctx)),
+        "fig13" => one(fig13_resnet(ctx)),
+        "fig15" => one(fig15_overall(ctx)),
+        "fig16" => one(fig16_reconfig(ctx)),
+        "fig17" => one(fig17_node(ctx)),
+        "table1" => one(table1_components(&ctx.cfg)),
+        "table2" => one(table2_platforms(ctx)),
+        "ablations" => Ok(vec![
+            ablation_wr_threshold(ctx),
+            ablation_double_buffering(ctx),
+            ablation_reconfig_spectrum(ctx),
+            ablation_grid_scaling(ctx),
+            ablation_tile_cv(ctx),
+        ]),
+        "all" => {
+            let mut out = Vec::new();
+            for id in [
+                "fig3b", "fig3d", "fig11a", "fig11b", "fig12a", "fig12b", "fig13", "fig15",
+                "fig16", "fig17", "table1", "table2",
+            ] {
+                out.extend(generate(id, ctx)?);
+            }
+            Ok(out)
+        }
+        other => anyhow::bail!("unknown figure/table id '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(generate("fig99", &ReportCtx::with_batch(1)).is_err());
+    }
+}

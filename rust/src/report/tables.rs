@@ -1,0 +1,90 @@
+//! Table 1 (component specs) and Table 2 (platform comparison).
+
+use crate::baselines::{all_platforms, iteration_latency_ms};
+use crate::config::AcceleratorConfig;
+use crate::nn::zoo;
+
+use super::{Figure, ReportCtx};
+
+/// Table 1: component power/area, PE and node totals, derived from the
+/// configuration (the paper's synthesis numbers are config constants).
+pub fn table1_components(cfg: &AcceleratorConfig) -> Figure {
+    let e = &cfg.energy;
+    let mut fig = Figure::new(
+        "table1",
+        "Component specifications (power mW, area mm2)",
+        &["power_mW", "area_mm2"],
+    );
+    fig.notes = format!(
+        "node: {}x{} PEs, {} lanes/PE, {} MHz; peak {:.0} GFLOPs/s",
+        cfg.tx,
+        cfg.ty,
+        cfg.lanes,
+        cfg.freq_hz / 1e6,
+        cfg.peak_flops() / 1e9
+    );
+    fig.row("neuron/syn regfile", vec![e.regfile_power_w * 1e3, 0.3820]);
+    fig.row("nz idx regfile", vec![e.idx_regfile_power_w * 1e3, 0.0602]);
+    fig.row("mac units", vec![e.mac_power_w * 1e3, 0.1235]);
+    fig.row("reconfig adder tree", vec![e.adder_tree_power_w * 1e3, 0.0803]);
+    fig.row("nz encoder", vec![e.encoder_power_w * 1e3, 0.0113]);
+    fig.row("control", vec![e.control_power_w * 1e3, 0.0313]);
+    fig.row(
+        "sram buffers",
+        vec![(e.sram_dynamic_w + e.sram_static_w) * 1e3, 0.3696],
+    );
+    fig.row("PE total", vec![e.pe_total_w * 1e3, 1.0468]);
+    fig.row(
+        "node total",
+        vec![cfg.node_power_w() * 1e3, 1.0468 * cfg.pe_count() as f64],
+    );
+    fig
+}
+
+/// Table 2: platform comparison with per-iteration latency for VGG-16 and
+/// ResNet-18 at the evaluation batch size.
+pub fn table2_platforms(ctx: &ReportCtx) -> Figure {
+    let mut fig = Figure::new(
+        "table2",
+        "Platform comparison (training iteration latency, ms)",
+        &["power_W", "peak_GOps", "eff_GOps_W", "vgg16_ms", "resnet18_ms"],
+    );
+    fig.notes = format!("batch {}, seed {}", ctx.opts.batch, ctx.opts.seed);
+    let vgg = zoo::vgg16();
+    let resnet = zoo::resnet18();
+    for p in all_platforms() {
+        let vgg_ms = iteration_latency_ms(&p, &vgg, &ctx.cfg, &ctx.opts, &ctx.model);
+        let res_ms = iteration_latency_ms(&p, &resnet, &ctx.cfg, &ctx.opts, &ctx.model);
+        fig.row(
+            p.name,
+            vec![p.power_w, p.peak_gops, p.energy_eff_gops_w, vgg_ms, res_ms],
+        );
+    }
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_totals() {
+        let f = table1_components(&AcceleratorConfig::default());
+        assert!((f.value("PE total", "power_mW").unwrap() - 75.0).abs() < 1e-9);
+        let node = f.value("node total", "power_mW").unwrap();
+        assert!((node - 19200.0).abs() < 1.0, "node {node} mW");
+    }
+
+    #[test]
+    fn table2_this_work_wins_among_big_accelerators() {
+        let ctx = ReportCtx::with_batch(4);
+        let f = table2_platforms(&ctx);
+        assert_eq!(f.rows.len(), 8);
+        let ours_vgg = f.value("This Work", "vgg16_ms").unwrap();
+        let ddn_vgg = f.value("DaDianNao", "vgg16_ms").unwrap();
+        let cnv_vgg = f.value("CNVLUTIN", "vgg16_ms").unwrap();
+        let cpu_vgg = f.value("Dual Xeon E5 2560 v3", "vgg16_ms").unwrap();
+        assert!(ours_vgg < ddn_vgg && ddn_vgg > cnv_vgg && cnv_vgg > ours_vgg);
+        assert!(cpu_vgg / ours_vgg > 10.0, "order of magnitude vs CPU");
+    }
+}

@@ -1,0 +1,195 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use super::HostTensor;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("spec.shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype").as_str().context("spec.dtype")?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point (an HLO module).
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// Initial parameters: name -> (file, shape), in no particular order;
+    /// `param_order` gives the calling convention.
+    pub params: BTreeMap<String, (PathBuf, Vec<usize>)>,
+    pub param_order: Vec<String>,
+    pub batch: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub lr: f64,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let hp = j.get("hyperparams");
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries").as_obj().context("manifest.entries")? {
+            let inputs = e
+                .get("inputs")
+                .as_arr()
+                .context("entry.inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .as_arr()
+                .context("entry.outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: dir.join(e.get("file").as_str().context("entry.file")?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut params = BTreeMap::new();
+        for (name, p) in j.get("params").as_obj().context("manifest.params")? {
+            let shape = p
+                .get("shape")
+                .as_arr()
+                .context("param.shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            params.insert(
+                name.clone(),
+                (dir.join(p.get("file").as_str().context("param.file")?), shape),
+            );
+        }
+        let param_order = hp
+            .get("param_order")
+            .as_arr()
+            .context("hyperparams.param_order")?
+            .iter()
+            .map(|s| Ok(s.as_str().context("param name")?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            entries,
+            params,
+            param_order,
+            batch: hp.get("batch").as_usize().context("hyperparams.batch")?,
+            img: hp.get("img").as_usize().context("hyperparams.img")?,
+            in_ch: hp.get("in_ch").as_usize().context("hyperparams.in_ch")?,
+            num_classes: hp.get("num_classes").as_usize().context("hyperparams.num_classes")?,
+            lr: hp.get("lr").as_f64().context("hyperparams.lr")?,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact entry '{name}' not in manifest"))
+    }
+
+    /// Load the initial parameters in calling-convention order.
+    pub fn load_initial_params(&self) -> Result<Vec<HostTensor>> {
+        self.param_order
+            .iter()
+            .map(|name| {
+                let (file, shape) = self
+                    .params
+                    .get(name)
+                    .with_context(|| format!("param '{name}' missing from manifest"))?;
+                HostTensor::from_f32_file(file, shape.clone())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir.join("params")).unwrap();
+        let manifest = r#"{
+            "format": "hlo-text",
+            "hyperparams": {
+                "img": 8, "in_ch": 3, "num_classes": 10, "batch": 2,
+                "lr": 0.05, "seed": 0,
+                "param_order": ["w1"],
+                "conv_specs": []
+            },
+            "entries": {
+                "demo": {
+                    "file": "demo.hlo.txt",
+                    "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                    "outputs": [{"shape": [2, 3], "dtype": "float32"}],
+                    "hlo_bytes": 5
+                }
+            },
+            "params": {
+                "w1": {"file": "params/w1.bin", "shape": [2, 2]}
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let t = HostTensor::f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        t.write_f32_file(&dir.join("params/w1.bin")).unwrap();
+        std::fs::write(dir.join("demo.hlo.txt"), "hello").unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_params() {
+        let dir = std::env::temp_dir().join("agos_manifest_test");
+        write_fake_manifest(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.img, 8);
+        let e = m.entry("demo").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].elements(), 6);
+        assert!(m.entry("nope").is_err());
+        let ps = m.load_initial_params().unwrap();
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].shape(), &[2, 2]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,115 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many times.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::{ArtifactManifest, HostTensor};
+
+/// A compiled artifact entry.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of outputs the jax function returns (the HLO returns one
+    /// tuple of this arity — aot.py lowers with `return_tuple=True`).
+    out_arity: usize,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing '{}': {e:?}", self.name))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of '{}': {e:?}", self.name))?;
+        let parts = out
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing result tuple of '{}': {e:?}", self.name))?;
+        anyhow::ensure!(
+            parts.len() == self.out_arity,
+            "'{}' returned {} outputs, manifest says {}",
+            self.name,
+            parts.len(),
+            self.out_arity
+        );
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// The PJRT CPU runtime with a cache of compiled entries.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    compiled: BTreeMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the artifact manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let manifest = ArtifactManifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        Ok(Runtime { client, manifest, compiled: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) entry.
+    pub fn executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self.manifest.entry(name)?.clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling '{name}': {e:?}"))?;
+            crate::info!(
+                "compiled artifact '{name}' in {:.2}s ({} inputs, {} outputs)",
+                t0.elapsed().as_secs_f64(),
+                spec.inputs.len(),
+                spec.outputs.len()
+            );
+            self.compiled.insert(
+                name.to_string(),
+                Executable { name: name.to_string(), exe, out_arity: spec.outputs.len() },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Convenience: compile + run in one call, with input validation
+    /// against the manifest.
+    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.entry(name)?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "'{name}' expects {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape() == s.shape.as_slice(),
+                "'{name}' input {i}: shape {:?} != manifest {:?}",
+                t.shape(),
+                s.shape
+            );
+        }
+        self.executable(name)?.run(inputs)
+    }
+}

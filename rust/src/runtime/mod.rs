@@ -1,0 +1,16 @@
+//! PJRT runtime — the only bridge between the rust coordinator and the
+//! AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at `make artifacts`; afterwards this module gives the
+//! coordinator a self-contained path: HLO text → `HloModuleProto` →
+//! `XlaComputation` → PJRT-compiled executable → `execute` with host
+//! tensors. See `/opt/xla-example/load_hlo/` for the pattern's origin and
+//! DESIGN.md §1 for why the interchange format is HLO *text*.
+
+mod tensor_host;
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactManifest, EntrySpec, TensorSpec};
+pub use client::{Executable, Runtime};
+pub use tensor_host::HostTensor;

@@ -1,0 +1,206 @@
+//! Host-side tensors: plain `Vec` payloads with shape, convertible to and
+//! from `xla::Literal` without going through python.
+
+use anyhow::{ensure, Context, Result};
+
+/// A host tensor: f32 or i32 payload plus shape. The only two dtypes the
+/// artifacts use (activations/params are f32, labels are i32).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Ok(HostTensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<HostTensor> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Ok(HostTensor::I32 { shape, data })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not i32"),
+        }
+    }
+
+    /// Fraction of exactly-zero elements (the sparsity the paper studies).
+    pub fn zero_fraction(&self) -> f64 {
+        match self {
+            HostTensor::F32 { data, .. } => {
+                if data.is_empty() {
+                    return 0.0;
+                }
+                data.iter().filter(|x| **x == 0.0).count() as f64 / data.len() as f64
+            }
+            HostTensor::I32 { data, .. } => {
+                if data.is_empty() {
+                    return 0.0;
+                }
+                data.iter().filter(|x| **x == 0).count() as f64 / data.len() as f64
+            }
+        }
+    }
+
+    /// Load a raw little-endian f32 blob (the `artifacts/params/*.bin`
+    /// format written by aot.py).
+    pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<HostTensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let n: usize = shape.iter().product();
+        ensure!(bytes.len() == 4 * n, "{}: {} bytes, expected {}", path.display(), bytes.len(), 4 * n);
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(HostTensor::F32 { shape, data })
+    }
+
+    /// Write as raw little-endian f32 (round-trip of the above).
+    pub fn write_f32_file(&self, path: &std::path::Path) -> Result<()> {
+        let data = self.as_f32()?;
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    // ---- Literal conversion ------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal from f32 tensor: {e:?}"))
+            }
+            HostTensor::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal from i32 tensor: {e:?}"))
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))?;
+                HostTensor::f32(dims, data)
+            }
+            xla::ElementType::S32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal to i32 vec: {e:?}"))?;
+                HostTensor::i32(dims, data)
+            }
+            other => anyhow::bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(vec![2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let t = HostTensor::f32(vec![4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert!((t.zero_fraction() - 0.5).abs() < 1e-12);
+        let e = HostTensor::f32(vec![0], vec![]).unwrap();
+        assert_eq!(e.zero_fraction(), 0.0);
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("agos_ht_test");
+        let path = dir.join("t.bin");
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, -2.5, 0.0, 4.25]).unwrap();
+        t.write_f32_file(&path).unwrap();
+        let t2 = HostTensor::from_f32_file(&path, vec![2, 2]).unwrap();
+        assert_eq!(t, t2);
+        // wrong shape errors
+        assert!(HostTensor::from_f32_file(&path, vec![3]).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+
+        let ti = HostTensor::i32(vec![4], vec![1, -2, 3, 0]).unwrap();
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), ti);
+    }
+}

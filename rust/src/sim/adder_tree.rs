@@ -1,0 +1,104 @@
+//! Re-configurable adder tree (§4.5, Fig 10/16).
+//!
+//! When an output's receptive field occupies fewer than all lanes, the
+//! de-mux stages let several independent outputs reduce simultaneously —
+//! but only at power-of-two lane groups. *Direct* reconfiguration packs
+//! `2^⌊log2(lanes/occ)⌋` outputs; *hierarchical* reconfiguration
+//! additionally blocks the filter kernels to the nearest aligned size and
+//! schedules the remainder in later iterations, recovering (almost) full
+//! lane utilization for awkward occupancies such as 9/16 (the paper's
+//! [3×3×64] example, Fig 16, ≈1.75× over direct).
+
+/// Adder-tree operating mode (Fig 16 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconfigMode {
+    /// No reconfiguration: one output at a time regardless of occupancy.
+    None,
+    /// Power-of-two packing only.
+    Direct,
+    /// Hierarchical packing with remainder scheduling (§4.5).
+    Hierarchical,
+}
+
+/// Residual overhead of hierarchical remainder scheduling (extra passes'
+/// control + partial writeback), calibrated so the Fig 16 ratio holds.
+const HIER_EFFICIENCY: f64 = 0.98;
+
+/// Fraction of the PE's MAC slots a single output stream keeps busy,
+/// given its lane occupancy. The PE model divides per-output cycles by
+/// `lanes/occ · util` to account for packing.
+pub fn tree_utilization(occ: usize, lanes: usize, mode: ReconfigMode) -> f64 {
+    assert!(occ >= 1 && occ <= lanes, "occupancy {occ} of {lanes}");
+    if occ == lanes {
+        return 1.0;
+    }
+    match mode {
+        ReconfigMode::None => occ as f64 / lanes as f64,
+        ReconfigMode::Direct => {
+            let par = (lanes / occ).next_power_of_two() / 2;
+            let par = if lanes / occ >= 1 && (lanes / occ).is_power_of_two() {
+                lanes / occ
+            } else {
+                par.max(1)
+            };
+            (occ * par) as f64 / lanes as f64
+        }
+        ReconfigMode::Hierarchical => HIER_EFFICIENCY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_occupancy_is_unity_in_all_modes() {
+        for mode in [ReconfigMode::None, ReconfigMode::Direct, ReconfigMode::Hierarchical] {
+            assert_eq!(tree_utilization(16, 16, mode), 1.0);
+        }
+    }
+
+    #[test]
+    fn none_mode_wastes_idle_lanes() {
+        assert!((tree_utilization(1, 16, ReconfigMode::None) - 1.0 / 16.0).abs() < 1e-12);
+        assert!((tree_utilization(9, 16, ReconfigMode::None) - 9.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn direct_packs_powers_of_two() {
+        // occ=2 → 8 outputs in parallel → full utilization.
+        assert!((tree_utilization(2, 16, ReconfigMode::Direct) - 1.0).abs() < 1e-12);
+        // occ=4 → 4 outputs → full.
+        assert!((tree_utilization(4, 16, ReconfigMode::Direct) - 1.0).abs() < 1e-12);
+        // occ=3 → par 4 would need 12 lanes: 3·4/16 = 0.75.
+        assert!((tree_utilization(3, 16, ReconfigMode::Direct) - 0.75).abs() < 1e-12);
+        // occ=9 → par 1 → 9/16 (the Fig 16 worst case).
+        assert!((tree_utilization(9, 16, ReconfigMode::Direct) - 0.5625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig16_hierarchical_ratio() {
+        // Fig 16: [3×3×64] improves ≈1.75× with hierarchical reconfig.
+        let direct = tree_utilization(9, 16, ReconfigMode::Direct);
+        let hier = tree_utilization(9, 16, ReconfigMode::Hierarchical);
+        let ratio = hier / direct;
+        assert!((1.6..1.9).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn hierarchical_dominates_direct_dominates_none() {
+        for occ in 1..=16 {
+            let n = tree_utilization(occ, 16, ReconfigMode::None);
+            let d = tree_utilization(occ, 16, ReconfigMode::Direct);
+            let h = tree_utilization(occ, 16, ReconfigMode::Hierarchical);
+            assert!(d >= n - 1e-12, "occ {occ}");
+            assert!(h >= d - 0.03, "occ {occ}: hier {h} direct {d}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_occupancy_panics() {
+        tree_utilization(0, 16, ReconfigMode::None);
+    }
+}

@@ -1,0 +1,28 @@
+//! Synapse blocking (§4.4): receptive fields larger than the PE's operand
+//! capacity (1024 pairs) are processed in multiple passes, carrying a
+//! partial sum between passes.
+
+/// Number of blocking passes needed for a receptive field of `crs`.
+pub fn synapse_passes(crs: usize, capacity: usize) -> usize {
+    assert!(capacity > 0);
+    crs.div_ceil(capacity).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_arithmetic() {
+        assert_eq!(synapse_passes(1, 1024), 1);
+        assert_eq!(synapse_passes(1024, 1024), 1);
+        assert_eq!(synapse_passes(1025, 1024), 2);
+        assert_eq!(synapse_passes(4608, 1024), 5); // VGG 512·3·3
+        assert_eq!(synapse_passes(2048, 1024), 2);
+    }
+
+    #[test]
+    fn degenerate_zero_crs() {
+        assert_eq!(synapse_passes(0, 1024), 1);
+    }
+}

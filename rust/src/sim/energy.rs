@@ -1,0 +1,126 @@
+//! Energy model seeded with the paper's Table 1 component figures.
+//!
+//! Dynamic component energies are derived from the reported powers at the
+//! design clock (e.g. 10.56 mW for 16 fp16 MACs at 667 MHz ⇒ ≈0.99 pJ per
+//! MAC); SRAM access energy uses the CACTI per-line figures; static power
+//! accrues over the makespan.
+
+use crate::config::AcceleratorConfig;
+
+/// Joules spent by one layer execution, by component.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac_j: f64,
+    pub regfile_j: f64,
+    pub adder_tree_j: f64,
+    pub encoder_j: f64,
+    pub sram_j: f64,
+    pub dram_j: f64,
+    pub static_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mac_j
+            + self.regfile_j
+            + self.adder_tree_j
+            + self.encoder_j
+            + self.sram_j
+            + self.dram_j
+            + self.static_j
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.mac_j += other.mac_j;
+        self.regfile_j += other.regfile_j;
+        self.adder_tree_j += other.adder_tree_j;
+        self.encoder_j += other.encoder_j;
+        self.sram_j += other.sram_j;
+        self.dram_j += other.dram_j;
+        self.static_j += other.static_j;
+    }
+}
+
+/// Energy for one layer execution.
+///
+/// * `macs` — multiply-accumulates actually performed.
+/// * `encoded_elems` — neurons run through the NZ encoder (once per
+///   generated output map, §4.2).
+/// * `sram_bytes` — operand bytes staged through the lane buffers.
+/// * `dram_bytes` — off-chip traffic.
+/// * `busy_cycles` — sum of per-PE busy cycles (dynamic window).
+/// * `makespan_cycles` — node latency (static window).
+pub fn layer_energy(
+    cfg: &AcceleratorConfig,
+    macs: f64,
+    encoded_elems: f64,
+    sram_bytes: f64,
+    dram_bytes: f64,
+    busy_cycles: f64,
+    makespan_cycles: f64,
+) -> EnergyBreakdown {
+    let e = &cfg.energy;
+    let lane_macs_per_cycle = cfg.lanes as f64;
+    // Per-unit energies derived from Table 1 powers at the design clock.
+    let e_mac = e.mac_power_w / (lane_macs_per_cycle * cfg.freq_hz);
+    let e_reg = e.regfile_power_w / (lane_macs_per_cycle * cfg.freq_hz);
+    let e_idx = e.idx_regfile_power_w / (lane_macs_per_cycle * cfg.freq_hz);
+    let e_tree_cycle = e.adder_tree_power_w / cfg.freq_hz; // per PE busy cycle
+    let e_enc = e.encoder_power_w / cfg.freq_hz; // per encoded group-cycle
+    let line = cfg.memory.sram_line_bytes as f64;
+
+    let static_w_node =
+        (e.sram_static_w + e.control_power_w) * cfg.pe_count() as f64;
+
+    EnergyBreakdown {
+        mac_j: macs * e_mac,
+        regfile_j: macs * (e_reg + e_idx),
+        adder_tree_j: busy_cycles * e_tree_cycle,
+        // encoder processes GROUP(32) elems/cycle
+        encoder_j: encoded_elems / 32.0 * e_enc,
+        sram_j: sram_bytes / line * (e.sram_read_j + e.sram_write_j * 0.5),
+        dram_j: dram_bytes * e.dram_j_per_byte,
+        static_j: makespan_cycles / cfg.freq_hz * static_w_node,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_mac_energy_matches_table1() {
+        let cfg = AcceleratorConfig::default();
+        let e = layer_energy(&cfg, 1e9, 0.0, 0.0, 0.0, 0.0, 0.0);
+        // 10.56 mW / (16 MACs × 667 MHz) ≈ 0.99 pJ/MAC ⇒ 1e9 MACs ≈ 0.99 mJ
+        assert!((e.mac_j - 0.99e-3).abs() < 0.05e-3, "{}", e.mac_j);
+    }
+
+    #[test]
+    fn fewer_macs_less_energy() {
+        let cfg = AcceleratorConfig::default();
+        let dense = layer_energy(&cfg, 1e9, 1e6, 1e8, 1e8, 1e6, 1e6);
+        let sparse = layer_energy(&cfg, 4e8, 1e6, 0.6e8, 0.6e8, 0.5e6, 0.6e6);
+        assert!(sparse.total() < dense.total());
+    }
+
+    #[test]
+    fn static_power_tracks_makespan() {
+        let cfg = AcceleratorConfig::default();
+        let fast = layer_energy(&cfg, 0.0, 0.0, 0.0, 0.0, 0.0, 1e6);
+        let slow = layer_energy(&cfg, 0.0, 0.0, 0.0, 0.0, 0.0, 2e6);
+        assert!((slow.static_j / fast.static_j - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let cfg = AcceleratorConfig::default();
+        let e = layer_energy(&cfg, 1e7, 1e5, 1e6, 1e6, 1e5, 1e5);
+        let total = e.mac_j + e.regfile_j + e.adder_tree_j + e.encoder_j + e.sram_j + e.dram_j + e.static_j;
+        assert!((e.total() - total).abs() < 1e-18);
+        let mut acc = EnergyBreakdown::default();
+        acc.add(&e);
+        acc.add(&e);
+        assert!((acc.total() - 2.0 * e.total()).abs() < 1e-15);
+    }
+}

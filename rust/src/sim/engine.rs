@@ -1,0 +1,366 @@
+//! Whole-network simulation: builds the per-phase `LayerTask`s from the
+//! graph + sparsity analysis and aggregates results over a batch.
+
+use std::collections::BTreeMap;
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::{Layer, LayerKind, Network, Phase};
+use crate::sparsity::{analyze_network, LayerOpportunity, SparsityModel};
+use crate::util::rng::Pcg32;
+
+use super::energy::EnergyBreakdown;
+use super::tile::factor2;
+use super::layer_exec::{simulate_layer, LayerSimResult, LayerTask};
+
+/// Aggregated totals for one phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTotals {
+    pub cycles: f64,
+    pub dense_macs: f64,
+    pub performed_macs: f64,
+    pub energy: EnergyBreakdown,
+}
+
+/// One layer × phase entry aggregated over the batch.
+#[derive(Clone, Debug)]
+pub struct LayerAgg {
+    pub name: String,
+    pub phase: Phase,
+    pub cycles: f64,
+    pub dense_macs: f64,
+    pub performed_macs: f64,
+    /// Batch-mean tile utilization (avg/max, Fig 17 metric).
+    pub tile_utilization: f64,
+    /// Min/mean/max tile completion across tiles (batch-summed timeline).
+    pub tile_min: f64,
+    pub tile_mean: f64,
+    pub tile_max: f64,
+}
+
+/// Result of simulating a network under one scheme.
+#[derive(Clone, Debug)]
+pub struct NetworkSimResult {
+    pub network: String,
+    pub scheme: Scheme,
+    pub batch: usize,
+    pub per_layer: Vec<LayerAgg>,
+    pub totals: BTreeMap<&'static str, PhaseTotals>,
+}
+
+impl NetworkSimResult {
+    pub fn phase(&self, phase: Phase) -> &PhaseTotals {
+        &self.totals[phase.label()]
+    }
+
+    /// Total cycles across all three phases.
+    pub fn total_cycles(&self) -> f64 {
+        self.totals.values().map(|t| t.cycles).sum()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.totals.values().map(|t| t.energy.total()).sum()
+    }
+
+    /// Wall-clock per training iteration at the configured frequency.
+    pub fn iteration_seconds(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.total_cycles() / cfg.freq_hz
+    }
+
+    pub fn layer(&self, name: &str, phase: Phase) -> Option<&LayerAgg> {
+        self.per_layer.iter().find(|l| l.name == name && l.phase == phase)
+    }
+}
+
+/// Build the GEMM task a (layer, phase) pair puts on the accelerator.
+///
+/// Output-shape conventions follow §4.2: FP produces `[M,U,V]`; BP
+/// produces the input gradient `[C,H,W]` (M and C swap roles); WG
+/// produces `[M,C,R,S]` with the output map `U·V` as the reduction axis.
+pub fn build_task(
+    net: &Network,
+    layer: &Layer,
+    phase: Phase,
+    opp: &LayerOpportunity,
+) -> Option<LayerTask> {
+    if !layer.kind.is_compute() {
+        return None;
+    }
+    let in_shape = net.input_shape(layer.id);
+    let out = layer.out;
+    let (r, s) = match layer.kind {
+        LayerKind::Conv { r, s, .. } => (r, s),
+        LayerKind::DwConv { r, s, .. } => (r, s),
+        LayerKind::Fc { .. } => (1, 1),
+        _ => unreachable!(),
+    };
+    let weight_elems = match layer.kind {
+        LayerKind::Conv { m, r, s, .. } => (m * in_shape.c * r * s) as f64,
+        LayerKind::DwConv { r, s, .. } => (in_shape.c * r * s) as f64,
+        LayerKind::Fc { out } => (out * in_shape.len()) as f64,
+        _ => unreachable!(),
+    };
+    let task = match phase {
+        Phase::Forward => {
+            // FC outputs are a vector; spread them 2-D across the PE grid
+            // (a [4096] map would otherwise land on a single PE tile).
+            let (m, u, v) = if matches!(layer.kind, LayerKind::Fc { .. }) {
+                let (u, v) = factor2(out.c);
+                (1, u, v)
+            } else {
+                (out.c, out.h, out.w)
+            };
+            LayerTask {
+                name: layer.name.clone(),
+                m,
+                u,
+                v,
+                crs: layer.receptive_field(in_shape).unwrap() as f64,
+                in_sparsity: opp.fp_input,
+                out_sparsity: None, // output sparsity exists only in BP
+                input_elems: in_shape.len() as f64,
+                weight_elems,
+            }
+        }
+        Phase::Backward => {
+            if !opp.has_bp {
+                return None;
+            }
+            // Per-input-gradient work: the BP GEMM performs exactly the
+            // forward pass's MAC pairings, so per-output work is the
+            // forward total divided by the input-gradient element count
+            // (= M·R·S/stride² on average for strided convs).
+            let fwd_macs = crate::nn::layer_macs(net, layer, Phase::Forward) as f64;
+            let crs = fwd_macs / in_shape.len() as f64;
+            let (m, u, v) = if matches!(layer.kind, LayerKind::Fc { .. }) {
+                let (u, v) = factor2(in_shape.len());
+                (1, u, v)
+            } else {
+                (in_shape.c, in_shape.h, in_shape.w)
+            };
+            LayerTask {
+                name: layer.name.clone(),
+                m,
+                u,
+                v,
+                crs,
+                in_sparsity: opp.bp_input,
+                out_sparsity: opp.bp_output,
+                input_elems: out.len() as f64, // incoming gradient map
+                weight_elems,
+            }
+        }
+        Phase::WeightGrad => {
+            // dW[m, c, r, s] reduces over the U·V output positions; the
+            // (c·r·s) weight plane is spread squarely across the PE grid.
+            let (wm, wu, wv, crs) = match layer.kind {
+                LayerKind::Conv { m, .. } => {
+                    let (u, v) = factor2(in_shape.c * r * s);
+                    (m, u, v, out.h * out.w)
+                }
+                LayerKind::DwConv { .. } => (in_shape.c, r, s, out.h * out.w),
+                LayerKind::Fc { out: o } => {
+                    let (u, v) = factor2(in_shape.len());
+                    (o, u, v, 1)
+                }
+                _ => unreachable!(),
+            };
+            // Both operands (activations × gradients) can be sparse; a MAC
+            // survives only when both are non-zero.
+            let s_a = opp.wg_act.unwrap_or(0.0);
+            let s_g = opp.wg_grad.unwrap_or(0.0);
+            let joint = 1.0 - (1.0 - s_a) * (1.0 - s_g);
+            LayerTask {
+                name: layer.name.clone(),
+                m: wm,
+                u: wu,
+                v: wv,
+                crs: crs as f64,
+                in_sparsity: (joint > 1e-9).then_some(joint),
+                out_sparsity: None, // dW is dense
+                input_elems: in_shape.len() as f64 + out.len() as f64,
+                weight_elems: 0.0, // no weight streaming in WG
+            }
+        }
+    };
+    Some(task)
+}
+
+/// Simulate a network for a whole batch under one scheme.
+pub fn simulate_network(
+    net: &Network,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    model: &SparsityModel,
+    scheme: Scheme,
+) -> NetworkSimResult {
+    let batch_fwd = model.assign_batch(net, opts.batch);
+    let mut rng = Pcg32::new(opts.seed ^ 0x51AB);
+
+    // name×phase → accumulated results
+    let mut agg: BTreeMap<(String, &'static str), Vec<LayerSimResult>> = BTreeMap::new();
+
+    for fwd in &batch_fwd {
+        let opps = analyze_network(net, fwd);
+        for opp in &opps {
+            let layer = net.layer(opp.layer);
+            for phase in Phase::ALL {
+                if let Some(task) = build_task(net, layer, phase, opp) {
+                    let r = simulate_layer(&task, cfg, opts, scheme, &mut rng);
+                    agg.entry((layer.name.clone(), phase.label())).or_default().push(r);
+                }
+            }
+        }
+    }
+
+    let mut per_layer = Vec::new();
+    let mut totals: BTreeMap<&'static str, PhaseTotals> = BTreeMap::new();
+    for phase in Phase::ALL {
+        totals.insert(phase.label(), PhaseTotals::default());
+    }
+    for ((name, phase_label), results) in &agg {
+        let phase = Phase::ALL.into_iter().find(|p| p.label() == *phase_label).unwrap();
+        let cycles: f64 = results.iter().map(|r| r.cycles).sum();
+        let dense: f64 = results.iter().map(|r| r.dense_macs).sum();
+        let performed: f64 = results.iter().map(|r| r.performed_macs).sum();
+        let util =
+            results.iter().map(|r| r.tile_utilization()).sum::<f64>() / results.len() as f64;
+        // Tile timeline summed over the batch (the per-layer Fig 17 view).
+        let tiles = results[0].completion.len();
+        let mut tile_total = vec![0.0f64; tiles];
+        for r in results {
+            for (t, c) in tile_total.iter_mut().zip(&r.completion) {
+                *t += c;
+            }
+        }
+        let busy: Vec<f64> = tile_total.iter().cloned().filter(|c| *c > 0.0).collect();
+        let (tmin, tmax) = busy.iter().fold((f64::MAX, 0.0f64), |(lo, hi), &c| {
+            (lo.min(c), hi.max(c))
+        });
+        let tmean = if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
+
+        per_layer.push(LayerAgg {
+            name: name.clone(),
+            phase,
+            cycles,
+            dense_macs: dense,
+            performed_macs: performed,
+            tile_utilization: util,
+            tile_min: if busy.is_empty() { 0.0 } else { tmin },
+            tile_mean: tmean,
+            tile_max: tmax,
+        });
+        let t = totals.get_mut(phase_label).unwrap();
+        t.cycles += cycles;
+        t.dense_macs += dense;
+        t.performed_macs += performed;
+        for r in results {
+            t.energy.add(&r.energy);
+        }
+    }
+
+    NetworkSimResult {
+        network: net.name.clone(),
+        scheme,
+        batch: opts.batch,
+        per_layer,
+        totals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn quick_opts() -> SimOptions {
+        SimOptions { batch: 2, ..SimOptions::default() }
+    }
+
+    fn sim(net: &Network, scheme: Scheme) -> NetworkSimResult {
+        let cfg = AcceleratorConfig::default();
+        let model = SparsityModel::synthetic(11);
+        simulate_network(net, &cfg, &quick_opts(), &model, scheme)
+    }
+
+    #[test]
+    fn vgg_bp_speedup_in_paper_band() {
+        let net = zoo::vgg16();
+        let dc = sim(&net, Scheme::Dense);
+        let wr = sim(&net, Scheme::InOutWr);
+        let speedup = dc.phase(Phase::Backward).cycles / wr.phase(Phase::Backward).cycles;
+        // Paper: BP speedups 1.69–5.43× across networks; VGG ~3–5×.
+        assert!((1.6..5.6).contains(&speedup), "VGG BP speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn overall_speedup_ordering_and_band() {
+        let net = zoo::vgg16();
+        let dc = sim(&net, Scheme::Dense).total_cycles();
+        let in_ = sim(&net, Scheme::In).total_cycles();
+        let both = sim(&net, Scheme::InOut).total_cycles();
+        let wr = sim(&net, Scheme::InOutWr).total_cycles();
+        assert!(dc > in_ && in_ > both && both >= wr * 0.999);
+        let overall = dc / wr;
+        // Fig 15: overall ≈1.66–2.18× (FP+BP+WG all included).
+        assert!((1.3..3.0).contains(&overall), "overall {overall:.2}");
+    }
+
+    #[test]
+    fn bn_network_gets_no_bp_input_sparsity_gain() {
+        // ResNet: IN scheme in BP ≈ DC in BP (BN re-densifies gradients);
+        // all its BP gain must come from OUT.
+        let net = zoo::resnet18();
+        let dc = sim(&net, Scheme::Dense);
+        let in_ = sim(&net, Scheme::In);
+        let both = sim(&net, Scheme::InOut);
+        let bp_dc = dc.phase(Phase::Backward).cycles;
+        let bp_in = in_.phase(Phase::Backward).cycles;
+        let bp_out = both.phase(Phase::Backward).cycles;
+        let gain_in = bp_dc / bp_in;
+        let gain_out = bp_dc / bp_out;
+        assert!(gain_in < 1.15, "IN-only BP gain on ResNet {gain_in:.2}");
+        assert!(gain_out > 1.2, "IN+OUT BP gain on ResNet {gain_out:.2}");
+    }
+
+    #[test]
+    fn dense_macs_match_flops_module() {
+        let net = zoo::mobilenet_v1();
+        let r = sim(&net, Scheme::Dense);
+        let batch = quick_opts().batch as f64;
+        for phase in Phase::ALL {
+            let expect: u64 = net
+                .layers()
+                .iter()
+                .map(|l| crate::nn::layer_macs(&net, l, phase))
+                .sum();
+            let got = r.phase(phase).dense_macs / batch;
+            let expect = expect as f64;
+            assert!(
+                (got - expect).abs() / expect.max(1.0) < 1e-9,
+                "{}: {got} vs {expect}",
+                phase.label()
+            );
+        }
+    }
+
+    #[test]
+    fn per_layer_entries_cover_compute_layers() {
+        let net = zoo::googlenet();
+        let r = sim(&net, Scheme::InOutWr);
+        let fp_layers: Vec<_> =
+            r.per_layer.iter().filter(|l| l.phase == Phase::Forward).collect();
+        assert_eq!(fp_layers.len(), net.compute_layers().len());
+        // first compute layer has no BP entry
+        let first = &net.compute_layers()[0].name;
+        assert!(r.layer(first, Phase::Backward).is_none());
+        assert!(r.layer(first, Phase::WeightGrad).is_some());
+    }
+
+    #[test]
+    fn energy_drops_with_sparsity() {
+        let net = zoo::resnet18();
+        let dc = sim(&net, Scheme::Dense).total_energy_j();
+        let wr = sim(&net, Scheme::InOutWr).total_energy_j();
+        assert!(wr < dc, "energy {wr} !< {dc}");
+    }
+}

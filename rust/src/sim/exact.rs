@@ -1,0 +1,244 @@
+//! Exact event-driven PE simulation — the cycle-accurate reference the
+//! analytic model (`sim::pe`) is validated against.
+//!
+//! Where `PeModel` computes *expected* lane-maximum drain times from the
+//! sparsity fraction, this module walks real operand bitmaps group by
+//! group: operands are dealt to lanes in contiguous chunks (the SRAM
+//! streaming layout of §4.3), each 32-entry group drains at one non-zero
+//! per cycle per lane, the group waits for its slowest lane, and double
+//! buffering overlaps the next group's fill with the current drain.
+//!
+//! Used two ways:
+//! * property tests assert the analytic model tracks this within a
+//!   tolerance across random sparsity patterns (DESIGN.md §7);
+//! * the exact co-simulation path replays *real* bitmaps extracted from
+//!   training traces.
+
+use crate::util::rng::Pcg32;
+
+use super::adder_tree::{tree_utilization, ReconfigMode};
+
+/// Exact PE parameters (mirrors `PeModel`).
+#[derive(Clone, Debug)]
+pub struct ExactPe {
+    pub lanes: usize,
+    pub group_entries: usize,
+    pub groups: usize,
+    pub double_buffering: bool,
+    pub reconfig: ReconfigMode,
+    pub blocking_overhead: u64,
+}
+
+impl Default for ExactPe {
+    fn default() -> Self {
+        ExactPe {
+            lanes: 16,
+            group_entries: 32,
+            groups: 2,
+            double_buffering: true,
+            reconfig: ReconfigMode::Hierarchical,
+            blocking_overhead: 4,
+        }
+    }
+}
+
+/// Result of one exact output-neuron computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExactOutput {
+    pub cycles: u64,
+    pub macs: u64,
+    /// Cycles lanes sat idle waiting for the slowest lane (the stall the
+    /// double-buffering/§4.3 discussion is about).
+    pub lane_stall_cycles: u64,
+}
+
+impl ExactPe {
+    /// Operand capacity per blocking pass.
+    pub fn capacity(&self) -> usize {
+        self.lanes * self.group_entries * self.groups
+    }
+
+    /// Exactly simulate one output whose operand non-zero pattern is
+    /// `nz` (length = receptive field CRS).
+    pub fn simulate_output(&self, nz: &[bool]) -> ExactOutput {
+        assert!(!nz.is_empty(), "empty receptive field");
+        let cap = self.capacity();
+        let mut cycles = 0u64;
+        let mut macs = 0u64;
+        let mut stall = 0u64;
+
+        for (pi, pass) in nz.chunks(cap).enumerate() {
+            if pi > 0 {
+                cycles += self.blocking_overhead; // partial-sum RMW (§4.4)
+            }
+            let mut pass_cycles = 0u64;
+            // Each output occupies `occ` lanes of its adder-tree slot
+            // (§4.5); operands are dealt contiguously across those lanes.
+            let occ_pass = pass
+                .len()
+                .div_ceil(self.group_entries * self.groups)
+                .clamp(1, self.lanes);
+            let per_lane = pass.len().div_ceil(occ_pass);
+            let lanes_used = occ_pass;
+            // Each lane's chunk is processed in groups of `group_entries`.
+            let lane_chunks: Vec<&[bool]> = pass.chunks(per_lane.max(1)).collect();
+            let groups_per_lane = per_lane.max(1).div_ceil(self.group_entries);
+            let mut prev_drain = 0u64;
+            for g in 0..groups_per_lane {
+                // Per-lane non-zero count in this group.
+                let mut max_nz = 0u64;
+                let mut sum_nz = 0u64;
+                for chunk in &lane_chunks {
+                    let lo = g * self.group_entries;
+                    if lo >= chunk.len() {
+                        continue;
+                    }
+                    let hi = (lo + self.group_entries).min(chunk.len());
+                    let nzc = chunk[lo..hi].iter().filter(|b| **b).count() as u64;
+                    max_nz = max_nz.max(nzc);
+                    sum_nz += nzc;
+                }
+                let drain = max_nz.max(1); // a group costs >=1 cycle to sequence
+                let fill = max_nz; // operands stream in at 1 nz/lane/cycle
+                macs += sum_nz;
+                stall += (drain * lanes_used as u64).saturating_sub(sum_nz);
+                if self.double_buffering {
+                    // next group fills while this one drains
+                    pass_cycles += if g == 0 { drain } else { drain.max(prev_drain.min(fill)) };
+                } else {
+                    pass_cycles += drain + fill;
+                }
+                prev_drain = drain;
+            }
+            // Adder-tree packing (§4.5): a pass occupying fewer than all
+            // lanes shares the PE with other outputs' identical passes.
+            let util = tree_utilization(occ_pass, self.lanes, self.reconfig);
+            cycles += (pass_cycles as f64 * (occ_pass as f64 / self.lanes as f64) / util)
+                .round() as u64;
+        }
+        ExactOutput { cycles: cycles.max(1), macs, lane_stall_cycles: stall }
+    }
+
+    /// Simulate a whole tile: `outputs` receptive-field bitmaps, with an
+    /// optional output-sparsity mask saying which outputs are skipped.
+    pub fn simulate_tile(&self, outputs: &[Vec<bool>], out_mask: Option<&[bool]>) -> ExactOutput {
+        let mut total = ExactOutput { cycles: 0, macs: 0, lane_stall_cycles: 0 };
+        for (i, nz) in outputs.iter().enumerate() {
+            if let Some(mask) = out_mask {
+                if !mask[i] {
+                    continue; // skipped a priori — zero cycles (Fig 5c)
+                }
+            }
+            let r = self.simulate_output(nz);
+            total.cycles += r.cycles;
+            total.macs += r.macs;
+            total.lane_stall_cycles += r.lane_stall_cycles;
+        }
+        total
+    }
+}
+
+/// Random operand bitmap with the given density (helper for validation
+/// tests and synthetic exact runs).
+pub fn random_bitmap(crs: usize, density: f64, rng: &mut Pcg32) -> Vec<bool> {
+    (0..crs).map(|_| rng.bernoulli(density)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::sim::pe::PeModel;
+
+    #[test]
+    fn dense_output_matches_arithmetic() {
+        let pe = ExactPe::default();
+        // CRS=1024 dense: 16 lanes × 64 entries, 2 groups of 32 → 64 cycles.
+        let nz = vec![true; 1024];
+        let r = pe.simulate_output(&nz);
+        assert_eq!(r.macs, 1024);
+        assert_eq!(r.cycles, 64);
+        assert_eq!(r.lane_stall_cycles, 0);
+    }
+
+    #[test]
+    fn empty_pattern_costs_minimum() {
+        let pe = ExactPe::default();
+        let nz = vec![false; 1024];
+        let r = pe.simulate_output(&nz);
+        assert_eq!(r.macs, 0);
+        assert!(r.cycles <= 4, "all-zero group sequencing {}", r.cycles);
+    }
+
+    #[test]
+    fn sparsity_reduces_cycles_and_counts_stall() {
+        let pe = ExactPe::default();
+        let mut rng = Pcg32::new(3);
+        let dense = pe.simulate_output(&vec![true; 1024]);
+        let sparse = pe.simulate_output(&random_bitmap(1024, 0.5, &mut rng));
+        assert!(sparse.cycles < dense.cycles);
+        assert!(sparse.macs < dense.macs);
+        assert!(sparse.lane_stall_cycles > 0, "imbalance must show up as stall");
+    }
+
+    #[test]
+    fn double_buffering_never_hurts() {
+        let mut rng = Pcg32::new(9);
+        for _ in 0..20 {
+            let nz = random_bitmap(2048, rng.range_f64(0.1, 0.9), &mut rng);
+            let with = ExactPe::default().simulate_output(&nz);
+            let without = ExactPe { double_buffering: false, ..ExactPe::default() }
+                .simulate_output(&nz);
+            assert!(with.cycles <= without.cycles);
+            assert_eq!(with.macs, without.macs);
+        }
+    }
+
+    #[test]
+    fn blocking_pass_overhead_applies() {
+        let pe = ExactPe::default();
+        let one_pass = pe.simulate_output(&vec![true; 1024]);
+        let two_pass = pe.simulate_output(&vec![true; 2048]);
+        assert!(two_pass.cycles >= 2 * one_pass.cycles + pe.blocking_overhead);
+    }
+
+    #[test]
+    fn tile_skips_masked_outputs_entirely() {
+        let pe = ExactPe::default();
+        let outputs: Vec<Vec<bool>> = (0..8).map(|_| vec![true; 256]).collect();
+        let all = pe.simulate_tile(&outputs, None);
+        let mask = vec![true, false, true, false, true, false, true, false];
+        let half = pe.simulate_tile(&outputs, Some(&mask));
+        assert_eq!(half.cycles * 2, all.cycles);
+        assert_eq!(half.macs * 2, all.macs);
+    }
+
+    /// The headline validation: the analytic `PeModel` must track the
+    /// exact simulation across sparsity levels and receptive fields.
+    #[test]
+    fn analytic_model_tracks_exact_simulation() {
+        let cfg = AcceleratorConfig::default();
+        let analytic = PeModel::from_config(&cfg);
+        let exact = ExactPe::default();
+        let mut rng = Pcg32::new(42);
+        for &crs in &[256usize, 576, 1024, 2304, 4608] {
+            for &s in &[0.0, 0.3, 0.5, 0.7] {
+                // average the exact sim over many random patterns
+                let trials = 40;
+                let mut sum = 0u64;
+                for _ in 0..trials {
+                    let nz = random_bitmap(crs, 1.0 - s, &mut rng);
+                    sum += exact.simulate_output(&nz).cycles;
+                }
+                let exact_mean = sum as f64 / trials as f64;
+                let (model, _) = analytic.cycles_per_output(crs as f64, s);
+                let err = (model - exact_mean).abs() / exact_mean;
+                assert!(
+                    err < 0.20,
+                    "crs={crs} s={s}: analytic {model:.1} vs exact {exact_mean:.1} ({:.0}%)",
+                    err * 100.0
+                );
+            }
+        }
+    }
+}

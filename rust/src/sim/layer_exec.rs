@@ -1,0 +1,296 @@
+//! Per-layer execution model: one GEMM-shaped task (a conv/fc in one
+//! training phase) mapped onto the PE grid under a sparsity scheme.
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::util::rng::Pcg32;
+
+use super::energy::{layer_energy, EnergyBreakdown};
+use super::memory::layer_traffic;
+use super::pe::PeModel;
+use super::tile::tile_outputs;
+use super::wdu::redistribute;
+
+/// One GEMM-shaped unit of accelerator work (per image).
+#[derive(Clone, Debug)]
+pub struct LayerTask {
+    pub name: String,
+    /// Output channels produced (filters / gradient maps).
+    pub m: usize,
+    /// Spatial output extent (the dimensions tiled across the PE grid).
+    pub u: usize,
+    pub v: usize,
+    /// Receptive field per output value (fractional for strided BP).
+    pub crs: f64,
+    /// Operand (input) sparsity fraction, if exploitable.
+    pub in_sparsity: Option<f64>,
+    /// A-priori-known output zero fraction, if exploitable (BP only).
+    pub out_sparsity: Option<f64>,
+    /// Traffic accounting (elements).
+    pub input_elems: f64,
+    pub weight_elems: f64,
+}
+
+impl LayerTask {
+    pub fn outputs(&self) -> usize {
+        self.m * self.u * self.v
+    }
+
+    pub fn dense_macs(&self) -> f64 {
+        self.outputs() as f64 * self.crs
+    }
+}
+
+/// Result of simulating one `LayerTask` under one scheme.
+#[derive(Clone, Debug)]
+pub struct LayerSimResult {
+    pub name: String,
+    pub scheme: Scheme,
+    /// Node latency including exposed memory stalls (cycles).
+    pub cycles: f64,
+    /// Compute-only makespan (max tile completion).
+    pub compute_cycles: f64,
+    /// Exposed memory stall cycles.
+    pub mem_stall: f64,
+    pub dense_macs: f64,
+    pub performed_macs: f64,
+    /// Per-tile busy cycles before redistribution.
+    pub tile_busy: Vec<f64>,
+    /// Per-tile completion after redistribution (== busy when WR off).
+    pub completion: Vec<f64>,
+    pub wdu_steals: usize,
+    pub energy: EnergyBreakdown,
+}
+
+impl LayerSimResult {
+    /// Average-to-max tile utilization (Fig 17's metric).
+    pub fn tile_utilization(&self) -> f64 {
+        let max = self.completion.iter().cloned().fold(0.0, f64::max);
+        if max <= 0.0 {
+            return 1.0;
+        }
+        let avg: f64 = self.completion.iter().sum::<f64>() / self.completion.len() as f64;
+        avg / max
+    }
+}
+
+/// Per-tile sparsity variation, applied to the *density* `1 − s` so the
+/// induced work variation is `±cv` regardless of the sparsity level
+/// (jittering `s` itself would blow up the spread at high sparsity).
+/// The deviate is clamped so a single tile cannot dominate
+/// unrealistically; calibrated so pre-WR avg/max tile utilization lands
+/// near the paper's ~70% (Fig 17).
+fn jitter(s: f64, cv: f64, rng: &mut Pcg32) -> f64 {
+    if s <= 0.0 {
+        return 0.0;
+    }
+    let g = rng.gauss().clamp(-2.5, 2.5);
+    let density = ((1.0 - s) * (1.0 + cv * g)).clamp(0.02, 1.0);
+    1.0 - density
+}
+
+/// Simulate one layer task (one image) under `scheme`.
+pub fn simulate_layer(
+    task: &LayerTask,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    scheme: Scheme,
+    rng: &mut Pcg32,
+) -> LayerSimResult {
+    let pe = PeModel::from_config(cfg);
+    let s_in = if scheme.uses_input_sparsity() { task.in_sparsity.unwrap_or(0.0) } else { 0.0 };
+    let s_out = if scheme.uses_output_sparsity() { task.out_sparsity.unwrap_or(0.0) } else { 0.0 };
+
+    // Spatial tiling across the PE grid; every PE computes all M channels
+    // of its spatial slice (single filter broadcast at a time, §4.2).
+    let spatial = tile_outputs(task.u, task.v, cfg.tx, cfg.ty);
+
+    let mut tile_busy = Vec::with_capacity(spatial.len());
+    let mut performed = 0.0f64;
+    for &sp in &spatial {
+        if sp == 0 {
+            tile_busy.push(0.0);
+            continue;
+        }
+        // Per-tile sparsity variation (drives load imbalance / WDU).
+        let s_in_t = jitter(s_in, opts.tile_sparsity_cv, rng);
+        let s_out_t = jitter(s_out, opts.tile_sparsity_cv, rng);
+        let outputs_t = (sp * task.m) as f64;
+        let computed = outputs_t * (1.0 - s_out_t);
+        let (cyc_per_out, macs_per_out) = pe.cycles_per_output(task.crs, s_in_t);
+        tile_busy.push(computed * cyc_per_out);
+        performed += computed * macs_per_out;
+    }
+
+    // Work redistribution.
+    let (completion, steals) = if scheme.uses_work_redistribution() {
+        let avg_cyc_per_out = {
+            let (c, _) = pe.cycles_per_output(task.crs, s_in);
+            c
+        };
+        let overhead_frac =
+            (cfg.wr_overhead_cycles_per_output / avg_cyc_per_out).clamp(0.005, 0.5);
+        let out = redistribute(&tile_busy, cfg.wr_threshold, overhead_frac);
+        (out.completion, out.steals)
+    } else {
+        (tile_busy.clone(), 0)
+    };
+    let compute_cycles = completion.iter().cloned().fold(0.0, f64::max);
+
+    // Memory.
+    let output_elems = task.outputs() as f64;
+    let traffic = layer_traffic(
+        task.input_elems,
+        task.weight_elems,
+        output_elems,
+        cfg.operand_bytes as f64,
+        s_in,
+        s_out,
+    );
+    let mem_stall = traffic.stall_cycles(cfg, compute_cycles, opts.overlap_dram);
+    let cycles = compute_cycles + mem_stall;
+
+    // Energy: operands staged through SRAM per MAC (2 operands × 2 B),
+    // outputs encoded once (§4.2).
+    let busy: f64 = tile_busy.iter().sum();
+    let energy = layer_energy(
+        cfg,
+        performed,
+        output_elems,
+        performed * (2.0 * cfg.operand_bytes as f64),
+        traffic.dram_read_bytes + traffic.dram_write_bytes,
+        busy,
+        cycles,
+    );
+
+    LayerSimResult {
+        name: task.name.clone(),
+        scheme,
+        cycles,
+        compute_cycles,
+        mem_stall,
+        dense_macs: task.dense_macs(),
+        performed_macs: performed,
+        tile_busy,
+        completion,
+        wdu_steals: steals,
+        energy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(in_sp: Option<f64>, out_sp: Option<f64>) -> LayerTask {
+        LayerTask {
+            name: "test".into(),
+            m: 128,
+            u: 28,
+            v: 28,
+            crs: 1152.0, // 128·3·3
+            in_sparsity: in_sp,
+            out_sparsity: out_sp,
+            input_elems: 128.0 * 30.0 * 30.0,
+            weight_elems: 128.0 * 1152.0,
+        }
+    }
+
+    fn run(scheme: Scheme, in_sp: Option<f64>, out_sp: Option<f64>) -> LayerSimResult {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions::default();
+        let mut rng = Pcg32::new(7);
+        simulate_layer(&task(in_sp, out_sp), &cfg, &opts, scheme, &mut rng)
+    }
+
+    #[test]
+    fn dense_performs_all_macs() {
+        let r = run(Scheme::Dense, Some(0.5), Some(0.5));
+        assert!((r.performed_macs - r.dense_macs).abs() / r.dense_macs < 1e-9);
+        assert_eq!(r.wdu_steals, 0);
+    }
+
+    #[test]
+    fn scheme_ordering_dc_ge_in_ge_inout_ge_wr() {
+        let (si, so) = (Some(0.5), Some(0.5));
+        let dc = run(Scheme::Dense, si, so).cycles;
+        let inp = run(Scheme::In, si, so).cycles;
+        let both = run(Scheme::InOut, si, so).cycles;
+        let wr = run(Scheme::InOutWr, si, so).cycles;
+        assert!(dc > inp, "DC {dc} !> IN {inp}");
+        assert!(inp > both, "IN {inp} !> IN+OUT {both}");
+        assert!(wr <= both * 1.001, "WR {wr} !<= IN+OUT {both}");
+    }
+
+    #[test]
+    fn speedups_in_papers_range() {
+        // 50% input + 50% output sparsity → ideal 4×; with imbalance and
+        // overheads the model should land in the 2–4× band (Fig 11).
+        let dc = run(Scheme::Dense, Some(0.5), Some(0.5)).cycles;
+        let wr = run(Scheme::InOutWr, Some(0.5), Some(0.5)).cycles;
+        let speedup = dc / wr;
+        assert!((1.8..4.2).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn output_sparsity_skips_macs() {
+        let r = run(Scheme::InOut, None, Some(0.5));
+        // ≈half the outputs skipped entirely
+        let frac = r.performed_macs / r.dense_macs;
+        assert!((0.4..0.6).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn in_scheme_ignores_output_sparsity() {
+        let a = run(Scheme::In, Some(0.5), Some(0.9)).cycles;
+        let b = run(Scheme::In, Some(0.5), None).cycles;
+        assert!((a - b).abs() / b < 1e-9);
+    }
+
+    #[test]
+    fn wdu_improves_tile_utilization() {
+        let cfg = AcceleratorConfig::default();
+        let mut opts = SimOptions::default();
+        opts.tile_sparsity_cv = 0.35; // strong imbalance
+        let mut rng = Pcg32::new(3);
+        let t = task(Some(0.5), Some(0.5));
+        let no_wr = simulate_layer(&t, &cfg, &opts, Scheme::InOut, &mut rng);
+        let mut rng = Pcg32::new(3);
+        let wr = simulate_layer(&t, &cfg, &opts, Scheme::InOutWr, &mut rng);
+        assert!(
+            wr.tile_utilization() > no_wr.tile_utilization(),
+            "WR {:.3} !> no-WR {:.3}",
+            wr.tile_utilization(),
+            no_wr.tile_utilization()
+        );
+        assert!(wr.compute_cycles <= no_wr.compute_cycles * 1.001);
+    }
+
+    #[test]
+    fn energy_positive_and_reduced_by_sparsity() {
+        let dc = run(Scheme::Dense, Some(0.5), Some(0.5));
+        let wr = run(Scheme::InOutWr, Some(0.5), Some(0.5));
+        assert!(dc.energy.total() > 0.0);
+        assert!(wr.energy.total() < dc.energy.total());
+    }
+
+    #[test]
+    fn tiny_output_map_leaves_tiles_idle() {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions::default();
+        let mut rng = Pcg32::new(1);
+        let t = LayerTask {
+            name: "7x7".into(),
+            m: 512,
+            u: 7,
+            v: 7,
+            crs: 4608.0,
+            in_sparsity: None,
+            out_sparsity: None,
+            input_elems: 512.0 * 9.0 * 9.0,
+            weight_elems: 512.0 * 4608.0,
+        };
+        let r = simulate_layer(&t, &cfg, &opts, Scheme::Dense, &mut rng);
+        let idle = r.tile_busy.iter().filter(|c| **c == 0.0).count();
+        assert_eq!(idle, 256 - 49);
+    }
+}

@@ -1,0 +1,128 @@
+//! Memory system model: SRAM lane feed, H-tree weight broadcast, and the
+//! 16-channel DDR3 DRAM with compute overlap (§4.3, §5.2, §6).
+
+use crate::config::AcceleratorConfig;
+
+/// Per-layer memory traffic and the stall cycles it induces.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryModel {
+    /// Bytes fetched from DRAM (inputs + weights + bitmap/offsets).
+    pub dram_read_bytes: f64,
+    /// Bytes written back to DRAM (outputs + updated bitmaps).
+    pub dram_write_bytes: f64,
+    /// Weight-broadcast bytes over the H-tree.
+    pub broadcast_bytes: f64,
+}
+
+impl MemoryModel {
+    /// DRAM transfer time in cycles at the configured aggregate bandwidth.
+    pub fn dram_cycles(&self, cfg: &AcceleratorConfig) -> f64 {
+        let bytes = self.dram_read_bytes + self.dram_write_bytes;
+        bytes / cfg.dram_bw() * cfg.freq_hz
+    }
+
+    /// H-tree broadcast time in cycles.
+    pub fn broadcast_cycles(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.broadcast_bytes / cfg.memory.htree_bw * cfg.freq_hz
+    }
+
+    /// Stall cycles exposed beyond `compute_cycles`.
+    ///
+    /// §6: streaming access patterns let most DRAM traffic overlap with
+    /// compute; a `cold_fraction` of the transfer (first tile fill /
+    /// final drain) cannot overlap.
+    pub fn stall_cycles(&self, cfg: &AcceleratorConfig, compute_cycles: f64, overlap: bool) -> f64 {
+        let mem = self.dram_cycles(cfg) + self.broadcast_cycles(cfg);
+        if !overlap {
+            return mem;
+        }
+        let cold_fraction = 0.05;
+        let cold = mem * cold_fraction;
+        let pipelined = mem * (1.0 - cold_fraction);
+        cold + (pipelined - compute_cycles).max(0.0)
+    }
+}
+
+/// Traffic for one layer execution (per image).
+///
+/// * Inputs stream in once (halo included); with input sparsity only the
+///   indexed non-zeros plus the offset map move.
+/// * Weights stream once per layer and broadcast to all PEs.
+/// * Outputs write back once; the bitmap adds 1 bit per neuron.
+pub fn layer_traffic(
+    input_elems: f64,
+    weight_elems: f64,
+    output_elems: f64,
+    operand_bytes: f64,
+    in_sparsity: f64,
+    out_sparsity: f64,
+) -> MemoryModel {
+    let in_density = 1.0 - in_sparsity;
+    let out_density = 1.0 - out_sparsity;
+    // Non-zeros + 5-bit offsets (5/8 byte each) + within-channel bitmap.
+    let input_bytes =
+        input_elems * in_density * operand_bytes + input_elems * in_density * 0.625 + input_elems / 8.0;
+    let weight_bytes = weight_elems * operand_bytes;
+    let output_bytes = output_elems * out_density * operand_bytes + output_elems / 8.0;
+    MemoryModel {
+        dram_read_bytes: input_bytes + weight_bytes,
+        dram_write_bytes: output_bytes,
+        broadcast_bytes: weight_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::default()
+    }
+
+    #[test]
+    fn dram_cycles_scale_with_bytes() {
+        let m = MemoryModel { dram_read_bytes: 201.6e9, dram_write_bytes: 0.0, ..Default::default() };
+        // 201.6 GB at 201.6 GB/s = 1 s = 667e6 cycles.
+        assert!((m.dram_cycles(&cfg()) - 667e6).abs() < 1e3);
+    }
+
+    #[test]
+    fn overlap_hides_traffic_under_compute() {
+        let m = MemoryModel { dram_read_bytes: 1e6, dram_write_bytes: 0.0, ..Default::default() };
+        let mem_cycles = m.dram_cycles(&cfg());
+        // plenty of compute: only the cold fraction shows
+        let stall = m.stall_cycles(&cfg(), mem_cycles * 10.0, true);
+        assert!((stall - 0.05 * mem_cycles).abs() / mem_cycles < 1e-6);
+        // no compute to hide behind: full exposure
+        let stall2 = m.stall_cycles(&cfg(), 0.0, true);
+        assert!((stall2 - mem_cycles).abs() / mem_cycles < 1e-6);
+        // overlap disabled: full cost regardless
+        assert!((m.stall_cycles(&cfg(), 1e12, false) - mem_cycles).abs() < 1.0);
+    }
+
+    #[test]
+    fn sparsity_reduces_traffic() {
+        let dense = layer_traffic(1e6, 1e5, 1e6, 2.0, 0.0, 0.0);
+        let sparse = layer_traffic(1e6, 1e5, 1e6, 2.0, 0.5, 0.5);
+        assert!(sparse.dram_read_bytes < dense.dram_read_bytes);
+        assert!(sparse.dram_write_bytes < dense.dram_write_bytes);
+        // weights unaffected
+        assert!((sparse.broadcast_bytes - dense.broadcast_bytes).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_communication_ratio_example() {
+        // §6: fmap [128×28×28], filter [128×128×3×3] — communication is a
+        // modest fraction of compute (~15%) for the dense case.
+        let input = 128.0 * 30.0 * 30.0; // with halo
+        let weights = 128.0 * 128.0 * 9.0;
+        let output = 128.0 * 28.0 * 28.0;
+        let m = layer_traffic(input, weights, output, 2.0, 0.0, 0.0);
+        let mem_cycles = m.dram_cycles(&cfg());
+        // dense compute cycles ≈ MACs / 4096 per cycle
+        let macs = 128.0f64 * 28.0 * 28.0 * 128.0 * 9.0;
+        let compute = macs / 4096.0;
+        let ratio = mem_cycles / compute;
+        assert!((0.02..0.4).contains(&ratio), "ratio {ratio}");
+    }
+}

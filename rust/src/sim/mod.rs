@@ -1,0 +1,30 @@
+//! Cycle-level simulator of the proposed accelerator (§4–§5).
+//!
+//! Granularity: lane-group analytic (DESIGN.md §5) — per output neuron the
+//! model computes expected lane-maximum cycles from the operand sparsity,
+//! aggregates per PE tile with spatial sparsity variation, then runs the
+//! WDU redistribution event loop over tile timelines. MAC/skip counts are
+//! exact in expectation; the stochastic per-tile jitter reproduces the
+//! load-imbalance phenomena of Fig 17.
+
+mod pe;
+mod adder_tree;
+mod blocking;
+mod tile;
+mod wdu;
+mod memory;
+mod energy;
+mod layer_exec;
+mod engine;
+mod exact;
+
+pub use adder_tree::{tree_utilization, ReconfigMode};
+pub use exact::{random_bitmap, ExactOutput, ExactPe};
+pub use blocking::synapse_passes;
+pub use energy::{layer_energy, EnergyBreakdown};
+pub use engine::{build_task, simulate_network, LayerAgg, NetworkSimResult, PhaseTotals};
+pub use layer_exec::{simulate_layer, LayerSimResult, LayerTask};
+pub use memory::{layer_traffic, MemoryModel};
+pub use pe::{expected_lane_max, expected_max_std_normal, PeModel};
+pub use tile::{tile_outputs, TileState};
+pub use wdu::{redistribute, WduOutcome};

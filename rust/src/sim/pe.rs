@@ -1,0 +1,236 @@
+//! Processing-element model (§4.3): 16 computation lanes, each with a
+//! 32-entry double-buffered operand group, a MAC per lane, feeding the
+//! reconfigurable adder tree.
+//!
+//! The quantity the whole simulator turns on is *cycles per output
+//! neuron*. Dense, an output with receptive field CRS costs
+//! `ceil(CRS / lanes)` MAC cycles (every lane streams its share). With
+//! input sparsity, each lane only visits its non-zero operands, but the
+//! group must wait for its slowest lane — the expected lane-maximum of
+//! binomially-thinned counts. Double buffering overlaps the next group's
+//! fill with the current drain; the residual exposure is modeled as a
+//! warm-up plus the fill/drain imbalance.
+
+use crate::config::AcceleratorConfig;
+
+use super::adder_tree::{tree_utilization, ReconfigMode};
+
+/// Expected maximum of `l` iid Binomial(n, p) draws, via the normal
+/// order-statistic approximation `μ + σ·c_l` (exact at the extremes).
+/// `c_16 ≈ 1.766` is the expected maximum of 16 standard normals.
+pub fn expected_lane_max(n: f64, p: f64, lanes: usize) -> f64 {
+    if p <= 0.0 || n <= 0.0 {
+        return 0.0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    let mu = n * p;
+    let var = n * p * (1.0 - p);
+    let c = expected_max_std_normal(lanes);
+    (mu + var.sqrt() * c).min(n)
+}
+
+/// E[max of k standard normals] (Blom's approximation via the inverse
+/// normal CDF at (k − π/8 + ...)/(k − π/4 + 1) — tabulated for the small
+/// k the hardware uses, interpolated otherwise).
+pub fn expected_max_std_normal(k: usize) -> f64 {
+    const TABLE: [(usize, f64); 8] = [
+        (1, 0.0),
+        (2, 0.5642),
+        (4, 1.0294),
+        (8, 1.4236),
+        (16, 1.7660),
+        (32, 2.0697),
+        (64, 2.3440),
+        (256, 2.8029),
+    ];
+    if k <= 1 {
+        return 0.0;
+    }
+    for w in TABLE.windows(2) {
+        let (k0, v0) = w[0];
+        let (k1, v1) = w[1];
+        if k <= k1 {
+            if k == k1 {
+                return v1;
+            }
+            // interpolate in log k
+            let t = ((k as f64).ln() - (k0 as f64).ln()) / ((k1 as f64).ln() - (k0 as f64).ln());
+            return v0 + t * (v1 - v0);
+        }
+    }
+    // k > 256: asymptotic √(2 ln k)
+    (2.0 * (k as f64).ln()).sqrt()
+}
+
+/// Per-output-neuron cycle model.
+#[derive(Clone, Debug)]
+pub struct PeModel {
+    pub lanes: usize,
+    pub group_entries: usize,
+    pub groups: usize,
+    pub reconfig: ReconfigMode,
+    /// Extra cycles per synapse-blocking pass for the partial-sum
+    /// read-modify-write (§4.4).
+    pub blocking_overhead: f64,
+    /// Whether double buffering is enabled (§4.3; ablation knob).
+    pub double_buffering: bool,
+}
+
+impl PeModel {
+    pub fn from_config(cfg: &AcceleratorConfig) -> PeModel {
+        PeModel {
+            lanes: cfg.lanes,
+            group_entries: cfg.group_entries,
+            groups: cfg.groups,
+            reconfig: ReconfigMode::Hierarchical,
+            blocking_overhead: 4.0,
+            double_buffering: true,
+        }
+    }
+
+    /// PE operand capacity per double-buffered pass (1024 by default).
+    pub fn capacity(&self) -> usize {
+        self.lanes * self.group_entries * self.groups
+    }
+
+    /// Expected cycles to produce one output neuron whose receptive field
+    /// is `crs`, under operand sparsity `s_in` (0 = dense execution).
+    ///
+    /// Returns (cycles, macs_performed).
+    pub fn cycles_per_output(&self, crs: f64, s_in: f64) -> (f64, f64) {
+        assert!(crs > 0.0, "receptive field must be positive");
+        let p = (1.0 - s_in).clamp(0.0, 1.0);
+        let cap = self.capacity() as f64;
+        // Synapse blocking (§4.4): full capacity-sized passes plus a tail.
+        let n_full = (crs / cap).floor();
+        let tail = crs - n_full * cap;
+        let mut cycles = n_full * self.pass_cycles(cap, p);
+        if tail > 0.5 {
+            cycles += self.pass_cycles(tail, p);
+        }
+        let passes = n_full + if tail > 0.5 { 1.0 } else { 0.0 };
+        cycles += (passes - 1.0).max(0.0) * self.blocking_overhead;
+        let macs = crs * p;
+        // Floor: the adder tree completes at most `lanes` packed outputs
+        // per cycle.
+        (cycles.max(1.0 / self.lanes as f64), macs)
+    }
+
+    /// Expected cycles for one blocking pass over `chunk` operands at
+    /// density `p`, including the adder-tree packing discount for passes
+    /// that occupy fewer than all lanes (§4.5).
+    fn pass_cycles(&self, chunk: f64, p: f64) -> f64 {
+        let entries_per_lane_pass = (self.group_entries * self.groups) as f64;
+        let occ = (chunk / entries_per_lane_pass).ceil().clamp(1.0, self.lanes as f64);
+        let util = tree_utilization(occ as usize, self.lanes, self.reconfig);
+        let n_group = self.group_entries as f64;
+        let lane_entries = chunk / occ;
+        let lane_groups = (lane_entries / n_group).ceil().max(1.0);
+        let group_fill = (lane_entries / lane_groups).min(n_group).max(1.0);
+        // Per-group drain: expected max over occupied lanes; fill streams
+        // non-zeros only. Double buffering overlaps them.
+        let drain = expected_lane_max(group_fill, p, occ as usize).max(1.0);
+        let fill = group_fill * p;
+        let per_group = if self.double_buffering { drain.max(fill) } else { drain + fill };
+        lane_groups * per_group * (occ / self.lanes as f64) / util.max(1e-9)
+    }
+
+    /// Dense-baseline cycles per output (DC scheme): every operand pair
+    /// is processed.
+    pub fn dense_cycles_per_output(&self, crs: f64) -> f64 {
+        self.cycles_per_output(crs, 0.0).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe() -> PeModel {
+        PeModel::from_config(&AcceleratorConfig::default())
+    }
+
+    #[test]
+    fn lane_max_bounds() {
+        // p=0 → 0; p=1 → n; monotone in p.
+        assert_eq!(expected_lane_max(32.0, 0.0, 16), 0.0);
+        assert_eq!(expected_lane_max(32.0, 1.0, 16), 32.0);
+        let lo = expected_lane_max(32.0, 0.3, 16);
+        let hi = expected_lane_max(32.0, 0.6, 16);
+        assert!(hi > lo && lo > 32.0 * 0.3, "max must exceed the mean");
+        assert!(hi <= 32.0);
+    }
+
+    #[test]
+    fn max_std_normal_table_monotone() {
+        let mut prev = -1.0;
+        for k in [1usize, 2, 3, 4, 8, 12, 16, 32, 64, 256, 1024] {
+            let v = expected_max_std_normal(k);
+            assert!(v >= prev, "k={k}: {v} < {prev}");
+            prev = v;
+        }
+        assert!((expected_max_std_normal(16) - 1.766).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dense_cycles_match_capacity_arithmetic() {
+        let pe = pe();
+        // CRS = 1024 exactly fills the PE: 16 lanes × 64 entries; dense
+        // drain = 32 per group, 2 groups → 64 cycles (steady state, the
+        // ideal 1024/16 — dense mode has no imbalance, §4.3).
+        let d = pe.dense_cycles_per_output(1024.0);
+        assert!((d - 64.0).abs() < 1.0, "1024-CRS dense cycles {d}");
+        // CRS = 2048: two blocking passes, roughly twice + overhead.
+        let d2 = pe.dense_cycles_per_output(2048.0);
+        assert!(d2 > 1.9 * d && d2 < 2.4 * d, "{d2} vs {d}");
+    }
+
+    #[test]
+    fn sparsity_reduces_cycles_monotonically() {
+        let pe = pe();
+        let mut prev = f64::MAX;
+        for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
+            let (c, m) = pe.cycles_per_output(1024.0, s);
+            assert!(c < prev, "s={s}: {c} !< {prev}");
+            assert!((m - 1024.0 * (1.0 - s)).abs() < 1e-9);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn imbalance_costs_over_ideal() {
+        // With sparsity, cycles must exceed the perfectly-balanced ideal
+        // (mean work per lane) — that's the lane-stall phenomenon.
+        let pe = pe();
+        let s = 0.5;
+        let (c, _) = pe.cycles_per_output(1024.0, s);
+        let ideal = 1024.0 * (1.0 - s) / 16.0;
+        assert!(c > ideal * 0.99, "c={c} ideal={ideal}");
+    }
+
+    #[test]
+    fn double_buffering_helps() {
+        let mut pe_db = pe();
+        let mut pe_nodb = pe();
+        pe_nodb.double_buffering = false;
+        let (with_db, _) = pe_db.cycles_per_output(1024.0, 0.4);
+        let (without, _) = pe_nodb.cycles_per_output(1024.0, 0.4);
+        assert!(without > with_db, "db {with_db} vs no-db {without}");
+        let _ = &mut pe_db;
+    }
+
+    #[test]
+    fn small_receptive_field_uses_reconfig() {
+        // CRS=64 occupies 1/16 lanes; hierarchical reconfig packs 16
+        // outputs → per-output cost ~1/16 of the unpacked cost.
+        let mut pe_h = pe();
+        pe_h.reconfig = ReconfigMode::Hierarchical;
+        let mut pe_n = pe();
+        pe_n.reconfig = ReconfigMode::None;
+        let ch = pe_h.dense_cycles_per_output(64.0);
+        let cn = pe_n.dense_cycles_per_output(64.0);
+        assert!(cn / ch > 8.0, "hier {ch} vs none {cn}");
+    }
+}

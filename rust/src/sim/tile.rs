@@ -1,0 +1,105 @@
+//! Output tiling across the PE grid (§4.2, §4.6).
+//!
+//! Each PE owns a `U/Tx × V/Ty` slice of the output map (with remainder
+//! rows/columns going to the edge tiles) and tracks its progress with the
+//! `⟨iter, x, y⟩` state tuple the WDU compares lexicographically.
+
+/// Progress marker of a PE tile (§4.6): blocking-pass iteration plus the
+/// output coordinate currently being processed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TileState {
+    pub iter: u32,
+    pub x: u32,
+    pub y: u32,
+}
+
+impl TileState {
+    pub const DONE: TileState = TileState { iter: u32::MAX, x: u32::MAX, y: u32::MAX };
+}
+
+/// Split `u × v` output positions across a `tx × ty` grid; returns the
+/// per-tile spatial output count, row-major over tiles. Every position is
+/// assigned exactly once (remainders go to the leading tiles).
+pub fn tile_outputs(u: usize, v: usize, tx: usize, ty: usize) -> Vec<usize> {
+    assert!(tx > 0 && ty > 0);
+    let rows = split(u, ty);
+    let cols = split(v, tx);
+    let mut out = Vec::with_capacity(tx * ty);
+    for r in &rows {
+        for c in &cols {
+            out.push(r * c);
+        }
+    }
+    out
+}
+
+/// Exact factorization of `n` into `(u, v)` with `u·v == n` and the pair
+/// as square as possible — used to spread non-spatial output maps (FC
+/// vectors, weight-gradient tensors) across the PE grid without
+/// miscounting outputs.
+pub fn factor2(n: usize) -> (usize, usize) {
+    assert!(n > 0);
+    let mut best = 1;
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            best = d;
+        }
+        d += 1;
+    }
+    (n / best, best)
+}
+
+fn split(n: usize, parts: usize) -> Vec<usize> {
+    let base = n / parts;
+    let rem = n % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_state_ordering_is_lexicographic() {
+        let a = TileState { iter: 0, x: 5, y: 9 };
+        let b = TileState { iter: 0, x: 6, y: 0 };
+        let c = TileState { iter: 1, x: 0, y: 0 };
+        assert!(a < b && b < c);
+        assert!(a < TileState::DONE);
+    }
+
+    #[test]
+    fn tiles_cover_exactly() {
+        for (u, v, tx, ty) in [(224, 224, 16, 16), (7, 7, 16, 16), (28, 28, 4, 4), (1, 1, 16, 16)] {
+            let tiles = tile_outputs(u, v, tx, ty);
+            assert_eq!(tiles.len(), tx * ty);
+            assert_eq!(tiles.iter().sum::<usize>(), u * v, "({u},{v},{tx},{ty})");
+        }
+    }
+
+    #[test]
+    fn small_maps_leave_idle_tiles() {
+        // 7×7 output on a 16×16 grid: 49 tiles busy, 207 idle.
+        let tiles = tile_outputs(7, 7, 16, 16);
+        let busy = tiles.iter().filter(|t| **t > 0).count();
+        assert_eq!(busy, 49);
+    }
+
+    #[test]
+    fn factor2_exact_and_square() {
+        for n in [1usize, 2, 7, 64, 1000, 4096, 25088, 4608] {
+            let (u, v) = factor2(n);
+            assert_eq!(u * v, n, "n={n}");
+            assert!(u >= v);
+        }
+        assert_eq!(factor2(4096), (64, 64));
+        assert_eq!(factor2(13), (13, 1)); // prime falls back to a line
+    }
+
+    #[test]
+    fn balanced_split_is_even() {
+        let tiles = tile_outputs(32, 32, 16, 16);
+        assert!(tiles.iter().all(|&t| t == 4));
+    }
+}

@@ -1,0 +1,215 @@
+//! Work-redistribution unit (§4.6).
+//!
+//! Tiles execute independently; spatial sparsity variation leaves some
+//! finishing early. The WDU watches tile progress, and when a tile goes
+//! idle it steals **half the remaining work** of the tile with the
+//! lexicographically-smallest state tuple (= most work left), provided
+//! that victim still has more than the threshold fraction of its original
+//! assignment outstanding. Stealing costs transfer+merge overhead on both
+//! ends.
+//!
+//! The event loop here operates on tile *timelines* in cycles: at each
+//! completion event the earliest-finishing tile becomes a thief.
+
+/// Result of redistributing one layer's tile work.
+#[derive(Clone, Debug)]
+pub struct WduOutcome {
+    /// Completion time per tile after redistribution (cycles).
+    pub completion: Vec<f64>,
+    /// Makespan (node latency) after redistribution.
+    pub makespan: f64,
+    /// Number of steal operations performed.
+    pub steals: usize,
+    /// Total overhead cycles added by transfers/merges.
+    pub overhead: f64,
+}
+
+impl WduOutcome {
+    pub fn utilization(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 1.0;
+        }
+        let avg: f64 = self.completion.iter().sum::<f64>() / self.completion.len() as f64;
+        avg / self.makespan
+    }
+}
+
+/// Simulate WDU redistribution over per-tile work (cycles).
+///
+/// * `work` — initial per-tile busy cycles.
+/// * `threshold` — steal only from victims whose remaining fraction of
+///   their original assignment exceeds this (§4.6: 0.30).
+/// * `overhead_frac` — cycles added per steal, as a fraction of the
+///   stolen amount (input transfer + output merge).
+pub fn redistribute(work: &[f64], threshold: f64, overhead_frac: f64) -> WduOutcome {
+    let n = work.len();
+    assert!(n > 0);
+    let original: Vec<f64> = work.to_vec();
+    let mut now;
+    let mut busy_until: Vec<f64> = work.to_vec();
+    let mut steals = 0usize;
+    let mut overhead_total = 0.0f64;
+
+    // Two lazily-invalidated heaps over tile completion times: ordering
+    // running tiles by `busy_until` is identical to ordering them by
+    // remaining work (same `now`), so one key serves both the
+    // next-completion (min) and victim-selection (max) queries. Entries
+    // carry the `busy_until` they were pushed with; stale entries are
+    // skipped on pop. This keeps the event loop O((n + steals) log n)
+    // instead of the naive O(n) scan per event.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    #[derive(PartialEq, PartialOrd)]
+    struct Key(f64);
+    impl Eq for Key {}
+    #[allow(clippy::derive_ord_xor_partial_ord)]
+    impl Ord for Key {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&other.0).unwrap()
+        }
+    }
+    let mut min_heap: BinaryHeap<(Reverse<Key>, usize)> =
+        busy_until.iter().enumerate().map(|(i, t)| (Reverse(Key(*t)), i)).collect();
+    let mut max_heap: BinaryHeap<(Key, usize)> =
+        busy_until.iter().enumerate().map(|(i, t)| (Key(*t), i)).collect();
+    let mut done = vec![false; n];
+
+    // Bounded: each steal halves a victim's remainder, so the loop
+    // terminates well before the safety cap.
+    let cap = 64 * n;
+    for _ in 0..cap {
+        // Next completion among still-busy tiles (skip stale entries).
+        let idle = loop {
+            match min_heap.pop() {
+                None => break None,
+                Some((Reverse(Key(t)), i)) => {
+                    if done[i] || (busy_until[i] - t).abs() > 1e-9 {
+                        continue; // stale
+                    }
+                    break Some((i, t));
+                }
+            }
+        };
+        let Some((idle, t_idle)) = idle else { break };
+        now = t_idle;
+        done[idle] = true;
+
+        // Victim: max busy_until (= max remaining) among running tiles.
+        let victim = loop {
+            match max_heap.peek() {
+                None => break None,
+                Some(&(Key(t), i)) => {
+                    if done[i] || (busy_until[i] - t).abs() > 1e-9 || busy_until[i] <= now {
+                        max_heap.pop(); // stale or finished
+                        continue;
+                    }
+                    break Some(i);
+                }
+            }
+        };
+        let Some(v) = victim else { continue };
+        let rem_v = busy_until[v] - now;
+        if original[v] <= 0.0 || rem_v / original[v] <= threshold {
+            continue; // not worth redistributing (§4.6)
+        }
+        // Steal half; both sides pay overhead proportional to the moved work.
+        let moved = rem_v / 2.0;
+        let oh = moved * overhead_frac;
+        busy_until[v] = now + (rem_v - moved) + oh;
+        busy_until[idle] = now + moved + oh;
+        done[idle] = false;
+        overhead_total += 2.0 * oh;
+        steals += 1;
+        min_heap.push((Reverse(Key(busy_until[v])), v));
+        min_heap.push((Reverse(Key(busy_until[idle])), idle));
+        max_heap.push((Key(busy_until[v]), v));
+        max_heap.push((Key(busy_until[idle]), idle));
+    }
+
+    let makespan = busy_until.iter().cloned().fold(0.0, f64::max);
+    WduOutcome { completion: busy_until, makespan, steals, overhead: overhead_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_work_needs_no_steals() {
+        let work = vec![100.0; 16];
+        let out = redistribute(&work, 0.3, 0.02);
+        assert_eq!(out.steals, 0);
+        assert_eq!(out.makespan, 100.0);
+        assert!((out.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_hot_tile_gets_split() {
+        let mut work = vec![10.0; 16];
+        work[3] = 1000.0;
+        let out = redistribute(&work, 0.3, 0.0);
+        assert!(out.steals >= 1);
+        assert!(out.makespan < 1000.0, "makespan {}", out.makespan);
+        // with zero overhead and 15 helpers it should get well below 500
+        assert!(out.makespan < 600.0, "makespan {}", out.makespan);
+    }
+
+    #[test]
+    fn threshold_one_disables_stealing() {
+        let mut work = vec![10.0; 8];
+        work[0] = 500.0;
+        let out = redistribute(&work, 1.0, 0.0);
+        assert_eq!(out.steals, 0);
+        assert_eq!(out.makespan, 500.0);
+    }
+
+    #[test]
+    fn overhead_is_accounted() {
+        let mut work = vec![10.0; 4];
+        work[0] = 400.0;
+        let cheap = redistribute(&work, 0.3, 0.0);
+        let costly = redistribute(&work, 0.3, 0.5);
+        assert!(costly.makespan >= cheap.makespan);
+        assert!(costly.overhead > 0.0);
+    }
+
+    #[test]
+    fn makespan_never_worse_than_no_wdu_with_small_overhead() {
+        // Property: WDU with modest overhead should not regress the
+        // original makespan for imbalanced inputs.
+        let work: Vec<f64> = (1..=32).map(|i| (i * i) as f64).collect();
+        let base = work.iter().cloned().fold(0.0, f64::max);
+        let out = redistribute(&work, 0.3, 0.05);
+        assert!(out.makespan <= base * 1.001, "{} vs {base}", out.makespan);
+    }
+
+    #[test]
+    fn work_is_conserved_modulo_overhead() {
+        let mut work = vec![50.0; 8];
+        work[0] = 800.0;
+        let total_in: f64 = work.iter().sum();
+        let out = redistribute(&work, 0.1, 0.0);
+        let total_busy: f64 = out.completion.iter().sum();
+        // With zero overhead, total busy time across tiles can only grow
+        // by idle gaps, never shrink below the injected work.
+        assert!(total_busy >= total_in * 0.99);
+    }
+
+    #[test]
+    fn utilization_improves_toward_paper_band() {
+        // §6 Fig 17: avg/max ratio ~70% without WR, ~83% with.
+        let mut rng = crate::util::rng::Pcg32::new(42);
+        let work: Vec<f64> = (0..256)
+            .map(|_| 1000.0 * (1.0 + 0.35 * rng.gauss()).max(0.1))
+            .collect();
+        let before_max = work.iter().cloned().fold(0.0, f64::max);
+        let before_avg: f64 = work.iter().sum::<f64>() / work.len() as f64;
+        let util_before = before_avg / before_max;
+        let out = redistribute(&work, 0.3, 0.05);
+        assert!(
+            out.utilization() > util_before + 0.05,
+            "before {util_before:.3} after {:.3}",
+            out.utilization()
+        );
+    }
+}

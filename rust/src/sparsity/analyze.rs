@@ -1,0 +1,323 @@
+//! Sparsity-opportunity analysis — the paper's §2.1/§3 reasoning, applied
+//! mechanically to a network graph.
+//!
+//! Given per-layer *forward output sparsity* fractions (from the
+//! calibrated model or from real traces), this derives for every compute
+//! layer and every training phase which sparsity type applies and at what
+//! fraction:
+//!
+//! * **FP input sparsity** — zeros in the layer's input feature map
+//!   (whatever its producer is; dense producers give `None`).
+//! * **BP input sparsity** — zeros in the gradient arriving at the
+//!   layer's output. A directly-following ReLU makes it sparse; BatchNorm
+//!   *re-densifies* it (Fig 3c) — the limitation of prior input-sparsity
+//!   work the paper targets.
+//! * **BP output sparsity** — the paper's contribution: if the layer's
+//!   *input* was produced by a ReLU (directly or through Concat), the
+//!   input-gradient's zero footprint is known a priori from the forward
+//!   bitmap, and those outputs are skipped. A MaxPool producer breaks
+//!   this (all gradient locations must be evaluated, §6).
+//! * **WG operand sparsities** — activations (forward) × gradients (BP).
+
+use crate::nn::{LayerId, LayerKind, Network};
+
+/// Which sparsity types a (layer, phase) admits — reporting convenience.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparsityKind {
+    None,
+    InputOnly,
+    OutputOnly,
+    Both,
+}
+
+/// Per-compute-layer sparsity opportunities (fractions in `[0,1]`).
+#[derive(Clone, Debug)]
+pub struct LayerOpportunity {
+    pub layer: LayerId,
+    pub name: String,
+    /// FP: sparsity of the input feature map (None ⇒ dense input).
+    pub fp_input: Option<f64>,
+    /// BP: sparsity of the incoming gradient (input sparsity).
+    pub bp_input: Option<f64>,
+    /// BP: a-priori-known zero fraction of the produced input-gradient
+    /// (output sparsity).
+    pub bp_output: Option<f64>,
+    /// WG: sparsity of the activation operand.
+    pub wg_act: Option<f64>,
+    /// WG: sparsity of the gradient operand.
+    pub wg_grad: Option<f64>,
+    /// Whether this layer produces an input-gradient at all (the first
+    /// compute layer does not).
+    pub has_bp: bool,
+}
+
+impl LayerOpportunity {
+    pub fn bp_kind(&self) -> SparsityKind {
+        match (self.bp_input.is_some(), self.bp_output.is_some()) {
+            (false, false) => SparsityKind::None,
+            (true, false) => SparsityKind::InputOnly,
+            (false, true) => SparsityKind::OutputOnly,
+            (true, true) => SparsityKind::Both,
+        }
+    }
+}
+
+fn some_if_positive(s: f64) -> Option<f64> {
+    (s > 1e-9).then_some(s.min(1.0))
+}
+
+/// Gradient sparsity at each layer's *output*, by reverse traversal.
+///
+/// Combination rules (correlation assumptions documented in DESIGN.md §5):
+/// through-ReLU `s = max(s_g, s_m)` (footprints are correlated, see the
+/// §3.2 identity); BatchNorm/conv/fc densify to 0; MaxPool backward
+/// scatters ≤ one gradient per window (`1 − (1−s)·UV/HW`); Avg/GAP/Add/
+/// Concat pass the fraction through; multiple consumers multiply (zero
+/// iff all contributions zero).
+pub fn gradient_sparsity(net: &Network, fwd: &[f64]) -> Vec<f64> {
+    assert_eq!(fwd.len(), net.len());
+    let n = net.len();
+    let mut gs = vec![0.0f64; n];
+    let consumer_map = net.consumer_map();
+    // Process in reverse topological (= reverse insertion) order.
+    for id in (0..n).rev() {
+        let consumers = &consumer_map[id];
+        if consumers.is_empty() {
+            gs[id] = 0.0; // loss gradient: dense scalar path
+            continue;
+        }
+        let mut acc = 1.0f64;
+        for &k in consumers {
+            let kl = net.layer(k);
+            let sg = gs[k];
+            let contribution = match kl.kind {
+                LayerKind::ReLU => {
+                    // The §3.2 identity: the masked gradient's zeros are a
+                    // superset of the mask's zeros, and incoming-gradient
+                    // zeros (e.g. maxpool-backward scatter) concentrate on
+                    // positions the mask keeps — the footprints are
+                    // strongly correlated, so the combined sparsity is the
+                    // max, not the independence union.
+                    let sm = fwd[k]; // ReLU output sparsity == its mask
+                    sg.max(sm)
+                }
+                LayerKind::BatchNorm
+                | LayerKind::Conv { .. }
+                | LayerKind::DwConv { .. }
+                | LayerKind::Fc { .. }
+                | LayerKind::Softmax => 0.0,
+                LayerKind::MaxPool { .. } => {
+                    let out = kl.out;
+                    let inp = net.layer(id).out;
+                    let ratio = (out.h * out.w) as f64 / (inp.h * inp.w) as f64;
+                    1.0 - (1.0 - sg) * ratio.min(1.0)
+                }
+                LayerKind::AvgPool { .. } | LayerKind::GlobalAvgPool => sg,
+                LayerKind::Add | LayerKind::Concat => sg,
+                LayerKind::Input => unreachable!("input consumes nothing"),
+            };
+            acc *= contribution.clamp(0.0, 1.0);
+        }
+        gs[id] = acc;
+    }
+    gs
+}
+
+/// Is the output-sparsity mask of `id`'s output known a priori?
+/// True for ReLU outputs and Concats whose leaves are all mask-known.
+fn mask_known(net: &Network, id: LayerId, fwd: &[f64]) -> Option<f64> {
+    let l = net.layer(id);
+    match l.kind {
+        LayerKind::ReLU => Some(fwd[id]),
+        LayerKind::Concat => {
+            let mut weighted = 0.0;
+            let mut total = 0.0;
+            for &i in &l.inputs {
+                let s = mask_known(net, i, fwd)?;
+                let c = net.layer(i).out.c as f64;
+                weighted += s * c;
+                total += c;
+            }
+            Some(weighted / total)
+        }
+        _ => None,
+    }
+}
+
+/// Analyze every compute layer of a network.
+pub fn analyze_network(net: &Network, fwd: &[f64]) -> Vec<LayerOpportunity> {
+    assert_eq!(fwd.len(), net.len(), "one fwd-sparsity entry per layer");
+    let gs = gradient_sparsity(net, fwd);
+    let first_compute = net.compute_layers().first().map(|l| l.id);
+    net.compute_layers()
+        .into_iter()
+        .map(|l| {
+            let producer = l.inputs[0];
+            let fp_input = some_if_positive(fwd[producer]);
+            let bp_input = some_if_positive(gs[l.id]);
+            let bp_output = mask_known(net, producer, fwd).and_then(some_if_positive);
+            LayerOpportunity {
+                layer: l.id,
+                name: l.name.clone(),
+                fp_input,
+                bp_input,
+                bp_output,
+                wg_act: fp_input,
+                wg_grad: bp_input,
+                has_bp: Some(l.id) != first_compute,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Network;
+
+    /// conv1 → relu1 → conv2 → relu2 (no BN): conv2 gets IN+OUT in BP.
+    #[test]
+    fn plain_conv_relu_chain_gets_both() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 8, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let c2 = n.conv("c2", r1, 8, 3, 1, 1);
+        let r2 = n.relu("r2", c2);
+        n.softmax("sm", r2);
+        let mut fwd = vec![0.0; n.len()];
+        fwd[r1] = 0.5;
+        fwd[r2] = 0.4;
+        let opp = analyze_network(&n, &fwd);
+        let o2 = opp.iter().find(|o| o.name == "c2").unwrap();
+        // BP input: gradient through relu2 (mask 0.4)
+        assert!((o2.bp_input.unwrap() - 0.4).abs() < 1e-9);
+        // BP output: producer relu1 mask 0.5
+        assert!((o2.bp_output.unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(o2.bp_kind(), SparsityKind::Both);
+        // FP input for c2 is relu1's sparsity
+        assert!((o2.fp_input.unwrap() - 0.5).abs() < 1e-9);
+        // c1: image input dense; no BP at all (first compute layer)
+        let o1 = opp.iter().find(|o| o.name == "c1").unwrap();
+        assert!(o1.fp_input.is_none());
+        assert!(!o1.has_bp);
+    }
+
+    /// Fig 3c: conv → BN → relu. BN kills BP input sparsity; output
+    /// sparsity survives when the conv's *producer* is a ReLU.
+    #[test]
+    fn batchnorm_kills_input_sparsity_not_output() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 8, 3, 1, 1);
+        let b1 = n.bn("b1", c1);
+        let r1 = n.relu("r1", b1);
+        let c2 = n.conv("c2", r1, 8, 3, 1, 1);
+        let b2 = n.bn("b2", c2);
+        let r2 = n.relu("r2", b2);
+        n.softmax("sm", r2);
+        let mut fwd = vec![0.0; n.len()];
+        fwd[r1] = 0.5;
+        fwd[r2] = 0.4;
+        let opp = analyze_network(&n, &fwd);
+        let o2 = opp.iter().find(|o| o.name == "c2").unwrap();
+        // gradient reaches c2 through BN backward ⇒ dense
+        assert!(o2.bp_input.is_none());
+        // but producer r1's mask is known ⇒ output sparsity applies
+        assert!((o2.bp_output.unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(o2.bp_kind(), SparsityKind::OutputOnly);
+    }
+
+    /// MaxPool–CONV boundary: output sparsity NOT applicable (§6).
+    #[test]
+    fn maxpool_boundary_loses_output_sparsity() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 8, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let p1 = n.maxpool("p1", r1, 2, 2, 0);
+        let c2 = n.conv("c2", p1, 8, 3, 1, 1);
+        let r2 = n.relu("r2", c2);
+        n.softmax("sm", r2);
+        let mut fwd = vec![0.0; n.len()];
+        fwd[r1] = 0.5;
+        fwd[p1] = 0.3; // pool output retains some sparsity
+        fwd[r2] = 0.4;
+        let opp = analyze_network(&n, &fwd);
+        let o2 = opp.iter().find(|o| o.name == "c2").unwrap();
+        assert!(o2.bp_output.is_none(), "maxpool producer must break OUT");
+        // FP input sparsity still available from the pool output zeros
+        assert!((o2.fp_input.unwrap() - 0.3).abs() < 1e-9);
+        // BP input sparsity via relu2
+        assert!((o2.bp_input.unwrap() - 0.4).abs() < 1e-9);
+    }
+
+    /// Concat of ReLUs (inception output) keeps the mask known.
+    #[test]
+    fn concat_of_relus_keeps_mask() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 8, 1, 1, 0);
+        let r1 = n.relu("r1", c1);
+        let c2 = n.conv("c2", x, 24, 1, 1, 0);
+        let r2 = n.relu("r2", c2);
+        let cat = n.concat("cat", &[r1, r2]);
+        let c3 = n.conv("c3", cat, 8, 3, 1, 1);
+        let r3 = n.relu("r3", c3);
+        n.softmax("sm", r3);
+        let mut fwd = vec![0.0; n.len()];
+        fwd[r1] = 0.8;
+        fwd[r2] = 0.4;
+        fwd[cat] = 0.5; // 8·0.8 + 24·0.4 over 32
+        fwd[r3] = 0.5;
+        let opp = analyze_network(&n, &fwd);
+        let o3 = opp.iter().find(|o| o.name == "c3").unwrap();
+        // channel-weighted: (8·0.8 + 24·0.4)/32 = 0.5
+        assert!((o3.bp_output.unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    /// MaxPool backward scatter: gradient below the pool is mostly zero.
+    #[test]
+    fn maxpool_backward_gradient_is_sparse() {
+        let mut n = Network::new("t");
+        let x = n.input(3, 8, 8);
+        let c1 = n.conv("c1", x, 8, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let p1 = n.maxpool("p1", r1, 2, 2, 0);
+        let c2 = n.conv("c2", p1, 8, 3, 1, 1);
+        let r2 = n.relu("r2", c2);
+        n.softmax("sm", r2);
+        let mut fwd = vec![0.0; n.len()];
+        fwd[r1] = 0.5;
+        fwd[r2] = 0.4;
+        let gs = gradient_sparsity(&n, &fwd);
+        // gradient at pool output comes from conv2 backward = dense (0);
+        // the 4:1 scatter makes the gradient below the pool
+        // 1 - 1·(16/64) = 0.75; through relu1 the correlated max with
+        // its own mask (0.5) keeps 0.75 at c1's output.
+        assert!((gs[p1] - 0.0).abs() < 1e-9);
+        assert!((gs[r1] - 0.75).abs() < 1e-9);
+        assert!((gs[c1] - 0.75).abs() < 1e-9);
+    }
+
+    /// Residual Add passes gradient sparsity through to both branches.
+    #[test]
+    fn add_passes_gradient_through() {
+        let mut n = Network::new("t");
+        let x = n.input(8, 8, 8);
+        let c1 = n.conv("c1", x, 8, 3, 1, 1);
+        let a = n.add("a", c1, x);
+        let r = n.relu("r", a);
+        let c2 = n.conv("c2", r, 8, 3, 1, 1);
+        let r2 = n.relu("r2", c2);
+        n.softmax("sm", r2);
+        let mut fwd = vec![0.0; n.len()];
+        fwd[r] = 0.3; // diluted post-add sparsity
+        fwd[r2] = 0.5;
+        let gs = gradient_sparsity(&n, &fwd);
+        // gradient at add output = through relu r: 0 + 0.3 (dense from c2)
+        assert!((gs[a] - 0.3).abs() < 1e-9);
+        // both add inputs see the same sparsity
+        assert!((gs[c1] - 0.3).abs() < 1e-9);
+    }
+}

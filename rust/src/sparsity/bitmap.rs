@@ -1,0 +1,193 @@
+//! Zero-footprint bitmaps over `[C, H, W]` feature maps.
+//!
+//! A `Bitmap` stores one bit per neuron (1 = non-zero) in channel-first
+//! layout — the "within channel" view of §3/Fig 7. It is the data the
+//! forward pass leaves in DRAM for the backward pass's output-sparsity
+//! address generator (Fig 9), and what the trace pipeline extracts from
+//! real activations.
+
+use crate::nn::Shape;
+
+/// One bit per neuron, layout `c * (h*w) + y * w + x`, LSB-first words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bitmap {
+    pub shape: Shape,
+    words: Vec<u64>,
+}
+
+impl Bitmap {
+    pub fn zeros(shape: Shape) -> Bitmap {
+        let n = shape.len();
+        Bitmap { shape, words: vec![0; n.div_ceil(64)] }
+    }
+
+    /// Build from an f32 tensor in `[C,H,W]` order: bit set ⇔ value ≠ 0.
+    pub fn from_values(shape: Shape, values: &[f32]) -> Bitmap {
+        assert_eq!(values.len(), shape.len(), "value count vs shape");
+        let mut b = Bitmap::zeros(shape);
+        for (i, v) in values.iter().enumerate() {
+            if *v != 0.0 {
+                b.words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        b
+    }
+
+    #[inline]
+    pub fn index(&self, c: usize, y: usize, x: usize) -> usize {
+        (c * self.shape.h + y) * self.shape.w + x
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
+        let i = self.index(c, y, x);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, nz: bool) {
+        let i = self.index(c, y, x);
+        if nz {
+            self.words[i / 64] |= 1 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1 << (i % 64));
+        }
+    }
+
+    /// Number of non-zero neurons.
+    pub fn count_nz(&self) -> usize {
+        // Mask tail bits beyond len.
+        let n = self.shape.len();
+        let mut total = 0usize;
+        for (wi, w) in self.words.iter().enumerate() {
+            let mut word = *w;
+            let base = wi * 64;
+            if base + 64 > n {
+                let valid = n - base;
+                if valid == 0 {
+                    break;
+                }
+                word &= (1u64 << valid) - 1;
+            }
+            total += word.count_ones() as usize;
+        }
+        total
+    }
+
+    /// Zero fraction (the paper's "sparsity").
+    pub fn sparsity(&self) -> f64 {
+        let n = self.shape.len();
+        if n == 0 {
+            return 0.0;
+        }
+        1.0 - self.count_nz() as f64 / n as f64
+    }
+
+    /// Non-zero count along the channel axis at a spatial location — the
+    /// "through channel" (TC) view used by input-sparsity indexing.
+    pub fn tc_nz(&self, y: usize, x: usize) -> usize {
+        (0..self.shape.c).filter(|&c| self.get(c, y, x)).count()
+    }
+
+    /// Non-zero count within one channel — the "within channel" (WC)
+    /// view that drives output skipping.
+    pub fn wc_nz(&self, c: usize) -> usize {
+        (0..self.shape.h)
+            .map(|y| (0..self.shape.w).filter(|&x| self.get(c, y, x)).count())
+            .sum()
+    }
+
+    /// Per-channel sparsity vector.
+    pub fn per_channel_sparsity(&self) -> Vec<f64> {
+        let hw = (self.shape.h * self.shape.w) as f64;
+        (0..self.shape.c)
+            .map(|c| 1.0 - self.wc_nz(c) as f64 / hw)
+            .collect()
+    }
+
+    /// Logical AND (intersection of non-zero footprints).
+    pub fn and(&self, other: &Bitmap) -> Bitmap {
+        assert_eq!(self.shape, other.shape);
+        Bitmap {
+            shape: self.shape,
+            words: self
+                .words
+                .iter()
+                .zip(&other.words)
+                .map(|(a, b)| a & b)
+                .collect(),
+        }
+    }
+
+    /// True if every non-zero of `self` is also non-zero in `other`
+    /// (footprint containment — the §3.2 identity check).
+    pub fn contained_in(&self, other: &Bitmap) -> bool {
+        assert_eq!(self.shape, other.shape);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_values_and_counts() {
+        let shape = Shape::new(2, 2, 2);
+        let vals = [0.0, 1.0, 0.0, 2.0, 3.0, 0.0, 0.0, 0.0];
+        let b = Bitmap::from_values(shape, &vals);
+        assert_eq!(b.count_nz(), 3);
+        assert!((b.sparsity() - 5.0 / 8.0).abs() < 1e-12);
+        assert!(!b.get(0, 0, 0));
+        assert!(b.get(0, 0, 1));
+        assert!(b.get(1, 0, 0));
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = Bitmap::zeros(Shape::new(3, 5, 7));
+        b.set(2, 4, 6, true);
+        assert!(b.get(2, 4, 6));
+        b.set(2, 4, 6, false);
+        assert!(!b.get(2, 4, 6));
+        assert_eq!(b.count_nz(), 0);
+    }
+
+    #[test]
+    fn tc_and_wc_views() {
+        let mut b = Bitmap::zeros(Shape::new(4, 2, 2));
+        for c in 0..3 {
+            b.set(c, 0, 0, true);
+        }
+        b.set(0, 1, 1, true);
+        assert_eq!(b.tc_nz(0, 0), 3);
+        assert_eq!(b.tc_nz(1, 1), 1);
+        assert_eq!(b.wc_nz(0), 2);
+        assert_eq!(b.wc_nz(3), 0);
+        let pcs = b.per_channel_sparsity();
+        assert!((pcs[0] - 0.5).abs() < 1e-12);
+        assert!((pcs[3] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn containment_is_the_identity_law() {
+        let shape = Shape::new(1, 2, 2);
+        let act = Bitmap::from_values(shape, &[1.0, 0.0, 2.0, 3.0]);
+        let grad = Bitmap::from_values(shape, &[1.0, 0.0, 0.0, 3.0]);
+        // gradient footprint ⊆ activation footprint
+        assert!(grad.contained_in(&act));
+        assert!(!act.contained_in(&grad));
+        let both = act.and(&grad);
+        assert_eq!(both.count_nz(), 2);
+    }
+
+    #[test]
+    fn count_handles_non_word_aligned_sizes() {
+        // 3*3*3 = 27 bits — tail masking must not count garbage.
+        let shape = Shape::new(3, 3, 3);
+        let vals = vec![1.0f32; 27];
+        let b = Bitmap::from_values(shape, &vals);
+        assert_eq!(b.count_nz(), 27);
+        assert_eq!(b.sparsity(), 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Non-zero offset encoding — the indexing stage of §4.2.
+//!
+//! The design indexes the generated feature/gradient map once per layer,
+//! through the channel dimension, **32 values at a time**: each group of
+//! 32 consecutive (channel-first) values is encoded as the list of 5-bit
+//! offsets of its non-zero entries. The indexed values are then reused
+//! `O(M·k²)` times, amortizing the encoding cost; neurons are *indexed,
+//! not compressed*, preserving memory-access regularity.
+
+use super::Bitmap;
+
+/// Values per offset group (fixed by the 5-bit offset width).
+pub const GROUP: usize = 32;
+
+/// One encoded group: offsets (0..32) of the non-zero entries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OffsetGroup {
+    /// 5-bit offsets, ascending.
+    pub offsets: Vec<u8>,
+}
+
+impl OffsetGroup {
+    pub fn nz(&self) -> usize {
+        self.offsets.len()
+    }
+}
+
+/// A tensor's offset map: groups in channel-first scan order plus the
+/// original length (the tail group may be partial).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedTensor {
+    pub len: usize,
+    pub groups: Vec<OffsetGroup>,
+}
+
+impl EncodedTensor {
+    /// Total non-zero entries.
+    pub fn nz(&self) -> usize {
+        self.groups.iter().map(|g| g.nz()).sum()
+    }
+
+    /// Storage cost in bits: 5 bits per offset plus a 6-bit count per
+    /// group (hardware stores a per-group occupancy).
+    pub fn bits(&self) -> usize {
+        self.nz() * 5 + self.groups.len() * 6
+    }
+}
+
+/// Encode a raw value slice (channel-first order).
+pub fn encode_tensor(values: &[f32]) -> EncodedTensor {
+    let mut groups = Vec::with_capacity(values.len().div_ceil(GROUP));
+    for chunk in values.chunks(GROUP) {
+        let offsets = chunk
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, _)| i as u8)
+            .collect();
+        groups.push(OffsetGroup { offsets });
+    }
+    EncodedTensor { len: values.len(), groups }
+}
+
+/// Encode from a bitmap (the DRAM-resident form the BP uses).
+pub fn encode_bitmap(b: &Bitmap) -> EncodedTensor {
+    let shape = b.shape;
+    let mut groups = Vec::with_capacity(shape.len().div_ceil(GROUP));
+    let mut current = OffsetGroup { offsets: Vec::new() };
+    let mut i = 0usize;
+    for c in 0..shape.c {
+        for y in 0..shape.h {
+            for x in 0..shape.w {
+                if b.get(c, y, x) {
+                    current.offsets.push((i % GROUP) as u8);
+                }
+                i += 1;
+                if i % GROUP == 0 {
+                    groups.push(std::mem::replace(&mut current, OffsetGroup { offsets: Vec::new() }));
+                }
+            }
+        }
+    }
+    if i % GROUP != 0 {
+        groups.push(current);
+    }
+    EncodedTensor { len: shape.len(), groups }
+}
+
+/// Reconstruct which positions of group `gi` are non-zero — the gather
+/// the synapse lane performs (Fig 8a). Returns absolute indices.
+pub fn decode_group(enc: &EncodedTensor, gi: usize) -> Vec<usize> {
+    enc.groups[gi]
+        .offsets
+        .iter()
+        .map(|o| gi * GROUP + *o as usize)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Shape;
+
+    #[test]
+    fn encode_roundtrip() {
+        let mut vals = vec![0.0f32; 70];
+        for &i in &[0usize, 5, 31, 32, 63, 69] {
+            vals[i] = 1.0;
+        }
+        let enc = encode_tensor(&vals);
+        assert_eq!(enc.groups.len(), 3);
+        assert_eq!(enc.nz(), 6);
+        assert_eq!(decode_group(&enc, 0), vec![0, 5, 31]);
+        assert_eq!(decode_group(&enc, 1), vec![32, 63]);
+        assert_eq!(decode_group(&enc, 2), vec![69]);
+    }
+
+    #[test]
+    fn encode_matches_bitmap_encoding() {
+        let shape = Shape::new(2, 4, 4);
+        let mut vals = vec![0.0f32; shape.len()];
+        for i in (0..shape.len()).step_by(3) {
+            vals[i] = (i + 1) as f32;
+        }
+        let from_vals = encode_tensor(&vals);
+        let from_bm = encode_bitmap(&Bitmap::from_values(shape, &vals));
+        assert_eq!(from_vals, from_bm);
+    }
+
+    #[test]
+    fn dense_and_empty_extremes() {
+        let dense = encode_tensor(&vec![1.0f32; 64]);
+        assert_eq!(dense.nz(), 64);
+        assert_eq!(dense.groups[0].nz(), GROUP);
+        let empty = encode_tensor(&vec![0.0f32; 64]);
+        assert_eq!(empty.nz(), 0);
+        // indexing cost scales with nz
+        assert!(dense.bits() > empty.bits());
+    }
+
+    #[test]
+    fn offsets_fit_five_bits() {
+        let vals: Vec<f32> = (0..256).map(|i| (i % 2) as f32).collect();
+        let enc = encode_tensor(&vals);
+        for g in &enc.groups {
+            for &o in &g.offsets {
+                assert!(o < 32);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparsity substrate: bitmaps, NZ offset encoding, the per-layer
+//! sparsity-opportunity analysis (the paper's §2.1/§3 logic as code), and
+//! the calibrated synthetic trace model.
+
+mod bitmap;
+mod encode;
+mod analyze;
+mod model;
+
+pub use analyze::{analyze_network, gradient_sparsity, LayerOpportunity, SparsityKind};
+pub use bitmap::Bitmap;
+pub use encode::{decode_group, encode_bitmap, encode_tensor, EncodedTensor, OffsetGroup, GROUP};
+pub use model::{SparsityModel, TraceSource};

@@ -1,0 +1,196 @@
+//! Sparsity trace files: what the coordinator extracts from real training
+//! through the AOT artifacts, persisted as JSON for the co-simulation
+//! driver and the figures.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-layer measurement at one training step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerTrace {
+    /// ReLU layer name (matches the `nn::Network` layer names).
+    pub name: String,
+    /// Forward activation zero fraction.
+    pub act_sparsity: f64,
+    /// Backward gradient zero fraction (at the ReLU output).
+    pub grad_sparsity: f64,
+    /// Whether footprint(gradient) ⊆ footprint(activation) held exactly.
+    pub identity_ok: bool,
+}
+
+/// One traced training step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepTrace {
+    pub step: usize,
+    pub loss: f64,
+    pub layers: Vec<LayerTrace>,
+}
+
+/// A whole training run's traces.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceFile {
+    pub network: String,
+    pub steps: Vec<StepTrace>,
+}
+
+impl TraceFile {
+    pub fn new(network: &str) -> TraceFile {
+        TraceFile { network: network.to_string(), steps: Vec::new() }
+    }
+
+    /// Mean activation sparsity per layer across all traced steps —
+    /// the input to `SparsityModel::measured`.
+    pub fn mean_act_sparsity(&self) -> std::collections::BTreeMap<String, f64> {
+        let mut sums: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
+        for step in &self.steps {
+            for l in &step.layers {
+                let e = sums.entry(l.name.clone()).or_insert((0.0, 0));
+                e.0 += l.act_sparsity;
+                e.1 += 1;
+            }
+        }
+        sums.into_iter().map(|(k, (s, n))| (k, s / n as f64)).collect()
+    }
+
+    /// Every step's identity check passed?
+    pub fn identity_holds(&self) -> bool {
+        self.steps.iter().all(|s| s.layers.iter().all(|l| l.identity_ok))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let layers: Vec<Json> = s
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Json::from_pairs(vec![
+                            ("name", l.name.as_str().into()),
+                            ("act_sparsity", l.act_sparsity.into()),
+                            ("grad_sparsity", l.grad_sparsity.into()),
+                            ("identity_ok", l.identity_ok.into()),
+                        ])
+                    })
+                    .collect();
+                Json::from_pairs(vec![
+                    ("step", s.step.into()),
+                    ("loss", s.loss.into()),
+                    ("layers", Json::Arr(layers)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("network", self.network.as_str().into()),
+            ("steps", Json::Arr(steps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceFile> {
+        let network = j.get("network").as_str().context("trace.network")?.to_string();
+        let mut steps = Vec::new();
+        for s in j.get("steps").as_arr().context("trace.steps")? {
+            let mut layers = Vec::new();
+            for l in s.get("layers").as_arr().context("step.layers")? {
+                layers.push(LayerTrace {
+                    name: l.get("name").as_str().context("layer.name")?.to_string(),
+                    act_sparsity: l.get("act_sparsity").as_f64().context("act")?,
+                    grad_sparsity: l.get("grad_sparsity").as_f64().context("grad")?,
+                    identity_ok: l.get("identity_ok").as_bool().context("ok")?,
+                });
+            }
+            steps.push(StepTrace {
+                step: s.get("step").as_usize().context("step.step")?,
+                loss: s.get("loss").as_f64().context("step.loss")?,
+                layers,
+            });
+        }
+        Ok(TraceFile { network, steps })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<TraceFile> {
+        TraceFile::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TraceFile {
+        TraceFile {
+            network: "agos_cnn".into(),
+            steps: vec![
+                StepTrace {
+                    step: 0,
+                    loss: 2.3,
+                    layers: vec![
+                        LayerTrace {
+                            name: "relu1".into(),
+                            act_sparsity: 0.5,
+                            grad_sparsity: 0.52,
+                            identity_ok: true,
+                        },
+                        LayerTrace {
+                            name: "relu2".into(),
+                            act_sparsity: 0.4,
+                            grad_sparsity: 0.4,
+                            identity_ok: true,
+                        },
+                    ],
+                },
+                StepTrace {
+                    step: 50,
+                    loss: 1.1,
+                    layers: vec![LayerTrace {
+                        name: "relu1".into(),
+                        act_sparsity: 0.7,
+                        grad_sparsity: 0.71,
+                        identity_ok: true,
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample();
+        let t2 = TraceFile::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("agos_trace_test");
+        let path = dir.join("t.json");
+        let t = sample();
+        t.save(&path).unwrap();
+        assert_eq!(TraceFile::load(&path).unwrap(), t);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn mean_sparsity_averages_steps() {
+        let t = sample();
+        let m = t.mean_act_sparsity();
+        assert!((m["relu1"] - 0.6).abs() < 1e-12);
+        assert!((m["relu2"] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_flag_aggregates() {
+        let mut t = sample();
+        assert!(t.identity_holds());
+        t.steps[0].layers[0].identity_ok = false;
+        assert!(!t.identity_holds());
+    }
+}

@@ -1,0 +1,118 @@
+//! Criterion-style measurement harness for the `benches/` targets.
+//!
+//! The offline crate cache has no `criterion`, so this provides the same
+//! core loop: warm-up, timed iterations until a wall-clock budget is met,
+//! and a mean ± std report — plus a `black_box` re-export to prevent
+//! constant folding. Benches are declared `harness = false` in Cargo.toml
+//! and call [`Bench::run`] from `main`.
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+use super::stats::Summary;
+
+/// One benchmark group; prints results in a compact table.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u32,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // Fast-mode envvar for CI/`cargo bench` smoke runs.
+        let quick = std::env::var("AGOS_BENCH_QUICK").is_ok();
+        Bench {
+            name: name.to_string(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(200) },
+            budget: if quick { Duration::from_millis(100) } else { Duration::from_secs(2) },
+            min_iters: if quick { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Bench {
+        self.budget = budget;
+        self
+    }
+
+    /// Measure `f`, which should perform one complete unit of work and
+    /// return a value (fed through `black_box`).
+    pub fn case<T>(&mut self, label: &str, mut f: impl FnMut() -> T) {
+        // Warm-up phase.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measurement phase.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.budget || samples.len() < self.min_iters as usize {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples);
+        println!(
+            "{:<48} {:>12} ± {:>10}   (n={}, min {}, max {})",
+            format!("{}/{}", self.name, label),
+            fmt_dur(summary.mean),
+            fmt_dur(summary.std),
+            summary.n,
+            fmt_dur(summary.min),
+            fmt_dur(summary.max),
+        );
+        self.results.push((label.to_string(), summary));
+    }
+
+    /// Access collected results (label, summary).
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+
+    /// Print a closing separator.
+    pub fn finish(&self) {
+        println!("{} done ({} cases)", self.name, self.results.len());
+    }
+}
+
+/// Human duration from seconds.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_collects() {
+        std::env::set_var("AGOS_BENCH_QUICK", "1");
+        let mut b = Bench::new("t").with_budget(Duration::from_millis(10));
+        b.case("noop", || 1 + 1);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].1.n >= 3);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(2.0).ends_with(" s"));
+        assert!(fmt_dur(2e-3).ends_with(" ms"));
+        assert!(fmt_dur(2e-6).ends_with(" µs"));
+        assert!(fmt_dur(2e-9).ends_with(" ns"));
+    }
+}

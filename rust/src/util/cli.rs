@@ -1,0 +1,231 @@
+//! Declarative command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! and positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Option/flag specification for help generation and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// One subcommand.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// A tiny clap-like application description.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Result of a successful parse: subcommand name + its args.
+pub struct Parsed {
+    pub command: String,
+    pub args: Args,
+}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `");
+        s.push_str(self.name);
+        s.push_str(" <command> --help` for command options.\n");
+        s
+    }
+
+    pub fn command_help(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let lhs = if o.takes_value { format!("--{} <value>", o.name) } else { format!("--{}", o.name) };
+            s.push_str(&format!("  {:<24} {}\n", lhs, o.help));
+        }
+        s
+    }
+
+    /// Parse `argv` (excluding the binary name). Returns `Err` with the
+    /// help/usage text on any problem, and `Ok(None)` when help was
+    /// explicitly requested (caller should print and exit 0).
+    pub fn parse(&self, argv: &[String]) -> Result<Option<Parsed>, String> {
+        if argv.is_empty() {
+            return Err(self.help());
+        }
+        let first = argv[0].as_str();
+        if first == "--help" || first == "-h" || first == "help" {
+            println!("{}", self.help());
+            return Ok(None);
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first)
+            .ok_or_else(|| format!("unknown command '{first}'\n\n{}", self.help()))?;
+
+        let mut args = Args::default();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = argv[i].as_str();
+            if a == "--help" || a == "-h" {
+                println!("{}", self.command_help(cmd));
+                return Ok(None);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option '--{key}' for '{}'\n\n{}", cmd.name, self.command_help(cmd)))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option '--{key}' expects a value"))?
+                        }
+                    };
+                    args.opts.insert(key.to_string(), v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag '--{key}' does not take a value"));
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a.to_string());
+            }
+            i += 1;
+        }
+        Ok(Some(Parsed { command: cmd.name.to_string(), args }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "agos",
+            about: "test",
+            commands: vec![Command {
+                name: "run",
+                about: "run things",
+                opts: vec![
+                    OptSpec { name: "steps", takes_value: true, help: "step count" },
+                    OptSpec { name: "fast", takes_value: false, help: "go fast" },
+                ],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positionals() {
+        let p = app().parse(&sv(&["run", "--steps", "5", "--fast", "pos1"])).unwrap().unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.args.opt_usize("steps", 0).unwrap(), 5);
+        assert!(p.args.flag("fast"));
+        assert_eq!(p.args.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = app().parse(&sv(&["run", "--steps=9"])).unwrap().unwrap();
+        assert_eq!(p.args.opt("steps"), Some("9"));
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(app().parse(&sv(&["nope"])).is_err());
+        assert!(app().parse(&sv(&["run", "--bogus", "1"])).is_err());
+        assert!(app().parse(&sv(&["run", "--steps"])).is_err());
+        assert!(app().parse(&sv(&["run", "--fast=1"])).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = app().parse(&sv(&["run"])).unwrap().unwrap();
+        assert_eq!(p.args.opt_usize("steps", 3).unwrap(), 3);
+        assert_eq!(p.args.opt_or("steps", "x"), "x");
+        assert!(!p.args.flag("fast"));
+    }
+
+    #[test]
+    fn bad_value_type_errors() {
+        let p = app().parse(&sv(&["run", "--steps", "abc"])).unwrap().unwrap();
+        assert!(p.args.opt_usize("steps", 0).is_err());
+    }
+}

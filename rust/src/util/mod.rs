@@ -1,0 +1,15 @@
+//! Self-contained utility substrate.
+//!
+//! The build environment is offline with a minimal crate cache (see
+//! DESIGN.md §0), so the pieces a project would normally pull from
+//! crates.io — RNG, JSON, a CLI parser, a statistics/benchmark harness and
+//! a property-testing loop — are implemented here, each small, documented
+//! and unit-tested.
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod log;

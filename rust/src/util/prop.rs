@@ -1,0 +1,137 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] that either returns `Ok(())` or
+//! an error message. [`check`] runs it for a configurable number of cases
+//! with independent RNG streams and, on failure, retries the failing seed
+//! `AGOS_PROP_SEED` so failures are reproducible:
+//!
+//! ```text
+//! property failed (case 37, seed 0x1234abcd): <message>
+//! rerun with AGOS_PROP_SEED=0x1234abcd
+//! ```
+
+use super::rng::Pcg32;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    pub rng: Pcg32,
+}
+
+impl Gen {
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    /// Vector of `n` values from `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("AGOS_PROP_SEED")
+            .ok()
+            .and_then(|s| {
+                let s = s.trim_start_matches("0x");
+                u64::from_str_radix(s, 16).ok()
+            })
+            .unwrap_or(0xA605_2021);
+        let cases = std::env::var("AGOS_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` for `cfg.cases` independent cases; panic with a reproducible
+/// seed on the first failure.
+pub fn check_with(cfg: Config, name: &str, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Pcg32::new(case_seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (case {case}): {msg}\n\
+                 rerun with AGOS_PROP_SEED=0x{case_seed:x} AGOS_PROP_CASES=1"
+            );
+        }
+    }
+}
+
+/// Run with the default configuration (env-overridable).
+pub fn check(name: &str, prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    check_with(Config::default(), name, prop);
+}
+
+/// Assertion helpers that produce `Result<(), String>` for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            prop_assert!(a + b == b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check_with(Config { cases: 4, seed: 1 }, "always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        check("gen-ranges", |g| {
+            let x = g.usize_in(5, 9);
+            prop_assert!((5..=9).contains(&x), "x={x}");
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f={f}");
+            let v = g.vec(3, |g| g.bool());
+            prop_assert!(v.len() == 3);
+            Ok(())
+        });
+    }
+}

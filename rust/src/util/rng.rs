@@ -1,0 +1,290 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Two small generators cover every stochastic need of the simulator and
+//! the synthetic-trace generator:
+//!
+//! * [`SplitMix64`] — seeding / hashing / stream splitting.
+//! * [`Pcg32`] — the workhorse stream generator (PCG-XSH-RR 64/32),
+//!   statistically solid and fast enough for per-output-neuron sampling.
+//!
+//! Both are fully deterministic from their seed, which keeps every
+//! experiment in `EXPERIMENTS.md` reproducible bit-for-bit.
+
+/// SplitMix64: tiny, passes BigCrush, ideal for seeding other generators.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 — the default stream generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Seed with an arbitrary `u64`; the stream id is derived via SplitMix.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::with_stream(sm.next_u64(), sm.next_u64())
+    }
+
+    /// Explicit (state, stream) construction; `stream` picks one of 2^63
+    /// independent sequences.
+    pub fn with_stream(initstate: u64, initseq: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (initseq << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (used to give each PE tile /
+    /// batch image its own stream without correlation).
+    pub fn split(&mut self, tag: u64) -> Pcg32 {
+        let mut sm = SplitMix64::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Pcg32::with_stream(sm.next_u64(), sm.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform in `[0, 1)` as `f32`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform in `[lo, hi)` for f64.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (single value; simple and adequate).
+    pub fn gauss(&mut self) -> f64 {
+        // Rejection-free Box–Muller; avoid u==0 for the log.
+        let u = (self.next_u32() as f64 + 1.0) * (1.0 / 4_294_967_297.0);
+        let v = self.f64();
+        (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos()
+    }
+
+    /// Binomial(n, p) sample.
+    ///
+    /// Exact inversion for small `n`, normal approximation (with
+    /// continuity correction, clamped) for large `n` — the large-`n` case
+    /// is the per-output-neuron NZ-count draw where `n = C·R·S` can reach
+    /// tens of thousands, so speed matters and the approximation error is
+    /// far below the simulator's modeling error.
+    pub fn binomial(&mut self, n: u32, p: f64) -> u32 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        let nf = n as f64;
+        let mean = nf * p;
+        let var = nf * p * (1.0 - p);
+        if n <= 16 {
+            // direct Bernoulli sum
+            let mut k = 0;
+            for _ in 0..n {
+                if self.bernoulli(p) {
+                    k += 1;
+                }
+            }
+            k
+        } else if var < 25.0 {
+            // Inversion from the CDF — cheap when variance is small.
+            let q = 1.0 - p;
+            let s = p / q;
+            let a = (nf + 1.0) * s;
+            let mut r = q.powf(nf);
+            let u0 = self.f64();
+            let mut u = u0;
+            let mut x = 0u32;
+            loop {
+                if u < r {
+                    return x.min(n);
+                }
+                u -= r;
+                x += 1;
+                if x > n {
+                    return n;
+                }
+                r *= a / (x as f64) - s;
+            }
+        } else {
+            let z = self.gauss();
+            let k = (mean + z * var.sqrt() + 0.5).floor();
+            k.clamp(0.0, nf) as u32
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::with_stream(1, 1);
+        let mut b = Pcg32::with_stream(1, 2);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Pcg32::new(3);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c} far from uniform");
+        }
+    }
+
+    #[test]
+    fn binomial_mean_and_bounds() {
+        let mut r = Pcg32::new(11);
+        for &(n, p) in &[(8u32, 0.3), (100, 0.45), (5000, 0.6), (40000, 0.01)] {
+            let trials = 3000;
+            let mut sum = 0u64;
+            for _ in 0..trials {
+                let k = r.binomial(n, p);
+                assert!(k <= n);
+                sum += k as u64;
+            }
+            let mean = sum as f64 / trials as f64;
+            let expect = n as f64 * p;
+            let sd = (n as f64 * p * (1.0 - p)).sqrt();
+            assert!(
+                (mean - expect).abs() < 4.0 * sd / (trials as f64).sqrt() + 0.5,
+                "n={n} p={p}: mean {mean} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn binomial_degenerate() {
+        let mut r = Pcg32::new(1);
+        assert_eq!(r.binomial(10, 0.0), 0);
+        assert_eq!(r.binomial(10, 1.0), 10);
+        assert_eq!(r.binomial(0, 0.5), 0);
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Pcg32::new(5);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gauss();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(9);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

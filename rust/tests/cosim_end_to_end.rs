@@ -1,0 +1,84 @@
+//! End-to-end co-simulation: real training through the PJRT artifacts →
+//! real sparsity traces → accelerator simulation. The full three-layer
+//! composition, in miniature (the `train_cnn` example does the long run).
+//!
+//! Skips when artifacts have not been built.
+
+use std::path::PathBuf;
+
+use agos::config::{AcceleratorConfig, SimOptions, TrainOptions};
+use agos::coordinator::{cosim_from_traces, run_training_pipeline, Trainer};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn short_training_run_learns_and_traces() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let opts = TrainOptions {
+        steps: 8,
+        trace_every: 4,
+        log_every: 2,
+        artifacts_dir: dir,
+        ..TrainOptions::default()
+    };
+    let mut trainer = Trainer::new(opts).unwrap();
+    let log = trainer.run().unwrap();
+    assert!(!log.losses.is_empty());
+    assert_eq!(log.traces.steps.len(), 2); // steps 0 and 4
+    assert!(log.traces.identity_holds(), "identity must hold on real traces");
+    for step in &log.traces.steps {
+        assert_eq!(step.layers.len(), 4);
+        for l in &step.layers {
+            assert!(
+                (0.05..0.95).contains(&l.act_sparsity),
+                "{}: activation sparsity {}",
+                l.name,
+                l.act_sparsity
+            );
+            assert!(
+                l.grad_sparsity >= l.act_sparsity - 1e-9,
+                "{}: gradient can only be more sparse",
+                l.name
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_matches_trainer_and_feeds_cosim() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let opts = TrainOptions {
+        steps: 6,
+        trace_every: 3,
+        log_every: 3,
+        artifacts_dir: dir,
+        ..TrainOptions::default()
+    };
+    let log = run_training_pipeline(&opts).unwrap();
+    assert!(!log.traces.steps.is_empty());
+    assert!(log.traces.identity_holds());
+
+    // Feed the real traces straight into the simulator.
+    let report = cosim_from_traces(
+        &log.traces,
+        &AcceleratorConfig::default(),
+        &SimOptions { batch: 4, ..SimOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(report.network, "agos_cnn");
+    assert!(
+        report.bp_speedup > 1.2,
+        "measured sparsity must yield BP speedup, got {:.2}",
+        report.bp_speedup
+    );
+    assert!(report.total_speedup > 1.05, "total {:.2}", report.total_speedup);
+}

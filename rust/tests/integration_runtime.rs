@@ -1,0 +1,145 @@
+//! Integration: rust PJRT runtime executes the AOT artifacts end-to-end.
+//!
+//! Skips (passes trivially) when `artifacts/` has not been built — run
+//! `make artifacts` first for the real coverage.
+
+use std::path::PathBuf;
+
+use agos::runtime::{HostTensor, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn gemm_demo_runs_and_multiplies() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::load(&dir).unwrap();
+    // a = I scaled by 2, b = ones ⇒ a @ b = 2·ones
+    let n = 64;
+    let mut a = vec![0f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    let b = vec![1f32; n * n];
+    let out = rt
+        .run(
+            "gemm_demo",
+            &[
+                HostTensor::f32(vec![n, n], a).unwrap(),
+                HostTensor::f32(vec![n, n], b).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let y = out[0].as_f32().unwrap();
+    assert_eq!(out[0].shape(), &[n, n]);
+    assert!(y.iter().all(|v| (*v - 2.0).abs() < 1e-5));
+}
+
+#[test]
+fn run_validates_inputs_against_manifest() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::load(&dir).unwrap();
+    // wrong arity
+    assert!(rt.run("gemm_demo", &[]).is_err());
+    // wrong shape
+    let bad = HostTensor::zeros_f32(vec![2, 2]);
+    assert!(rt.run("gemm_demo", &[bad.clone(), bad]).is_err());
+    // unknown entry
+    assert!(rt.run("not_an_entry", &[]).is_err());
+}
+
+#[test]
+fn train_step_reduces_loss_and_updates_params() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut params = rt.manifest.load_initial_params().unwrap();
+    let spec = rt.manifest.entry("train_step").unwrap().clone();
+    let batch = rt.manifest.batch;
+    let img = rt.manifest.img;
+    let in_ch = rt.manifest.in_ch;
+    let classes = rt.manifest.num_classes;
+
+    // Deterministic synthetic batch.
+    let mut rng = agos::util::rng::Pcg32::new(1234);
+    let x: Vec<f32> = (0..batch * img * img * in_ch)
+        .map(|_| rng.gauss() as f32)
+        .collect();
+    let labels: Vec<i32> = (0..batch).map(|_| rng.below(classes as u32) as i32).collect();
+    let x = HostTensor::f32(vec![batch, img, img, in_ch], x).unwrap();
+    let y = HostTensor::i32(vec![batch], labels).unwrap();
+
+    let n_params = params.len();
+    assert_eq!(spec.inputs.len(), n_params + 2);
+
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        let out = rt.run("train_step", &inputs).unwrap();
+        assert_eq!(out.len(), n_params + 1);
+        let loss = out[n_params].as_f32().unwrap()[0];
+        assert!(loss.is_finite());
+        losses.push(loss);
+        params = out[..n_params].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease on repeated batch: {losses:?}"
+    );
+}
+
+#[test]
+fn step_traces_exposes_sparsity_identity() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let params = rt.manifest.load_initial_params().unwrap();
+    let batch = rt.manifest.batch;
+    let img = rt.manifest.img;
+    let in_ch = rt.manifest.in_ch;
+
+    let mut rng = agos::util::rng::Pcg32::new(99);
+    let x: Vec<f32> = (0..batch * img * img * in_ch)
+        .map(|_| rng.gauss() as f32)
+        .collect();
+    let labels: Vec<i32> =
+        (0..batch).map(|_| rng.below(rt.manifest.num_classes as u32) as i32).collect();
+
+    let mut inputs = params;
+    inputs.push(HostTensor::f32(vec![batch, img, img, in_ch], x).unwrap());
+    inputs.push(HostTensor::i32(vec![batch], labels).unwrap());
+    let out = rt.run("step_traces", &inputs).unwrap();
+    assert_eq!(out.len(), 9);
+
+    // outputs: loss, a1..a4, g1..g4
+    for i in 1..=4 {
+        let a = out[i].as_f32().unwrap();
+        let g = out[i + 4].as_f32().unwrap();
+        assert_eq!(out[i].shape(), out[i + 4].shape());
+        // Paper §3.2: activation zero ⇒ gradient zero, element-exact.
+        for (av, gv) in a.iter().zip(g) {
+            if *av == 0.0 {
+                assert_eq!(*gv, 0.0, "gradient nonzero where activation is zero");
+            }
+        }
+        let sa = out[i].zero_fraction();
+        let sg = out[i + 4].zero_fraction();
+        assert!(sg >= sa - 1e-9, "gradient can only be more sparse");
+        assert!(sa > 0.15 && sa < 0.85, "layer {i} activation sparsity {sa:.3}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: full simulator runs over all five evaluated networks,
+//! checking the paper's headline shapes end-to-end (DESIGN.md §4).
+
+use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::nn::{zoo, Phase};
+use agos::sim::simulate_network;
+use agos::sparsity::SparsityModel;
+
+fn opts() -> SimOptions {
+    SimOptions { batch: 4, ..SimOptions::default() }
+}
+
+#[test]
+fn all_networks_all_schemes_complete_and_order() {
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(0xBEEF);
+    for net in zoo::all_networks() {
+        let mut prev = f64::MAX;
+        for scheme in Scheme::ALL {
+            let r = simulate_network(&net, &cfg, &opts(), &model, scheme);
+            let total = r.total_cycles();
+            assert!(total.is_finite() && total > 0.0, "{} {}", net.name, scheme.label());
+            assert!(
+                total <= prev * 1.005,
+                "{}: {} ({total:.0}) regressed vs previous scheme ({prev:.0})",
+                net.name,
+                scheme.label()
+            );
+            prev = total;
+        }
+    }
+}
+
+#[test]
+fn paper_fig15_headline_speedups() {
+    // Paper Fig 15 end-to-end speedups: VGG≈2.0, GoogLeNet≈2.18,
+    // MobileNet≈2.13, DenseNet≈1.7, ResNet≈1.66. We require the same
+    // *shape*: all in [1.3, 3.2], BN-free nets (vgg/googlenet) at least
+    // matching the BN nets.
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(2021);
+    let mut speedups = std::collections::BTreeMap::new();
+    for net in zoo::all_networks() {
+        let dc = simulate_network(&net, &cfg, &opts(), &model, Scheme::Dense);
+        let wr = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOutWr);
+        speedups.insert(net.name.clone(), dc.total_cycles() / wr.total_cycles());
+    }
+    for (net, s) in &speedups {
+        assert!((1.25..3.4).contains(s), "{net}: overall speedup {s:.2}");
+    }
+    let bn_free_mean = (speedups["vgg16"] * speedups["googlenet"]).sqrt();
+    let bn_mean = (speedups["resnet18"] * speedups["densenet121"]).sqrt();
+    assert!(
+        bn_free_mean > bn_mean * 0.95,
+        "BN-free nets should benefit at least as much: {bn_free_mean:.2} vs {bn_mean:.2}"
+    );
+}
+
+#[test]
+fn paper_bp_speedup_band() {
+    // Paper: BP speedups range 1.69–5.43x across the five networks.
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(77);
+    for net in zoo::all_networks() {
+        let dc = simulate_network(&net, &cfg, &opts(), &model, Scheme::Dense);
+        let wr = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOutWr);
+        let bp = dc.phase(Phase::Backward).cycles / wr.phase(Phase::Backward).cycles;
+        assert!((1.3..6.5).contains(&bp), "{}: BP speedup {bp:.2}", net.name);
+    }
+}
+
+#[test]
+fn vgg_post_pool_layers_lose_output_sparsity() {
+    // Fig 11a: convs directly after MaxPool (conv2_1, conv3_1, conv4_1,
+    // conv5_1) get no OUT gain — IN+OUT ≈ IN for them.
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(7);
+    let net = zoo::vgg16();
+    let inp = simulate_network(&net, &cfg, &opts(), &model, Scheme::In);
+    let both = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOut);
+    for name in ["conv2_1", "conv3_1", "conv4_1", "conv5_1"] {
+        let a = inp.layer(name, Phase::Backward).unwrap().cycles;
+        let b = both.layer(name, Phase::Backward).unwrap().cycles;
+        assert!((a / b - 1.0).abs() < 0.05, "{name}: IN {a:.0} vs IN+OUT {b:.0}");
+    }
+    // while a mid-block conv does gain
+    let a = inp.layer("conv3_2", Phase::Backward).unwrap().cycles;
+    let b = both.layer("conv3_2", Phase::Backward).unwrap().cycles;
+    assert!(a / b > 1.25, "conv3_2 should gain from OUT: {:.2}", a / b);
+}
+
+#[test]
+fn googlenet_inception_3b_range_matches_paper() {
+    // Paper: inception-3b gains 2.6–12.6x (BP, layer-wise, all schemes).
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(3);
+    let net = zoo::googlenet();
+    let dc = simulate_network(&net, &cfg, &opts(), &model, Scheme::Dense);
+    let wr = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOutWr);
+    let mut min = f64::MAX;
+    let mut max: f64 = 0.0;
+    for l in &dc.per_layer {
+        if l.phase != Phase::Backward || !l.name.starts_with("inception_3b") {
+            continue;
+        }
+        let s = l.cycles / wr.layer(&l.name, Phase::Backward).unwrap().cycles;
+        min = min.min(s);
+        max = max.max(s);
+    }
+    assert!(min >= 1.0, "min {min:.2}");
+    assert!(max <= 14.0, "max {max:.2}");
+    assert!(max / min > 1.5, "expect a spread across layer types");
+}
+
+#[test]
+fn energy_efficiency_improves_with_sparsity_on_all_networks() {
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(123);
+    for net in zoo::all_networks() {
+        let dc = simulate_network(&net, &cfg, &opts(), &model, Scheme::Dense);
+        let wr = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOutWr);
+        assert!(
+            wr.total_energy_j() < dc.total_energy_j(),
+            "{}: energy did not improve",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn results_are_deterministic_given_seed() {
+    let cfg = AcceleratorConfig::default();
+    let model = SparsityModel::synthetic(5);
+    let net = zoo::resnet18();
+    let a = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOutWr);
+    let b = simulate_network(&net, &cfg, &opts(), &model, Scheme::InOutWr);
+    assert_eq!(a.total_cycles(), b.total_cycles());
+    assert_eq!(a.total_energy_j(), b.total_energy_j());
+}
+
+#[test]
+fn scaling_the_pe_grid_scales_throughput() {
+    // Doubling the grid should cut cycles roughly in half (ablation on
+    // the design point).
+    let model = SparsityModel::synthetic(9);
+    let net = zoo::resnet18();
+    let small = AcceleratorConfig { tx: 8, ty: 8, ..AcceleratorConfig::default() };
+    let big = AcceleratorConfig::default(); // 16x16
+    let rs = simulate_network(&net, &small, &opts(), &model, Scheme::Dense);
+    let rb = simulate_network(&net, &big, &opts(), &model, Scheme::Dense);
+    let ratio = rs.total_cycles() / rb.total_cycles();
+    assert!((2.0..4.5).contains(&ratio), "8x8 vs 16x16 ratio {ratio:.2}");
+}

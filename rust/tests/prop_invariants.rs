@@ -1,0 +1,245 @@
+//! Property-based tests (via `agos::util::prop`) on the coordinator and
+//! simulator invariants DESIGN.md §7 prescribes.
+
+use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::prop_assert;
+use agos::sim::{redistribute, simulate_layer, synapse_passes, LayerTask, PeModel};
+use agos::sparsity::{analyze_network, encode_tensor, gradient_sparsity, Bitmap};
+use agos::nn::{Network, Shape};
+use agos::util::json::Json;
+use agos::util::prop::{check, Gen};
+use agos::util::rng::Pcg32;
+
+fn arb_task(g: &mut Gen) -> LayerTask {
+    let m = g.usize_in(1, 256);
+    let u = g.usize_in(1, 64);
+    let v = g.usize_in(1, 64);
+    let crs = g.usize_in(1, 5000) as f64;
+    LayerTask {
+        name: "prop".into(),
+        m,
+        u,
+        v,
+        crs,
+        in_sparsity: g.bool().then(|| g.f64_in(0.0, 0.95)),
+        out_sparsity: g.bool().then(|| g.f64_in(0.0, 0.95)),
+        input_elems: (m * u * v) as f64,
+        weight_elems: m as f64 * crs,
+    }
+}
+
+#[test]
+fn prop_dense_scheme_performs_exactly_dense_macs() {
+    check("dense==dense-macs", |g| {
+        let task = arb_task(g);
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions::default();
+        let mut rng = Pcg32::new(g.rng.next_u64());
+        let r = simulate_layer(&task, &cfg, &opts, Scheme::Dense, &mut rng);
+        prop_assert!(
+            (r.performed_macs - r.dense_macs).abs() <= 1e-6 * r.dense_macs.max(1.0),
+            "performed {} vs dense {}",
+            r.performed_macs,
+            r.dense_macs
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_speedup_monotone_in_scheme() {
+    check("scheme-monotone", |g| {
+        let task = arb_task(g);
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions::default();
+        let seed = g.rng.next_u64();
+        let mut cycles = Vec::new();
+        for scheme in Scheme::ALL {
+            let mut rng = Pcg32::new(seed);
+            cycles.push(simulate_layer(&task, &cfg, &opts, scheme, &mut rng).cycles);
+        }
+        // DC >= IN >= IN+OUT; WR within tolerance of IN+OUT. The 2%
+        // slack absorbs stochastic tile-jitter noise: the schemes draw
+        // different jitter sequences, so with near-zero sparsity their
+        // makespans differ by sampling noise only.
+        prop_assert!(cycles[0] >= cycles[1] * 0.98, "DC {} < IN {}", cycles[0], cycles[1]);
+        prop_assert!(cycles[1] >= cycles[2] * 0.98, "IN {} < IN+OUT {}", cycles[1], cycles[2]);
+        prop_assert!(cycles[3] <= cycles[2] * 1.02, "WR {} > IN+OUT {}", cycles[3], cycles[2]);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wdu_conserves_and_never_regresses() {
+    check("wdu-invariants", |g| {
+        let n = g.usize_in(1, 300);
+        let work = g.vec(n, |g| g.f64_in(0.0, 10_000.0));
+        let threshold = g.f64_in(0.05, 1.0);
+        let overhead = g.f64_in(0.0, 0.2);
+        let base_makespan = work.iter().cloned().fold(0.0, f64::max);
+        let out = redistribute(&work, threshold, overhead);
+        prop_assert!(out.completion.len() == n);
+        // never worse than no redistribution (modest overhead bound)
+        prop_assert!(
+            out.makespan <= base_makespan * 1.01 + 1.0,
+            "makespan {} vs base {base_makespan}",
+            out.makespan
+        );
+        // completion of every tile is bounded by the makespan
+        for c in &out.completion {
+            prop_assert!(*c <= out.makespan + 1e-9);
+        }
+        // total busy time is conserved within overhead
+        let total_in: f64 = work.iter().sum();
+        let total_out: f64 = out.completion.iter().sum();
+        prop_assert!(
+            total_out + 1e-6 >= total_in.min(base_makespan),
+            "work lost: {total_out} < {total_in}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoder_roundtrip() {
+    check("encoder-roundtrip", |g| {
+        let n = g.usize_in(0, 400);
+        let sparsity = g.f64_in(0.0, 1.0);
+        let values: Vec<f32> = (0..n)
+            .map(|_| if g.rng.f64() < sparsity { 0.0 } else { g.rng.f32() + 0.001 })
+            .collect();
+        let enc = encode_tensor(&values);
+        // decode every group and compare against the raw positions
+        let mut decoded = Vec::new();
+        for gi in 0..enc.groups.len() {
+            decoded.extend(agos::sparsity::decode_group(&enc, gi));
+        }
+        let expect: Vec<usize> =
+            values.iter().enumerate().filter(|(_, v)| **v != 0.0).map(|(i, _)| i).collect();
+        prop_assert!(decoded == expect, "decode mismatch at n={n}");
+        prop_assert!(enc.nz() == expect.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitmap_counts_match_values() {
+    check("bitmap-counts", |g| {
+        let c = g.usize_in(1, 8);
+        let h = g.usize_in(1, 12);
+        let w = g.usize_in(1, 12);
+        let shape = Shape::new(c, h, w);
+        let values: Vec<f32> =
+            (0..shape.len()).map(|_| if g.bool() { 0.0 } else { 1.0 }).collect();
+        let bm = Bitmap::from_values(shape, &values);
+        let expect_nz = values.iter().filter(|v| **v != 0.0).count();
+        prop_assert!(bm.count_nz() == expect_nz);
+        // per-channel sums must equal the total
+        let per: usize = (0..c).map(|ci| bm.wc_nz(ci)).sum();
+        prop_assert!(per == expect_nz);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gradient_sparsity_bounded_and_bn_densifies() {
+    check("gradient-sparsity-bounds", |g| {
+        // random conv/relu/bn chain
+        let mut net = Network::new("prop");
+        let x = net.input(4, 16, 16);
+        let mut cur = x;
+        let depth = g.usize_in(1, 6);
+        for i in 0..depth {
+            let c = net.conv(&format!("c{i}"), cur, 4, 3, 1, 1);
+            let with_bn = g.bool();
+            let pre = if with_bn { net.bn(&format!("b{i}"), c) } else { c };
+            cur = net.relu(&format!("r{i}"), pre);
+        }
+        net.softmax("sm", cur);
+        let mut fwd = vec![0.0; net.len()];
+        for l in net.layers() {
+            if l.kind.is_relu() {
+                fwd[l.id] = g.f64_in(0.1, 0.9);
+            }
+        }
+        let gs = gradient_sparsity(&net, &fwd);
+        for (id, s) in gs.iter().enumerate() {
+            prop_assert!((0.0..=1.0).contains(s), "layer {id}: {s}");
+        }
+        // every BN output carries dense gradient at the conv below
+        let opps = analyze_network(&net, &fwd);
+        for o in &opps {
+            let producer_consumers = net.consumers(o.layer);
+            if producer_consumers
+                .iter()
+                .any(|&k| matches!(net.layer(k).kind, agos::nn::LayerKind::BatchNorm))
+            {
+                prop_assert!(o.bp_input.is_none(), "{}: BN must densify", o.name);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pe_cycles_bounded_by_dense() {
+    check("pe-cycles-bounds", |g| {
+        let pe = PeModel::from_config(&AcceleratorConfig::default());
+        let crs = g.usize_in(1, 8000) as f64;
+        let s = g.f64_in(0.0, 1.0);
+        let (sparse, macs) = pe.cycles_per_output(crs, s);
+        let dense = pe.dense_cycles_per_output(crs);
+        prop_assert!(sparse <= dense * 1.0001, "sparse {sparse} > dense {dense}");
+        prop_assert!(sparse >= 1.0);
+        prop_assert!(macs <= crs + 1e-9);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_synapse_passes_cover_crs() {
+    check("blocking-coverage", |g| {
+        let crs = g.usize_in(1, 100_000);
+        let cap = [256, 512, 1024, 2048][g.usize_in(0, 3)];
+        let passes = synapse_passes(crs, cap);
+        prop_assert!(passes * cap >= crs, "passes {passes} x {cap} < {crs}");
+        prop_assert!((passes - 1) * cap < crs, "one pass too many");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn arb_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 12))
+                    .map(|_| *g.choose(&['a', 'b', '"', '\\', 'é', '\n', '7']))
+                    .collect(),
+            ),
+            4 => {
+                let n = g.usize_in(0, 4);
+                Json::Arr(g.vec(n, |g| arb_json(g, depth - 1)))
+            }
+            _ => {
+                let n = g.usize_in(0, 4);
+                let mut o = Json::obj();
+                for i in 0..n {
+                    let key = format!("k{i}");
+                    o.set(&key, arb_json(g, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check("json-roundtrip", |g| {
+        let j = arb_json(g, 3);
+        let text = j.pretty();
+        let back = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        prop_assert!(back == j, "roundtrip mismatch:\n{text}");
+        Ok(())
+    });
+}

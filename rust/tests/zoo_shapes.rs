@@ -1,0 +1,127 @@
+//! Cross-checks on the model zoo: parameter counts, receptive fields and
+//! the structural properties the sparsity analysis depends on.
+
+use agos::nn::{layer_macs, network_macs, zoo, LayerKind, Phase};
+use agos::sparsity::{analyze_network, SparsityKind, SparsityModel};
+
+#[test]
+fn parameter_counts_match_literature() {
+    // (network, conv+fc parameter count range in millions)
+    let expect = [
+        ("vgg16", 130.0, 140.0),     // 138M
+        ("resnet18", 11.0, 12.2),    // 11.7M
+        ("googlenet", 5.5, 7.2),     // ~6.6M (main branch)
+        ("densenet121", 6.5, 8.5),   // ~8.0M
+        ("mobilenet_v1", 3.8, 4.6),  // 4.2M
+    ];
+    for (name, lo, hi) in expect {
+        let net = zoo::by_name(name).unwrap();
+        let mut params = 0u64;
+        for l in net.compute_layers() {
+            let cin = net.layer(l.inputs[0]).out.c;
+            params += match l.kind {
+                LayerKind::Conv { m, r, s, .. } => (m * cin * r * s + m) as u64,
+                LayerKind::DwConv { r, s, .. } => (cin * r * s + cin) as u64,
+                LayerKind::Fc { out } => {
+                    let flat = net.layer(l.inputs[0]).out.len();
+                    (out * flat + out) as u64
+                }
+                _ => 0,
+            };
+        }
+        let m = params as f64 / 1e6;
+        assert!((lo..hi).contains(&m), "{name}: {m:.2}M params");
+    }
+}
+
+#[test]
+fn bp_macs_equal_fp_macs_per_network() {
+    for net in zoo::all_networks() {
+        let fp = network_macs(&net, Phase::Forward);
+        let bp = network_macs(&net, Phase::Backward);
+        let wg = network_macs(&net, Phase::WeightGrad);
+        assert_eq!(wg, fp, "{}", net.name);
+        // BP = FP minus the first compute layer
+        let first = net.compute_layers()[0];
+        assert_eq!(bp, fp - layer_macs(&net, first, Phase::Forward), "{}", net.name);
+    }
+}
+
+#[test]
+fn receptive_field_spread_exercises_blocking_and_reconfig() {
+    // The design handles CRS < 1024 (reconfig) and > 1024 (blocking);
+    // the zoo must exercise both regimes.
+    let mut small = 0;
+    let mut large = 0;
+    for net in zoo::all_networks() {
+        for l in net.compute_layers() {
+            let crs = l.receptive_field(net.layer(l.inputs[0]).out).unwrap();
+            if crs < 1024 {
+                small += 1;
+            }
+            if crs > 1024 {
+                large += 1;
+            }
+        }
+    }
+    assert!(small > 40, "small-CRS layers: {small}");
+    assert!(large > 40, "large-CRS layers: {large}");
+}
+
+#[test]
+fn bn_structure_drives_bp_kind() {
+    let model = SparsityModel::synthetic(1);
+
+    // VGG / GoogLeNet (no BN): inner convs get Both.
+    for name in ["vgg16", "googlenet"] {
+        let net = zoo::by_name(name).unwrap();
+        let fwd = model.assign(&net);
+        let opps = analyze_network(&net, &fwd);
+        let both = opps.iter().filter(|o| o.bp_kind() == SparsityKind::Both).count();
+        assert!(both >= 5, "{name}: only {both} layers with Both");
+    }
+
+    // ResNet / DenseNet / MobileNet (BN): no conv sees BP input sparsity
+    // from a directly-following ReLU — the figure the paper stresses.
+    for name in ["resnet18", "densenet121", "mobilenet_v1"] {
+        let net = zoo::by_name(name).unwrap();
+        let fwd = model.assign(&net);
+        let opps = analyze_network(&net, &fwd);
+        let out_only = opps.iter().filter(|o| o.bp_kind() == SparsityKind::OutputOnly).count();
+        let with_in = opps.iter().filter(|o| o.bp_input.is_some()).count();
+        assert!(out_only >= 5, "{name}: only {out_only} OutputOnly layers");
+        assert_eq!(with_in, 0, "{name}: BN must kill all BP input sparsity");
+    }
+}
+
+#[test]
+fn densenet_concat_keeps_output_sparsity_everywhere() {
+    let net = zoo::densenet121();
+    let model = SparsityModel::synthetic(4);
+    let fwd = model.assign(&net);
+    let opps = analyze_network(&net, &fwd);
+    for o in &opps {
+        if o.name == "conv0" || o.name == "fc" {
+            continue;
+        }
+        assert!(o.bp_output.is_some(), "{}: OUT lost", o.name);
+    }
+}
+
+#[test]
+fn googlenet_pool_proj_convs_lose_output_sparsity() {
+    // Inception pool-branch convs read from MaxPool ⇒ no OUT (the paper's
+    // bar-6 observation).
+    let net = zoo::googlenet();
+    let model = SparsityModel::synthetic(4);
+    let fwd = model.assign(&net);
+    let opps = analyze_network(&net, &fwd);
+    for o in &opps {
+        if o.name.ends_with("_pool_proj") {
+            assert!(o.bp_output.is_none(), "{}: OUT should be lost", o.name);
+        }
+        if o.name.ends_with("_3x3") && o.name.contains("inception") {
+            assert!(o.bp_output.is_some(), "{}: OUT should hold", o.name);
+        }
+    }
+}
