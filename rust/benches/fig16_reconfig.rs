@@ -23,7 +23,12 @@ fn main() {
     // Measure the generation cost.
     let mut b = Bench::new("fig16_reconfig");
     for id in "fig16".split_whitespace() {
-        b.case(id, || generate(id, &ctx).unwrap().len());
+        // Cold context per iteration: reusing `ctx` would serve repeat
+        // iterations from its sweep cache and time only map lookups.
+        b.case(id, || {
+            let cold = ReportCtx::with_batch(batch);
+            generate(id, &cold).unwrap().len()
+        });
     }
     b.finish();
 }

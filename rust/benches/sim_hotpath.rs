@@ -1,11 +1,17 @@
 //! Micro-benchmarks of the simulator hot paths — the targets of the
-//! performance pass (EXPERIMENTS.md §Perf).
+//! performance pass (EXPERIMENTS.md §Perf) — plus the parallel sweep
+//! executor, whose sequential-vs-parallel wall-clock for a GoogLeNet
+//! all-scheme sweep is persisted to `BENCH_sweep.json` so the perf
+//! trajectory is tracked across PRs.
 
 use agos::config::{AcceleratorConfig, Scheme, SimOptions};
 use agos::nn::zoo;
-use agos::sim::{redistribute, simulate_layer, simulate_network, LayerTask, PeModel};
+use agos::sim::{
+    redistribute, simulate_layer, simulate_network, LayerTask, PeModel, SweepPlan, SweepRunner,
+};
 use agos::sparsity::SparsityModel;
 use agos::util::bench::{black_box, Bench};
+use agos::util::json::Json;
 use agos::util::rng::Pcg32;
 
 fn main() {
@@ -58,5 +64,49 @@ fn main() {
     b.case("simulate_densenet121_b1", || {
         simulate_network(&dn, &cfg, &small_opts, &model, Scheme::InOutWr).total_cycles()
     });
+
+    // Sweep executor: GoogLeNet under all four schemes, cold cache each
+    // iteration, sequential vs. all-core parallel.
+    let gnet = zoo::googlenet();
+    let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let run_sweep = |threads: usize| {
+        let runner = SweepRunner::new(threads);
+        let plan =
+            SweepPlan::grid(std::slice::from_ref(&gnet), &Scheme::ALL, &cfg, &small_opts);
+        runner.run(&plan, &model).iter().map(|r| r.total_cycles()).sum::<f64>()
+    };
+    b.case("sweep_googlenet_4schemes_jobs1", || run_sweep(1));
+    if jobs > 1 {
+        b.case(&format!("sweep_googlenet_4schemes_jobs{jobs}"), || run_sweep(jobs));
+    }
     b.finish();
+
+    // Persist the sweep trajectory point (sequential vs parallel).
+    let find = |suffix: &str| {
+        b.results()
+            .iter()
+            .find(|(label, _)| label.ends_with(suffix))
+            .map(|(_, s)| *s)
+            .expect("bench case ran")
+    };
+    let seq = find("_jobs1");
+    let par = if jobs > 1 { find(&format!("_jobs{jobs}")) } else { seq };
+    let j = Json::from_pairs(vec![
+        ("bench", "sweep_googlenet_4schemes".into()),
+        ("network", "googlenet".into()),
+        ("schemes", 4u64.into()),
+        ("batch", small_opts.batch.into()),
+        ("jobs", jobs.into()),
+        ("seq_mean_s", seq.mean.into()),
+        ("seq_std_s", seq.std.into()),
+        ("par_mean_s", par.mean.into()),
+        ("par_std_s", par.std.into()),
+        ("speedup", (seq.mean / par.mean).into()),
+    ]);
+    j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
+    println!(
+        "wrote BENCH_sweep.json ({} jobs: {:.2}x vs sequential)",
+        jobs,
+        seq.mean / par.mean
+    );
 }

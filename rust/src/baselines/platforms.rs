@@ -2,7 +2,7 @@
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::{network_macs, Network, Phase};
-use crate::sim::simulate_network;
+use crate::sim::SweepRunner;
 use crate::sparsity::SparsityModel;
 
 /// How a platform's iteration latency is obtained.
@@ -140,12 +140,17 @@ pub fn all_platforms() -> Vec<Platform> {
 }
 
 /// Training-iteration latency (ms) of `platform` on `net` at `batch`.
+///
+/// Simulator-backed rows route through the shared sweep `runner`, so a
+/// (network, scheme, config) combo already simulated by another figure —
+/// or another platform row — is served from cache.
 pub fn iteration_latency_ms(
     platform: &Platform,
     net: &Network,
     cfg: &AcceleratorConfig,
     opts: &SimOptions,
     model: &SparsityModel,
+    runner: &SweepRunner,
 ) -> f64 {
     match platform.kind {
         PlatformKind::Analytic { utilization, sparsity_gain } => {
@@ -155,12 +160,12 @@ pub fn iteration_latency_ms(
             secs * 1e3
         }
         PlatformKind::SimulatorBacked { scheme, mapping_penalty } => {
-            let r = simulate_network(net, cfg, opts, model, scheme);
+            let r = runner.one(net, cfg, opts, model, scheme);
             let cycles = r.total_cycles() * mapping_penalty;
             cycles / (platform.freq_mhz * 1e6) * 1e3
         }
         PlatformKind::ThisWork => {
-            let r = simulate_network(net, cfg, opts, model, Scheme::InOutWr);
+            let r = runner.one(net, cfg, opts, model, Scheme::InOutWr);
             r.total_cycles() / cfg.freq_hz * 1e3
         }
     }
@@ -171,42 +176,44 @@ mod tests {
     use super::*;
     use crate::nn::zoo;
 
-    fn setup() -> (AcceleratorConfig, SimOptions, SparsityModel) {
+    fn setup() -> (AcceleratorConfig, SimOptions, SparsityModel, SweepRunner) {
         (
             AcceleratorConfig::default(),
             SimOptions { batch: 16, ..SimOptions::default() },
             SparsityModel::synthetic(2021),
+            SweepRunner::new(0),
         )
     }
 
     #[test]
     fn cpu_latency_matches_published_order() {
-        let (cfg, opts, model) = setup();
+        let (cfg, opts, model, runner) = setup();
         let net = zoo::vgg16();
         let cpu = &all_platforms()[0];
-        let ms = iteration_latency_ms(cpu, &net, &cfg, &opts, &model);
+        let ms = iteration_latency_ms(cpu, &net, &cfg, &opts, &model, &runner);
         // Paper: 8495 ms. Same order of magnitude required.
         assert!((5000.0..14000.0).contains(&ms), "CPU VGG {ms} ms");
     }
 
     #[test]
     fn gpu_latency_matches_published_order() {
-        let (cfg, opts, model) = setup();
+        let (cfg, opts, model, runner) = setup();
         let net = zoo::vgg16();
         let gpu = &all_platforms()[1];
-        let ms = iteration_latency_ms(gpu, &net, &cfg, &opts, &model);
+        let ms = iteration_latency_ms(gpu, &net, &cfg, &opts, &model, &runner);
         // Paper: 128 ms.
         assert!((80.0..200.0).contains(&ms), "GPU VGG {ms} ms");
     }
 
     #[test]
     fn this_work_beats_dense_baselines() {
-        let (cfg, opts, model) = setup();
+        let (cfg, opts, model, runner) = setup();
         let net = zoo::resnet18();
         let platforms = all_platforms();
-        let ours = iteration_latency_ms(platforms.last().unwrap(), &net, &cfg, &opts, &model);
-        let ddn = iteration_latency_ms(&platforms[2], &net, &cfg, &opts, &model);
-        let cnv = iteration_latency_ms(&platforms[3], &net, &cfg, &opts, &model);
+        let ours =
+            iteration_latency_ms(platforms.last().unwrap(), &net, &cfg, &opts, &model, &runner);
+        let ddn = iteration_latency_ms(&platforms[2], &net, &cfg, &opts, &model, &runner);
+        let cnv = iteration_latency_ms(&platforms[3], &net, &cfg, &opts, &model, &runner);
         // Paper: 2.65× vs DaDianNao, 2.07× vs CNVLUTIN on ResNet-18.
         let vs_ddn = ddn / ours;
         let vs_cnv = cnv / ours;

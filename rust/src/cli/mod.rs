@@ -3,7 +3,8 @@
 //! ```text
 //! agos train     --steps 300 --trace-every 50 --out results/train.json
 //! agos simulate  --network vgg16 --scheme in+out+wr --batch 16
-//! agos figure    fig11a --out results/
+//! agos sweep     --networks all --schemes all --jobs 8 --out results/sweep.json
+//! agos figure    all --jobs 8 --out results/
 //! agos table     table2
 //! agos sparsity  --network resnet18
 //! agos cosim     --traces results/traces.json
@@ -14,9 +15,9 @@ use std::path::{Path, PathBuf};
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions, TrainOptions};
 use crate::coordinator::{cosim_from_traces, run_training_pipeline};
-use crate::nn::{zoo, Phase};
+use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
-use crate::sim::simulate_network;
+use crate::sim::{simulate_network, SweepPlan, SweepRunner};
 use crate::sparsity::{analyze_network, SparsityModel};
 use crate::trace::TraceFile;
 use crate::util::cli::{App, Args, Command, OptSpec};
@@ -54,12 +55,26 @@ fn app() -> App {
                 ],
             },
             Command {
+                name: "sweep",
+                about: "parallel cached (networks x schemes) simulation sweep",
+                opts: vec![
+                    opt("networks", "comma-separated names or 'all' (default all)"),
+                    opt("schemes", "comma-separated schemes or 'all' (default all)"),
+                    opt("batch", "batch size (default 16)"),
+                    opt("seed", "sparsity model seed"),
+                    opt("jobs", "worker threads (default: all cores)"),
+                    opt("config", "accelerator config JSON file"),
+                    opt("out", "write sweep results JSON here"),
+                ],
+            },
+            Command {
                 name: "figure",
                 about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b fig13 fig15 fig16 fig17 | ablations | all)",
                 opts: vec![
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
                     opt("seed", "sparsity model seed"),
+                    opt("jobs", "sweep worker threads (default: all cores)"),
                 ],
             },
             Command {
@@ -68,6 +83,7 @@ fn app() -> App {
                 opts: vec![
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
+                    opt("jobs", "sweep worker threads (default: all cores)"),
                 ],
             },
             Command {
@@ -106,6 +122,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     match parsed.command.as_str() {
         "train" => cmd_train(args),
         "simulate" => cmd_simulate(args),
+        "sweep" => cmd_sweep(args),
         "figure" => cmd_figure(args),
         "table" => cmd_figure(args), // same dispatch: ids disambiguate
         "sparsity" => cmd_sparsity(args),
@@ -120,6 +137,7 @@ fn ctx_from(args: &Args) -> anyhow::Result<ReportCtx> {
     ctx.opts.batch = args.opt_usize("batch", 16)?;
     ctx.opts.seed = args.opt_u64("seed", ctx.opts.seed)?;
     ctx.model = SparsityModel::synthetic(ctx.opts.seed);
+    ctx.sweep = SweepRunner::new(args.opt_usize("jobs", 0)?);
     Ok(ctx)
 }
 
@@ -162,8 +180,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
-    let name = args.opt("network").unwrap_or("vgg16");
-    let net = if name == "agos_cnn" { zoo::agos_cnn() } else { zoo::by_name(name)? };
+    let net = zoo::by_name(args.opt_or("network", "vgg16"))?;
     let scheme = Scheme::parse(args.opt_or("scheme", "IN+OUT+WR"))?;
     let cfg = match args.opt("config") {
         Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
@@ -197,6 +214,88 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
+    let nets: Vec<Network> = match args.opt_or("networks", "all") {
+        "all" => zoo::all_networks(),
+        list => list
+            .split(',')
+            .map(|n| zoo::by_name(n.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    let schemes: Vec<Scheme> = match args.opt_or("schemes", "all") {
+        "all" => Scheme::ALL.to_vec(),
+        list => list.split(',').map(Scheme::parse).collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    let cfg = match args.opt("config") {
+        Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
+        None => AcceleratorConfig::default(),
+    };
+    let mut opts = SimOptions::default();
+    opts.batch = args.opt_usize("batch", 16)?;
+    opts.seed = args.opt_u64("seed", opts.seed)?;
+    let model = SparsityModel::synthetic(opts.seed);
+    let runner = SweepRunner::new(args.opt_usize("jobs", 0)?);
+
+    let plan = SweepPlan::grid(&nets, &schemes, &cfg, &opts);
+    let t0 = std::time::Instant::now();
+    let results = runner.run(&plan, &model);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut combos = Json::Arr(Vec::new());
+    for (ni, net) in nets.iter().enumerate() {
+        println!("network {} (batch {}):", net.name, opts.batch);
+        let dense = schemes
+            .iter()
+            .position(|s| *s == Scheme::Dense)
+            .map(|si| results[ni * schemes.len() + si].total_cycles());
+        for (si, scheme) in schemes.iter().enumerate() {
+            let r = &results[ni * schemes.len() + si];
+            match dense {
+                Some(d) => println!(
+                    "  {:<10} {:>15.0} cycles  ({:.2}x vs DC)  {:.3} J",
+                    scheme.label(),
+                    r.total_cycles(),
+                    d / r.total_cycles(),
+                    r.total_energy_j()
+                ),
+                None => println!(
+                    "  {:<10} {:>15.0} cycles  {:.3} J",
+                    scheme.label(),
+                    r.total_cycles(),
+                    r.total_energy_j()
+                ),
+            }
+            combos.push(Json::from_pairs(vec![
+                ("network", net.name.as_str().into()),
+                ("scheme", scheme.label().into()),
+                ("total_cycles", r.total_cycles().into()),
+                ("bp_cycles", r.phase(Phase::Backward).cycles.into()),
+                ("energy_j", r.total_energy_j().into()),
+            ]));
+        }
+    }
+    println!(
+        "sweep: {} combos ({} simulated, {} cache hits) on {} threads in {elapsed:.2}s",
+        plan.len(),
+        runner.cache().misses(),
+        runner.cache().hits(),
+        runner.jobs,
+    );
+    if let Some(out) = args.opt("out") {
+        let path = Path::new(out);
+        let j = Json::from_pairs(vec![
+            ("batch", opts.batch.into()),
+            ("seed", opts.seed.into()),
+            ("jobs", runner.jobs.into()),
+            ("elapsed_s", elapsed.into()),
+            ("combos", combos),
+        ]);
+        j.write_file(path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
 fn cmd_figure(args: &Args) -> anyhow::Result<i32> {
     let ids = args.positional();
     anyhow::ensure!(!ids.is_empty(), "give a figure/table id (or 'all')");
@@ -215,8 +314,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<i32> {
 }
 
 fn cmd_sparsity(args: &Args) -> anyhow::Result<i32> {
-    let name = args.opt("network").unwrap_or("vgg16");
-    let net = if name == "agos_cnn" { zoo::agos_cnn() } else { zoo::by_name(name)? };
+    let net = zoo::by_name(args.opt_or("network", "vgg16"))?;
     let model = SparsityModel::synthetic(args.opt_u64("seed", 0xA605)?);
     let fwd = model.assign(&net);
     let opps = analyze_network(&net, &fwd);
@@ -321,5 +419,30 @@ mod tests {
     #[test]
     fn fig16_fast_path_runs() {
         assert_eq!(run(&sv(&["figure", "fig16", "--batch", "1"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn sweep_command_runs_small_grid() {
+        assert_eq!(
+            run(&sv(&[
+                "sweep",
+                "--networks",
+                "agos_cnn",
+                "--schemes",
+                "dc,in+out+wr",
+                "--batch",
+                "1",
+                "--jobs",
+                "2",
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_network_and_scheme() {
+        assert!(run(&sv(&["sweep", "--networks", "lenet", "--batch", "1"])).is_err());
+        assert!(run(&sv(&["sweep", "--schemes", "bogus", "--batch", "1"])).is_err());
     }
 }

@@ -172,6 +172,46 @@ impl AcceleratorConfig {
         self.memory.dram_channels as f64 * self.memory.dram_channel_bw
     }
 
+    /// Stable 64-bit fingerprint (FNV-1a) over every hardware parameter
+    /// that affects simulation results, including the memory system and
+    /// the energy table — one component of the sweep-cache key
+    /// (`sim::sweep`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.put(self.tx as u64)
+            .put(self.ty as u64)
+            .put(self.lanes as u64)
+            .put(self.group_entries as u64)
+            .put(self.groups as u64)
+            .put(self.offset_bits as u64)
+            .put_f64(self.freq_hz)
+            .put(self.operand_bytes as u64)
+            .put_f64(self.wr_threshold)
+            .put_f64(self.wr_overhead_cycles_per_output);
+        let m = &self.memory;
+        h.put(m.sram_bank_bytes as u64)
+            .put(m.sram_banks as u64)
+            .put(m.sram_line_bytes as u64)
+            .put(m.sram_feed_bytes_per_cycle as u64)
+            .put(m.dram_channels as u64)
+            .put_f64(m.dram_channel_bw)
+            .put_f64(m.htree_bw);
+        let e = &self.energy;
+        h.put_f64(e.regfile_power_w)
+            .put_f64(e.idx_regfile_power_w)
+            .put_f64(e.mac_power_w)
+            .put_f64(e.adder_tree_power_w)
+            .put_f64(e.encoder_power_w)
+            .put_f64(e.control_power_w)
+            .put_f64(e.sram_read_j)
+            .put_f64(e.sram_write_j)
+            .put_f64(e.sram_dynamic_w)
+            .put_f64(e.sram_static_w)
+            .put_f64(e.pe_total_w)
+            .put_f64(e.dram_j_per_byte);
+        h.finish()
+    }
+
     // ---- JSON ----------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -273,6 +313,22 @@ mod tests {
         assert_eq!(c, c2);
         let bad = Json::parse(r#"{"txx": 4}"#).unwrap();
         assert!(AcceleratorConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_hardware_changes() {
+        let base = AcceleratorConfig::default();
+        assert_eq!(base.fingerprint(), AcceleratorConfig::default().fingerprint());
+        let grid = AcceleratorConfig { tx: 8, ty: 8, ..base.clone() };
+        assert_ne!(grid.fingerprint(), base.fingerprint());
+        let thr = AcceleratorConfig { wr_threshold: 0.5, ..base.clone() };
+        assert_ne!(thr.fingerprint(), base.fingerprint());
+        let mut mem = base.clone();
+        mem.memory.dram_channels = 8;
+        assert_ne!(mem.fingerprint(), base.fingerprint());
+        let mut en = base.clone();
+        en.energy.pe_total_w = 0.1;
+        assert_ne!(en.fingerprint(), base.fingerprint());
     }
 
     #[test]

@@ -83,6 +83,20 @@ impl Default for SimOptions {
 }
 
 impl SimOptions {
+    /// Stable 64-bit fingerprint (FNV-1a) over every option that affects
+    /// simulation results — one component of the sweep-cache key
+    /// (`sim::sweep`): two `SimOptions` fingerprint equal iff a cached
+    /// `NetworkSimResult` is reusable between them.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.put(self.seed)
+            .put(self.batch as u64)
+            .put_f64(self.tile_sparsity_cv)
+            .put(self.exact_outputs_per_tile as u64)
+            .put(self.overlap_dram as u64);
+        h.finish()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("seed", self.seed.into()),
@@ -136,6 +150,22 @@ mod tests {
         assert_eq!(Scheme::parse("dc").unwrap(), Scheme::Dense);
         assert_eq!(Scheme::parse("in+out+wr").unwrap(), Scheme::InOutWr);
         assert!(Scheme::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let base = SimOptions::default();
+        assert_eq!(base.fingerprint(), SimOptions::default().fingerprint());
+        let variants = [
+            SimOptions { seed: 1, ..base.clone() },
+            SimOptions { batch: 3, ..base.clone() },
+            SimOptions { tile_sparsity_cv: 0.2, ..base.clone() },
+            SimOptions { exact_outputs_per_tile: 7, ..base.clone() },
+            SimOptions { overlap_dram: false, ..base.clone() },
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(v.fingerprint(), base.fingerprint(), "variant {i}");
+        }
     }
 
     #[test]

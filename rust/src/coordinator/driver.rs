@@ -4,7 +4,7 @@
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::{zoo, Phase};
-use crate::sim::simulate_network;
+use crate::sim::{SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
 use crate::trace::TraceFile;
 use crate::util::json::Json;
@@ -57,10 +57,7 @@ pub fn cosim_from_traces(
         traces.identity_holds(),
         "sparsity identity violated in traces — cannot exploit output sparsity"
     );
-    let net = match traces.network.as_str() {
-        "agos_cnn" => zoo::agos_cnn(),
-        other => zoo::by_name(other)?,
-    };
+    let net = zoo::by_name(&traces.network)?;
     let measured = traces.mean_act_sparsity();
     let mean_sparsity = if measured.is_empty() {
         0.0
@@ -69,13 +66,19 @@ pub fn cosim_from_traces(
     };
     let model = SparsityModel::measured(opts.seed, measured);
 
+    // All four schemes as one parallel sweep (results identical to the
+    // sequential loop this replaced — see sim::sweep's determinism
+    // contract).
+    let runner = SweepRunner::new(0);
+    let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, cfg, opts);
+    let results = runner.run(&plan, &model);
+
     let mut rows = Vec::new();
     let mut dense_total = 0.0;
     let mut dense_bp = 0.0;
     let mut wr_total = 0.0;
     let mut wr_bp = 0.0;
-    for scheme in Scheme::ALL {
-        let r = simulate_network(&net, cfg, opts, &model, scheme);
+    for (scheme, r) in Scheme::ALL.into_iter().zip(&results) {
         let total = r.total_cycles();
         let bp = r.phase(Phase::Backward).cycles;
         if scheme == Scheme::Dense {

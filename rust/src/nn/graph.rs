@@ -221,6 +221,43 @@ impl Network {
     pub fn compute_layers(&self) -> Vec<&Layer> {
         self.layers.iter().filter(|l| l.kind.is_compute()).collect()
     }
+
+    /// Structural fingerprint: name, every layer's name/kind/parameters,
+    /// wiring and output shape. Used by the sweep cache (`sim::sweep`) so
+    /// two different networks sharing a name can never alias a cached
+    /// simulation result.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.put_str(&self.name);
+        for l in &self.layers {
+            h.put_str(&l.name);
+            h.put_str(l.kind.label());
+            match l.kind {
+                LayerKind::Conv { m, r, s, stride, pad } => {
+                    h.put(m as u64)
+                        .put(r as u64)
+                        .put(s as u64)
+                        .put(stride as u64)
+                        .put(pad as u64);
+                }
+                LayerKind::DwConv { r, s, stride, pad } => {
+                    h.put(r as u64).put(s as u64).put(stride as u64).put(pad as u64);
+                }
+                LayerKind::Fc { out } => {
+                    h.put(out as u64);
+                }
+                LayerKind::MaxPool { k, stride, pad } | LayerKind::AvgPool { k, stride, pad } => {
+                    h.put(k as u64).put(stride as u64).put(pad as u64);
+                }
+                _ => {}
+            }
+            for &i in &l.inputs {
+                h.put(i as u64);
+            }
+            h.put(l.out.c as u64).put(l.out.h as u64).put(l.out.w as u64);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -274,6 +311,23 @@ mod tests {
         assert_eq!(n.layer(a).out, Shape::new(64, 56, 56));
         let cat = n.concat("cat", &[a, r1]);
         assert_eq!(n.layer(cat).out, Shape::new(128, 56, 56));
+    }
+
+    #[test]
+    fn fingerprint_sees_structure_not_just_name() {
+        let a = tiny();
+        assert_eq!(a.fingerprint(), tiny().fingerprint());
+        // Same layer names and count, different conv width: must differ.
+        let mut b = Network::new("tiny");
+        let x = b.input(3, 8, 8);
+        let c1 = b.conv("c1", x, 8, 3, 1, 1); // 8 filters instead of 16
+        let r1 = b.relu("r1", c1);
+        let c2 = b.conv("c2", r1, 32, 3, 2, 1);
+        let r2 = b.relu("r2", c2);
+        let g = b.gap("gap", r2);
+        let f = b.fc("fc", g, 10);
+        b.softmax("sm", f);
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

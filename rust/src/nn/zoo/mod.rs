@@ -35,8 +35,9 @@ pub fn by_name(name: &str) -> anyhow::Result<Network> {
         "googlenet" | "inception" => Ok(googlenet()),
         "densenet" | "densenet121" | "densenet-121" => Ok(densenet121()),
         "mobilenet" | "mobilenetv1" | "mobilenet-v1" | "mobilenet_v1" => Ok(mobilenet_v1()),
+        "agos_cnn" | "agos-cnn" | "agos" => Ok(agos_cnn()),
         other => anyhow::bail!(
-            "unknown network '{other}' (vgg16|resnet18|googlenet|densenet121|mobilenet)"
+            "unknown network '{other}' (vgg16|resnet18|googlenet|densenet121|mobilenet|agos_cnn)"
         ),
     }
 }
@@ -47,9 +48,10 @@ mod tests {
 
     #[test]
     fn by_name_resolves_all() {
-        for n in ["vgg16", "resnet18", "googlenet", "densenet121", "mobilenet"] {
+        for n in ["vgg16", "resnet18", "googlenet", "densenet121", "mobilenet", "agos_cnn"] {
             assert!(by_name(n).is_ok(), "{n}");
         }
+        assert!(by_name("AGOS_CNN").is_ok(), "case-insensitive");
         assert!(by_name("alexnet").is_err());
     }
 

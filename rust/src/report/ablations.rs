@@ -4,8 +4,7 @@
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::zoo;
-use crate::sim::{simulate_network, PeModel, ReconfigMode};
-use crate::sparsity::SparsityModel;
+use crate::sim::{PeModel, ReconfigMode, SweepPlan};
 
 use super::{Figure, ReportCtx};
 
@@ -19,16 +18,19 @@ pub fn ablation_wr_threshold(ctx: &ReportCtx) -> Figure {
         &["total_cycles_norm", "bp_cycles_norm"],
     );
     fig.notes = "threshold = minimum remaining-work fraction a victim must have (§4.6)".into();
-    // Baseline: threshold 1.0 disables stealing entirely.
-    let run = |thr: f64| {
+    // All threshold points as one parallel plan; thr 1.0 (stealing
+    // disabled) doubles as the normalization baseline.
+    const THRESHOLDS: [f64; 7] = [0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 1.0];
+    let mut plan = SweepPlan::new();
+    for thr in THRESHOLDS {
         let cfg = AcceleratorConfig { wr_threshold: thr, ..ctx.cfg.clone() };
-        simulate_network(&net, &cfg, &ctx.opts, &ctx.model, Scheme::InOutWr)
-    };
-    let base = run(1.0);
+        plan.push(net.clone(), Scheme::InOutWr, &cfg, &ctx.opts);
+    }
+    let runs = ctx.sweep.run(&plan, &ctx.model);
+    let base = &runs[THRESHOLDS.len() - 1];
     let base_total = base.total_cycles();
     let base_bp = base.phase(crate::nn::Phase::Backward).cycles;
-    for thr in [0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 1.0] {
-        let r = run(thr);
+    for (thr, r) in THRESHOLDS.iter().zip(&runs) {
         fig.row(
             &format!("thr={thr:.2}"),
             vec![
@@ -87,10 +89,18 @@ pub fn ablation_grid_scaling(ctx: &ReportCtx) -> Figure {
         "PE-grid scaling (ResNet-18 iteration, IN+OUT+WR)",
         &["cycles", "speedup_vs_8x8", "peak_gflops", "node_power_w"],
     );
+    let grids = [8usize, 12, 16, 24, 32];
+    let cfgs: Vec<AcceleratorConfig> = grids
+        .iter()
+        .map(|&g| AcceleratorConfig { tx: g, ty: g, ..ctx.cfg.clone() })
+        .collect();
+    let mut plan = SweepPlan::new();
+    for cfg in &cfgs {
+        plan.push(net.clone(), Scheme::InOutWr, cfg, &ctx.opts);
+    }
+    let runs = ctx.sweep.run(&plan, &ctx.model);
     let mut base = None;
-    for grid in [8usize, 12, 16, 24, 32] {
-        let cfg = AcceleratorConfig { tx: grid, ty: grid, ..ctx.cfg.clone() };
-        let r = simulate_network(&net, &cfg, &ctx.opts, &ctx.model, Scheme::InOutWr);
+    for ((grid, cfg), r) in grids.iter().zip(&cfgs).zip(&runs) {
         let cycles = r.total_cycles();
         let b = *base.get_or_insert(cycles);
         fig.row(
@@ -104,19 +114,23 @@ pub fn ablation_grid_scaling(ctx: &ReportCtx) -> Figure {
 /// Sensitivity of WR gains to the spatial imbalance level (tile CV).
 pub fn ablation_tile_cv(ctx: &ReportCtx) -> Figure {
     let net = zoo::vgg16();
-    let model = SparsityModel::synthetic(ctx.opts.seed);
     let mut fig = Figure::new(
         "ablation_tile_cv",
         "WR gain vs spatial sparsity imbalance (VGG-16 BP)",
         &["no_wr_cycles", "wr_cycles", "wr_gain"],
     );
     fig.notes = "cv = per-tile density coefficient of variation".into();
-    for cv in [0.0, 0.05, 0.1, 0.2, 0.3] {
+    let cvs = [0.0, 0.05, 0.1, 0.2, 0.3];
+    let mut plan = SweepPlan::new();
+    for &cv in &cvs {
         let opts = SimOptions { tile_sparsity_cv: cv, ..ctx.opts.clone() };
-        let no_wr = simulate_network(&net, &ctx.cfg, &opts, &model, Scheme::InOut);
-        let wr = simulate_network(&net, &ctx.cfg, &opts, &model, Scheme::InOutWr);
-        let a = no_wr.phase(crate::nn::Phase::Backward).cycles;
-        let b = wr.phase(crate::nn::Phase::Backward).cycles;
+        plan.push(net.clone(), Scheme::InOut, &ctx.cfg, &opts);
+        plan.push(net.clone(), Scheme::InOutWr, &ctx.cfg, &opts);
+    }
+    let runs = ctx.sweep.run(&plan, &ctx.model);
+    for (i, cv) in cvs.iter().enumerate() {
+        let a = runs[2 * i].phase(crate::nn::Phase::Backward).cycles;
+        let b = runs[2 * i + 1].phase(crate::nn::Phase::Backward).cycles;
         fig.row(&format!("cv={cv:.2}"), vec![a, b, a / b]);
     }
     fig

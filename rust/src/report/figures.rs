@@ -1,20 +1,21 @@
 //! One generator per paper figure (see DESIGN.md §4 for the mapping).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::config::Scheme;
 use crate::nn::{zoo, Network, Phase};
-use crate::sim::{simulate_network, NetworkSimResult, PeModel, ReconfigMode};
+use crate::sim::{NetworkSimResult, PeModel, ReconfigMode, SweepPlan};
 use crate::sparsity::gradient_sparsity;
 
 use super::{Figure, ReportCtx};
 
-/// Run all four schemes over one network (the common sweep).
-fn sweep(net: &Network, ctx: &ReportCtx) -> BTreeMap<&'static str, NetworkSimResult> {
-    Scheme::ALL
-        .into_iter()
-        .map(|s| (s.label(), simulate_network(net, &ctx.cfg, &ctx.opts, &ctx.model, s)))
-        .collect()
+/// All four schemes over one network — one parallel, cached sweep
+/// through the context's shared executor.
+fn sweep(net: &Network, ctx: &ReportCtx) -> BTreeMap<&'static str, Arc<NetworkSimResult>> {
+    let plan = SweepPlan::grid(std::slice::from_ref(net), &Scheme::ALL, &ctx.cfg, &ctx.opts);
+    let runs = ctx.sweep.run(&plan, &ctx.model);
+    Scheme::ALL.iter().zip(runs).map(|(s, r)| (s.label(), r)).collect()
 }
 
 /// Layer-wise BP speedup bars (the Fig 11/12/13 shape): one row per conv
@@ -224,9 +225,10 @@ pub fn fig17_node(ctx: &ReportCtx) -> Figure {
         &["min", "avg", "max", "avg/max"],
     );
     fig.notes = "sum over the module's conv layers, FP+BP; rows are schemes".into();
+    let runs = sweep(&net, ctx);
     let mut norm = None;
     for scheme in Scheme::ALL {
-        let r = simulate_network(&net, &ctx.cfg, &ctx.opts, &ctx.model, scheme);
+        let r = &runs[scheme.label()];
         let mut min = 0.0;
         let mut mean = 0.0;
         let mut max = 0.0;
@@ -337,6 +339,25 @@ mod tests {
         let wr = f.value("IN+OUT+WR", "avg/max").unwrap();
         assert!(wr > no_wr, "WR {wr:.3} !> no-WR {no_wr:.3}");
         assert!(wr > 0.75, "WR utilization {wr:.3} (paper ~0.83)");
+    }
+
+    #[test]
+    fn figure_generators_share_the_sweep_cache() {
+        // fig11b and fig17 both need GoogLeNet under all four schemes;
+        // through the shared context the second generator must not
+        // simulate anything new.
+        let ctx = ctx();
+        let misses0 = ctx.sweep.cache().misses();
+        let _ = fig11b_googlenet(&ctx);
+        let after_first = ctx.sweep.cache().misses();
+        assert!(after_first > misses0, "first figure must simulate");
+        let _ = fig17_node(&ctx);
+        assert_eq!(
+            ctx.sweep.cache().misses(),
+            after_first,
+            "fig17 must be served from fig11b's sweep"
+        );
+        assert!(ctx.sweep.cache().hits() >= 4);
     }
 
     #[test]

@@ -19,21 +19,34 @@ pub use ablations::{
 };
 pub use tables::{table1_components, table2_platforms};
 
-use crate::config::{AcceleratorConfig, SimOptions};
+use std::sync::Arc;
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::{zoo, Network};
+use crate::sim::{NetworkSimResult, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
 
-/// Everything a figure generator needs.
+/// Everything a figure generator needs, including the shared parallel
+/// sweep executor: all simulations route through `sweep`, so each
+/// (network, scheme, configuration) combo runs at most once per context
+/// no matter how many figures request it.
 pub struct ReportCtx {
     pub cfg: AcceleratorConfig,
     pub opts: SimOptions,
     pub model: SparsityModel,
+    pub sweep: SweepRunner,
 }
 
 impl Default for ReportCtx {
     fn default() -> Self {
         let opts = SimOptions::default();
         let model = SparsityModel::synthetic(opts.seed);
-        ReportCtx { cfg: AcceleratorConfig::default(), opts, model }
+        ReportCtx {
+            cfg: AcceleratorConfig::default(),
+            opts,
+            model,
+            sweep: SweepRunner::new(0),
+        }
     }
 }
 
@@ -42,6 +55,19 @@ impl ReportCtx {
         let mut ctx = ReportCtx::default();
         ctx.opts.batch = batch;
         ctx
+    }
+
+    /// Cached simulation at the context's configuration.
+    pub fn sim(&self, net: &Network, scheme: Scheme) -> Arc<NetworkSimResult> {
+        self.sweep.one(net, &self.cfg, &self.opts, &self.model, scheme)
+    }
+
+    /// One parallel sweep covering every (network, scheme) combo the full
+    /// figure set needs; afterwards generators only hit the cache.
+    pub fn prewarm_all(&self) {
+        let plan =
+            SweepPlan::grid(&zoo::all_networks(), &Scheme::ALL, &self.cfg, &self.opts);
+        self.sweep.run(&plan, &self.model);
     }
 }
 
@@ -69,6 +95,9 @@ pub fn generate(id: &str, ctx: &ReportCtx) -> anyhow::Result<Vec<Figure>> {
             ablation_tile_cv(ctx),
         ]),
         "all" => {
+            // One shared parallel sweep up front; every generator below
+            // (and any repeated combos across figures) hits the cache.
+            ctx.prewarm_all();
             let mut out = Vec::new();
             for id in [
                 "fig3b", "fig3d", "fig11a", "fig11b", "fig12a", "fig12b", "fig13", "fig15",

@@ -53,8 +53,9 @@ pub fn table2_platforms(ctx: &ReportCtx) -> Figure {
     let vgg = zoo::vgg16();
     let resnet = zoo::resnet18();
     for p in all_platforms() {
-        let vgg_ms = iteration_latency_ms(&p, &vgg, &ctx.cfg, &ctx.opts, &ctx.model);
-        let res_ms = iteration_latency_ms(&p, &resnet, &ctx.cfg, &ctx.opts, &ctx.model);
+        let vgg_ms = iteration_latency_ms(&p, &vgg, &ctx.cfg, &ctx.opts, &ctx.model, &ctx.sweep);
+        let res_ms =
+            iteration_latency_ms(&p, &resnet, &ctx.cfg, &ctx.opts, &ctx.model, &ctx.sweep);
         fig.row(
             p.name,
             vec![p.power_w, p.peak_gops, p.energy_eff_gops_w, vgg_ms, res_ms],

@@ -1,0 +1,62 @@
+//! Stub PJRT client for builds without the `pjrt` feature.
+//!
+//! The offline toolchain has no `xla` crate, so the real client
+//! (`client.rs`) cannot compile there. This stub keeps the whole
+//! coordinator/CLI surface compiling — the simulator, sweep and report
+//! layers are fully functional without PJRT — and fails loudly the
+//! moment artifact execution is actually requested.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{ArtifactManifest, HostTensor};
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: this binary was built without the `pjrt` \
+     feature (the offline toolchain has no `xla` crate); rebuild with \
+     `--features pjrt` on a host that provides it to execute AOT artifacts";
+
+/// Stub of the compiled-artifact handle; never constructible.
+pub struct Executable {
+    _private: (),
+}
+
+impl Executable {
+    pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Stub runtime: `load` always fails with an actionable message.
+pub struct Runtime {
+    pub manifest: ArtifactManifest,
+}
+
+impl Runtime {
+    pub fn load(_artifacts_dir: &Path) -> Result<Runtime> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn executable(&mut self, _name: &str) -> Result<&Executable> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn run(&mut self, _name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = Runtime::load(Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

@@ -9,6 +9,13 @@
 
 mod tensor_host;
 mod artifacts;
+// The real client needs the external `xla` crate; the offline build
+// (no `pjrt` feature) swaps in an API-identical stub that fails at
+// `Runtime::load` with an actionable message.
+#[cfg(feature = "pjrt")]
+mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 mod client;
 
 pub use artifacts::{ArtifactManifest, EntrySpec, TensorSpec};

@@ -110,8 +110,9 @@ impl HostTensor {
         Ok(())
     }
 
-    // ---- Literal conversion ------------------------------------------------
+    // ---- Literal conversion (pjrt feature only) ---------------------------
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             HostTensor::F32 { shape, data } => {
@@ -139,6 +140,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit
             .array_shape()
@@ -193,6 +195,7 @@ mod tests {
         std::fs::remove_dir_all(dir).ok();
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32_and_i32() {
         let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();

@@ -1,12 +1,26 @@
-//! Whole-network simulation: builds the per-phase `LayerTask`s from the
-//! graph + sparsity analysis and aggregates results over a batch.
+//! Whole-network simulation, split into two stages:
+//!
+//! 1. **Task construction** ([`build_image_tasks`]) — pure: derives the
+//!    per-(layer, phase) [`LayerTask`]s for one image from the graph and
+//!    its sparsity analysis. No randomness, no ordering constraints.
+//! 2. **Execution** ([`simulate_image`]) — stochastic: runs each task
+//!    through the PE/tile/WDU models, drawing per-tile jitter from a
+//!    *per-image* RNG stream derived from `(seed, image index)` only
+//!    ([`image_stream`]).
+//!
+//! Because every image owns an independent derived stream, per-image
+//! simulations are embarrassingly parallel and results are independent of
+//! batch iteration order and thread count — the determinism contract the
+//! parallel sweep executor (`sim::sweep`) is built on. Aggregation in
+//! [`simulate_network`] always folds images in index order, so totals are
+//! bit-identical however the work was scheduled.
 
 use std::collections::BTreeMap;
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::{Layer, LayerKind, Network, Phase};
 use crate::sparsity::{analyze_network, LayerOpportunity, SparsityModel};
-use crate::util::rng::Pcg32;
+use crate::util::rng::{Pcg32, SplitMix64};
 
 use super::energy::EnergyBreakdown;
 use super::tile::factor2;
@@ -185,7 +199,68 @@ pub fn build_task(
     Some(task)
 }
 
+/// One (layer, phase) unit of accelerator work for a single image —
+/// the pure output of task construction.
+#[derive(Clone, Debug)]
+pub struct ImageTask {
+    pub layer: String,
+    pub phase: Phase,
+    pub task: LayerTask,
+}
+
+/// Pure task construction: every `LayerTask` one image puts on the
+/// accelerator, in deterministic (layer, phase) order. `fwd` is the
+/// image's per-layer forward-sparsity assignment.
+pub fn build_image_tasks(net: &Network, fwd: &[f64]) -> Vec<ImageTask> {
+    let opps = analyze_network(net, fwd);
+    let mut tasks = Vec::new();
+    for opp in &opps {
+        let layer = net.layer(opp.layer);
+        for phase in Phase::ALL {
+            if let Some(task) = build_task(net, layer, phase, opp) {
+                tasks.push(ImageTask { layer: layer.name.clone(), phase, task });
+            }
+        }
+    }
+    tasks
+}
+
+/// Independent RNG stream for one image, derived from `(seed, image)`
+/// only — *not* from any shared mutable generator. This is what makes
+/// per-image simulations order-independent: image `k` draws the same
+/// jitter sequence whether it runs first, last, or on another thread.
+///
+/// The per-image offset multiplier must NOT be SplitMix64's own
+/// increment (0x9E37…7C15): with that constant, image `k+1`'s SplitMix
+/// state equals image `k`'s state after one draw, so adjacent images'
+/// (state, stream) words overlap instead of being independent.
+pub fn image_stream(seed: u64, image: usize) -> Pcg32 {
+    let mut sm = SplitMix64::new(
+        (seed ^ 0x51AB).wrapping_add((image as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)),
+    );
+    Pcg32::with_stream(sm.next_u64(), sm.next_u64())
+}
+
+/// Stochastic execution of one image's tasks; returns one result per
+/// task, parallel to the input slice. `rng` should come from
+/// [`image_stream`] so the draw sequence belongs to this image alone.
+pub fn simulate_image(
+    tasks: &[ImageTask],
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    scheme: Scheme,
+    rng: &mut Pcg32,
+) -> Vec<LayerSimResult> {
+    tasks.iter().map(|t| simulate_layer(&t.task, cfg, opts, scheme, rng)).collect()
+}
+
 /// Simulate a network for a whole batch under one scheme.
+///
+/// Equivalent to building and executing each image independently with its
+/// derived stream, then aggregating in image order — which is exactly
+/// what it does, so the result is reproducible bit-for-bit regardless of
+/// how callers distribute images or (network, scheme) combos over
+/// threads.
 pub fn simulate_network(
     net: &Network,
     cfg: &AcceleratorConfig,
@@ -194,21 +269,16 @@ pub fn simulate_network(
     scheme: Scheme,
 ) -> NetworkSimResult {
     let batch_fwd = model.assign_batch(net, opts.batch);
-    let mut rng = Pcg32::new(opts.seed ^ 0x51AB);
 
-    // name×phase → accumulated results
+    // name×phase → accumulated results, folded in image order.
     let mut agg: BTreeMap<(String, &'static str), Vec<LayerSimResult>> = BTreeMap::new();
 
-    for fwd in &batch_fwd {
-        let opps = analyze_network(net, fwd);
-        for opp in &opps {
-            let layer = net.layer(opp.layer);
-            for phase in Phase::ALL {
-                if let Some(task) = build_task(net, layer, phase, opp) {
-                    let r = simulate_layer(&task, cfg, opts, scheme, &mut rng);
-                    agg.entry((layer.name.clone(), phase.label())).or_default().push(r);
-                }
-            }
+    for (image, fwd) in batch_fwd.iter().enumerate() {
+        let tasks = build_image_tasks(net, fwd);
+        let mut rng = image_stream(opts.seed, image);
+        let results = simulate_image(&tasks, cfg, opts, scheme, &mut rng);
+        for (t, r) in tasks.iter().zip(results) {
+            agg.entry((t.layer.clone(), t.phase.label())).or_default().push(r);
         }
     }
 
@@ -362,5 +432,67 @@ mod tests {
         let dc = sim(&net, Scheme::Dense).total_energy_j();
         let wr = sim(&net, Scheme::InOutWr).total_energy_j();
         assert!(wr < dc, "energy {wr} !< {dc}");
+    }
+
+    #[test]
+    fn image_streams_are_independent_and_reproducible() {
+        let mut a = image_stream(7, 0);
+        let mut a2 = image_stream(7, 0);
+        let mut b = image_stream(7, 1);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let va2: Vec<u32> = (0..8).map(|_| a2.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_eq!(va, va2, "same (seed, image) must give the same stream");
+        assert_ne!(va, vb, "different images must get distinct streams");
+    }
+
+    #[test]
+    fn engine_equals_per_image_composition() {
+        // The whole-batch engine must be exactly the fold of independent
+        // per-image simulations (the parallelism contract).
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 3, ..SimOptions::default() };
+        let model = SparsityModel::synthetic(11);
+        let engine = simulate_network(&net, &cfg, &opts, &model, Scheme::InOutWr);
+
+        let batch = model.assign_batch(&net, opts.batch);
+        let mut cycles: BTreeMap<(String, &'static str), Vec<f64>> = BTreeMap::new();
+        for (image, fwd) in batch.iter().enumerate() {
+            let tasks = build_image_tasks(&net, fwd);
+            let mut rng = image_stream(opts.seed, image);
+            let results = simulate_image(&tasks, &cfg, &opts, Scheme::InOutWr, &mut rng);
+            for (t, r) in tasks.iter().zip(&results) {
+                cycles.entry((t.layer.clone(), t.phase.label())).or_default().push(r.cycles);
+            }
+        }
+        assert_eq!(cycles.len(), engine.per_layer.len());
+        for l in &engine.per_layer {
+            let sum: f64 = cycles[&(l.name.clone(), l.phase.label())].iter().sum();
+            assert_eq!(sum, l.cycles, "{} {}", l.name, l.phase.label());
+        }
+    }
+
+    #[test]
+    fn image_results_do_not_depend_on_batch_order() {
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 2, ..SimOptions::default() };
+        let model = SparsityModel::synthetic(3);
+        let batch = model.assign_batch(&net, opts.batch);
+        let t0 = build_image_tasks(&net, &batch[0]);
+        let t1 = build_image_tasks(&net, &batch[1]);
+
+        // Image 1 simulated cold vs. after image 0: identical draws.
+        let alone =
+            simulate_image(&t1, &cfg, &opts, Scheme::InOutWr, &mut image_stream(opts.seed, 1));
+        let _ = simulate_image(&t0, &cfg, &opts, Scheme::InOutWr, &mut image_stream(opts.seed, 0));
+        let after =
+            simulate_image(&t1, &cfg, &opts, Scheme::InOutWr, &mut image_stream(opts.seed, 1));
+        assert_eq!(alone.len(), after.len());
+        for (a, b) in alone.iter().zip(&after) {
+            assert_eq!(a.cycles, b.cycles, "{}", a.name);
+            assert_eq!(a.performed_macs, b.performed_macs, "{}", a.name);
+        }
     }
 }

@@ -6,6 +6,10 @@
 //! WDU redistribution event loop over tile timelines. MAC/skip counts are
 //! exact in expectation; the stochastic per-tile jitter reproduces the
 //! load-imbalance phenomena of Fig 17.
+//!
+//! Execution is split into pure task construction and per-image
+//! stochastic execution (`engine`), with a parallel cached sweep layer on
+//! top (`sweep`) that every report generator and the CLI route through.
 
 mod pe;
 mod adder_tree;
@@ -17,14 +21,19 @@ mod energy;
 mod layer_exec;
 mod engine;
 mod exact;
+mod sweep;
 
 pub use adder_tree::{tree_utilization, ReconfigMode};
 pub use exact::{random_bitmap, ExactOutput, ExactPe};
 pub use blocking::synapse_passes;
 pub use energy::{layer_energy, EnergyBreakdown};
-pub use engine::{build_task, simulate_network, LayerAgg, NetworkSimResult, PhaseTotals};
+pub use engine::{
+    build_image_tasks, build_task, image_stream, simulate_image, simulate_network, ImageTask,
+    LayerAgg, NetworkSimResult, PhaseTotals,
+};
 pub use layer_exec::{simulate_layer, LayerSimResult, LayerTask};
 pub use memory::{layer_traffic, MemoryModel};
 pub use pe::{expected_lane_max, expected_max_std_normal, PeModel};
+pub use sweep::{SweepCache, SweepCombo, SweepKey, SweepPlan, SweepRunner};
 pub use tile::{tile_outputs, TileState};
 pub use wdu::{redistribute, WduOutcome};

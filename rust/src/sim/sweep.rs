@@ -1,0 +1,363 @@
+//! Parallel, cached (network × scheme × configuration) simulation sweeps.
+//!
+//! The paper's headline artifacts (Figs 11–17, Table 2) are all grids of
+//! independent whole-network simulations. This module is the one shared
+//! execution layer for those grids:
+//!
+//! * [`SweepPlan`] — a declarative list of (network, scheme, config)
+//!   combos; [`SweepPlan::grid`] builds the common cross product.
+//! * [`SweepRunner`] — executes a plan on a worker pool
+//!   (`std::thread::scope` + mpsc, the same idiom as
+//!   `coordinator::pipeline`; no external crates) with a `jobs` knob.
+//! * [`SweepCache`] — keyed by `(network name, scheme, config
+//!   fingerprint)`, so every distinct combo simulates **at most once per
+//!   process**, no matter how many figures, tables or ablation points ask
+//!   for it.
+//!
+//! Results are bit-identical to running `simulate_network` sequentially:
+//! the engine derives an independent RNG stream per image
+//! (`engine::image_stream`), so a combo's result does not depend on when
+//! or where it executed, and plan outputs are assembled in plan order.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::Network;
+use crate::sparsity::SparsityModel;
+
+use super::engine::{simulate_network, NetworkSimResult};
+
+/// Cache identity of one simulation: everything that can change the
+/// result — the network (name *and* structure), the scheme, and the
+/// fingerprints of the hardware config, the sim options and the sparsity
+/// model (see the `fingerprint()` methods on `AcceleratorConfig`,
+/// `SimOptions`, `SparsityModel` and `Network`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SweepKey {
+    pub network: String,
+    pub scheme: Scheme,
+    pub fingerprint: u64,
+}
+
+impl SweepKey {
+    pub fn new(
+        net: &Network,
+        scheme: Scheme,
+        cfg: &AcceleratorConfig,
+        opts: &SimOptions,
+        model: &SparsityModel,
+    ) -> SweepKey {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.put(net.fingerprint())
+            .put(cfg.fingerprint())
+            .put(opts.fingerprint())
+            .put(model.fingerprint());
+        SweepKey { network: net.name.clone(), scheme, fingerprint: h.finish() }
+    }
+}
+
+/// One simulation the plan requests. Carries the network by value so
+/// workers need no registry lookup (custom networks work too).
+#[derive(Clone, Debug)]
+pub struct SweepCombo {
+    pub network: Network,
+    pub scheme: Scheme,
+    pub cfg: AcceleratorConfig,
+    pub opts: SimOptions,
+}
+
+impl SweepCombo {
+    fn key(&self, model: &SparsityModel) -> SweepKey {
+        SweepKey::new(&self.network, self.scheme, &self.cfg, &self.opts, model)
+    }
+}
+
+/// A declarative sweep: the combos to simulate, in output order.
+#[derive(Clone, Debug, Default)]
+pub struct SweepPlan {
+    pub combos: Vec<SweepCombo>,
+}
+
+impl SweepPlan {
+    pub fn new() -> SweepPlan {
+        SweepPlan { combos: Vec::new() }
+    }
+
+    /// Cross product `networks × schemes` at one configuration, ordered
+    /// network-major (combo `i` is `networks[i / schemes.len()]` under
+    /// `schemes[i % schemes.len()]`).
+    pub fn grid(
+        networks: &[Network],
+        schemes: &[Scheme],
+        cfg: &AcceleratorConfig,
+        opts: &SimOptions,
+    ) -> SweepPlan {
+        let mut plan = SweepPlan::new();
+        for net in networks {
+            for &scheme in schemes {
+                plan.push(net.clone(), scheme, cfg, opts);
+            }
+        }
+        plan
+    }
+
+    pub fn push(
+        &mut self,
+        network: Network,
+        scheme: Scheme,
+        cfg: &AcceleratorConfig,
+        opts: &SimOptions,
+    ) {
+        self.combos.push(SweepCombo { network, scheme, cfg: cfg.clone(), opts: opts.clone() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.combos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.combos.is_empty()
+    }
+}
+
+/// Process-wide result cache keyed by [`SweepKey`].
+#[derive(Debug, Default)]
+pub struct SweepCache {
+    map: Mutex<HashMap<SweepKey, Arc<NetworkSimResult>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl SweepCache {
+    pub fn new() -> SweepCache {
+        SweepCache::default()
+    }
+
+    /// Look a result up without touching the hit/miss counters.
+    pub fn peek(&self, key: &SweepKey) -> Option<Arc<NetworkSimResult>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn insert(&self, key: SweepKey, result: Arc<NetworkSimResult>) {
+        self.map.lock().unwrap().insert(key, result);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Requests served from the cache (or deduplicated within a plan).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Requests that required a fresh simulation.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Worker-pool sweep executor with a shared [`SweepCache`].
+#[derive(Debug)]
+pub struct SweepRunner {
+    /// Worker threads used per `run` call (resolved; never 0).
+    pub jobs: usize,
+    cache: SweepCache,
+}
+
+impl SweepRunner {
+    /// `jobs == 0` selects the host's available parallelism.
+    pub fn new(jobs: usize) -> SweepRunner {
+        let jobs = if jobs == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            jobs
+        };
+        SweepRunner { jobs, cache: SweepCache::new() }
+    }
+
+    pub fn cache(&self) -> &SweepCache {
+        &self.cache
+    }
+
+    /// Cached single simulation at an explicit configuration.
+    pub fn one(
+        &self,
+        net: &Network,
+        cfg: &AcceleratorConfig,
+        opts: &SimOptions,
+        model: &SparsityModel,
+        scheme: Scheme,
+    ) -> Arc<NetworkSimResult> {
+        let key = SweepKey::new(net, scheme, cfg, opts, model);
+        if let Some(r) = self.cache.peek(&key) {
+            self.cache.note_hit();
+            return r;
+        }
+        self.cache.note_miss();
+        let r = Arc::new(simulate_network(net, cfg, opts, model, scheme));
+        self.cache.insert(key, r.clone());
+        r
+    }
+
+    /// Execute a plan: deduplicate against the cache and within the plan,
+    /// simulate the remaining combos on up to `jobs` worker threads, and
+    /// return one result per combo in plan order. Bit-identical to
+    /// sequential execution (see module docs).
+    pub fn run(&self, plan: &SweepPlan, model: &SparsityModel) -> Vec<Arc<NetworkSimResult>> {
+        let keys: Vec<SweepKey> = plan.combos.iter().map(|c| c.key(model)).collect();
+
+        // Combo indices that actually need a fresh simulation.
+        let mut leaders: Vec<usize> = Vec::new();
+        {
+            let mut seen: HashSet<&SweepKey> = HashSet::new();
+            for (i, key) in keys.iter().enumerate() {
+                if self.cache.peek(key).is_some() || !seen.insert(key) {
+                    self.cache.note_hit();
+                } else {
+                    self.cache.note_miss();
+                    leaders.push(i);
+                }
+            }
+        }
+
+        if !leaders.is_empty() {
+            let jobs = self.jobs.clamp(1, leaders.len());
+            let next = AtomicUsize::new(0);
+            let (tx, rx) = mpsc::channel::<(usize, NetworkSimResult)>();
+            thread::scope(|s| {
+                for _ in 0..jobs {
+                    let tx = tx.clone();
+                    let next = &next;
+                    let leaders = &leaders;
+                    s.spawn(move || loop {
+                        let w = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(&i) = leaders.get(w) else { break };
+                        let c = &plan.combos[i];
+                        let r = simulate_network(&c.network, &c.cfg, &c.opts, model, c.scheme);
+                        if tx.send((i, r)).is_err() {
+                            break;
+                        }
+                    });
+                }
+                drop(tx);
+                while let Ok((i, r)) = rx.recv() {
+                    self.cache.insert(keys[i].clone(), Arc::new(r));
+                }
+            });
+        }
+
+        keys.iter()
+            .map(|k| self.cache.peek(k).expect("every plan combo was simulated or cached"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn small_opts() -> SimOptions {
+        SimOptions { batch: 1, ..SimOptions::default() }
+    }
+
+    #[test]
+    fn grid_orders_network_major() {
+        let nets = [zoo::agos_cnn()];
+        let plan =
+            SweepPlan::grid(&nets, &Scheme::ALL, &AcceleratorConfig::default(), &small_opts());
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.combos[0].scheme, Scheme::Dense);
+        assert_eq!(plan.combos[3].scheme, Scheme::InOutWr);
+        assert!(plan.combos.iter().all(|c| c.network.name == "agos_cnn"));
+    }
+
+    #[test]
+    fn key_tracks_every_input_of_a_simulation() {
+        let cfg = AcceleratorConfig::default();
+        let opts = small_opts();
+        let model = SparsityModel::synthetic(opts.seed);
+        let net = zoo::agos_cnn();
+        let a = SweepKey::new(&net, Scheme::Dense, &cfg, &opts, &model);
+        assert_eq!(a, SweepKey::new(&net, Scheme::Dense, &cfg, &opts, &model));
+        assert_ne!(a, SweepKey::new(&zoo::resnet18(), Scheme::Dense, &cfg, &opts, &model));
+        assert_ne!(a, SweepKey::new(&net, Scheme::In, &cfg, &opts, &model));
+        let opts2 = SimOptions { batch: 2, ..opts.clone() };
+        assert_ne!(a, SweepKey::new(&net, Scheme::Dense, &cfg, &opts2, &model));
+        let cfg2 = AcceleratorConfig { tx: 8, ..cfg.clone() };
+        assert_ne!(a, SweepKey::new(&net, Scheme::Dense, &cfg2, &opts, &model));
+        // A different sparsity model (measured vs synthetic, same seed)
+        // must never be served the synthetic result.
+        let mut measured = std::collections::BTreeMap::new();
+        measured.insert("relu1".to_string(), 0.5);
+        let model2 = SparsityModel::measured(opts.seed, measured);
+        assert_ne!(a, SweepKey::new(&net, Scheme::Dense, &cfg, &opts, &model2));
+        // A structurally different network sharing the name must miss.
+        let mut alias = crate::nn::Network::new("agos_cnn");
+        let x = alias.input(3, 32, 32);
+        let c = alias.conv("conv1", x, 8, 3, 1, 1);
+        let r = alias.relu("relu1", c);
+        alias.softmax("prob", r);
+        assert_ne!(a, SweepKey::new(&alias, Scheme::Dense, &cfg, &opts, &model));
+    }
+
+    #[test]
+    fn duplicate_combos_simulate_once() {
+        let runner = SweepRunner::new(2);
+        let cfg = AcceleratorConfig::default();
+        let opts = small_opts();
+        let model = SparsityModel::synthetic(opts.seed);
+        let mut plan = SweepPlan::new();
+        plan.push(zoo::agos_cnn(), Scheme::Dense, &cfg, &opts);
+        plan.push(zoo::agos_cnn(), Scheme::Dense, &cfg, &opts);
+        let out = runner.run(&plan, &model);
+        assert_eq!(out.len(), 2);
+        assert!(Arc::ptr_eq(&out[0], &out[1]), "duplicates must share one result");
+        assert_eq!(runner.cache().misses(), 1);
+        assert_eq!(runner.cache().hits(), 1);
+
+        // A second run of the same plan is served entirely from cache.
+        let again = runner.run(&plan, &model);
+        assert_eq!(runner.cache().misses(), 1);
+        assert_eq!(runner.cache().hits(), 3);
+        assert!(Arc::ptr_eq(&again[0], &out[0]));
+    }
+
+    #[test]
+    fn one_is_cached_and_matches_engine() {
+        let runner = SweepRunner::new(1);
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let opts = small_opts();
+        let model = SparsityModel::synthetic(opts.seed);
+        let a = runner.one(&net, &cfg, &opts, &model, Scheme::InOut);
+        let b = runner.one(&net, &cfg, &opts, &model, Scheme::InOut);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(runner.cache().misses(), 1);
+        let direct = simulate_network(&net, &cfg, &opts, &model, Scheme::InOut);
+        assert_eq!(a.total_cycles(), direct.total_cycles());
+        assert_eq!(a.total_energy_j(), direct.total_energy_j());
+    }
+
+    #[test]
+    fn zero_jobs_resolves_to_host_parallelism() {
+        assert!(SweepRunner::new(0).jobs >= 1);
+        assert_eq!(SweepRunner::new(3).jobs, 3);
+    }
+}

@@ -15,6 +15,7 @@
 use std::collections::BTreeMap;
 
 use crate::nn::{LayerId, LayerKind, Network};
+use crate::util::fnv::Fnv1a;
 use crate::util::rng::Pcg32;
 
 /// Where the per-layer sparsity fractions come from.
@@ -53,6 +54,27 @@ impl SparsityModel {
             maxpool_attenuation: 0.6,
             avgpool_attenuation: 0.1,
         }
+    }
+
+    /// Stable 64-bit fingerprint over everything that changes the
+    /// per-layer assignment — source variant, seed, measured fractions
+    /// and the pool attenuations — one component of the sweep-cache key
+    /// (`sim::sweep`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        match &self.source {
+            TraceSource::Synthetic { seed } => {
+                h.put(1).put(*seed);
+            }
+            TraceSource::Measured { seed, by_name } => {
+                h.put(2).put(*seed);
+                for (name, s) in by_name {
+                    h.put_str(name).put_f64(*s);
+                }
+            }
+        }
+        h.put_f64(self.maxpool_attenuation).put_f64(self.avgpool_attenuation);
+        h.finish()
     }
 
     /// ReLU sparsity band per network family (lo, hi), calibrated to the
@@ -174,13 +196,10 @@ fn repropagate(net: &Network, fwd: &mut [f64], model: &SparsityModel) {
 }
 
 fn hash_name(name: &str) -> u64 {
-    // FNV-1a
-    let mut h = 0xcbf29ce484222325u64;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    // Classic byte-wise FNV-1a (same values as before the shared helper).
+    let mut h = Fnv1a::new();
+    h.put_bytes(name.as_bytes());
+    h.finish()
 }
 
 #[cfg(test)]

@@ -1,0 +1,91 @@
+//! 64-bit FNV-1a folding — the one hashing implementation behind name
+//! hashing and every fingerprint that feeds the sweep cache key
+//! (`AcceleratorConfig`, `SimOptions`, `SparsityModel`, `Network`).
+//! Keeping a single copy guarantees cache-key components can never
+//! desynchronize.
+
+const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Incremental FNV-1a hasher. `put_bytes` is the classic byte-wise
+/// FNV-1a; `put`/`put_f64` fold whole words (the fingerprint variant).
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(OFFSET)
+    }
+
+    #[inline]
+    pub fn put(&mut self, x: u64) -> &mut Fnv1a {
+        self.0 = (self.0 ^ x).wrapping_mul(PRIME);
+        self
+    }
+
+    #[inline]
+    pub fn put_f64(&mut self, x: f64) -> &mut Fnv1a {
+        self.put(x.to_bits())
+    }
+
+    #[inline]
+    pub fn put_bytes(&mut self, bytes: &[u8]) -> &mut Fnv1a {
+        for &b in bytes {
+            self.put(b as u64);
+        }
+        self
+    }
+
+    /// Hash a string plus its length, so adjacent strings cannot alias
+    /// ("ab","c" vs "a","bc").
+    #[inline]
+    pub fn put_str(&mut self, s: &str) -> &mut Fnv1a {
+        self.put_bytes(s.as_bytes());
+        self.put(s.len() as u64)
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_fnv1a_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(Fnv1a::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv1a::new();
+        h.put_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv1a::new();
+        h.put_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn put_str_separates_boundaries() {
+        let mut a = Fnv1a::new();
+        a.put_str("ab").put_str("c");
+        let mut b = Fnv1a::new();
+        b.put_str("a").put_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn word_and_float_folds_differ_by_input() {
+        let mut a = Fnv1a::new();
+        a.put(1).put_f64(0.5);
+        let mut b = Fnv1a::new();
+        b.put(1).put_f64(0.25);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -6,6 +6,7 @@
 //! a property-testing loop — are implemented here, each small, documented
 //! and unit-tested.
 
+pub mod fnv;
 pub mod rng;
 pub mod json;
 pub mod stats;

@@ -1,0 +1,124 @@
+//! The sweep layer's contract (ISSUE 1 acceptance):
+//!
+//! * **Golden**: a parallel four-scheme sweep of one network produces
+//!   bit-identical `NetworkSimResult`s to the sequential engine.
+//! * **Cache**: the same combo requested twice simulates exactly once.
+//! * **Determinism**: results are independent of the `--jobs` level and
+//!   of batch iteration order (per-image derived RNG streams).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::nn::zoo;
+use agos::sim::{
+    build_image_tasks, image_stream, simulate_image, simulate_network, NetworkSimResult,
+    SweepPlan, SweepRunner,
+};
+use agos::sparsity::SparsityModel;
+
+fn assert_identical(a: &NetworkSimResult, b: &NetworkSimResult) {
+    assert_eq!(a.network, b.network);
+    assert_eq!(a.scheme, b.scheme);
+    assert_eq!(a.total_cycles(), b.total_cycles(), "{} {}", a.network, a.scheme.label());
+    assert_eq!(a.total_energy_j(), b.total_energy_j());
+    for (pa, pb) in a.totals.values().zip(b.totals.values()) {
+        assert_eq!(pa.cycles, pb.cycles);
+        assert_eq!(pa.dense_macs, pb.dense_macs);
+        assert_eq!(pa.performed_macs, pb.performed_macs);
+    }
+    assert_eq!(a.per_layer.len(), b.per_layer.len());
+    for (la, lb) in a.per_layer.iter().zip(&b.per_layer) {
+        assert_eq!(la.name, lb.name);
+        assert_eq!(la.phase, lb.phase);
+        assert_eq!(la.cycles, lb.cycles, "{} {}", la.name, la.phase.label());
+        assert_eq!(la.performed_macs, lb.performed_macs, "{}", la.name);
+        assert_eq!(la.tile_utilization, lb.tile_utilization, "{}", la.name);
+    }
+}
+
+#[test]
+fn golden_parallel_sweep_matches_sequential_engine() {
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 2, ..SimOptions::default() };
+    let model = SparsityModel::synthetic(opts.seed);
+    let net = zoo::vgg16();
+
+    let runner = SweepRunner::new(4);
+    let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, &cfg, &opts);
+    let parallel = runner.run(&plan, &model);
+    assert_eq!(parallel.len(), 4);
+
+    for (scheme, got) in Scheme::ALL.into_iter().zip(&parallel) {
+        let sequential = simulate_network(&net, &cfg, &opts, &model, scheme);
+        assert_identical(got, &sequential);
+    }
+}
+
+#[test]
+fn same_combo_twice_simulates_once() {
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 1, ..SimOptions::default() };
+    let model = SparsityModel::synthetic(opts.seed);
+    let runner = SweepRunner::new(4);
+
+    let mut plan = SweepPlan::new();
+    plan.push(zoo::agos_cnn(), Scheme::InOutWr, &cfg, &opts);
+    plan.push(zoo::agos_cnn(), Scheme::InOutWr, &cfg, &opts);
+    let out = runner.run(&plan, &model);
+    assert!(Arc::ptr_eq(&out[0], &out[1]), "one simulation must serve both requests");
+    assert_eq!(runner.cache().misses(), 1, "exactly one fresh simulation");
+    assert_eq!(runner.cache().hits(), 1);
+
+    // `one()` after the plan is a pure cache hit as well.
+    let again = runner.one(&zoo::agos_cnn(), &cfg, &opts, &model, Scheme::InOutWr);
+    assert!(Arc::ptr_eq(&again, &out[0]));
+    assert_eq!(runner.cache().misses(), 1);
+}
+
+#[test]
+fn results_are_independent_of_jobs_level() {
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 1, ..SimOptions::default() };
+    let model = SparsityModel::synthetic(0xBEEF);
+    let nets = [zoo::agos_cnn(), zoo::resnet18()];
+    let plan = SweepPlan::grid(&nets, &Scheme::ALL, &cfg, &opts);
+
+    let serial = SweepRunner::new(1).run(&plan, &model);
+    let threaded = SweepRunner::new(4).run(&plan, &model);
+    assert_eq!(serial.len(), threaded.len());
+    for (a, b) in serial.iter().zip(&threaded) {
+        assert_identical(a, b);
+    }
+}
+
+#[test]
+fn engine_totals_equal_independent_per_image_simulations() {
+    // The decomposition the executor relies on: the batch engine is the
+    // image-order fold of independent per-image simulations, each with
+    // its own (seed, image)-derived stream.
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 4, ..SimOptions::default() };
+    let model = SparsityModel::synthetic(21);
+    let net = zoo::agos_cnn();
+    let scheme = Scheme::InOutWr;
+    let engine = simulate_network(&net, &cfg, &opts, &model, scheme);
+
+    let batch = model.assign_batch(&net, opts.batch);
+    let mut per_combo: BTreeMap<(String, &'static str), Vec<f64>> = BTreeMap::new();
+    // Simulate images in reverse order: must not matter.
+    for image in (0..batch.len()).rev() {
+        let tasks = build_image_tasks(&net, &batch[image]);
+        let mut rng = image_stream(opts.seed, image);
+        let results = simulate_image(&tasks, &cfg, &opts, scheme, &mut rng);
+        for (t, r) in tasks.iter().zip(&results) {
+            let e = per_combo.entry((t.layer.clone(), t.phase.label())).or_default();
+            // Keep image order inside each group for bit-equal folds.
+            e.insert(0, r.cycles);
+        }
+    }
+    for l in &engine.per_layer {
+        let cycles: f64 = per_combo[&(l.name.clone(), l.phase.label())].iter().sum();
+        assert_eq!(cycles, l.cycles, "{} {}", l.name, l.phase.label());
+    }
+}
