@@ -4,7 +4,7 @@
 //! all-scheme sweep is persisted to `BENCH_sweep.json` so the perf
 //! trajectory is tracked across PRs.
 
-use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions};
 use agos::nn::zoo;
 use agos::sim::{
     redistribute, simulate_layer, simulate_network, LayerTask, PeModel, SweepPlan, SweepRunner,
@@ -79,6 +79,27 @@ fn main() {
     if jobs > 1 {
         b.case(&format!("sweep_googlenet_4schemes_jobs{jobs}"), || run_sweep(jobs));
     }
+
+    // Execution backends head-to-head on the traced CNN (the exact
+    // backend's production-size configuration, 64 sampled outputs/tile).
+    let anet = zoo::agos_cnn();
+    let analytic_opts = SimOptions {
+        batch: 1,
+        backend: ExecBackend::Analytic,
+        ..SimOptions::default()
+    };
+    let exact_opts = SimOptions {
+        batch: 1,
+        backend: ExecBackend::Exact,
+        exact_outputs_per_tile: 64,
+        ..SimOptions::default()
+    };
+    b.case("backend_analytic_agos_b1", || {
+        simulate_network(&anet, &cfg, &analytic_opts, &model, Scheme::InOutWr).total_cycles()
+    });
+    b.case("backend_exact_agos_b1", || {
+        simulate_network(&anet, &cfg, &exact_opts, &model, Scheme::InOutWr).total_cycles()
+    });
     b.finish();
 
     // Persist the sweep trajectory point (sequential vs parallel).
@@ -91,6 +112,8 @@ fn main() {
     };
     let seq = find("_jobs1");
     let par = if jobs > 1 { find(&format!("_jobs{jobs}")) } else { seq };
+    let analytic = find("backend_analytic_agos_b1");
+    let exact = find("backend_exact_agos_b1");
     let j = Json::from_pairs(vec![
         ("bench", "sweep_googlenet_4schemes".into()),
         ("network", "googlenet".into()),
@@ -102,6 +125,12 @@ fn main() {
         ("par_mean_s", par.mean.into()),
         ("par_std_s", par.std.into()),
         ("speedup", (seq.mean / par.mean).into()),
+        // Backend head-to-head (agos_cnn b1, IN+OUT+WR, 64 outputs/tile).
+        ("backend_analytic_mean_s", analytic.mean.into()),
+        ("backend_analytic_std_s", analytic.std.into()),
+        ("backend_exact_mean_s", exact.mean.into()),
+        ("backend_exact_std_s", exact.std.into()),
+        ("backend_exact_slowdown", (exact.mean / analytic.mean).into()),
     ]);
     j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
     println!(

@@ -13,7 +13,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::config::{AcceleratorConfig, Scheme, SimOptions, TrainOptions};
+use crate::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions, TrainOptions};
 use crate::coordinator::{cosim_from_traces, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
@@ -52,6 +52,8 @@ fn app() -> App {
                     opt("batch", "batch size (default 16)"),
                     opt("seed", "sparsity model seed"),
                     opt("config", "accelerator config JSON file"),
+                    opt("backend", "analytic|exact execution backend (default analytic)"),
+                    opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
                 ],
             },
             Command {
@@ -64,17 +66,23 @@ fn app() -> App {
                     opt("seed", "sparsity model seed"),
                     opt("jobs", "worker threads (default: all cores)"),
                     opt("config", "accelerator config JSON file"),
+                    opt("backend", "analytic|exact execution backend (default analytic)"),
+                    opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
                     opt("out", "write sweep results JSON here"),
                 ],
             },
             Command {
                 name: "figure",
-                about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b fig13 fig15 fig16 fig17 | ablations | all)",
+                about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b fig13 fig15 fig16 fig17 figval | ablations | all)",
                 opts: vec![
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
                     opt("seed", "sparsity model seed"),
                     opt("jobs", "sweep worker threads (default: all cores)"),
+                    opt("backend", "analytic|exact execution backend (default analytic)"),
+                    opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
                 ],
             },
             Command {
@@ -84,6 +92,9 @@ fn app() -> App {
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
                     opt("jobs", "sweep worker threads (default: all cores)"),
+                    opt("backend", "analytic|exact execution backend (default analytic)"),
+                    opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
                 ],
             },
             Command {
@@ -97,6 +108,8 @@ fn app() -> App {
                 opts: vec![
                     opt("traces", "trace JSON from `agos train --out`"),
                     opt("batch", "batch size (default 16)"),
+                    opt("backend", "analytic|exact execution backend (default analytic)"),
+                    opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
                 ],
             },
             Command {
@@ -132,12 +145,66 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     }
 }
 
+/// Default on-disk spill location for the sweep cache.
+const SWEEP_CACHE_PATH: &str = "results/sweep-cache.json";
+
+/// Apply the shared `--backend`/`--exact-cap` selectors to sim options.
+fn apply_backend_opts(opts: &mut SimOptions, args: &Args) -> anyhow::Result<()> {
+    if let Some(b) = args.opt("backend") {
+        opts.backend = ExecBackend::parse(b)?;
+    }
+    opts.exact_outputs_per_tile =
+        args.opt_usize("exact-cap", opts.exact_outputs_per_tile)?;
+    Ok(())
+}
+
+/// Resolve `--cache` (default `results/sweep-cache.json`; "none" disables).
+fn sweep_cache_path(args: &Args) -> Option<PathBuf> {
+    match args.opt_or("cache", SWEEP_CACHE_PATH) {
+        "none" | "off" => None,
+        p => Some(PathBuf::from(p)),
+    }
+}
+
+/// Warm a runner from the on-disk spill; a corrupt file only warns so a
+/// stale cache can never block a sweep.
+fn load_sweep_cache(runner: &SweepRunner, path: &Option<PathBuf>) {
+    if let Some(p) = path {
+        match runner.cache().load_file(p) {
+            Ok(n) if n > 0 => println!("sweep cache: loaded {n} results from {}", p.display()),
+            Ok(_) => {}
+            Err(e) => eprintln!("sweep cache: ignoring {}: {e}", p.display()),
+        }
+    }
+}
+
+fn save_sweep_cache(runner: &SweepRunner, path: &Option<PathBuf>) {
+    if let Some(p) = path {
+        // Nothing simulated → nothing new to spill; don't create
+        // results/ (or rewrite the file) as a side effect of a pure
+        // cache-hit or simulation-free command.
+        if runner.cache().misses() == 0 {
+            return;
+        }
+        match runner.cache().save_file(p) {
+            Ok(()) => println!(
+                "sweep cache: {} results spilled to {}",
+                runner.cache().len(),
+                p.display()
+            ),
+            Err(e) => eprintln!("sweep cache: failed to write {}: {e}", p.display()),
+        }
+    }
+}
+
 fn ctx_from(args: &Args) -> anyhow::Result<ReportCtx> {
     let mut ctx = ReportCtx::default();
     ctx.opts.batch = args.opt_usize("batch", 16)?;
     ctx.opts.seed = args.opt_u64("seed", ctx.opts.seed)?;
+    apply_backend_opts(&mut ctx.opts, args)?;
     ctx.model = SparsityModel::synthetic(ctx.opts.seed);
     ctx.sweep = SweepRunner::new(args.opt_usize("jobs", 0)?);
+    load_sweep_cache(&ctx.sweep, &sweep_cache_path(args));
     Ok(ctx)
 }
 
@@ -189,11 +256,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
     let mut opts = SimOptions::default();
     opts.batch = args.opt_usize("batch", 16)?;
     opts.seed = args.opt_u64("seed", opts.seed)?;
+    apply_backend_opts(&mut opts, args)?;
     let model = SparsityModel::synthetic(opts.seed);
 
     let dc = simulate_network(&net, &cfg, &opts, &model, Scheme::Dense);
     let r = simulate_network(&net, &cfg, &opts, &model, scheme);
-    println!("network {} scheme {} batch {}", net.name, scheme.label(), opts.batch);
+    println!(
+        "network {} scheme {} batch {} backend {}",
+        net.name,
+        scheme.label(),
+        opts.batch,
+        opts.backend.label()
+    );
     for phase in Phase::ALL {
         let t = r.phase(phase);
         let d = dc.phase(phase);
@@ -233,8 +307,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
     let mut opts = SimOptions::default();
     opts.batch = args.opt_usize("batch", 16)?;
     opts.seed = args.opt_u64("seed", opts.seed)?;
+    apply_backend_opts(&mut opts, args)?;
     let model = SparsityModel::synthetic(opts.seed);
     let runner = SweepRunner::new(args.opt_usize("jobs", 0)?);
+    let cache_path = sweep_cache_path(args);
+    load_sweep_cache(&runner, &cache_path);
 
     let plan = SweepPlan::grid(&nets, &schemes, &cfg, &opts);
     let t0 = std::time::Instant::now();
@@ -275,17 +352,20 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
         }
     }
     println!(
-        "sweep: {} combos ({} simulated, {} cache hits) on {} threads in {elapsed:.2}s",
+        "sweep: {} combos ({} simulated, {} cache hits) on {} threads [{}] in {elapsed:.2}s",
         plan.len(),
         runner.cache().misses(),
         runner.cache().hits(),
         runner.jobs,
+        opts.backend.label(),
     );
+    save_sweep_cache(&runner, &cache_path);
     if let Some(out) = args.opt("out") {
         let path = Path::new(out);
         let j = Json::from_pairs(vec![
             ("batch", opts.batch.into()),
             ("seed", opts.seed.into()),
+            ("backend", opts.backend.label().into()),
             ("jobs", runner.jobs.into()),
             ("elapsed_s", elapsed.into()),
             ("combos", combos),
@@ -300,17 +380,24 @@ fn cmd_figure(args: &Args) -> anyhow::Result<i32> {
     let ids = args.positional();
     anyhow::ensure!(!ids.is_empty(), "give a figure/table id (or 'all')");
     let ctx = ctx_from(args)?;
-    for id in ids {
-        for fig in generate(id, &ctx)? {
-            print!("{}", fig.render());
-            println!();
-            if let Some(dir) = args.opt("out") {
-                fig.save(Path::new(dir))?;
-                println!("wrote {}/{}.json", dir, fig.id);
+    let emit = || -> anyhow::Result<()> {
+        for id in ids {
+            for fig in generate(id, &ctx)? {
+                print!("{}", fig.render());
+                println!();
+                if let Some(dir) = args.opt("out") {
+                    fig.save(Path::new(dir))?;
+                    println!("wrote {}/{}.json", dir, fig.id);
+                }
             }
         }
-    }
-    Ok(0)
+        Ok(())
+    };
+    // Spill whatever simulated even when a later id fails — a bad id or
+    // unwritable --out must not discard an expensive (exact) sweep.
+    let outcome = emit();
+    save_sweep_cache(&ctx.sweep, &sweep_cache_path(args));
+    outcome.map(|()| 0)
 }
 
 fn cmd_sparsity(args: &Args) -> anyhow::Result<i32> {
@@ -341,10 +428,11 @@ fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
     let traces = TraceFile::load(Path::new(path))?;
     let mut opts = SimOptions::default();
     opts.batch = args.opt_usize("batch", 16)?;
+    apply_backend_opts(&mut opts, args)?;
     let report = cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts)?;
     println!(
-        "co-simulation of '{}' (mean measured sparsity {:.2})",
-        report.network, report.mean_sparsity
+        "co-simulation of '{}' [{} backend] (mean measured sparsity {:.2})",
+        report.network, report.backend, report.mean_sparsity
     );
     for (scheme, total, bp, energy) in &report.rows {
         println!("  {scheme:<10} total {total:>14.0} cycles  BP {bp:>12.0}  {energy:.4} J");
@@ -418,7 +506,10 @@ mod tests {
 
     #[test]
     fn fig16_fast_path_runs() {
-        assert_eq!(run(&sv(&["figure", "fig16", "--batch", "1"])).unwrap(), 0);
+        assert_eq!(
+            run(&sv(&["figure", "fig16", "--batch", "1", "--cache", "none"])).unwrap(),
+            0
+        );
     }
 
     #[test]
@@ -434,6 +525,8 @@ mod tests {
                 "1",
                 "--jobs",
                 "2",
+                "--cache",
+                "none",
             ]))
             .unwrap(),
             0
@@ -444,5 +537,96 @@ mod tests {
     fn sweep_rejects_unknown_network_and_scheme() {
         assert!(run(&sv(&["sweep", "--networks", "lenet", "--batch", "1"])).is_err());
         assert!(run(&sv(&["sweep", "--schemes", "bogus", "--batch", "1"])).is_err());
+        assert!(run(&sv(&[
+            "sweep", "--networks", "agos_cnn", "--batch", "1", "--backend", "fpga"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn simulate_exact_backend_runs() {
+        assert_eq!(
+            run(&sv(&[
+                "simulate",
+                "--network",
+                "agos_cnn",
+                "--batch",
+                "1",
+                "--backend",
+                "exact",
+                "--exact-cap",
+                "8",
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn sweep_exact_backend_runs_and_spills_cache() {
+        let dir = std::env::temp_dir().join("agos_cli_cache_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = dir.join("sweep-cache.json");
+        let cache_s = cache.to_string_lossy().to_string();
+        let argv = sv(&[
+            "sweep",
+            "--networks",
+            "agos_cnn",
+            "--schemes",
+            "dc,in+out+wr",
+            "--batch",
+            "1",
+            "--backend",
+            "exact",
+            "--exact-cap",
+            "8",
+            "--cache",
+            &cache_s,
+        ]);
+        assert_eq!(run(&argv).unwrap(), 0);
+        assert!(cache.exists(), "sweep must spill its cache");
+        // Second invocation reloads the spill (still exit 0).
+        assert_eq!(run(&argv).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cosim_exact_backend_runs_from_trace_file() {
+        use crate::trace::{LayerTrace, StepTrace, TraceFile};
+        let dir = std::env::temp_dir().join("agos_cli_cosim_test");
+        let path = dir.join("traces.json");
+        let traces = TraceFile {
+            network: "agos_cnn".into(),
+            steps: vec![StepTrace {
+                step: 0,
+                loss: 1.0,
+                layers: (1..=4)
+                    .map(|i| LayerTrace {
+                        name: format!("relu{i}"),
+                        act_sparsity: 0.5,
+                        grad_sparsity: 0.5,
+                        identity_ok: true,
+                    })
+                    .collect(),
+            }],
+        };
+        traces.save(&path).unwrap();
+        let path_s = path.to_string_lossy().to_string();
+        assert_eq!(
+            run(&sv(&[
+                "cosim",
+                "--traces",
+                &path_s,
+                "--batch",
+                "1",
+                "--backend",
+                "exact",
+                "--exact-cap",
+                "8",
+            ]))
+            .unwrap(),
+            0
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

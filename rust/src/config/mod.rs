@@ -9,3 +9,8 @@ mod train_opts;
 pub use accel::{AcceleratorConfig, EnergyTable, MemoryConfig};
 pub use sim_opts::{Scheme, SimOptions};
 pub use train_opts::TrainOptions;
+
+/// Re-exported next to `Scheme`/`SimOptions` for consumers that select a
+/// backend without caring about the `sim` internals; the type itself
+/// lives with the execution backends (`sim::backend`).
+pub use crate::sim::ExecBackend;

@@ -1,6 +1,7 @@
-//! Simulation options: the execution scheme under evaluation and the
-//! knobs for stochastic trace sampling.
+//! Simulation options: the execution scheme under evaluation, the
+//! execution backend, and the knobs for stochastic trace sampling.
 
+use crate::sim::ExecBackend;
 use crate::util::json::Json;
 
 /// Execution scheme — the four bars of Fig 11/12/13.
@@ -63,11 +64,14 @@ pub struct SimOptions {
     /// Spatial sparsity imbalance: coefficient of variation of the
     /// per-tile sparsity around the layer mean (drives WDU gains).
     pub tile_sparsity_cv: f64,
-    /// Output locations sampled exactly per tile up to this many; beyond
-    /// it the executor switches to grouped sampling (see sim::layer_exec).
+    /// Exact backend only: per-tile cap on outputs that get a real
+    /// sampled bitmap; larger tiles are costed from the sampled mean
+    /// (see sim::backend::exact_tile_cost).
     pub exact_outputs_per_tile: usize,
     /// Model DRAM-compute overlap (true per §6 "DRAM considerations").
     pub overlap_dram: bool,
+    /// Execution backend the tiles are costed with (sim::backend).
+    pub backend: ExecBackend,
 }
 
 impl Default for SimOptions {
@@ -78,6 +82,7 @@ impl Default for SimOptions {
             tile_sparsity_cv: 0.10,
             exact_outputs_per_tile: 4096,
             overlap_dram: true,
+            backend: ExecBackend::Analytic,
         }
     }
 }
@@ -93,7 +98,8 @@ impl SimOptions {
             .put(self.batch as u64)
             .put_f64(self.tile_sparsity_cv)
             .put(self.exact_outputs_per_tile as u64)
-            .put(self.overlap_dram as u64);
+            .put(self.overlap_dram as u64)
+            .put(self.backend.tag());
         h.finish()
     }
 
@@ -104,6 +110,7 @@ impl SimOptions {
             ("tile_sparsity_cv", self.tile_sparsity_cv.into()),
             ("exact_outputs_per_tile", self.exact_outputs_per_tile.into()),
             ("overlap_dram", self.overlap_dram.into()),
+            ("backend", self.backend.label().into()),
         ])
     }
 
@@ -123,6 +130,10 @@ impl SimOptions {
                 }
                 "overlap_dram" => {
                     o.overlap_dram = v.as_bool().ok_or_else(|| anyhow::anyhow!("overlap: bool"))?
+                }
+                "backend" => {
+                    let s = v.as_str().ok_or_else(|| anyhow::anyhow!("backend: string"))?;
+                    o.backend = ExecBackend::parse(s)?;
                 }
                 other => anyhow::bail!("unknown sim option '{other}'"),
             }
@@ -162,6 +173,7 @@ mod tests {
             SimOptions { tile_sparsity_cv: 0.2, ..base.clone() },
             SimOptions { exact_outputs_per_tile: 7, ..base.clone() },
             SimOptions { overlap_dram: false, ..base.clone() },
+            SimOptions { backend: ExecBackend::Exact, ..base.clone() },
         ];
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(v.fingerprint(), base.fingerprint(), "variant {i}");
@@ -170,9 +182,15 @@ mod tests {
 
     #[test]
     fn options_roundtrip() {
-        let o = SimOptions { seed: 42, batch: 8, ..SimOptions::default() };
+        let o = SimOptions {
+            seed: 42,
+            batch: 8,
+            backend: ExecBackend::Exact,
+            ..SimOptions::default()
+        };
         let o2 = SimOptions::from_json(&o.to_json()).unwrap();
         assert_eq!(o2.seed, 42);
         assert_eq!(o2.batch, 8);
+        assert_eq!(o2.backend, ExecBackend::Exact);
     }
 }

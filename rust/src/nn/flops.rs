@@ -29,6 +29,12 @@ impl Phase {
             Phase::WeightGrad => "WG",
         }
     }
+
+    /// Inverse of [`Phase::label`] (used when results round-trip through
+    /// JSON, e.g. the on-disk sweep cache).
+    pub fn from_label(label: &str) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| p.label() == label)
+    }
 }
 
 /// Dense MACs for one layer in one phase (per single input image).

@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::config::Scheme;
+use crate::config::{ExecBackend, Scheme, SimOptions};
 use crate::nn::{zoo, Network, Phase};
 use crate::sim::{NetworkSimResult, PeModel, ReconfigMode, SweepPlan};
 use crate::sparsity::gradient_sparsity;
@@ -216,6 +216,35 @@ pub fn fig16_reconfig(ctx: &ReportCtx) -> Figure {
     fig
 }
 
+/// Backend validation (figval): analytic vs exact total cycles per
+/// scheme on the traced CNN — the engine-level closure of the per-output
+/// `analytic_model_tracks_exact_simulation` check. Both columns run
+/// whatever batch/seed the context carries; the backends are pinned
+/// explicitly, so this figure is meaningful even under `--backend exact`.
+pub fn figval_backend(ctx: &ReportCtx) -> Figure {
+    let net = zoo::agos_cnn();
+    let analytic = SimOptions { backend: ExecBackend::Analytic, ..ctx.opts.clone() };
+    let exact = SimOptions { backend: ExecBackend::Exact, ..ctx.opts.clone() };
+    let mut fig = Figure::new(
+        "figval",
+        "Analytic vs exact backend (total cycles)",
+        &["analytic", "exact", "exact/analytic"],
+    );
+    fig.notes = format!(
+        "agos_cnn, batch {}, seed {}, exact cap {} outputs/tile; rows are schemes",
+        ctx.opts.batch, ctx.opts.seed, ctx.opts.exact_outputs_per_tile
+    );
+    for scheme in Scheme::ALL {
+        let a = ctx.sweep.one(&net, &ctx.cfg, &analytic, &ctx.model, scheme);
+        let e = ctx.sweep.one(&net, &ctx.cfg, &exact, &ctx.model, scheme);
+        fig.row(
+            scheme.label(),
+            vec![a.total_cycles(), e.total_cycles(), e.total_cycles() / a.total_cycles()],
+        );
+    }
+    fig
+}
+
 /// Fig 17: inception-4d tile-latency min/avg/max under each scheme.
 pub fn fig17_node(ctx: &ReportCtx) -> Figure {
     let net = zoo::googlenet();
@@ -339,6 +368,21 @@ mod tests {
         let wr = f.value("IN+OUT+WR", "avg/max").unwrap();
         assert!(wr > no_wr, "WR {wr:.3} !> no-WR {no_wr:.3}");
         assert!(wr > 0.75, "WR utilization {wr:.3} (paper ~0.83)");
+    }
+
+    #[test]
+    fn figval_backends_agree_within_tolerance() {
+        let mut ctx = ReportCtx::with_batch(1);
+        ctx.opts.exact_outputs_per_tile = 16; // keep the debug-mode walk fast
+        let f = figval_backend(&ctx);
+        assert_eq!(f.rows.len(), 4);
+        for (label, v) in &f.rows {
+            let ratio = v[2];
+            assert!(
+                (0.65..1.55).contains(&ratio),
+                "{label}: exact/analytic ratio {ratio:.3} out of band"
+            );
+        }
     }
 
     #[test]

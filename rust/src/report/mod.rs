@@ -12,6 +12,7 @@ pub use figure::Figure;
 pub use figures::{
     fig11a_vgg, fig11b_googlenet, fig12a_densenet, fig12b_mobilenet, fig13_resnet,
     fig15_overall, fig16_reconfig, fig17_node, fig3b_inception_sparsity, fig3d_batch_sparsity,
+    figval_backend,
 };
 pub use ablations::{
     ablation_double_buffering, ablation_grid_scaling, ablation_reconfig_spectrum,
@@ -85,6 +86,7 @@ pub fn generate(id: &str, ctx: &ReportCtx) -> anyhow::Result<Vec<Figure>> {
         "fig15" => one(fig15_overall(ctx)),
         "fig16" => one(fig16_reconfig(ctx)),
         "fig17" => one(fig17_node(ctx)),
+        "figval" => one(figval_backend(ctx)),
         "table1" => one(table1_components(&ctx.cfg)),
         "table2" => one(table2_platforms(ctx)),
         "ablations" => Ok(vec![

@@ -1,0 +1,186 @@
+//! Pluggable execution backends: how one tile's worth of outputs is
+//! costed.
+//!
+//! * [`ExecBackend::Analytic`] — the expected-value `PeModel` path
+//!   (`sim::pe`): per-output cycles from closed-form lane-maximum
+//!   statistics, per-tile sparsity jitter on top. Fast; what every
+//!   production figure used before this abstraction existed.
+//! * [`ExecBackend::Exact`] — the bitmap-driven `ExactPe` path
+//!   (`sim::exact`): per-tile operand bitmaps are *sampled* from the
+//!   tile's (jittered) density via the per-image RNG stream, an output
+//!   mask is sampled the same way (the Fig 5c a-priori-known output
+//!   bitmap), and everything drains through the cycle-accurate group
+//!   walker. Slow but pattern-level faithful — the validation reference
+//!   SparseTrain/TensorDash-style analytic claims are checked against.
+//!
+//! Both backends draw exclusively from the per-image stream handed down
+//! by `engine::simulate_image`, so the PR 1 determinism contract
+//! (bit-identical results at any `--jobs` level) holds for both.
+
+use crate::nn::Shape;
+use crate::sparsity::Bitmap;
+use crate::util::rng::Pcg32;
+
+use super::exact::ExactPe;
+
+/// One output's operand NZ pattern, sampled straight into the lane-drain
+/// form `ExactPe` walks. Same bit order (and identical draw sequence) as
+/// `Bitmap::sample` over a `[k, 1, crs]` map, without the pack/unpack
+/// round-trip — this is the exact backend's innermost loop. Degenerate
+/// densities are draw-free, mirroring `Bitmap::sample`.
+fn sample_pattern(crs: usize, density: f64, rng: &mut Pcg32) -> Vec<bool> {
+    if density <= 0.0 {
+        return vec![false; crs];
+    }
+    if density >= 1.0 {
+        return vec![true; crs];
+    }
+    (0..crs).map(|_| rng.bernoulli(density)).collect()
+}
+
+/// Per-`simulate_tile` chunking bound for the exact backend: keeps the
+/// transient operand-bitmap expansion under ~1.5 MB at CRS 4608.
+const EXACT_CHUNK: usize = 256;
+
+/// Which execution model costs the tiles of a simulation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecBackend {
+    /// Analytic expected-value `PeModel` (the fast default).
+    #[default]
+    Analytic,
+    /// Cycle-accurate `ExactPe` over sampled operand/output bitmaps.
+    Exact,
+}
+
+impl ExecBackend {
+    pub const ALL: [ExecBackend; 2] = [ExecBackend::Analytic, ExecBackend::Exact];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecBackend::Analytic => "analytic",
+            ExecBackend::Exact => "exact",
+        }
+    }
+
+    /// Stable tag folded into `SimOptions::fingerprint` (sweep-cache key).
+    pub fn tag(&self) -> u64 {
+        match self {
+            ExecBackend::Analytic => 1,
+            ExecBackend::Exact => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ExecBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytic" | "model" => Ok(ExecBackend::Analytic),
+            "exact" | "bitmap" => Ok(ExecBackend::Exact),
+            other => anyhow::bail!("unknown backend '{other}' (analytic|exact)"),
+        }
+    }
+}
+
+/// Exact cost of one PE tile holding `n_out` outputs with receptive
+/// field `crs`, under operand sparsity `s_in` and a-priori output
+/// sparsity `s_out`.
+///
+/// Up to `max_sampled` outputs get a real sampled operand pattern; the
+/// sampled total is scaled to the tile's full output count. When
+/// `n_out <= max_sampled` the tile is simulated output-exactly. The
+/// output mask is sampled once per output as a `Bitmap` (the Fig 5c
+/// output bitmap the forward pass leaves in DRAM) — a masked output
+/// costs zero cycles, exactly as `ExactPe::simulate_tile` models.
+///
+/// Returns `(cycles, macs)` as the engine's f64 accounting expects.
+pub fn exact_tile_cost(
+    pe: &ExactPe,
+    crs: usize,
+    n_out: usize,
+    max_sampled: usize,
+    s_in: f64,
+    s_out: f64,
+    rng: &mut Pcg32,
+) -> (f64, f64) {
+    if n_out == 0 {
+        return (0.0, 0.0);
+    }
+    let k = n_out.min(max_sampled.max(1));
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+    let mut drawn = 0usize;
+    while drawn < k {
+        let chunk = (k - drawn).min(EXACT_CHUNK);
+        // Output mask first (the Fig 5c bitmap is known a priori, before
+        // operands stream — it lives in DRAM as a real `Bitmap`), then
+        // the per-output operand patterns.
+        let mask_bits = Bitmap::sample(Shape::new(1, 1, chunk), 1.0 - s_out, rng);
+        let mask: Vec<bool> = (0..chunk).map(|i| mask_bits.get(0, 0, i)).collect();
+        let outputs: Vec<Vec<bool>> =
+            (0..chunk).map(|_| sample_pattern(crs, 1.0 - s_in, rng)).collect();
+        let r = pe.simulate_tile(&outputs, Some(&mask));
+        cycles += r.cycles;
+        macs += r.macs;
+        drawn += chunk;
+    }
+    let scale = n_out as f64 / k as f64;
+    (cycles as f64 * scale, macs as f64 * scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for b in ExecBackend::ALL {
+            assert_eq!(ExecBackend::parse(b.label()).unwrap(), b);
+        }
+        assert_eq!(ExecBackend::parse("EXACT").unwrap(), ExecBackend::Exact);
+        assert!(ExecBackend::parse("fpga").is_err());
+        assert_ne!(ExecBackend::Analytic.tag(), ExecBackend::Exact.tag());
+        assert_eq!(ExecBackend::default(), ExecBackend::Analytic);
+    }
+
+    #[test]
+    fn exact_tile_is_deterministic_from_the_stream() {
+        let pe = ExactPe::default();
+        let a = exact_tile_cost(&pe, 288, 64, 32, 0.5, 0.5, &mut Pcg32::new(9));
+        let b = exact_tile_cost(&pe, 288, 64, 32, 0.5, 0.5, &mut Pcg32::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn full_sampling_when_tile_fits_the_cap() {
+        // n_out <= cap: no scaling, cycles are an exact tile walk.
+        let pe = ExactPe::default();
+        let (cyc, macs) = exact_tile_cost(&pe, 256, 8, 4096, 0.0, 0.0, &mut Pcg32::new(1));
+        // 8 dense 256-wide outputs: deterministic arithmetic.
+        let one = pe.simulate_output(&vec![true; 256]);
+        assert_eq!(cyc, 8.0 * one.cycles as f64);
+        assert_eq!(macs, 8.0 * 256.0);
+    }
+
+    #[test]
+    fn subsampled_tile_scales_to_full_output_count() {
+        let pe = ExactPe::default();
+        let (cyc_full, macs_full) =
+            exact_tile_cost(&pe, 512, 1024, 4096, 0.0, 0.0, &mut Pcg32::new(2));
+        let (cyc_sub, macs_sub) =
+            exact_tile_cost(&pe, 512, 1024, 64, 0.0, 0.0, &mut Pcg32::new(2));
+        // Dense patterns have zero variance, so scaling is exact.
+        assert_eq!(cyc_sub, cyc_full);
+        assert_eq!(macs_sub, macs_full);
+    }
+
+    #[test]
+    fn output_sparsity_skips_work() {
+        let pe = ExactPe::default();
+        let (dense_c, dense_m) =
+            exact_tile_cost(&pe, 512, 256, 4096, 0.3, 0.0, &mut Pcg32::new(5));
+        let (masked_c, masked_m) =
+            exact_tile_cost(&pe, 512, 256, 4096, 0.3, 0.6, &mut Pcg32::new(5));
+        assert!(masked_c < dense_c * 0.7, "{masked_c} vs {dense_c}");
+        assert!(masked_m < dense_m * 0.7);
+        let frac = masked_m / dense_m;
+        assert!((0.25..0.55).contains(&frac), "computed fraction {frac}");
+    }
+}

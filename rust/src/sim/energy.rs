@@ -6,6 +6,7 @@
 //! accrues over the makespan.
 
 use crate::config::AcceleratorConfig;
+use crate::util::json::Json;
 
 /// Joules spent by one layer execution, by component.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -38,6 +39,35 @@ impl EnergyBreakdown {
         self.sram_j += other.sram_j;
         self.dram_j += other.dram_j;
         self.static_j += other.static_j;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("mac_j", self.mac_j.into()),
+            ("regfile_j", self.regfile_j.into()),
+            ("adder_tree_j", self.adder_tree_j.into()),
+            ("encoder_j", self.encoder_j.into()),
+            ("sram_j", self.sram_j.into()),
+            ("dram_j", self.dram_j.into()),
+            ("static_j", self.static_j.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<EnergyBreakdown> {
+        let f = |key: &str| {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("energy breakdown field '{key}': f64"))
+        };
+        Ok(EnergyBreakdown {
+            mac_j: f("mac_j")?,
+            regfile_j: f("regfile_j")?,
+            adder_tree_j: f("adder_tree_j")?,
+            encoder_j: f("encoder_j")?,
+            sram_j: f("sram_j")?,
+            dram_j: f("dram_j")?,
+            static_j: f("static_j")?,
+        })
     }
 }
 
@@ -110,6 +140,15 @@ mod tests {
         let fast = layer_energy(&cfg, 0.0, 0.0, 0.0, 0.0, 0.0, 1e6);
         let slow = layer_energy(&cfg, 0.0, 0.0, 0.0, 0.0, 0.0, 2e6);
         assert!((slow.static_j / fast.static_j - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_json_roundtrips_bit_exact() {
+        let cfg = AcceleratorConfig::default();
+        let e = layer_energy(&cfg, 1e7, 1e5, 1e6, 1e6, 1e5, 1e5);
+        let e2 = EnergyBreakdown::from_json(&Json::parse(&e.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(e, e2);
+        assert!(EnergyBreakdown::from_json(&Json::obj()).is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::{Layer, LayerKind, Network, Phase};
 use crate::sparsity::{analyze_network, LayerOpportunity, SparsityModel};
+use crate::util::json::Json;
 use crate::util::rng::{Pcg32, SplitMix64};
 
 use super::energy::EnergyBreakdown;
@@ -82,6 +83,111 @@ impl NetworkSimResult {
 
     pub fn layer(&self, name: &str, phase: Phase) -> Option<&LayerAgg> {
         self.per_layer.iter().find(|l| l.name == name && l.phase == phase)
+    }
+
+    /// Serialize everything an aggregated result carries — the payload of
+    /// the on-disk sweep cache (`sim::sweep`). f64 values survive the
+    /// JSON round-trip bit-exactly (shortest-round-trip formatting).
+    pub fn to_json(&self) -> Json {
+        let mut totals = Json::obj();
+        for (label, t) in &self.totals {
+            totals.set(
+                label,
+                Json::from_pairs(vec![
+                    ("cycles", t.cycles.into()),
+                    ("dense_macs", t.dense_macs.into()),
+                    ("performed_macs", t.performed_macs.into()),
+                    ("energy", t.energy.to_json()),
+                ]),
+            );
+        }
+        let per_layer: Vec<Json> = self
+            .per_layer
+            .iter()
+            .map(|l| {
+                Json::from_pairs(vec![
+                    ("name", l.name.as_str().into()),
+                    ("phase", l.phase.label().into()),
+                    ("cycles", l.cycles.into()),
+                    ("dense_macs", l.dense_macs.into()),
+                    ("performed_macs", l.performed_macs.into()),
+                    ("tile_utilization", l.tile_utilization.into()),
+                    ("tile_min", l.tile_min.into()),
+                    ("tile_mean", l.tile_mean.into()),
+                    ("tile_max", l.tile_max.into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("network", self.network.as_str().into()),
+            ("scheme", self.scheme.label().into()),
+            ("batch", self.batch.into()),
+            ("totals", totals),
+            ("per_layer", Json::Arr(per_layer)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<NetworkSimResult> {
+        let f64_of = |j: &Json, key: &str| {
+            j.get(key).as_f64().ok_or_else(|| anyhow::anyhow!("result field '{key}': f64"))
+        };
+        let network = j
+            .get("network")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("result.network"))?
+            .to_string();
+        let scheme = Scheme::parse(
+            j.get("scheme").as_str().ok_or_else(|| anyhow::anyhow!("result.scheme"))?,
+        )?;
+        let batch =
+            j.get("batch").as_usize().ok_or_else(|| anyhow::anyhow!("result.batch"))?;
+        let mut totals: BTreeMap<&'static str, PhaseTotals> = BTreeMap::new();
+        let tobj =
+            j.get("totals").as_obj().ok_or_else(|| anyhow::anyhow!("result.totals"))?;
+        for (label, t) in tobj {
+            let phase = Phase::from_label(label)
+                .ok_or_else(|| anyhow::anyhow!("unknown phase label '{label}'"))?;
+            totals.insert(
+                phase.label(),
+                PhaseTotals {
+                    cycles: f64_of(t, "cycles")?,
+                    dense_macs: f64_of(t, "dense_macs")?,
+                    performed_macs: f64_of(t, "performed_macs")?,
+                    energy: EnergyBreakdown::from_json(t.get("energy"))?,
+                },
+            );
+        }
+        // Every phase must be present: `phase()` indexes the map, and a
+        // truncated totals object would otherwise load as "good" data.
+        for phase in Phase::ALL {
+            anyhow::ensure!(
+                totals.contains_key(phase.label()),
+                "result.totals missing phase '{}'",
+                phase.label()
+            );
+        }
+        let mut per_layer = Vec::new();
+        for l in j.get("per_layer").as_arr().ok_or_else(|| anyhow::anyhow!("per_layer"))? {
+            let phase_label =
+                l.get("phase").as_str().ok_or_else(|| anyhow::anyhow!("layer.phase"))?;
+            per_layer.push(LayerAgg {
+                name: l
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("layer.name"))?
+                    .to_string(),
+                phase: Phase::from_label(phase_label)
+                    .ok_or_else(|| anyhow::anyhow!("unknown phase label '{phase_label}'"))?,
+                cycles: f64_of(l, "cycles")?,
+                dense_macs: f64_of(l, "dense_macs")?,
+                performed_macs: f64_of(l, "performed_macs")?,
+                tile_utilization: f64_of(l, "tile_utilization")?,
+                tile_min: f64_of(l, "tile_min")?,
+                tile_mean: f64_of(l, "tile_mean")?,
+                tile_max: f64_of(l, "tile_max")?,
+            });
+        }
+        Ok(NetworkSimResult { network, scheme, batch, per_layer, totals })
     }
 }
 
@@ -268,15 +374,39 @@ pub fn simulate_network(
     model: &SparsityModel,
     scheme: Scheme,
 ) -> NetworkSimResult {
+    simulate_network_jobs(net, cfg, opts, model, scheme, 1)
+}
+
+/// [`simulate_network`] with per-image fan-out: up to `jobs` worker
+/// threads simulate images concurrently. Because every image draws from
+/// its own `(seed, image)`-derived stream and aggregation folds the
+/// collected results in image-index order, the outcome is bit-identical
+/// to the sequential engine at any `jobs` level — this is how the sweep
+/// executor keeps cores busy when a plan has fewer combos than workers
+/// (essential for the much slower exact backend).
+pub fn simulate_network_jobs(
+    net: &Network,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    model: &SparsityModel,
+    scheme: Scheme,
+    jobs: usize,
+) -> NetworkSimResult {
     let batch_fwd = model.assign_batch(net, opts.batch);
+    let n_images = batch_fwd.len();
+
+    // Per-image (tasks, results), indexed by image so the fold below is
+    // independent of completion order.
+    let per_image = crate::util::pool::run_indexed(n_images, jobs, |image| {
+        let tasks = build_image_tasks(net, &batch_fwd[image]);
+        let mut rng = image_stream(opts.seed, image);
+        let results = simulate_image(&tasks, cfg, opts, scheme, &mut rng);
+        (tasks, results)
+    });
 
     // name×phase → accumulated results, folded in image order.
     let mut agg: BTreeMap<(String, &'static str), Vec<LayerSimResult>> = BTreeMap::new();
-
-    for (image, fwd) in batch_fwd.iter().enumerate() {
-        let tasks = build_image_tasks(net, fwd);
-        let mut rng = image_stream(opts.seed, image);
-        let results = simulate_image(&tasks, cfg, opts, scheme, &mut rng);
+    for (tasks, results) in per_image {
         for (t, r) in tasks.iter().zip(results) {
             agg.entry((t.layer.clone(), t.phase.label())).or_default().push(r);
         }
@@ -470,6 +600,46 @@ mod tests {
         for l in &engine.per_layer {
             let sum: f64 = cycles[&(l.name.clone(), l.phase.label())].iter().sum();
             assert_eq!(sum, l.cycles, "{} {}", l.name, l.phase.label());
+        }
+    }
+
+    #[test]
+    fn per_image_fanout_is_bit_identical_to_sequential() {
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 5, ..SimOptions::default() };
+        let model = SparsityModel::synthetic(17);
+        for scheme in [Scheme::Dense, Scheme::InOutWr] {
+            let seq = simulate_network(&net, &cfg, &opts, &model, scheme);
+            let par = simulate_network_jobs(&net, &cfg, &opts, &model, scheme, 4);
+            assert_eq!(seq.total_cycles(), par.total_cycles());
+            assert_eq!(seq.total_energy_j(), par.total_energy_j());
+            assert_eq!(seq.per_layer.len(), par.per_layer.len());
+            for (a, b) in seq.per_layer.iter().zip(&par.per_layer) {
+                assert_eq!(a.cycles, b.cycles, "{} {}", a.name, a.phase.label());
+                assert_eq!(a.performed_macs, b.performed_macs, "{}", a.name);
+                assert_eq!(a.tile_mean, b.tile_mean, "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn result_json_roundtrips_bit_exact() {
+        let net = zoo::agos_cnn();
+        let r = sim(&net, Scheme::InOutWr);
+        let text = r.to_json().pretty();
+        let r2 = NetworkSimResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r.network, r2.network);
+        assert_eq!(r.scheme, r2.scheme);
+        assert_eq!(r.batch, r2.batch);
+        assert_eq!(r.total_cycles(), r2.total_cycles());
+        assert_eq!(r.total_energy_j(), r2.total_energy_j());
+        assert_eq!(r.per_layer.len(), r2.per_layer.len());
+        for (a, b) in r.per_layer.iter().zip(&r2.per_layer) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.phase, b.phase);
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.tile_utilization, b.tile_utilization);
         }
     }
 

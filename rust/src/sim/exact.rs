@@ -14,6 +14,7 @@
 //! * the exact co-simulation path replays *real* bitmaps extracted from
 //!   training traces.
 
+use crate::config::AcceleratorConfig;
 use crate::util::rng::Pcg32;
 
 use super::adder_tree::{tree_utilization, ReconfigMode};
@@ -53,6 +54,19 @@ pub struct ExactOutput {
 }
 
 impl ExactPe {
+    /// Mirror of `PeModel::from_config`: the same lane geometry and
+    /// blocking overhead, so the two backends cost identical hardware.
+    pub fn from_config(cfg: &AcceleratorConfig) -> ExactPe {
+        ExactPe {
+            lanes: cfg.lanes,
+            group_entries: cfg.group_entries,
+            groups: cfg.groups,
+            double_buffering: true,
+            reconfig: ReconfigMode::Hierarchical,
+            blocking_overhead: 4,
+        }
+    }
+
     /// Operand capacity per blocking pass.
     pub fn capacity(&self) -> usize {
         self.lanes * self.group_entries * self.groups
@@ -121,7 +135,20 @@ impl ExactPe {
 
     /// Simulate a whole tile: `outputs` receptive-field bitmaps, with an
     /// optional output-sparsity mask saying which outputs are skipped.
+    ///
+    /// A mask shorter than `outputs` used to panic on the first
+    /// out-of-range output, and a longer one silently ignored its tail —
+    /// both are caller bugs, so the lengths are now checked up front.
     pub fn simulate_tile(&self, outputs: &[Vec<bool>], out_mask: Option<&[bool]>) -> ExactOutput {
+        if let Some(mask) = out_mask {
+            assert_eq!(
+                mask.len(),
+                outputs.len(),
+                "output mask length {} != output count {}",
+                mask.len(),
+                outputs.len()
+            );
+        }
         let mut total = ExactOutput { cycles: 0, macs: 0, lane_stall_cycles: 0 };
         for (i, nz) in outputs.iter().enumerate() {
             if let Some(mask) = out_mask {
@@ -211,6 +238,25 @@ mod tests {
         let half = pe.simulate_tile(&outputs, Some(&mask));
         assert_eq!(half.cycles * 2, all.cycles);
         assert_eq!(half.macs * 2, all.macs);
+    }
+
+    #[test]
+    #[should_panic(expected = "output mask length")]
+    fn mismatched_mask_length_is_rejected() {
+        let pe = ExactPe::default();
+        let outputs: Vec<Vec<bool>> = (0..4).map(|_| vec![true; 64]).collect();
+        let mask = vec![true; 3];
+        pe.simulate_tile(&outputs, Some(&mask));
+    }
+
+    #[test]
+    fn from_config_matches_defaults() {
+        let pe = ExactPe::from_config(&AcceleratorConfig::default());
+        let d = ExactPe::default();
+        assert_eq!(pe.lanes, d.lanes);
+        assert_eq!(pe.group_entries, d.group_entries);
+        assert_eq!(pe.groups, d.groups);
+        assert_eq!(pe.blocking_overhead, d.blocking_overhead);
     }
 
     /// The headline validation: the analytic `PeModel` must track the

@@ -4,7 +4,9 @@
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::util::rng::Pcg32;
 
+use super::backend::{exact_tile_cost, ExecBackend};
 use super::energy::{layer_energy, EnergyBreakdown};
+use super::exact::ExactPe;
 use super::memory::layer_traffic;
 use super::pe::PeModel;
 use super::tile::tile_outputs;
@@ -100,6 +102,12 @@ pub fn simulate_layer(
     let s_in = if scheme.uses_input_sparsity() { task.in_sparsity.unwrap_or(0.0) } else { 0.0 };
     let s_out = if scheme.uses_output_sparsity() { task.out_sparsity.unwrap_or(0.0) } else { 0.0 };
 
+    // Exact backend: bitmap-driven tile costing through the event-driven
+    // PE; the receptive field is rounded to whole operands (it is only
+    // fractional for strided BP averages).
+    let exact_pe = (opts.backend == ExecBackend::Exact).then(|| ExactPe::from_config(cfg));
+    let crs_exact = (task.crs.round() as usize).max(1);
+
     // Spatial tiling across the PE grid; every PE computes all M channels
     // of its spatial slice (single filter broadcast at a time, §4.2).
     let spatial = tile_outputs(task.u, task.v, cfg.tx, cfg.ty);
@@ -114,11 +122,28 @@ pub fn simulate_layer(
         // Per-tile sparsity variation (drives load imbalance / WDU).
         let s_in_t = jitter(s_in, opts.tile_sparsity_cv, rng);
         let s_out_t = jitter(s_out, opts.tile_sparsity_cv, rng);
-        let outputs_t = (sp * task.m) as f64;
-        let computed = outputs_t * (1.0 - s_out_t);
-        let (cyc_per_out, macs_per_out) = pe.cycles_per_output(task.crs, s_in_t);
-        tile_busy.push(computed * cyc_per_out);
-        performed += computed * macs_per_out;
+        match &exact_pe {
+            None => {
+                let outputs_t = (sp * task.m) as f64;
+                let computed = outputs_t * (1.0 - s_out_t);
+                let (cyc_per_out, macs_per_out) = pe.cycles_per_output(task.crs, s_in_t);
+                tile_busy.push(computed * cyc_per_out);
+                performed += computed * macs_per_out;
+            }
+            Some(xpe) => {
+                let (cyc, macs) = exact_tile_cost(
+                    xpe,
+                    crs_exact,
+                    sp * task.m,
+                    opts.exact_outputs_per_tile,
+                    s_in_t,
+                    s_out_t,
+                    rng,
+                );
+                tile_busy.push(cyc);
+                performed += macs;
+            }
+        }
     }
 
     // Work redistribution.
@@ -271,6 +296,41 @@ mod tests {
         let wr = run(Scheme::InOutWr, Some(0.5), Some(0.5));
         assert!(dc.energy.total() > 0.0);
         assert!(wr.energy.total() < dc.energy.total());
+    }
+
+    #[test]
+    fn exact_backend_is_deterministic_and_orders_schemes() {
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions {
+            backend: ExecBackend::Exact,
+            exact_outputs_per_tile: 8,
+            ..SimOptions::default()
+        };
+        let t = LayerTask {
+            name: "exact".into(),
+            m: 32,
+            u: 16,
+            v: 16,
+            crs: 288.0,
+            in_sparsity: Some(0.5),
+            out_sparsity: Some(0.5),
+            input_elems: 32.0 * 18.0 * 18.0,
+            weight_elems: 32.0 * 288.0,
+        };
+        let run = |scheme, seed| {
+            let mut rng = Pcg32::new(seed);
+            simulate_layer(&t, &cfg, &opts, scheme, &mut rng)
+        };
+        let a = run(Scheme::InOutWr, 7);
+        let b = run(Scheme::InOutWr, 7);
+        assert_eq!(a.cycles, b.cycles, "exact backend must be stream-deterministic");
+        assert_eq!(a.performed_macs, b.performed_macs);
+        let dc = run(Scheme::Dense, 7);
+        let inp = run(Scheme::In, 7);
+        let both = run(Scheme::InOut, 7);
+        assert!((dc.performed_macs - dc.dense_macs).abs() / dc.dense_macs < 1e-9);
+        assert!(dc.cycles > inp.cycles, "DC {} !> IN {}", dc.cycles, inp.cycles);
+        assert!(inp.cycles > both.cycles, "IN {} !> IN+OUT {}", inp.cycles, both.cycles);
     }
 
     #[test]

@@ -10,9 +10,14 @@
 //! Execution is split into pure task construction and per-image
 //! stochastic execution (`engine`), with a parallel cached sweep layer on
 //! top (`sweep`) that every report generator and the CLI route through.
+//! Tile costing is pluggable (`backend`): the analytic expected-value
+//! model above is the default, and the cycle-accurate bitmap-driven
+//! `ExactPe` (`exact`) runs the same engine→sweep→cosim→CLI stack when
+//! `SimOptions::backend` selects it.
 
 mod pe;
 mod adder_tree;
+mod backend;
 mod blocking;
 mod tile;
 mod wdu;
@@ -24,16 +29,17 @@ mod exact;
 mod sweep;
 
 pub use adder_tree::{tree_utilization, ReconfigMode};
+pub use backend::{exact_tile_cost, ExecBackend};
 pub use exact::{random_bitmap, ExactOutput, ExactPe};
 pub use blocking::synapse_passes;
 pub use energy::{layer_energy, EnergyBreakdown};
 pub use engine::{
-    build_image_tasks, build_task, image_stream, simulate_image, simulate_network, ImageTask,
-    LayerAgg, NetworkSimResult, PhaseTotals,
+    build_image_tasks, build_task, image_stream, simulate_image, simulate_network,
+    simulate_network_jobs, ImageTask, LayerAgg, NetworkSimResult, PhaseTotals,
 };
 pub use layer_exec::{simulate_layer, LayerSimResult, LayerTask};
 pub use memory::{layer_traffic, MemoryModel};
 pub use pe::{expected_lane_max, expected_max_std_normal, PeModel};
-pub use sweep::{SweepCache, SweepCombo, SweepKey, SweepPlan, SweepRunner};
+pub use sweep::{SweepCache, SweepCombo, SweepKey, SweepPlan, SweepRunner, SIM_REVISION};
 pub use tile::{tile_outputs, TileState};
 pub use wdu::{redistribute, WduOutcome};

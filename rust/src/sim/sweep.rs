@@ -6,9 +6,9 @@
 //!
 //! * [`SweepPlan`] — a declarative list of (network, scheme, config)
 //!   combos; [`SweepPlan::grid`] builds the common cross product.
-//! * [`SweepRunner`] — executes a plan on a worker pool
-//!   (`std::thread::scope` + mpsc, the same idiom as
-//!   `coordinator::pipeline`; no external crates) with a `jobs` knob.
+//! * [`SweepRunner`] — executes a plan on the shared indexed worker
+//!   pool (`util::pool`; no external crates) with a `jobs` knob, fanning
+//!   spare threads out across batch images when the plan is small.
 //! * [`SweepCache`] — keyed by `(network name, scheme, config
 //!   fingerprint)`, so every distinct combo simulates **at most once per
 //!   process**, no matter how many figures, tables or ablation points ask
@@ -20,15 +20,25 @@
 //! or where it executed, and plan outputs are assembled in plan order.
 
 use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::Network;
 use crate::sparsity::SparsityModel;
+use crate::util::json::Json;
+use crate::util::pool::run_indexed;
 
-use super::engine::{simulate_network, NetworkSimResult};
+use super::engine::{simulate_network_jobs, NetworkSimResult};
+
+/// Simulator-semantics revision, stamped into on-disk cache spills. The
+/// cache key fingerprints every *input* of a simulation but nothing
+/// about the *algorithm*; bump this whenever simulation semantics change
+/// so stale spills from older code are rejected instead of silently
+/// served.
+pub const SIM_REVISION: u64 = 2;
 
 /// Cache identity of one simulation: everything that can change the
 /// result — the network (name *and* structure), the scheme, and the
@@ -170,6 +180,91 @@ impl SweepCache {
     fn note_miss(&self) {
         self.misses.fetch_add(1, Ordering::Relaxed);
     }
+
+    /// Serialize every cached result. Entries are emitted in sorted key
+    /// order and fingerprints as hex strings (u64 does not survive JSON's
+    /// f64 numbers above 2^53), so cache files diff cleanly.
+    pub fn to_json(&self) -> Json {
+        let map = self.map.lock().unwrap();
+        let mut entries: Vec<(&SweepKey, &Arc<NetworkSimResult>)> = map.iter().collect();
+        entries.sort_by_key(|(k, _)| (k.network.clone(), k.scheme.label(), k.fingerprint));
+        let entries: Vec<Json> = entries
+            .into_iter()
+            .map(|(k, r)| {
+                Json::from_pairs(vec![
+                    ("network", k.network.as_str().into()),
+                    ("scheme", k.scheme.label().into()),
+                    ("fingerprint", format!("{:016x}", k.fingerprint).into()),
+                    ("result", r.to_json()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("version", 1u64.into()),
+            ("sim_rev", SIM_REVISION.into()),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Insert every entry of a serialized cache; returns how many were
+    /// loaded. Counts neither hits nor misses — loaded entries only pay
+    /// off when a later request peeks them.
+    pub fn merge_json(&self, j: &Json) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            j.get("version").as_u64() == Some(1),
+            "unsupported sweep cache version"
+        );
+        anyhow::ensure!(
+            j.get("sim_rev").as_u64() == Some(SIM_REVISION),
+            "sweep cache was written by a different simulator revision \
+             (file {:?}, current {SIM_REVISION})",
+            j.get("sim_rev").as_u64()
+        );
+        let entries = j
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("sweep cache: entries array"))?;
+        let mut n = 0;
+        for e in entries {
+            let network = e
+                .get("network")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("cache entry network"))?
+                .to_string();
+            let scheme = Scheme::parse(
+                e.get("scheme").as_str().ok_or_else(|| anyhow::anyhow!("cache entry scheme"))?,
+            )?;
+            let fp = e
+                .get("fingerprint")
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| anyhow::anyhow!("cache entry fingerprint"))?;
+            let result = NetworkSimResult::from_json(e.get("result"))?;
+            self.insert(SweepKey { network, scheme, fingerprint: fp }, Arc::new(result));
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Load a cache file written by [`SweepCache::save_file`]; a missing
+    /// file is an empty cache (returns 0), a corrupt one an error.
+    pub fn load_file(&self, path: &Path) -> anyhow::Result<usize> {
+        if !path.exists() {
+            return Ok(0);
+        }
+        self.merge_json(&Json::parse_file(path)?)
+    }
+
+    /// Persist the cache atomically (write-then-rename), so a concurrent
+    /// reader never sees a half-written file. The temp name is
+    /// per-process so two concurrent writers cannot clobber each other's
+    /// in-flight file (last rename wins with a complete spill).
+    pub fn save_file(&self, path: &Path) -> anyhow::Result<()> {
+        let tmp = path.with_extension(format!("json.tmp.{}", std::process::id()));
+        self.to_json().write_file(&tmp)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
 }
 
 /// Worker-pool sweep executor with a shared [`SweepCache`].
@@ -195,7 +290,9 @@ impl SweepRunner {
         &self.cache
     }
 
-    /// Cached single simulation at an explicit configuration.
+    /// Cached single simulation at an explicit configuration. A miss
+    /// fans the batch's images out across the runner's worker budget
+    /// (bit-identical to sequential execution; see `engine`).
     pub fn one(
         &self,
         net: &Network,
@@ -210,7 +307,7 @@ impl SweepRunner {
             return r;
         }
         self.cache.note_miss();
-        let r = Arc::new(simulate_network(net, cfg, opts, model, scheme));
+        let r = Arc::new(simulate_network_jobs(net, cfg, opts, model, scheme, self.jobs));
         self.cache.insert(key, r.clone());
         r
     }
@@ -237,29 +334,22 @@ impl SweepRunner {
         }
 
         if !leaders.is_empty() {
-            let jobs = self.jobs.clamp(1, leaders.len());
-            let next = AtomicUsize::new(0);
-            let (tx, rx) = mpsc::channel::<(usize, NetworkSimResult)>();
-            thread::scope(|s| {
-                for _ in 0..jobs {
-                    let tx = tx.clone();
-                    let next = &next;
-                    let leaders = &leaders;
-                    s.spawn(move || loop {
-                        let w = next.fetch_add(1, Ordering::Relaxed);
-                        let Some(&i) = leaders.get(w) else { break };
-                        let c = &plan.combos[i];
-                        let r = simulate_network(&c.network, &c.cfg, &c.opts, model, c.scheme);
-                        if tx.send((i, r)).is_err() {
-                            break;
-                        }
-                    });
-                }
-                drop(tx);
-                while let Ok((i, r)) = rx.recv() {
-                    self.cache.insert(keys[i].clone(), Arc::new(r));
-                }
+            // Per-image fan-out: when the plan has fewer fresh combos
+            // than worker threads, the spare threads split each combo's
+            // batch instead of idling (bit-identical either way — the
+            // per-image streams don't care who runs them). Essential for
+            // the exact backend, which is far slower per image. The ceil
+            // split mildly oversubscribes when combos don't divide the
+            // budget evenly — better than idling cores on the long-tail
+            // combo; there is no dynamic rebalancing.
+            let inner_jobs = self.jobs.div_ceil(leaders.len());
+            let results = run_indexed(leaders.len(), self.jobs, |w| {
+                let c = &plan.combos[leaders[w]];
+                simulate_network_jobs(&c.network, &c.cfg, &c.opts, model, c.scheme, inner_jobs)
             });
+            for (w, r) in results.into_iter().enumerate() {
+                self.cache.insert(keys[leaders[w]].clone(), Arc::new(r));
+            }
         }
 
         keys.iter()
@@ -272,6 +362,7 @@ impl SweepRunner {
 mod tests {
     use super::*;
     use crate::nn::zoo;
+    use crate::sim::simulate_network;
 
     fn small_opts() -> SimOptions {
         SimOptions { batch: 1, ..SimOptions::default() }
@@ -359,5 +450,73 @@ mod tests {
     fn zero_jobs_resolves_to_host_parallelism() {
         assert!(SweepRunner::new(0).jobs >= 1);
         assert_eq!(SweepRunner::new(3).jobs, 3);
+    }
+
+    #[test]
+    fn cache_spills_to_disk_and_reloads_bit_exact() {
+        let dir = std::env::temp_dir().join("agos_sweep_cache_test");
+        let path = dir.join("sweep-cache.json");
+        std::fs::remove_file(&path).ok();
+
+        let cfg = AcceleratorConfig::default();
+        let opts = small_opts();
+        let model = SparsityModel::synthetic(opts.seed);
+        let plan = SweepPlan::grid(
+            &[zoo::agos_cnn()],
+            &[Scheme::Dense, Scheme::InOutWr],
+            &cfg,
+            &opts,
+        );
+
+        let first = SweepRunner::new(2);
+        // A missing file loads as an empty cache.
+        assert_eq!(first.cache().load_file(&path).unwrap(), 0);
+        let out1 = first.run(&plan, &model);
+        assert_eq!(first.cache().misses(), 2);
+        first.cache().save_file(&path).unwrap();
+
+        // A fresh process (runner) reloads the spill and simulates nothing.
+        let second = SweepRunner::new(2);
+        assert_eq!(second.cache().load_file(&path).unwrap(), 2);
+        let out2 = second.run(&plan, &model);
+        assert_eq!(second.cache().misses(), 0, "disk-cached combos must not re-simulate");
+        assert_eq!(second.cache().hits(), 2);
+        for (a, b) in out1.iter().zip(&out2) {
+            assert_eq!(a.scheme, b.scheme);
+            assert_eq!(a.total_cycles(), b.total_cycles());
+            assert_eq!(a.total_energy_j(), b.total_energy_j());
+            assert_eq!(a.per_layer.len(), b.per_layer.len());
+            for (la, lb) in a.per_layer.iter().zip(&b.per_layer) {
+                assert_eq!(la.cycles, lb.cycles, "{} {}", la.name, la.phase.label());
+                assert_eq!(la.tile_mean, lb.tile_mean);
+            }
+        }
+
+        // A stale entry for different options must not be served: a new
+        // seed misses even with the spill loaded.
+        let third = SweepRunner::new(1);
+        third.cache().load_file(&path).unwrap();
+        let other = SimOptions { seed: 999, ..small_opts() };
+        let model2 = SparsityModel::synthetic(other.seed);
+        let plan2 = SweepPlan::grid(&[zoo::agos_cnn()], &[Scheme::Dense], &cfg, &other);
+        third.run(&plan2, &model2);
+        assert_eq!(third.cache().misses(), 1);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_cache_file_is_an_error_not_a_panic() {
+        let dir = std::env::temp_dir().join("agos_sweep_cache_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(SweepCache::new().load_file(&path).is_err());
+        std::fs::write(&path, "{\"version\": 2, \"entries\": []}").unwrap();
+        assert!(SweepCache::new().load_file(&path).is_err());
+        // A spill from another simulator revision must be rejected too.
+        std::fs::write(&path, "{\"version\": 1, \"sim_rev\": 0, \"entries\": []}").unwrap();
+        assert!(SweepCache::new().load_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

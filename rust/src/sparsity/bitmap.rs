@@ -21,6 +21,51 @@ impl Bitmap {
         Bitmap { shape, words: vec![0; n.div_ceil(64)] }
     }
 
+    /// Sample a random bitmap where every bit is independently non-zero
+    /// with probability `density` — the exact execution backend's stand-in
+    /// for a measured operand bitmap (`sim::backend`). Degenerate
+    /// densities take a draw-free fast path, so dense (`>= 1`) and empty
+    /// (`<= 0`) maps cost no RNG state.
+    pub fn sample(shape: Shape, density: f64, rng: &mut crate::util::rng::Pcg32) -> Bitmap {
+        let mut b = Bitmap::zeros(shape);
+        let n = shape.len();
+        if density <= 0.0 {
+            return b;
+        }
+        if density >= 1.0 {
+            for w in b.words.iter_mut() {
+                *w = !0;
+            }
+            // Mask the tail word: stray bits past `len` would corrupt
+            // word-wise ops (`and`, `contained_in`) against bitmaps
+            // built bit-by-bit.
+            let tail = n % 64;
+            if tail > 0 {
+                *b.words.last_mut().unwrap() &= (1u64 << tail) - 1;
+            }
+            return b;
+        }
+        for i in 0..n {
+            if rng.bernoulli(density) {
+                b.words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        b
+    }
+
+    /// One channel's bits in within-channel (row-major spatial) order —
+    /// the drain order the exact PE walks (`sim::exact`).
+    pub fn channel_bits(&self, c: usize) -> Vec<bool> {
+        let hw = self.shape.h * self.shape.w;
+        let base = c * hw;
+        (0..hw)
+            .map(|i| {
+                let j = base + i;
+                (self.words[j / 64] >> (j % 64)) & 1 == 1
+            })
+            .collect()
+    }
+
     /// Build from an f32 tensor in `[C,H,W]` order: bit set ⇔ value ≠ 0.
     pub fn from_values(shape: Shape, values: &[f32]) -> Bitmap {
         assert_eq!(values.len(), shape.len(), "value count vs shape");
@@ -179,6 +224,38 @@ mod tests {
         assert!(!act.contained_in(&grad));
         let both = act.and(&grad);
         assert_eq!(both.count_nz(), 2);
+    }
+
+    #[test]
+    fn sample_tracks_density_and_degenerate_cases() {
+        use crate::util::rng::Pcg32;
+        let shape = Shape::new(8, 16, 16);
+        let mut rng = Pcg32::new(4);
+        let b = Bitmap::sample(shape, 0.7, &mut rng);
+        assert!((b.sparsity() - 0.3).abs() < 0.05, "sparsity {}", b.sparsity());
+        // Degenerate densities consume no RNG state.
+        let mut a = Pcg32::new(1);
+        let mut c = Pcg32::new(1);
+        let full = Bitmap::sample(shape, 1.0, &mut a);
+        let empty = Bitmap::sample(shape, 0.0, &mut a);
+        assert_eq!(full.count_nz(), shape.len());
+        assert_eq!(empty.count_nz(), 0);
+        assert_eq!(a.next_u32(), c.next_u32(), "fast paths must not draw");
+        // Determinism from the stream.
+        let d1 = Bitmap::sample(shape, 0.4, &mut Pcg32::new(7));
+        let d2 = Bitmap::sample(shape, 0.4, &mut Pcg32::new(7));
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn channel_bits_match_get() {
+        let mut b = Bitmap::zeros(Shape::new(3, 2, 2));
+        b.set(1, 0, 1, true);
+        b.set(1, 1, 0, true);
+        b.set(2, 1, 1, true);
+        assert_eq!(b.channel_bits(0), vec![false; 4]);
+        assert_eq!(b.channel_bits(1), vec![false, true, true, false]);
+        assert_eq!(b.channel_bits(2), vec![false, false, false, true]);
     }
 
     #[test]

@@ -11,6 +11,15 @@
 //!
 //! Real traces extracted by the coordinator (from the small CNN trained
 //! through the AOT artifacts) enter through [`TraceSource::Measured`].
+//!
+//! The per-layer fractions this model assigns are consumed two ways,
+//! depending on `SimOptions::backend` (`sim::backend`):
+//!
+//! * **analytic** — as expected values driving the closed-form PE model;
+//! * **exact** — as densities that per-tile operand/output `Bitmap`s are
+//!   *sampled* from (via the per-image RNG stream), then drained through
+//!   the cycle-accurate `ExactPe`. Measured fractions thus become
+//!   pattern-level bitmaps in exact co-simulation.
 
 use std::collections::BTreeMap;
 

@@ -7,6 +7,7 @@
 //! and unit-tested.
 
 pub mod fnv;
+pub mod pool;
 pub mod rng;
 pub mod json;
 pub mod stats;

@@ -1,0 +1,76 @@
+//! Indexed scoped worker pool — the one claim-an-index/collect-by-index
+//! idiom behind the sweep executor and the engine's per-image fan-out.
+//!
+//! Workers claim indices from a shared atomic counter and send
+//! `(index, result)` pairs back over a channel; the caller's thread
+//! collects them into a `Vec` slot per index. Output order is therefore
+//! a pure function of the input — deterministic regardless of how the
+//! OS schedules the workers — which is what lets the simulator promise
+//! bit-identical results at any `--jobs` level.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+/// Evaluate `f(i)` for `i in 0..n` on up to `jobs` scoped worker
+/// threads; returns the results indexed by `i`. `jobs <= 1` (or
+/// `n <= 1`) degrades to a plain sequential loop with no thread
+/// machinery. A panicking `f` propagates out of the scope.
+pub fn run_indexed<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel();
+    thread::scope(|s| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((i, r)) = rx.recv() {
+            out[i] = Some(r);
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker pool covered every index")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_indexed_and_complete() {
+        for jobs in [0, 1, 3, 16] {
+            let out = run_indexed(10, jobs, |i| i * i);
+            assert_eq!(out, (0..10).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        let counts: Vec<AtomicU32> = (0..64).map(|_| AtomicU32::new(0)).collect();
+        run_indexed(64, 8, |i| counts[i].fetch_add(1, Ordering::Relaxed));
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+}

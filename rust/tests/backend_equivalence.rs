@@ -1,0 +1,127 @@
+//! Backend equivalence contract (ISSUE 2 acceptance):
+//!
+//! * **Tracking**: the exact bitmap backend's mean cycles must track the
+//!   analytic model within 20% at the *engine* level (whole networks,
+//!   all schemes) — the aggregated closure of the per-output
+//!   `analytic_model_tracks_exact_simulation` unit check. Networks here
+//!   use receptive fields inside the analytic model's validated range
+//!   (CRS ≥ ~64; see `sim::exact`'s validation grid).
+//! * **Determinism**: exact results are bit-identical at any `--jobs`
+//!   level, including the sweep runner's per-image fan-out path.
+
+use agos::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions};
+use agos::nn::{zoo, Network};
+use agos::sim::{simulate_network, simulate_network_jobs, SweepPlan, SweepRunner};
+use agos::sparsity::SparsityModel;
+
+/// Small conv/ReLU stack with paper-scale receptive fields (3×3 kernels
+/// over `chans` channel widths at an 8×8 map).
+fn conv_stack(name: &str, c0: usize, chans: &[usize]) -> Network {
+    let mut net = Network::new(name);
+    let mut x = net.input(c0, 8, 8);
+    for (i, &m) in chans.iter().enumerate() {
+        let c = net.conv(&format!("conv{}", i + 1), x, m, 3, 1, 1);
+        x = net.relu(&format!("relu{}", i + 1), c);
+    }
+    net.softmax("prob", x);
+    net
+}
+
+fn exact_opts() -> SimOptions {
+    SimOptions {
+        batch: 2,
+        backend: ExecBackend::Exact,
+        // Small per-tile sample keeps the debug-mode walk fast; the
+        // aggregate over hundreds of tiles still pins the mean tightly.
+        exact_outputs_per_tile: 8,
+        ..SimOptions::default()
+    }
+}
+
+#[test]
+fn exact_engine_tracks_analytic_within_20_percent() {
+    let cfg = AcceleratorConfig::default();
+    // CRS 288/576 (conv), 576 (BP), 64 (WG) — the validated band.
+    let nets = [conv_stack("eq_a", 32, &[64, 64]), conv_stack("eq_b", 64, &[32, 64])];
+    for net in &nets {
+        let model = SparsityModel::synthetic(11);
+        for scheme in Scheme::ALL {
+            let analytic_opts =
+                SimOptions { backend: ExecBackend::Analytic, ..exact_opts() };
+            let a = simulate_network(net, &cfg, &analytic_opts, &model, scheme);
+            let e = simulate_network(net, &cfg, &exact_opts(), &model, scheme);
+            let (at, et) = (a.total_cycles(), e.total_cycles());
+            let err = (et - at).abs() / at;
+            assert!(
+                err < 0.20,
+                "{} {}: exact {et:.0} vs analytic {at:.0} cycles ({:.1}% deviation)",
+                net.name,
+                scheme.label(),
+                err * 100.0
+            );
+            // MAC accounting must agree too (it is exact in expectation
+            // on both backends).
+            let (am, em) = (a.phase(agos::nn::Phase::Backward), e.phase(agos::nn::Phase::Backward));
+            if am.performed_macs > 0.0 {
+                let mac_err = (em.performed_macs - am.performed_macs).abs() / am.performed_macs;
+                assert!(
+                    mac_err < 0.20,
+                    "{} {}: BP macs deviate {:.1}%",
+                    net.name,
+                    scheme.label(),
+                    mac_err * 100.0
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_backend_jobs_invariance_golden() {
+    // One combo under the exact backend: a 4-thread runner must use the
+    // per-image fan-out (plan smaller than jobs) and still reproduce the
+    // sequential engine bit-for-bit.
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 3, ..exact_opts() };
+    let model = SparsityModel::synthetic(opts.seed);
+    let net = zoo::agos_cnn();
+
+    let sequential = simulate_network(&net, &cfg, &opts, &model, Scheme::InOutWr);
+    let fanned = simulate_network_jobs(&net, &cfg, &opts, &model, Scheme::InOutWr, 4);
+    let plan =
+        SweepPlan::grid(std::slice::from_ref(&net), &[Scheme::InOutWr], &cfg, &opts);
+    let via_runner = SweepRunner::new(4).run(&plan, &model);
+
+    for (label, got) in [("fanout", &fanned), ("runner", &via_runner[0])] {
+        assert_eq!(sequential.total_cycles(), got.total_cycles(), "{label}");
+        assert_eq!(sequential.total_energy_j(), got.total_energy_j(), "{label}");
+        assert_eq!(sequential.per_layer.len(), got.per_layer.len());
+        for (a, b) in sequential.per_layer.iter().zip(&got.per_layer) {
+            assert_eq!(a.cycles, b.cycles, "{label}: {} {}", a.name, a.phase.label());
+            assert_eq!(a.performed_macs, b.performed_macs, "{label}: {}", a.name);
+            assert_eq!(a.tile_mean, b.tile_mean, "{label}: {}", a.name);
+        }
+    }
+}
+
+#[test]
+fn exact_backend_smoke_through_sweep_runner() {
+    // The CI smoke: a tiny all-scheme exact sweep produces ordered,
+    // cached results (CI runs this test by name so the path can't rot).
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 1, ..exact_opts() };
+    let model = SparsityModel::synthetic(opts.seed);
+    let runner = SweepRunner::new(2);
+    let plan =
+        SweepPlan::grid(&[zoo::agos_cnn()], &Scheme::ALL, &cfg, &opts);
+    let results = runner.run(&plan, &model);
+    assert_eq!(results.len(), 4);
+    let dc = results[0].total_cycles();
+    let wr = results[3].total_cycles();
+    assert!(dc > wr, "exact sweep must show sparse speedup: DC {dc} vs WR {wr}");
+    assert_eq!(runner.cache().misses(), 4);
+    // Served from cache on repeat.
+    let again = runner.run(&plan, &model);
+    assert_eq!(runner.cache().misses(), 4);
+    assert_eq!(again[0].total_cycles(), dc);
+}
