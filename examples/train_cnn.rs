@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     // ---- co-simulation on measured sparsity --------------------------------
     let cfg = AcceleratorConfig::default();
     let sim_opts = SimOptions { batch: 16, ..SimOptions::default() };
-    let report = cosim_from_traces(&log.traces, &cfg, &sim_opts)?;
+    let report = cosim_from_traces(&log.traces, &cfg, &sim_opts, false)?;
     println!("\naccelerator co-simulation on the measured traces:");
     for (scheme, total, bp, energy) in &report.rows {
         println!("  {scheme:<10} total {total:>12.0} cycles  BP {bp:>12.0} cycles  {energy:.4} J");

@@ -4,12 +4,15 @@
 //! all-scheme sweep is persisted to `BENCH_sweep.json` so the perf
 //! trajectory is tracked across PRs.
 
-use agos::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions};
-use agos::nn::zoo;
+use std::sync::Arc;
+
+use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions};
+use agos::nn::{zoo, Shape};
 use agos::sim::{
-    redistribute, simulate_layer, simulate_network, LayerTask, PeModel, SweepPlan, SweepRunner,
+    redistribute, simulate_layer, simulate_network, LayerTask, PeModel, ReplayBank, SweepPlan,
+    SweepRunner,
 };
-use agos::sparsity::SparsityModel;
+use agos::sparsity::{capture_synthetic_trace, Bitmap, SparsityModel};
 use agos::util::bench::{black_box, Bench};
 use agos::util::json::Json;
 use agos::util::rng::Pcg32;
@@ -100,6 +103,40 @@ fn main() {
     b.case("backend_exact_agos_b1", || {
         simulate_network(&anet, &cfg, &exact_opts, &model, Scheme::InOutWr).total_cycles()
     });
+
+    // Replay vs sample on the exact backend: same workload, patterns
+    // sliced from a captured trace instead of drawn from the stream.
+    let trace = capture_synthetic_trace(&anet, &model, 2, BitmapPattern::Iid, 2);
+    let bank = ReplayBank::from_trace(&anet, &trace).expect("synthesized capture");
+    let replay_opts = SimOptions {
+        trace_fingerprint: Some(trace.fingerprint()),
+        replay: Some(Arc::new(bank)),
+        ..exact_opts.clone()
+    };
+    b.case("backend_exact_replay_agos_b1", || {
+        simulate_network(&anet, &cfg, &replay_opts, &model, Scheme::InOutWr).total_cycles()
+    });
+
+    // Bitmap drain walks: the legacy per-bool channel expansion (what
+    // `Bitmap::channel_bits` cost the hot loop before the word refactor)
+    // vs the packed word/popcount iterator (`channel_words`/`wc_nz`).
+    let bm = Bitmap::sample(Shape::new(64, 56, 56), 0.5, &mut Pcg32::new(3));
+    b.case("bitmap_channel_bool_walk_64x56x56", || {
+        let mut n = 0usize;
+        for c in 0..64 {
+            let bits: Vec<bool> =
+                (0..56 * 56).map(|i| bm.get(c, i / 56, i % 56)).collect();
+            n += bits.iter().filter(|b| **b).count();
+        }
+        black_box(n)
+    });
+    b.case("bitmap_channel_word_walk_64x56x56", || {
+        let mut n = 0usize;
+        for c in 0..64 {
+            n += bm.wc_nz(c);
+        }
+        black_box(n)
+    });
     b.finish();
 
     // Persist the sweep trajectory point (sequential vs parallel).
@@ -114,6 +151,9 @@ fn main() {
     let par = if jobs > 1 { find(&format!("_jobs{jobs}")) } else { seq };
     let analytic = find("backend_analytic_agos_b1");
     let exact = find("backend_exact_agos_b1");
+    let replay = find("backend_exact_replay_agos_b1");
+    let bool_walk = find("bitmap_channel_bool_walk_64x56x56");
+    let word_walk = find("bitmap_channel_word_walk_64x56x56");
     let j = Json::from_pairs(vec![
         ("bench", "sweep_googlenet_4schemes".into()),
         ("network", "googlenet".into()),
@@ -131,6 +171,15 @@ fn main() {
         ("backend_exact_mean_s", exact.mean.into()),
         ("backend_exact_std_s", exact.std.into()),
         ("backend_exact_slowdown", (exact.mean / analytic.mean).into()),
+        // Replay-vs-sample on the exact backend (agos_cnn b1).
+        ("backend_exact_replay_mean_s", replay.mean.into()),
+        ("backend_exact_replay_std_s", replay.std.into()),
+        ("backend_replay_vs_sampled", (replay.mean / exact.mean).into()),
+        // Word-level drain refactor: per-bool channel walk vs packed
+        // word/popcount walk over a 64x56x56 map.
+        ("bitmap_bool_walk_mean_s", bool_walk.mean.into()),
+        ("bitmap_word_walk_mean_s", word_walk.mean.into()),
+        ("bitmap_word_walk_speedup", (bool_walk.mean / word_walk.mean).into()),
     ]);
     j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
     println!(

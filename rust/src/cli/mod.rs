@@ -2,29 +2,36 @@
 //!
 //! ```text
 //! agos train     --steps 300 --trace-every 50 --out results/train.json
+//! agos trace     --network agos_cnn --steps 4 --out results/traces.json
 //! agos simulate  --network vgg16 --scheme in+out+wr --batch 16
 //! agos sweep     --networks all --schemes all --jobs 8 --out results/sweep.json
 //! agos figure    all --jobs 8 --out results/
 //! agos table     table2
 //! agos sparsity  --network resnet18
-//! agos cosim     --traces results/traces.json
+//! agos cosim     --traces results/traces.json --replay --backend exact
 //! agos info
 //! ```
 
 use std::path::{Path, PathBuf};
 
-use crate::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions, TrainOptions};
+use crate::config::{
+    AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions, TrainOptions,
+};
 use crate::coordinator::{cosim_from_traces, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
 use crate::sim::{simulate_network, SweepPlan, SweepRunner};
-use crate::sparsity::{analyze_network, SparsityModel};
+use crate::sparsity::{analyze_network, capture_synthetic_trace, SparsityModel};
 use crate::trace::TraceFile;
 use crate::util::cli::{App, Args, Command, OptSpec};
 use crate::util::json::Json;
 
 fn opt(name: &'static str, help: &'static str) -> OptSpec {
     OptSpec { name, takes_value: true, help }
+}
+
+fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: false, help }
 }
 
 fn app() -> App {
@@ -44,6 +51,18 @@ fn app() -> App {
                 ],
             },
             Command {
+                name: "trace",
+                about: "synthesize a v2 trace file with packed per-ReLU bitmaps (no PJRT needed)",
+                opts: vec![
+                    opt("network", "network to capture (default agos_cnn)"),
+                    opt("steps", "traced steps to synthesize (default 4)"),
+                    opt("seed", "sparsity model seed"),
+                    opt("pattern", "iid|blobs bitmap structure (default iid)"),
+                    opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
+                    opt("out", "trace JSON path (default results/traces.json)"),
+                ],
+            },
+            Command {
                 name: "simulate",
                 about: "simulate a network on the accelerator",
                 opts: vec![
@@ -54,6 +73,8 @@ fn app() -> App {
                     opt("config", "accelerator config JSON file"),
                     opt("backend", "analytic|exact execution backend (default analytic)"),
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
+                    opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                 ],
             },
             Command {
@@ -68,6 +89,8 @@ fn app() -> App {
                     opt("config", "accelerator config JSON file"),
                     opt("backend", "analytic|exact execution backend (default analytic)"),
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
+                    opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                     opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
                     opt("out", "write sweep results JSON here"),
                 ],
@@ -82,6 +105,8 @@ fn app() -> App {
                     opt("jobs", "sweep worker threads (default: all cores)"),
                     opt("backend", "analytic|exact execution backend (default analytic)"),
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
+                    opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                     opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
                 ],
             },
@@ -94,6 +119,8 @@ fn app() -> App {
                     opt("jobs", "sweep worker threads (default: all cores)"),
                     opt("backend", "analytic|exact execution backend (default analytic)"),
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
+                    opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                     opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
                 ],
             },
@@ -106,10 +133,16 @@ fn app() -> App {
                 name: "cosim",
                 about: "co-simulate measured traces on the accelerator",
                 opts: vec![
-                    opt("traces", "trace JSON from `agos train --out`"),
+                    opt("traces", "trace JSON from `agos train --out` or `agos trace`"),
                     opt("batch", "batch size (default 16)"),
                     opt("backend", "analytic|exact execution backend (default analytic)"),
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
+                    opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
+                    opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
+                    flag(
+                        "replay",
+                        "replay the trace's packed v2 bitmaps pattern-exactly (exact backend)",
+                    ),
                 ],
             },
             Command {
@@ -134,6 +167,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     let args = &parsed.args;
     match parsed.command.as_str() {
         "train" => cmd_train(args),
+        "trace" => cmd_trace(args),
         "simulate" => cmd_simulate(args),
         "sweep" => cmd_sweep(args),
         "figure" => cmd_figure(args),
@@ -148,13 +182,18 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
 /// Default on-disk spill location for the sweep cache.
 const SWEEP_CACHE_PATH: &str = "results/sweep-cache.json";
 
-/// Apply the shared `--backend`/`--exact-cap` selectors to sim options.
+/// Apply the shared `--backend`/`--exact-cap`/`--pattern`/`--blob-radius`
+/// selectors to sim options.
 fn apply_backend_opts(opts: &mut SimOptions, args: &Args) -> anyhow::Result<()> {
     if let Some(b) = args.opt("backend") {
         opts.backend = ExecBackend::parse(b)?;
     }
     opts.exact_outputs_per_tile =
         args.opt_usize("exact-cap", opts.exact_outputs_per_tile)?;
+    if let Some(p) = args.opt("pattern") {
+        opts.pattern = BitmapPattern::parse(p)?;
+    }
+    opts.blob_radius = args.opt_usize("blob-radius", opts.blob_radius)?;
     Ok(())
 }
 
@@ -243,6 +282,50 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
         j.write_file(path)?;
         println!("wrote {}", path.display());
     }
+    Ok(0)
+}
+
+/// Synthesize a v2 trace file (packed per-ReLU bitmaps) from the
+/// calibrated sparsity model — the capture path that needs no PJRT
+/// artifacts, and the producer side of the capture→replay smoke
+/// (`agos trace … && agos cosim --replay --backend exact …`). With
+/// artifacts built, `agos train --out` captures *real* payloads instead.
+fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
+    let net = zoo::by_name(args.opt_or("network", "agos_cnn"))?;
+    let steps = args.opt_usize("steps", 4)?;
+    let seed = args.opt_u64("seed", 0xA605)?;
+    let pattern = BitmapPattern::parse(args.opt_or("pattern", "iid"))?;
+    let blob_radius = args.opt_usize("blob-radius", 2)?;
+    let model = SparsityModel::synthetic(seed);
+    let trace = capture_synthetic_trace(&net, &model, steps, pattern, blob_radius);
+
+    let path = PathBuf::from(args.opt_or("out", "results/traces.json"));
+    trace.save(&path)?;
+    let payload_bits: usize = trace
+        .steps
+        .iter()
+        .flat_map(|s| &s.layers)
+        .flat_map(|l| [&l.act_bitmap, &l.grad_bitmap])
+        .filter_map(|b| b.as_ref().map(|b| b.shape.len()))
+        .sum();
+    let means = trace.mean_act_sparsity();
+    println!(
+        "captured {} steps x {} ReLU layers of '{}' [{} pattern] -> {}",
+        trace.steps.len(),
+        trace.steps.first().map_or(0, |s| s.layers.len()),
+        net.name,
+        pattern.label(),
+        path.display()
+    );
+    for (name, s) in &means {
+        println!("  {name:<20} mean act sparsity {s:.3}");
+    }
+    println!(
+        "  payloads: {payload_bits} bits packed ({:.1} KiB), identity holds: {}, fingerprint {:016x}",
+        payload_bits as f64 / 8.0 / 1024.0,
+        trace.identity_holds(),
+        trace.fingerprint()
+    );
     Ok(0)
 }
 
@@ -429,10 +512,14 @@ fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
     let mut opts = SimOptions::default();
     opts.batch = args.opt_usize("batch", 16)?;
     apply_backend_opts(&mut opts, args)?;
-    let report = cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts)?;
+    let report =
+        cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts, args.flag("replay"))?;
     println!(
-        "co-simulation of '{}' [{} backend] (mean measured sparsity {:.2})",
-        report.network, report.backend, report.mean_sparsity
+        "co-simulation of '{}' [{} backend{}] (mean measured sparsity {:.2})",
+        report.network,
+        report.backend,
+        if report.replayed { ", pattern replay" } else { "" },
+        report.mean_sparsity
     );
     for (scheme, total, bp, energy) in &report.rows {
         println!("  {scheme:<10} total {total:>14.0} cycles  BP {bp:>12.0}  {energy:.4} J");
@@ -601,12 +688,7 @@ mod tests {
                 step: 0,
                 loss: 1.0,
                 layers: (1..=4)
-                    .map(|i| LayerTrace {
-                        name: format!("relu{i}"),
-                        act_sparsity: 0.5,
-                        grad_sparsity: 0.5,
-                        identity_ok: true,
-                    })
+                    .map(|i| LayerTrace::scalar(&format!("relu{i}"), 0.5, 0.5, true))
                     .collect(),
             }],
         };
@@ -627,6 +709,58 @@ mod tests {
             .unwrap(),
             0
         );
+        // A scalar-only trace cannot replay.
+        assert!(run(&sv(&[
+            "cosim", "--traces", &path_s, "--batch", "1", "--backend", "exact", "--replay",
+        ]))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_capture_then_replay_cosim_roundtrip() {
+        use crate::trace::TraceFile;
+        // The CI smoke in miniature: synthesize a v2 trace, then consume
+        // it pattern-exactly through the exact backend.
+        let dir = std::env::temp_dir().join("agos_cli_trace_replay_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("traces.json");
+        let path_s = path.to_string_lossy().to_string();
+        assert_eq!(
+            run(&sv(&[
+                "trace",
+                "--network",
+                "agos_cnn",
+                "--steps",
+                "2",
+                "--pattern",
+                "blobs",
+                "--out",
+                &path_s,
+            ]))
+            .unwrap(),
+            0
+        );
+        let trace = TraceFile::load(&path).unwrap();
+        assert!(trace.has_bitmaps(), "agos trace must write v2 payloads");
+        assert_eq!(
+            run(&sv(&[
+                "cosim",
+                "--traces",
+                &path_s,
+                "--batch",
+                "2",
+                "--backend",
+                "exact",
+                "--exact-cap",
+                "8",
+                "--replay",
+            ]))
+            .unwrap(),
+            0
+        );
+        // Bad pattern names are rejected at the CLI boundary.
+        assert!(run(&sv(&["trace", "--pattern", "plaid", "--out", &path_s])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,7 +1,10 @@
 //! Simulation options: the execution scheme under evaluation, the
-//! execution backend, and the knobs for stochastic trace sampling.
+//! execution backend, the knobs for stochastic trace sampling, and the
+//! optional pattern-replay handle.
 
-use crate::sim::ExecBackend;
+use std::sync::Arc;
+
+use crate::sim::{ExecBackend, ReplayBank};
 use crate::util::json::Json;
 
 /// Execution scheme — the four bars of Fig 11/12/13.
@@ -54,6 +57,37 @@ impl Scheme {
     }
 }
 
+/// Spatial structure of *sampled* bitmaps on the exact backend — iid
+/// Bernoulli draws (what PR 2 shipped) vs spatially-correlated blobs,
+/// which reproduce the zero clustering that drives lane-imbalance stalls
+/// in real maps (`Bitmap::sample_blobs`). Irrelevant to replayed
+/// patterns, which carry their own structure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BitmapPattern {
+    #[default]
+    Iid,
+    Blobs,
+}
+
+impl BitmapPattern {
+    pub const ALL: [BitmapPattern; 2] = [BitmapPattern::Iid, BitmapPattern::Blobs];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BitmapPattern::Iid => "iid",
+            BitmapPattern::Blobs => "blobs",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<BitmapPattern> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid" | "bernoulli" => Ok(BitmapPattern::Iid),
+            "blobs" | "blob" | "clustered" => Ok(BitmapPattern::Blobs),
+            other => anyhow::bail!("unknown bitmap pattern '{other}' (iid|blobs)"),
+        }
+    }
+}
+
 /// Options controlling a simulation run.
 #[derive(Clone, Debug)]
 pub struct SimOptions {
@@ -72,6 +106,20 @@ pub struct SimOptions {
     pub overlap_dram: bool,
     /// Execution backend the tiles are costed with (sim::backend).
     pub backend: ExecBackend,
+    /// Spatial structure of sampled bitmaps (exact backend).
+    pub pattern: BitmapPattern,
+    /// Blob radius when `pattern == Blobs` (Chebyshev, in pixels).
+    pub blob_radius: usize,
+    /// Content fingerprint of the trace file a run is driven by, if any
+    /// — folded into `fingerprint()` so two different trace files can
+    /// never share a sweep-cache entry even when their per-layer mean
+    /// sparsities coincide (set by `coordinator::cosim_from_traces`).
+    pub trace_fingerprint: Option<u64>,
+    /// Captured-bitmap replay bank (exact backend): tasks with payloads
+    /// slice real patterns instead of sampling (`sim::replay`). A live
+    /// handle, not serialized; its trace fingerprint is folded into
+    /// `fingerprint()`.
+    pub replay: Option<Arc<ReplayBank>>,
 }
 
 impl Default for SimOptions {
@@ -83,6 +131,10 @@ impl Default for SimOptions {
             exact_outputs_per_tile: 4096,
             overlap_dram: true,
             backend: ExecBackend::Analytic,
+            pattern: BitmapPattern::Iid,
+            blob_radius: 2,
+            trace_fingerprint: None,
+            replay: None,
         }
     }
 }
@@ -100,18 +152,46 @@ impl SimOptions {
             .put(self.exact_outputs_per_tile as u64)
             .put(self.overlap_dram as u64)
             .put(self.backend.tag());
+        // One word for the sampling structure: iid runs at any
+        // `blob_radius` are identical, so the radius only separates keys
+        // when blobs are actually drawn.
+        h.put(match self.pattern {
+            BitmapPattern::Iid => 0,
+            BitmapPattern::Blobs => 1 + self.blob_radius as u64,
+        });
+        // Presence-tagged folds: None vs Some(0) must differ.
+        match self.trace_fingerprint {
+            None => h.put(0),
+            Some(fp) => h.put(1).put(fp),
+        };
+        match &self.replay {
+            None => h.put(0),
+            Some(bank) => h.put(1).put(bank.fingerprint()),
+        };
         h.finish()
     }
 
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("seed", self.seed.into()),
             ("batch", self.batch.into()),
             ("tile_sparsity_cv", self.tile_sparsity_cv.into()),
             ("exact_outputs_per_tile", self.exact_outputs_per_tile.into()),
             ("overlap_dram", self.overlap_dram.into()),
             ("backend", self.backend.label().into()),
-        ])
+            ("pattern", self.pattern.label().into()),
+            ("blob_radius", self.blob_radius.into()),
+        ]);
+        // The replay bank is a live in-memory handle; record what it
+        // replays (for result provenance) without pretending a JSON blob
+        // could reconstruct it.
+        if let Some(fp) = self.trace_fingerprint {
+            j.set("trace_fingerprint", format!("{fp:016x}").into());
+        }
+        if let Some(bank) = &self.replay {
+            j.set("replay_trace_fingerprint", format!("{:016x}", bank.fingerprint()).into());
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<SimOptions> {
@@ -135,6 +215,18 @@ impl SimOptions {
                     let s = v.as_str().ok_or_else(|| anyhow::anyhow!("backend: string"))?;
                     o.backend = ExecBackend::parse(s)?;
                 }
+                "pattern" => {
+                    let s = v.as_str().ok_or_else(|| anyhow::anyhow!("pattern: string"))?;
+                    o.pattern = BitmapPattern::parse(s)?;
+                }
+                "blob_radius" => {
+                    o.blob_radius =
+                        v.as_usize().ok_or_else(|| anyhow::anyhow!("blob_radius: usize"))?
+                }
+                // Provenance stamps written by to_json; a parsed options
+                // object cannot resurrect the live bank, so they are
+                // accepted and dropped rather than silently keyed on.
+                "trace_fingerprint" | "replay_trace_fingerprint" => {}
                 other => anyhow::bail!("unknown sim option '{other}'"),
             }
         }
@@ -174,10 +266,34 @@ mod tests {
             SimOptions { exact_outputs_per_tile: 7, ..base.clone() },
             SimOptions { overlap_dram: false, ..base.clone() },
             SimOptions { backend: ExecBackend::Exact, ..base.clone() },
+            SimOptions { pattern: BitmapPattern::Blobs, ..base.clone() },
+            SimOptions { trace_fingerprint: Some(0), ..base.clone() },
+            SimOptions { trace_fingerprint: Some(7), ..base.clone() },
         ];
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(v.fingerprint(), base.fingerprint(), "variant {i}");
         }
+        // The blob radius separates keys only when blobs are drawn.
+        let iid_r9 = SimOptions { blob_radius: 9, ..base.clone() };
+        assert_eq!(iid_r9.fingerprint(), base.fingerprint());
+        let blobs = SimOptions { pattern: BitmapPattern::Blobs, ..base.clone() };
+        let blobs_r9 = SimOptions { blob_radius: 9, ..blobs.clone() };
+        assert_ne!(blobs.fingerprint(), blobs_r9.fingerprint());
+        // Two different trace fingerprints must never alias.
+        assert_ne!(
+            SimOptions { trace_fingerprint: Some(1), ..base.clone() }.fingerprint(),
+            SimOptions { trace_fingerprint: Some(2), ..base.clone() }.fingerprint()
+        );
+    }
+
+    #[test]
+    fn pattern_parse_roundtrip() {
+        for p in BitmapPattern::ALL {
+            assert_eq!(BitmapPattern::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(BitmapPattern::parse("CLUSTERED").unwrap(), BitmapPattern::Blobs);
+        assert!(BitmapPattern::parse("plaid").is_err());
+        assert_eq!(BitmapPattern::default(), BitmapPattern::Iid);
     }
 
     #[test]
@@ -186,11 +302,19 @@ mod tests {
             seed: 42,
             batch: 8,
             backend: ExecBackend::Exact,
+            pattern: BitmapPattern::Blobs,
+            blob_radius: 5,
+            trace_fingerprint: Some(0xABCD),
             ..SimOptions::default()
         };
         let o2 = SimOptions::from_json(&o.to_json()).unwrap();
         assert_eq!(o2.seed, 42);
         assert_eq!(o2.batch, 8);
         assert_eq!(o2.backend, ExecBackend::Exact);
+        assert_eq!(o2.pattern, BitmapPattern::Blobs);
+        assert_eq!(o2.blob_radius, 5);
+        // Provenance stamps are not resurrected into live state.
+        assert_eq!(o2.trace_fingerprint, None);
+        assert!(o2.replay.is_none());
     }
 }

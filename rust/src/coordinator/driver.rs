@@ -6,11 +6,20 @@
 //! measured per-layer sparsity fractions are consumed as *sampled
 //! bitmaps* (each image's per-tile operand/output patterns drawn from
 //! its derived stream and drained through the cycle-accurate PE) rather
-//! than as expected values.
+//! than as expected values. With `replay` requested, a v2 trace's packed
+//! payloads are replayed pattern-exactly instead (`sim::replay`) — no
+//! RNG is involved for any layer that carries a payload.
+//!
+//! Cache soundness: the trace's content fingerprint is folded into the
+//! options (and with it the sweep-cache key) *whether or not* replay is
+//! on, so two different trace files for the same network can never share
+//! a cache entry.
 
-use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use std::sync::Arc;
+
+use crate::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions};
 use crate::nn::{zoo, Phase};
-use crate::sim::{SweepPlan, SweepRunner};
+use crate::sim::{ReplayBank, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
 use crate::trace::TraceFile;
 use crate::util::json::Json;
@@ -21,6 +30,8 @@ pub struct CosimReport {
     pub network: String,
     /// Execution backend the rows were produced with ("analytic"/"exact").
     pub backend: String,
+    /// Whether captured bitmap payloads were replayed pattern-exactly.
+    pub replayed: bool,
     /// (scheme label, total cycles, BP cycles, energy J).
     pub rows: Vec<(String, f64, f64, f64)>,
     /// Speedup of IN+OUT+WR over dense, total / BP-only.
@@ -47,6 +58,7 @@ impl CosimReport {
         Json::from_pairs(vec![
             ("network", self.network.as_str().into()),
             ("backend", self.backend.as_str().into()),
+            ("replayed", self.replayed.into()),
             ("rows", Json::Arr(rows)),
             ("total_speedup", self.total_speedup.into()),
             ("bp_speedup", self.bp_speedup.into()),
@@ -55,11 +67,15 @@ impl CosimReport {
     }
 }
 
-/// Run the simulator over the trace file's measured sparsity.
+/// Run the simulator over the trace file's measured sparsity. With
+/// `replay`, additionally resolve the trace's v2 bitmap payloads into a
+/// `ReplayBank` so the exact backend consumes the captured patterns
+/// end to end (requires `--backend exact` and a payload-bearing trace).
 pub fn cosim_from_traces(
     traces: &TraceFile,
     cfg: &AcceleratorConfig,
     opts: &SimOptions,
+    replay: bool,
 ) -> anyhow::Result<CosimReport> {
     anyhow::ensure!(!traces.steps.is_empty(), "trace file has no steps");
     anyhow::ensure!(
@@ -75,11 +91,23 @@ pub fn cosim_from_traces(
     };
     let model = SparsityModel::measured(opts.seed, measured);
 
+    // Fold the trace's *content* into the cache identity: different
+    // trace files must never alias, even at identical per-layer means.
+    let mut opts = opts.clone();
+    opts.trace_fingerprint = Some(traces.fingerprint());
+    if replay {
+        anyhow::ensure!(
+            opts.backend == ExecBackend::Exact,
+            "--replay requires the exact backend (patterns mean nothing to the analytic model)"
+        );
+        opts.replay = Some(Arc::new(ReplayBank::from_trace(&net, traces)?));
+    }
+
     // All four schemes as one parallel sweep (results identical to the
     // sequential loop this replaced — see sim::sweep's determinism
     // contract).
     let runner = SweepRunner::new(0);
-    let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, cfg, opts);
+    let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, cfg, &opts);
     let results = runner.run(&plan, &model);
 
     let mut rows = Vec::new();
@@ -103,6 +131,7 @@ pub fn cosim_from_traces(
     Ok(CosimReport {
         network: net.name,
         backend: opts.backend.label().to_string(),
+        replayed: opts.replay.is_some(),
         rows,
         total_speedup: dense_total / wr_total,
         bp_speedup: dense_bp / wr_bp,
@@ -122,12 +151,7 @@ mod tests {
                 step: 0,
                 loss: 2.0,
                 layers: (1..=4)
-                    .map(|i| LayerTrace {
-                        name: format!("relu{i}"),
-                        act_sparsity: sparsity,
-                        grad_sparsity: sparsity,
-                        identity_ok: true,
-                    })
+                    .map(|i| LayerTrace::scalar(&format!("relu{i}"), sparsity, sparsity, true))
                     .collect(),
             }],
         }
@@ -137,8 +161,9 @@ mod tests {
     fn cosim_produces_speedup_from_measured_sparsity() {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions { batch: 2, ..SimOptions::default() };
-        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts).unwrap();
+        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false).unwrap();
         assert_eq!(report.rows.len(), 4);
+        assert!(!report.replayed);
         assert!(report.total_speedup > 1.1, "{}", report.total_speedup);
         assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
         assert!((report.mean_sparsity - 0.5).abs() < 1e-9);
@@ -146,7 +171,6 @@ mod tests {
 
     #[test]
     fn cosim_exact_backend_consumes_measured_sparsity_as_bitmaps() {
-        use crate::config::ExecBackend;
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions {
             batch: 1,
@@ -154,25 +178,58 @@ mod tests {
             exact_outputs_per_tile: 16,
             ..SimOptions::default()
         };
-        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts).unwrap();
+        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false).unwrap();
         assert_eq!(report.backend, "exact");
         assert_eq!(report.rows.len(), 4);
         assert!(report.total_speedup > 1.1, "{}", report.total_speedup);
         assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
         assert_eq!(report.to_json().get("backend").as_str(), Some("exact"));
         // Deterministic: the same traces + options reproduce bit-exactly.
-        let again = cosim_from_traces(&fake_traces(0.5), &cfg, &opts).unwrap();
+        let again = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false).unwrap();
         for (a, b) in report.rows.iter().zip(&again.rows) {
             assert_eq!(a, b);
         }
     }
 
     #[test]
+    fn cosim_replays_captured_patterns_end_to_end() {
+        use crate::nn::zoo;
+        use crate::sparsity::{capture_synthetic_trace, SparsityModel};
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions {
+            batch: 2,
+            backend: ExecBackend::Exact,
+            exact_outputs_per_tile: 16,
+            ..SimOptions::default()
+        };
+        let traces = capture_synthetic_trace(
+            &zoo::agos_cnn(),
+            &SparsityModel::synthetic(opts.seed),
+            2,
+            crate::config::BitmapPattern::Iid,
+            2,
+        );
+        let report = cosim_from_traces(&traces, &cfg, &opts, true).unwrap();
+        assert!(report.replayed);
+        assert_eq!(report.backend, "exact");
+        assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
+        assert_eq!(report.to_json().get("replayed").as_bool(), Some(true));
+        // Replay is deterministic end to end.
+        let again = cosim_from_traces(&traces, &cfg, &opts, true).unwrap();
+        assert_eq!(report.rows, again.rows);
+        // Guard rails: analytic + replay is a user error, and a
+        // payload-free trace cannot replay.
+        let analytic = SimOptions { backend: ExecBackend::Analytic, ..opts.clone() };
+        assert!(cosim_from_traces(&traces, &cfg, &analytic, true).is_err());
+        assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &opts, true).is_err());
+    }
+
+    #[test]
     fn more_sparsity_more_speedup() {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions { batch: 2, ..SimOptions::default() };
-        let lo = cosim_from_traces(&fake_traces(0.3), &cfg, &opts).unwrap();
-        let hi = cosim_from_traces(&fake_traces(0.7), &cfg, &opts).unwrap();
+        let lo = cosim_from_traces(&fake_traces(0.3), &cfg, &opts, false).unwrap();
+        let hi = cosim_from_traces(&fake_traces(0.7), &cfg, &opts, false).unwrap();
         assert!(hi.total_speedup > lo.total_speedup);
     }
 
@@ -181,19 +238,20 @@ mod tests {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions::default();
         let empty = TraceFile::new("agos_cnn");
-        assert!(cosim_from_traces(&empty, &cfg, &opts).is_err());
+        assert!(cosim_from_traces(&empty, &cfg, &opts, false).is_err());
         let mut bad = fake_traces(0.5);
         bad.steps[0].layers[0].identity_ok = false;
-        assert!(cosim_from_traces(&bad, &cfg, &opts).is_err());
+        assert!(cosim_from_traces(&bad, &cfg, &opts, false).is_err());
     }
 
     #[test]
     fn report_serializes() {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions { batch: 1, ..SimOptions::default() };
-        let report = cosim_from_traces(&fake_traces(0.4), &cfg, &opts).unwrap();
+        let report = cosim_from_traces(&fake_traces(0.4), &cfg, &opts, false).unwrap();
         let j = report.to_json();
         assert_eq!(j.get("network").as_str(), Some("agos_cnn"));
         assert_eq!(j.get("rows").as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("replayed").as_bool(), Some(false));
     }
 }

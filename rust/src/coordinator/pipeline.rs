@@ -65,6 +65,10 @@ pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
                     act_sparsity: a.zero_fraction(),
                     grad_sparsity: g.zero_fraction(),
                     identity_ok,
+                    // v2 payload: image 0's packed footprints (see
+                    // `Trainer::traced_step`).
+                    act_bitmap: crate::runtime::bitmap_from_nhwc(a, 0),
+                    grad_bitmap: crate::runtime::bitmap_from_nhwc(g, 0),
                 });
             }
             out.push(StepTrace { step, loss, layers });

@@ -85,6 +85,11 @@ impl Trainer {
                 act_sparsity: a.zero_fraction(),
                 grad_sparsity: g.zero_fraction(),
                 identity_ok,
+                // v2 payload: image 0's packed footprints (one image per
+                // step keeps trace files small; steps are the batch axis
+                // the replay path cycles over).
+                act_bitmap: crate::runtime::bitmap_from_nhwc(a, 0),
+                grad_bitmap: crate::runtime::bitmap_from_nhwc(g, 0),
             });
         }
         Ok(StepTrace { step, loss, layers })

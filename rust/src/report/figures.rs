@@ -216,30 +216,61 @@ pub fn fig16_reconfig(ctx: &ReportCtx) -> Figure {
     fig
 }
 
-/// Backend validation (figval): analytic vs exact total cycles per
-/// scheme on the traced CNN — the engine-level closure of the per-output
-/// `analytic_model_tracks_exact_simulation` check. Both columns run
-/// whatever batch/seed the context carries; the backends are pinned
-/// explicitly, so this figure is meaningful even under `--backend exact`.
+/// Backend validation (figval): analytic vs exact-sampled vs
+/// exact-replayed total cycles per scheme on the traced CNN — the
+/// engine-level closure of the per-output
+/// `analytic_model_tracks_exact_simulation` check, now three-way. The
+/// replay column synthesizes a v2 bitmap capture at the context model's
+/// densities (`sparsity::capture_synthetic_trace`) and replays it
+/// pattern-exactly, so sampled-vs-replayed deviation at matched density
+/// is visible per scheme. All columns pin their backend explicitly, so
+/// this figure is meaningful even under `--backend exact`.
 pub fn figval_backend(ctx: &ReportCtx) -> Figure {
     let net = zoo::agos_cnn();
     let analytic = SimOptions { backend: ExecBackend::Analytic, ..ctx.opts.clone() };
     let exact = SimOptions { backend: ExecBackend::Exact, ..ctx.opts.clone() };
+    let steps = ctx.opts.batch.clamp(1, 4);
+    let trace = crate::sparsity::capture_synthetic_trace(
+        &net,
+        &ctx.model,
+        steps,
+        ctx.opts.pattern,
+        ctx.opts.blob_radius,
+    );
+    let bank = crate::sim::ReplayBank::from_trace(&net, &trace)
+        .expect("synthesized traces always carry payloads");
+    let replayed = SimOptions {
+        backend: ExecBackend::Exact,
+        trace_fingerprint: Some(trace.fingerprint()),
+        replay: Some(Arc::new(bank)),
+        ..ctx.opts.clone()
+    };
     let mut fig = Figure::new(
         "figval",
-        "Analytic vs exact backend (total cycles)",
-        &["analytic", "exact", "exact/analytic"],
+        "Analytic vs exact backend, sampled and replayed (total cycles)",
+        &["analytic", "exact-sampled", "exact-replay", "sampled/analytic", "replay/analytic"],
     );
     fig.notes = format!(
-        "agos_cnn, batch {}, seed {}, exact cap {} outputs/tile; rows are schemes",
-        ctx.opts.batch, ctx.opts.seed, ctx.opts.exact_outputs_per_tile
+        "agos_cnn, batch {}, seed {}, exact cap {} outputs/tile, {} sampling, \
+         replaying a {steps}-step synthesized capture; rows are schemes",
+        ctx.opts.batch,
+        ctx.opts.seed,
+        ctx.opts.exact_outputs_per_tile,
+        ctx.opts.pattern.label(),
     );
     for scheme in Scheme::ALL {
         let a = ctx.sweep.one(&net, &ctx.cfg, &analytic, &ctx.model, scheme);
         let e = ctx.sweep.one(&net, &ctx.cfg, &exact, &ctx.model, scheme);
+        let r = ctx.sweep.one(&net, &ctx.cfg, &replayed, &ctx.model, scheme);
         fig.row(
             scheme.label(),
-            vec![a.total_cycles(), e.total_cycles(), e.total_cycles() / a.total_cycles()],
+            vec![
+                a.total_cycles(),
+                e.total_cycles(),
+                r.total_cycles(),
+                e.total_cycles() / a.total_cycles(),
+                r.total_cycles() / a.total_cycles(),
+            ],
         );
     }
     fig
@@ -377,10 +408,23 @@ mod tests {
         let f = figval_backend(&ctx);
         assert_eq!(f.rows.len(), 4);
         for (label, v) in &f.rows {
-            let ratio = v[2];
+            let sampled = v[3];
             assert!(
-                (0.65..1.55).contains(&ratio),
-                "{label}: exact/analytic ratio {ratio:.3} out of band"
+                (0.65..1.55).contains(&sampled),
+                "{label}: sampled/analytic ratio {sampled:.3} out of band"
+            );
+            // Replayed patterns at matched density must stay in a band
+            // around the analytic expectation too — the
+            // replayed-vs-sampled equivalence check, per scheme.
+            let replay = v[4];
+            assert!(
+                (0.55..1.7).contains(&replay),
+                "{label}: replay/analytic ratio {replay:.3} out of band"
+            );
+            let ratio = replay / sampled;
+            assert!(
+                (0.6..1.6).contains(&ratio),
+                "{label}: replayed vs sampled diverge ({ratio:.3})"
             );
         }
     }

@@ -1,13 +1,43 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! rust runtime. Parsed from `artifacts/manifest.json`.
+//! rust runtime. Parsed from `artifacts/manifest.json`. Also home of the
+//! NHWC→bitmap extraction the trace capture path uses on the artifacts'
+//! activation/gradient tensors.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::nn::Shape;
+use crate::sparsity::Bitmap;
 use crate::util::json::Json;
 use super::HostTensor;
+
+/// Extract image `image`'s packed zero footprint from an NHWC f32 tensor
+/// (the layout every AOT artifact produces) as the channel-first
+/// `[C, H, W]` `Bitmap` the simulator and v2 trace format use —
+/// `Bitmap::from_values` over the transposed slice. Returns `None` when
+/// the tensor is not 4-D f32 or the image index is out of range (scalar
+/// outputs like the loss simply carry no footprint).
+pub fn bitmap_from_nhwc(t: &HostTensor, image: usize) -> Option<Bitmap> {
+    let data = t.as_f32().ok()?;
+    let &[n, h, w, c] = t.shape() else {
+        return None;
+    };
+    if image >= n || c * h * w == 0 {
+        return None;
+    }
+    let img = &data[image * h * w * c..(image + 1) * h * w * c];
+    let mut chw = vec![0.0f32; c * h * w];
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                chw[(ch * h + y) * w + x] = img[(y * w + x) * c + ch];
+            }
+        }
+    }
+    Some(Bitmap::from_values(Shape::new(c, h, w), &chw))
+}
 
 /// Shape + dtype of one artifact input/output.
 #[derive(Clone, Debug, PartialEq)]
@@ -174,6 +204,28 @@ mod tests {
         let t = HostTensor::f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
         t.write_f32_file(&dir.join("params/w1.bin")).unwrap();
         std::fs::write(dir.join("demo.hlo.txt"), "hello").unwrap();
+    }
+
+    #[test]
+    fn nhwc_bitmap_extraction_transposes_correctly() {
+        // [N=2, H=2, W=2, C=3]: image 1, channel 2 has a lone non-zero
+        // at (y=1, x=0).
+        let mut data = vec![0.0f32; 2 * 2 * 2 * 3];
+        let at = |n: usize, y: usize, x: usize, c: usize| ((n * 2 + y) * 2 + x) * 3 + c;
+        data[at(1, 1, 0, 2)] = 5.0;
+        data[at(1, 0, 1, 0)] = -1.0;
+        data[at(0, 0, 0, 0)] = 9.0; // other image: must not leak
+        let t = HostTensor::f32(vec![2, 2, 2, 3], data).unwrap();
+        let b = bitmap_from_nhwc(&t, 1).unwrap();
+        assert_eq!(b.shape, Shape::new(3, 2, 2));
+        assert_eq!(b.count_nz(), 2);
+        assert!(b.get(2, 1, 0));
+        assert!(b.get(0, 0, 1));
+        // Zero fraction agrees with the scalar path on the same image.
+        assert!((b.sparsity() - 10.0 / 12.0).abs() < 1e-12);
+        // Non-4D and out-of-range inputs carry no footprint.
+        assert!(bitmap_from_nhwc(&HostTensor::zeros_f32(vec![4]), 0).is_none());
+        assert!(bitmap_from_nhwc(&t, 2).is_none());
     }
 
     #[test]

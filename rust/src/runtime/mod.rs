@@ -18,6 +18,6 @@ mod client;
 #[path = "client_stub.rs"]
 mod client;
 
-pub use artifacts::{ArtifactManifest, EntrySpec, TensorSpec};
+pub use artifacts::{bitmap_from_nhwc, ArtifactManifest, EntrySpec, TensorSpec};
 pub use client::{Executable, Runtime};
 pub use tensor_host::HostTensor;

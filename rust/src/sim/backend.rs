@@ -6,41 +6,25 @@
 //!   statistics, per-tile sparsity jitter on top. Fast; what every
 //!   production figure used before this abstraction existed.
 //! * [`ExecBackend::Exact`] — the bitmap-driven `ExactPe` path
-//!   (`sim::exact`): per-tile operand bitmaps are *sampled* from the
-//!   tile's (jittered) density via the per-image RNG stream, an output
-//!   mask is sampled the same way (the Fig 5c a-priori-known output
-//!   bitmap), and everything drains through the cycle-accurate group
-//!   walker. Slow but pattern-level faithful — the validation reference
-//!   SparseTrain/TensorDash-style analytic claims are checked against.
+//!   (`sim::exact`). Where each tile's operand/output patterns come from
+//!   is a [`BitmapSource`]:
+//!   - [`BitmapSource::Sampled`] — drawn from the tile's (jittered)
+//!     density via the per-image RNG stream, iid or spatially-blobbed
+//!     (`BitmapPattern`);
+//!   - [`BitmapSource::Replayed`] — sliced out of a *captured* map
+//!     (`sim::replay`), pattern-exact and entirely RNG-free.
 //!
 //! Both backends draw exclusively from the per-image stream handed down
-//! by `engine::simulate_image`, so the PR 1 determinism contract
-//! (bit-identical results at any `--jobs` level) holds for both.
+//! by `engine::simulate_image` (replayed slices draw nothing at all), so
+//! the PR 1 determinism contract (bit-identical results at any `--jobs`
+//! level) holds for every source.
 
+use crate::config::BitmapPattern;
 use crate::nn::Shape;
 use crate::sparsity::Bitmap;
 use crate::util::rng::Pcg32;
 
 use super::exact::ExactPe;
-
-/// One output's operand NZ pattern, sampled straight into the lane-drain
-/// form `ExactPe` walks. Same bit order (and identical draw sequence) as
-/// `Bitmap::sample` over a `[k, 1, crs]` map, without the pack/unpack
-/// round-trip — this is the exact backend's innermost loop. Degenerate
-/// densities are draw-free, mirroring `Bitmap::sample`.
-fn sample_pattern(crs: usize, density: f64, rng: &mut Pcg32) -> Vec<bool> {
-    if density <= 0.0 {
-        return vec![false; crs];
-    }
-    if density >= 1.0 {
-        return vec![true; crs];
-    }
-    (0..crs).map(|_| rng.bernoulli(density)).collect()
-}
-
-/// Per-`simulate_tile` chunking bound for the exact backend: keeps the
-/// transient operand-bitmap expansion under ~1.5 MB at CRS 4608.
-const EXACT_CHUNK: usize = 256;
 
 /// Which execution model costs the tiles of a simulation.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -48,7 +32,7 @@ pub enum ExecBackend {
     /// Analytic expected-value `PeModel` (the fast default).
     #[default]
     Analytic,
-    /// Cycle-accurate `ExactPe` over sampled operand/output bitmaps.
+    /// Cycle-accurate `ExactPe` over sampled or replayed bitmaps.
     Exact,
 }
 
@@ -79,47 +63,184 @@ impl ExecBackend {
     }
 }
 
-/// Exact cost of one PE tile holding `n_out` outputs with receptive
-/// field `crs`, under operand sparsity `s_in` and a-priori output
-/// sparsity `s_out`.
+/// Where a tile's bit patterns come from.
+#[derive(Clone, Copy, Debug)]
+pub enum BitmapSource<'a> {
+    /// Draw from the per-image stream at the given non-zero `density`,
+    /// with the configured spatial correlation.
+    Sampled { density: f64, pattern: BitmapPattern, blob_radius: usize },
+    /// Slice real patterns out of a captured map — no RNG involvement.
+    Replayed { map: &'a Bitmap },
+}
+
+/// One PE tile's place in a task's output map: tile `index` owns the
+/// half-open spatial `window` `(r0, r1, c0, c1)` of the full `u × v` map
+/// and computes all `m` channels of it (`sim::tile::tile_windows`).
+#[derive(Clone, Copy, Debug)]
+pub struct TileGeom {
+    pub index: usize,
+    pub m: usize,
+    pub u: usize,
+    pub v: usize,
+    pub window: (usize, usize, usize, usize),
+}
+
+impl TileGeom {
+    pub fn spatial_outputs(&self) -> usize {
+        let (r0, r1, c0, c1) = self.window;
+        (r1 - r0) * (c1 - c0)
+    }
+
+    pub fn outputs(&self) -> usize {
+        self.m * self.spatial_outputs()
+    }
+
+    /// Coordinates of the tile's `j`-th output in channel-major drain
+    /// order: all spatial positions of channel 0, then channel 1, …
+    #[inline]
+    fn coords(&self, j: usize) -> (usize, usize, usize) {
+        let (r0, _, c0, c1) = self.window;
+        let sp = self.spatial_outputs();
+        let cols = c1 - c0;
+        let rem = j % sp;
+        (j / sp, r0 + rem / cols, c0 + rem % cols)
+    }
+}
+
+/// Start bit of output `j`'s operand window inside a replayed map.
 ///
-/// Up to `max_sampled` outputs get a real sampled operand pattern; the
-/// sampled total is scaled to the tile's full output count. When
-/// `n_out <= max_sampled` the tile is simulated output-exactly. The
-/// output mask is sampled once per output as a `Bitmap` (the Fig 5c
-/// output bitmap the forward pass leaves in DRAM) — a masked output
-/// costs zero cycles, exactly as `ExactPe::simulate_tile` models.
+/// The window is anchored at the output's spatial position scaled into
+/// the operand map's plane (a conv output at `(y, x)` reads a receptive
+/// field around the corresponding input location) and runs `crs` bits in
+/// within-channel streaming order, wrapping through the channels — so
+/// adjacent outputs get overlapping, spatially-local windows and *every
+/// channel at one position reads the same window*, exactly as the dense
+/// BP/FP GEMM pairs operands. Purely arithmetic: replay costs no RNG
+/// state, which is what keeps `--replay` runs bit-identical at any
+/// `--jobs` level.
+#[inline]
+fn operand_window_start(geom: &TileGeom, j: usize, map: &Bitmap) -> usize {
+    let (_, y, x) = geom.coords(j);
+    let (mh, mw) = (map.shape.h, map.shape.w);
+    let yy = ((y * mh) / geom.u.max(1)).min(mh.saturating_sub(1));
+    let xx = ((x * mw) / geom.v.max(1)).min(mw.saturating_sub(1));
+    yy * mw + xx
+}
+
+/// Sample one operand pattern (packed) into `out`. Degenerate densities
+/// are draw-free, preserving the old `sample_pattern` contract.
+fn sample_pattern_words(
+    crs: usize,
+    density: f64,
+    pattern: BitmapPattern,
+    blob_radius: usize,
+    rng: &mut Pcg32,
+    out: &mut Vec<u64>,
+) {
+    out.clear();
+    out.resize(crs.div_ceil(64), 0);
+    if density <= 0.0 {
+        return;
+    }
+    if density >= 1.0 {
+        out.fill(!0);
+        let tail = crs % 64;
+        if tail > 0 {
+            *out.last_mut().unwrap() &= (1u64 << tail) - 1;
+        }
+        return;
+    }
+    match pattern {
+        BitmapPattern::Iid => {
+            for i in 0..crs {
+                if rng.bernoulli(density) {
+                    out[i / 64] |= 1 << (i % 64);
+                }
+            }
+        }
+        BitmapPattern::Blobs => {
+            let b = Bitmap::sample_blobs(Shape::new(1, 1, crs), density, blob_radius, rng);
+            out.copy_from_slice(b.words());
+        }
+    }
+}
+
+/// Exact cost of one PE tile (`geom`) with receptive field `crs`, its
+/// operand and output patterns pulled from the given sources.
+///
+/// Up to `max_sampled` outputs get a real pattern; the total is scaled
+/// to the tile's full output count (`n_out <= max_sampled` simulates the
+/// tile output-exactly). Subsampled replayed tiles *stride* their k
+/// simulated outputs evenly across the whole output range (`i·n/k`), not
+/// the first k — the first k in channel-major order would be the lowest
+/// channels only, and real maps' density varies by channel, which would
+/// bias the scaled estimate. The output mask is resolved first, before
+/// any operand streams — the Fig 5c bitmap is known a priori in DRAM —
+/// and a masked output costs zero cycles *and zero pattern work* (its
+/// operands are never drawn or sliced). Everything drains word-level
+/// through [`ExactPe::simulate_output_words`]; no per-lane bool vectors
+/// exist on this path.
 ///
 /// Returns `(cycles, macs)` as the engine's f64 accounting expects.
 pub fn exact_tile_cost(
     pe: &ExactPe,
     crs: usize,
-    n_out: usize,
+    geom: &TileGeom,
     max_sampled: usize,
-    s_in: f64,
-    s_out: f64,
+    operands: &BitmapSource<'_>,
+    outputs: &BitmapSource<'_>,
     rng: &mut Pcg32,
 ) -> (f64, f64) {
+    let n_out = geom.outputs();
     if n_out == 0 {
         return (0.0, 0.0);
     }
     let k = n_out.min(max_sampled.max(1));
+    // Representative i-th output when subsampling (identity at k == n_out;
+    // distinct and strictly increasing for k <= n_out).
+    let stride = |i: usize| i * n_out / k;
+
+    // Output mask for the k simulated outputs, packed.
+    let mut mask = vec![0u64; k.div_ceil(64)];
+    match outputs {
+        BitmapSource::Sampled { density, pattern, blob_radius } => {
+            let shape = Shape::new(1, 1, k);
+            let b = match pattern {
+                BitmapPattern::Iid => Bitmap::sample(shape, *density, rng),
+                BitmapPattern::Blobs => Bitmap::sample_blobs(shape, *density, *blob_radius, rng),
+            };
+            mask.copy_from_slice(b.words());
+        }
+        BitmapSource::Replayed { map } => {
+            debug_assert_eq!(map.shape, Shape::new(geom.m, geom.u, geom.v));
+            for i in 0..k {
+                let (ch, y, x) = geom.coords(stride(i));
+                if map.get(ch, y, x) {
+                    mask[i / 64] |= 1 << (i % 64);
+                }
+            }
+        }
+    }
+
     let mut cycles = 0u64;
     let mut macs = 0u64;
-    let mut drawn = 0usize;
-    while drawn < k {
-        let chunk = (k - drawn).min(EXACT_CHUNK);
-        // Output mask first (the Fig 5c bitmap is known a priori, before
-        // operands stream — it lives in DRAM as a real `Bitmap`), then
-        // the per-output operand patterns.
-        let mask_bits = Bitmap::sample(Shape::new(1, 1, chunk), 1.0 - s_out, rng);
-        let mask: Vec<bool> = (0..chunk).map(|i| mask_bits.get(0, 0, i)).collect();
-        let outputs: Vec<Vec<bool>> =
-            (0..chunk).map(|_| sample_pattern(crs, 1.0 - s_in, rng)).collect();
-        let r = pe.simulate_tile(&outputs, Some(&mask));
+    let mut scratch: Vec<u64> = Vec::new();
+    for i in 0..k {
+        if (mask[i / 64] >> (i % 64)) & 1 == 0 {
+            continue; // skipped a priori — zero cycles (Fig 5c)
+        }
+        match operands {
+            BitmapSource::Sampled { density, pattern, blob_radius } => {
+                sample_pattern_words(crs, *density, *pattern, *blob_radius, rng, &mut scratch);
+            }
+            BitmapSource::Replayed { map } => {
+                let start = operand_window_start(geom, stride(i), map);
+                map.window_words_into(start, crs, &mut scratch);
+            }
+        }
+        let r = pe.simulate_output_words(&scratch, crs);
         cycles += r.cycles;
         macs += r.macs;
-        drawn += chunk;
     }
     let scale = n_out as f64 / k as f64;
     (cycles as f64 * scale, macs as f64 * scale)
@@ -128,6 +249,14 @@ pub fn exact_tile_cost(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn full_geom(m: usize, u: usize, v: usize) -> TileGeom {
+        TileGeom { index: 0, m, u, v, window: (0, u, 0, v) }
+    }
+
+    fn sampled(density: f64) -> BitmapSource<'static> {
+        BitmapSource::Sampled { density, pattern: BitmapPattern::Iid, blob_radius: 2 }
+    }
 
     #[test]
     fn labels_roundtrip_through_parse() {
@@ -143,8 +272,9 @@ mod tests {
     #[test]
     fn exact_tile_is_deterministic_from_the_stream() {
         let pe = ExactPe::default();
-        let a = exact_tile_cost(&pe, 288, 64, 32, 0.5, 0.5, &mut Pcg32::new(9));
-        let b = exact_tile_cost(&pe, 288, 64, 32, 0.5, 0.5, &mut Pcg32::new(9));
+        let geom = full_geom(4, 4, 4);
+        let a = exact_tile_cost(&pe, 288, &geom, 32, &sampled(0.5), &sampled(0.5), &mut Pcg32::new(9));
+        let b = exact_tile_cost(&pe, 288, &geom, 32, &sampled(0.5), &sampled(0.5), &mut Pcg32::new(9));
         assert_eq!(a, b);
     }
 
@@ -152,7 +282,9 @@ mod tests {
     fn full_sampling_when_tile_fits_the_cap() {
         // n_out <= cap: no scaling, cycles are an exact tile walk.
         let pe = ExactPe::default();
-        let (cyc, macs) = exact_tile_cost(&pe, 256, 8, 4096, 0.0, 0.0, &mut Pcg32::new(1));
+        let geom = full_geom(8, 1, 1);
+        let (cyc, macs) =
+            exact_tile_cost(&pe, 256, &geom, 4096, &sampled(1.0), &sampled(1.0), &mut Pcg32::new(1));
         // 8 dense 256-wide outputs: deterministic arithmetic.
         let one = pe.simulate_output(&vec![true; 256]);
         assert_eq!(cyc, 8.0 * one.cycles as f64);
@@ -162,10 +294,11 @@ mod tests {
     #[test]
     fn subsampled_tile_scales_to_full_output_count() {
         let pe = ExactPe::default();
+        let geom = full_geom(1, 32, 32);
         let (cyc_full, macs_full) =
-            exact_tile_cost(&pe, 512, 1024, 4096, 0.0, 0.0, &mut Pcg32::new(2));
+            exact_tile_cost(&pe, 512, &geom, 4096, &sampled(1.0), &sampled(1.0), &mut Pcg32::new(2));
         let (cyc_sub, macs_sub) =
-            exact_tile_cost(&pe, 512, 1024, 64, 0.0, 0.0, &mut Pcg32::new(2));
+            exact_tile_cost(&pe, 512, &geom, 64, &sampled(1.0), &sampled(1.0), &mut Pcg32::new(2));
         // Dense patterns have zero variance, so scaling is exact.
         assert_eq!(cyc_sub, cyc_full);
         assert_eq!(macs_sub, macs_full);
@@ -174,13 +307,154 @@ mod tests {
     #[test]
     fn output_sparsity_skips_work() {
         let pe = ExactPe::default();
+        let geom = full_geom(1, 16, 16);
         let (dense_c, dense_m) =
-            exact_tile_cost(&pe, 512, 256, 4096, 0.3, 0.0, &mut Pcg32::new(5));
+            exact_tile_cost(&pe, 512, &geom, 4096, &sampled(0.7), &sampled(1.0), &mut Pcg32::new(5));
         let (masked_c, masked_m) =
-            exact_tile_cost(&pe, 512, 256, 4096, 0.3, 0.6, &mut Pcg32::new(5));
+            exact_tile_cost(&pe, 512, &geom, 4096, &sampled(0.7), &sampled(0.4), &mut Pcg32::new(5));
         assert!(masked_c < dense_c * 0.7, "{masked_c} vs {dense_c}");
         assert!(masked_m < dense_m * 0.7);
         let frac = masked_m / dense_m;
         assert!((0.25..0.55).contains(&frac), "computed fraction {frac}");
+    }
+
+    #[test]
+    fn replayed_sources_consume_no_rng_state() {
+        let pe = ExactPe::default();
+        let geom = full_geom(4, 8, 8);
+        let mut map_rng = Pcg32::new(11);
+        let out_map = Bitmap::sample(Shape::new(4, 8, 8), 0.6, &mut map_rng);
+        let in_map = Bitmap::sample(Shape::new(8, 16, 16), 0.5, &mut map_rng);
+        let mut rng = Pcg32::new(7);
+        let mut untouched = Pcg32::new(7);
+        let (cyc, macs) = exact_tile_cost(
+            &pe,
+            288,
+            &geom,
+            4096,
+            &BitmapSource::Replayed { map: &in_map },
+            &BitmapSource::Replayed { map: &out_map },
+            &mut rng,
+        );
+        assert_eq!(rng.next_u32(), untouched.next_u32(), "replay must not draw");
+        assert!(cyc > 0.0 && macs > 0.0);
+        // And it is trivially reproducible.
+        let mut rng2 = Pcg32::new(999); // seed is irrelevant to replay
+        let again = exact_tile_cost(
+            &pe,
+            288,
+            &geom,
+            4096,
+            &BitmapSource::Replayed { map: &in_map },
+            &BitmapSource::Replayed { map: &out_map },
+            &mut rng2,
+        );
+        assert_eq!((cyc, macs), again);
+    }
+
+    #[test]
+    fn replayed_output_mask_slices_the_real_map() {
+        // A map whose channel 0 is all-zero and channel 1 all-ones: the
+        // tile must skip exactly channel 0's outputs.
+        let pe = ExactPe::default();
+        let geom = full_geom(2, 4, 4);
+        let mut out_map = Bitmap::zeros(Shape::new(2, 4, 4));
+        for y in 0..4 {
+            for x in 0..4 {
+                out_map.set(1, y, x, true);
+            }
+        }
+        let mut rng = Pcg32::new(3);
+        let (cyc, macs) = exact_tile_cost(
+            &pe,
+            256,
+            &geom,
+            4096,
+            &sampled(1.0),
+            &BitmapSource::Replayed { map: &out_map },
+            &mut rng,
+        );
+        let one = pe.simulate_output(&vec![true; 256]);
+        assert_eq!(macs, 16.0 * 256.0, "only channel 1's 16 outputs computed");
+        assert_eq!(cyc, 16.0 * one.cycles as f64);
+    }
+
+    #[test]
+    fn subsampled_replay_strides_across_channels() {
+        // A map whose density varies hard by channel (ch 0-1 dense,
+        // ch 2-3 empty): a capped replay that only looked at the first k
+        // outputs (= lowest channels) would overestimate 2x after
+        // scaling; the strided subsample must reproduce the full walk.
+        let pe = ExactPe::default();
+        let geom = full_geom(4, 4, 4); // 64 outputs, 16 per channel
+        let mut out_map = Bitmap::zeros(Shape::new(4, 4, 4));
+        for ch in 0..2 {
+            for y in 0..4 {
+                for x in 0..4 {
+                    out_map.set(ch, y, x, true);
+                }
+            }
+        }
+        let replayed = BitmapSource::Replayed { map: &out_map };
+        let mut rng = Pcg32::new(1);
+        let full = exact_tile_cost(&pe, 256, &geom, 4096, &sampled(1.0), &replayed, &mut rng);
+        let capped = exact_tile_cost(&pe, 256, &geom, 16, &sampled(1.0), &replayed, &mut rng);
+        assert_eq!(capped, full, "strided subsample must be channel-unbiased here");
+        let one = pe.simulate_output(&vec![true; 256]);
+        assert_eq!(full.1, 32.0 * 256.0, "exactly the two dense channels compute");
+        assert_eq!(full.0, 32.0 * one.cycles as f64);
+    }
+
+    #[test]
+    fn replayed_operands_track_the_map_density() {
+        let pe = ExactPe::default();
+        let geom = full_geom(2, 8, 8);
+        let mut map_rng = Pcg32::new(13);
+        for target in [0.25, 0.75] {
+            let in_map = Bitmap::sample(Shape::new(16, 16, 16), target, &mut map_rng);
+            let mut rng = Pcg32::new(1);
+            let (_, macs) = exact_tile_cost(
+                &pe,
+                1024,
+                &geom,
+                4096,
+                &BitmapSource::Replayed { map: &in_map },
+                &sampled(1.0),
+                &mut rng,
+            );
+            let density = macs / (geom.outputs() as f64 * 1024.0);
+            assert!(
+                (density - target).abs() < 0.05,
+                "replayed MAC density {density:.3} vs map density {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn blob_pattern_changes_lane_balance_not_density() {
+        // Same density, clustered vs iid: MAC counts agree in expectation
+        // but clustered operands stall lanes more (higher cycles).
+        let pe = ExactPe::default();
+        let geom = full_geom(1, 16, 16);
+        let iid = BitmapSource::Sampled {
+            density: 0.5,
+            pattern: BitmapPattern::Iid,
+            blob_radius: 0,
+        };
+        let blobs = BitmapSource::Sampled {
+            density: 0.5,
+            pattern: BitmapPattern::Blobs,
+            blob_radius: 8,
+        };
+        let (cyc_iid, macs_iid) =
+            exact_tile_cost(&pe, 2048, &geom, 4096, &iid, &sampled(1.0), &mut Pcg32::new(2));
+        let (cyc_blob, macs_blob) =
+            exact_tile_cost(&pe, 2048, &geom, 4096, &blobs, &sampled(1.0), &mut Pcg32::new(2));
+        let mac_err = (macs_blob - macs_iid).abs() / macs_iid;
+        assert!(mac_err < 0.02, "same density, same expected MACs ({mac_err:.3})");
+        assert!(
+            cyc_blob > cyc_iid * 1.02,
+            "clustering must cost lane imbalance: blobs {cyc_blob:.0} vs iid {cyc_iid:.0}"
+        );
     }
 }

@@ -25,7 +25,7 @@ use crate::util::rng::{Pcg32, SplitMix64};
 
 use super::energy::EnergyBreakdown;
 use super::tile::factor2;
-use super::layer_exec::{simulate_layer, LayerSimResult, LayerTask};
+use super::layer_exec::{simulate_layer_replay, LayerSimResult, LayerTask};
 
 /// Aggregated totals for one phase.
 #[derive(Clone, Debug, Default)]
@@ -349,15 +349,27 @@ pub fn image_stream(seed: u64, image: usize) -> Pcg32 {
 
 /// Stochastic execution of one image's tasks; returns one result per
 /// task, parallel to the input slice. `rng` should come from
-/// [`image_stream`] so the draw sequence belongs to this image alone.
+/// [`image_stream`] with the same `image` index, so the draw sequence
+/// belongs to this image alone. When `opts.replay` carries a bank, the
+/// image replays its round-robin traced step (`image % steps`) — a pure
+/// function of the index, so the per-image independence (and with it the
+/// any-`--jobs` bit-identical contract) is untouched.
 pub fn simulate_image(
     tasks: &[ImageTask],
     cfg: &AcceleratorConfig,
     opts: &SimOptions,
     scheme: Scheme,
+    image: usize,
     rng: &mut Pcg32,
 ) -> Vec<LayerSimResult> {
-    tasks.iter().map(|t| simulate_layer(&t.task, cfg, opts, scheme, rng)).collect()
+    let step = opts.replay.as_deref().map(|bank| bank.step_maps(image));
+    tasks
+        .iter()
+        .map(|t| {
+            let maps = step.and_then(|s| s.task_maps(&t.layer, t.phase));
+            simulate_layer_replay(&t.task, cfg, opts, scheme, maps, rng)
+        })
+        .collect()
 }
 
 /// Simulate a network for a whole batch under one scheme.
@@ -400,7 +412,7 @@ pub fn simulate_network_jobs(
     let per_image = crate::util::pool::run_indexed(n_images, jobs, |image| {
         let tasks = build_image_tasks(net, &batch_fwd[image]);
         let mut rng = image_stream(opts.seed, image);
-        let results = simulate_image(&tasks, cfg, opts, scheme, &mut rng);
+        let results = simulate_image(&tasks, cfg, opts, scheme, image, &mut rng);
         (tasks, results)
     });
 
@@ -591,7 +603,7 @@ mod tests {
         for (image, fwd) in batch.iter().enumerate() {
             let tasks = build_image_tasks(&net, fwd);
             let mut rng = image_stream(opts.seed, image);
-            let results = simulate_image(&tasks, &cfg, &opts, Scheme::InOutWr, &mut rng);
+            let results = simulate_image(&tasks, &cfg, &opts, Scheme::InOutWr, image, &mut rng);
             for (t, r) in tasks.iter().zip(&results) {
                 cycles.entry((t.layer.clone(), t.phase.label())).or_default().push(r.cycles);
             }
@@ -655,10 +667,11 @@ mod tests {
 
         // Image 1 simulated cold vs. after image 0: identical draws.
         let alone =
-            simulate_image(&t1, &cfg, &opts, Scheme::InOutWr, &mut image_stream(opts.seed, 1));
-        let _ = simulate_image(&t0, &cfg, &opts, Scheme::InOutWr, &mut image_stream(opts.seed, 0));
+            simulate_image(&t1, &cfg, &opts, Scheme::InOutWr, 1, &mut image_stream(opts.seed, 1));
+        let _ =
+            simulate_image(&t0, &cfg, &opts, Scheme::InOutWr, 0, &mut image_stream(opts.seed, 0));
         let after =
-            simulate_image(&t1, &cfg, &opts, Scheme::InOutWr, &mut image_stream(opts.seed, 1));
+            simulate_image(&t1, &cfg, &opts, Scheme::InOutWr, 1, &mut image_stream(opts.seed, 1));
         assert_eq!(alone.len(), after.len());
         for (a, b) in alone.iter().zip(&after) {
             assert_eq!(a.cycles, b.cycles, "{}", a.name);

@@ -8,16 +8,102 @@
 //! per cycle per lane, the group waits for its slowest lane, and double
 //! buffering overlaps the next group's fill with the current drain.
 //!
+//! The walk is **word-level**: operand patterns arrive as packed `u64`
+//! words ([`OperandPattern`], or a raw word slice) and every per-lane
+//! per-group non-zero count is a masked popcount over a bit range —
+//! no per-lane `Vec<bool>` is ever materialized. At replay scale
+//! (ImageNet-sized captured maps) the old bool walk *was* the backend's
+//! dominant cost.
+//!
 //! Used two ways:
 //! * property tests assert the analytic model tracks this within a
 //!   tolerance across random sparsity patterns (DESIGN.md §7);
 //! * the exact co-simulation path replays *real* bitmaps extracted from
-//!   training traces.
+//!   training traces (`sim::replay`).
 
 use crate::config::AcceleratorConfig;
 use crate::util::rng::Pcg32;
 
 use super::adder_tree::{tree_utilization, ReconfigMode};
+
+/// One output's operand non-zero pattern, packed LSB-first into `u64`
+/// words — the form the PE drains. Bit `i` set ⇔ operand `i` non-zero.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperandPattern {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl OperandPattern {
+    pub fn from_bools(nz: &[bool]) -> OperandPattern {
+        let mut words = vec![0u64; nz.len().div_ceil(64)];
+        for (i, b) in nz.iter().enumerate() {
+            if *b {
+                words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        OperandPattern { len: nz.len(), words }
+    }
+
+    /// Wrap already-packed words (e.g. a replayed window slice). `words`
+    /// must hold at least `ceil(len / 64)` entries.
+    pub fn from_words(words: Vec<u64>, len: usize) -> OperandPattern {
+        assert!(words.len() >= len.div_ceil(64), "word buffer shorter than len");
+        OperandPattern { len, words }
+    }
+
+    /// Fully dense pattern (every operand non-zero).
+    pub fn dense(len: usize) -> OperandPattern {
+        let mut words = vec![!0u64; len.div_ceil(64)];
+        let tail = len % 64;
+        if tail > 0 {
+            *words.last_mut().unwrap() &= (1u64 << tail) - 1;
+        }
+        OperandPattern { len, words }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn count_nz(&self) -> u64 {
+        if self.len == 0 {
+            return 0;
+        }
+        count_bits_range(&self.words, 0, self.len)
+    }
+}
+
+/// Popcount of the bit range `[lo, hi)` of packed LSB-first words — the
+/// masked u64 walk at the heart of the group drain. Bits outside the
+/// range never contribute, so callers need no tail invariant.
+#[inline]
+pub fn count_bits_range(words: &[u64], lo: usize, hi: usize) -> u64 {
+    debug_assert!(lo < hi && (hi - 1) / 64 < words.len());
+    let (wlo, whi) = (lo / 64, (hi - 1) / 64);
+    if wlo == whi {
+        // Range inside one word: shift off the low bits, mask the high.
+        let w = words[wlo] >> (lo % 64);
+        let n = hi - lo;
+        let w = if n == 64 { w } else { w & ((1u64 << n) - 1) };
+        return w.count_ones() as u64;
+    }
+    let mut n = (words[wlo] >> (lo % 64)).count_ones() as u64;
+    for w in &words[wlo + 1..whi] {
+        n += w.count_ones() as u64;
+    }
+    let tail = hi - whi * 64; // 1..=64
+    let last = if tail == 64 { words[whi] } else { words[whi] & ((1u64 << tail) - 1) };
+    n + last.count_ones() as u64
+}
 
 /// Exact PE parameters (mirrors `PeModel`).
 #[derive(Clone, Debug)]
@@ -72,43 +158,54 @@ impl ExactPe {
         self.lanes * self.group_entries * self.groups
     }
 
-    /// Exactly simulate one output whose operand non-zero pattern is
-    /// `nz` (length = receptive field CRS).
-    pub fn simulate_output(&self, nz: &[bool]) -> ExactOutput {
-        assert!(!nz.is_empty(), "empty receptive field");
+    /// Exactly simulate one output from its packed operand pattern:
+    /// `len` operands (= receptive field CRS) in `words`, LSB-first.
+    ///
+    /// The drain order is the §4.3 SRAM streaming layout: each blocking
+    /// pass deals its bits contiguously across the occupied lanes, and
+    /// every (lane, group) non-zero count is one masked popcount.
+    pub fn simulate_output_words(&self, words: &[u64], len: usize) -> ExactOutput {
+        assert!(len > 0, "empty receptive field");
         let cap = self.capacity();
         let mut cycles = 0u64;
         let mut macs = 0u64;
         let mut stall = 0u64;
 
-        for (pi, pass) in nz.chunks(cap).enumerate() {
+        let mut pass_lo = 0usize;
+        let mut pi = 0usize;
+        while pass_lo < len {
+            let pass_hi = (pass_lo + cap).min(len);
+            let pass_len = pass_hi - pass_lo;
             if pi > 0 {
                 cycles += self.blocking_overhead; // partial-sum RMW (§4.4)
             }
-            let mut pass_cycles = 0u64;
             // Each output occupies `occ` lanes of its adder-tree slot
             // (§4.5); operands are dealt contiguously across those lanes.
-            let occ_pass = pass
-                .len()
+            let occ_pass = pass_len
                 .div_ceil(self.group_entries * self.groups)
                 .clamp(1, self.lanes);
-            let per_lane = pass.len().div_ceil(occ_pass);
+            let per_lane = pass_len.div_ceil(occ_pass);
             let lanes_used = occ_pass;
-            // Each lane's chunk is processed in groups of `group_entries`.
-            let lane_chunks: Vec<&[bool]> = pass.chunks(per_lane.max(1)).collect();
-            let groups_per_lane = per_lane.max(1).div_ceil(self.group_entries);
+            let groups_per_lane = per_lane.div_ceil(self.group_entries);
+            let mut pass_cycles = 0u64;
             let mut prev_drain = 0u64;
             for g in 0..groups_per_lane {
-                // Per-lane non-zero count in this group.
+                // Per-lane non-zero count in this group: a masked word
+                // popcount per (lane, group) range.
                 let mut max_nz = 0u64;
                 let mut sum_nz = 0u64;
-                for chunk in &lane_chunks {
-                    let lo = g * self.group_entries;
-                    if lo >= chunk.len() {
+                for li in 0..lanes_used {
+                    let lane_lo = pass_lo + li * per_lane;
+                    if lane_lo >= pass_hi {
+                        break; // trailing lanes got no operands
+                    }
+                    let lane_hi = (lane_lo + per_lane).min(pass_hi);
+                    let lo = lane_lo + g * self.group_entries;
+                    if lo >= lane_hi {
                         continue;
                     }
-                    let hi = (lo + self.group_entries).min(chunk.len());
-                    let nzc = chunk[lo..hi].iter().filter(|b| **b).count() as u64;
+                    let hi = (lo + self.group_entries).min(lane_hi);
+                    let nzc = count_bits_range(words, lo, hi);
                     max_nz = max_nz.max(nzc);
                     sum_nz += nzc;
                 }
@@ -129,17 +226,32 @@ impl ExactPe {
             let util = tree_utilization(occ_pass, self.lanes, self.reconfig);
             cycles += (pass_cycles as f64 * (occ_pass as f64 / self.lanes as f64) / util)
                 .round() as u64;
+            pass_lo = pass_hi;
+            pi += 1;
         }
         ExactOutput { cycles: cycles.max(1), macs, lane_stall_cycles: stall }
     }
 
-    /// Simulate a whole tile: `outputs` receptive-field bitmaps, with an
-    /// optional output-sparsity mask saying which outputs are skipped.
+    /// Bool-slice convenience wrapper around [`simulate_output_words`]
+    /// (packs once up front; validation tests and callers holding
+    /// unpacked patterns use this).
+    pub fn simulate_output(&self, nz: &[bool]) -> ExactOutput {
+        let p = OperandPattern::from_bools(nz);
+        self.simulate_output_words(p.words(), p.len())
+    }
+
+    /// Simulate a whole tile: packed receptive-field patterns per output,
+    /// with an optional output-sparsity mask saying which outputs are
+    /// skipped. The drain stays word-level throughout.
     ///
     /// A mask shorter than `outputs` used to panic on the first
     /// out-of-range output, and a longer one silently ignored its tail —
-    /// both are caller bugs, so the lengths are now checked up front.
-    pub fn simulate_tile(&self, outputs: &[Vec<bool>], out_mask: Option<&[bool]>) -> ExactOutput {
+    /// both are caller bugs, so the lengths are checked up front.
+    pub fn simulate_tile(
+        &self,
+        outputs: &[OperandPattern],
+        out_mask: Option<&[bool]>,
+    ) -> ExactOutput {
         if let Some(mask) = out_mask {
             assert_eq!(
                 mask.len(),
@@ -150,13 +262,13 @@ impl ExactPe {
             );
         }
         let mut total = ExactOutput { cycles: 0, macs: 0, lane_stall_cycles: 0 };
-        for (i, nz) in outputs.iter().enumerate() {
+        for (i, p) in outputs.iter().enumerate() {
             if let Some(mask) = out_mask {
                 if !mask[i] {
                     continue; // skipped a priori — zero cycles (Fig 5c)
                 }
             }
-            let r = self.simulate_output(nz);
+            let r = self.simulate_output_words(p.words(), p.len());
             total.cycles += r.cycles;
             total.macs += r.macs;
             total.lane_stall_cycles += r.lane_stall_cycles;
@@ -198,6 +310,109 @@ mod tests {
     }
 
     #[test]
+    fn word_walk_matches_bool_walk_reference() {
+        // The packed walk must agree with a straightforward per-bool
+        // reference count on every (lane, group) range.
+        let mut rng = Pcg32::new(13);
+        for &crs in &[1usize, 31, 32, 63, 64, 65, 100, 1024, 2309, 4608] {
+            for &d in &[0.0, 0.2, 0.5, 0.9, 1.0] {
+                let nz = random_bitmap(crs, d, &mut rng);
+                let p = OperandPattern::from_bools(&nz);
+                assert_eq!(p.len(), crs);
+                assert_eq!(
+                    p.count_nz(),
+                    nz.iter().filter(|b| **b).count() as u64,
+                    "crs={crs} d={d}"
+                );
+                // Arbitrary sub-ranges.
+                for (lo, hi) in [(0, crs), (crs / 3, crs), (crs / 2, crs / 2 + 1)] {
+                    if lo >= hi {
+                        continue;
+                    }
+                    let expect = nz[lo..hi].iter().filter(|b| **b).count() as u64;
+                    assert_eq!(count_bits_range(p.words(), lo, hi), expect, "[{lo},{hi})");
+                }
+            }
+        }
+    }
+
+    /// The pre-refactor `Vec<bool>` drain, kept verbatim as an
+    /// *independent* reference: the word-level walk must reproduce it
+    /// bit-for-bit (comparing `simulate_output` against
+    /// `simulate_output_words` would be vacuous — the former is now a
+    /// packing wrapper around the latter).
+    fn bool_walk_reference(pe: &ExactPe, nz: &[bool]) -> ExactOutput {
+        assert!(!nz.is_empty());
+        let cap = pe.capacity();
+        let mut cycles = 0u64;
+        let mut macs = 0u64;
+        let mut stall = 0u64;
+        for (pi, pass) in nz.chunks(cap).enumerate() {
+            if pi > 0 {
+                cycles += pe.blocking_overhead;
+            }
+            let mut pass_cycles = 0u64;
+            let occ_pass = pass
+                .len()
+                .div_ceil(pe.group_entries * pe.groups)
+                .clamp(1, pe.lanes);
+            let per_lane = pass.len().div_ceil(occ_pass);
+            let lanes_used = occ_pass;
+            let lane_chunks: Vec<&[bool]> = pass.chunks(per_lane.max(1)).collect();
+            let groups_per_lane = per_lane.max(1).div_ceil(pe.group_entries);
+            let mut prev_drain = 0u64;
+            for g in 0..groups_per_lane {
+                let mut max_nz = 0u64;
+                let mut sum_nz = 0u64;
+                for chunk in &lane_chunks {
+                    let lo = g * pe.group_entries;
+                    if lo >= chunk.len() {
+                        continue;
+                    }
+                    let hi = (lo + pe.group_entries).min(chunk.len());
+                    let nzc = chunk[lo..hi].iter().filter(|b| **b).count() as u64;
+                    max_nz = max_nz.max(nzc);
+                    sum_nz += nzc;
+                }
+                let drain = max_nz.max(1);
+                let fill = max_nz;
+                macs += sum_nz;
+                stall += (drain * lanes_used as u64).saturating_sub(sum_nz);
+                if pe.double_buffering {
+                    pass_cycles += if g == 0 { drain } else { drain.max(prev_drain.min(fill)) };
+                } else {
+                    pass_cycles += drain + fill;
+                }
+                prev_drain = drain;
+            }
+            let util = tree_utilization(occ_pass, pe.lanes, pe.reconfig);
+            cycles += (pass_cycles as f64 * (occ_pass as f64 / pe.lanes as f64) / util)
+                .round() as u64;
+        }
+        ExactOutput { cycles: cycles.max(1), macs, lane_stall_cycles: stall }
+    }
+
+    #[test]
+    fn packed_drain_matches_bool_walk_reference() {
+        let mut rng = Pcg32::new(8);
+        for pe in [
+            ExactPe::default(),
+            ExactPe { double_buffering: false, ..ExactPe::default() },
+            ExactPe { lanes: 8, group_entries: 16, ..ExactPe::default() },
+        ] {
+            for &crs in &[1usize, 64, 100, 288, 1024, 2304, 4608] {
+                for &d in &[0.0, 0.1, 0.5, 0.9, 1.0] {
+                    let nz = random_bitmap(crs, d, &mut rng);
+                    let p = OperandPattern::from_bools(&nz);
+                    let expect = bool_walk_reference(&pe, &nz);
+                    let got = pe.simulate_output_words(p.words(), p.len());
+                    assert_eq!(got, expect, "lanes={} crs={crs} d={d}", pe.lanes);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn sparsity_reduces_cycles_and_counts_stall() {
         let pe = ExactPe::default();
         let mut rng = Pcg32::new(3);
@@ -232,7 +447,7 @@ mod tests {
     #[test]
     fn tile_skips_masked_outputs_entirely() {
         let pe = ExactPe::default();
-        let outputs: Vec<Vec<bool>> = (0..8).map(|_| vec![true; 256]).collect();
+        let outputs: Vec<OperandPattern> = (0..8).map(|_| OperandPattern::dense(256)).collect();
         let all = pe.simulate_tile(&outputs, None);
         let mask = vec![true, false, true, false, true, false, true, false];
         let half = pe.simulate_tile(&outputs, Some(&mask));
@@ -244,7 +459,7 @@ mod tests {
     #[should_panic(expected = "output mask length")]
     fn mismatched_mask_length_is_rejected() {
         let pe = ExactPe::default();
-        let outputs: Vec<Vec<bool>> = (0..4).map(|_| vec![true; 64]).collect();
+        let outputs: Vec<OperandPattern> = (0..4).map(|_| OperandPattern::dense(64)).collect();
         let mask = vec![true; 3];
         pe.simulate_tile(&outputs, Some(&mask));
     }

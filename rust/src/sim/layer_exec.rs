@@ -1,15 +1,23 @@
 //! Per-layer execution model: one GEMM-shaped task (a conv/fc in one
 //! training phase) mapped onto the PE grid under a sparsity scheme.
+//!
+//! On the exact backend a task may additionally carry *replay maps*
+//! (`sim::replay`): captured operand/output bitmaps that each tile
+//! slices its real patterns from instead of sampling — the pattern-exact
+//! co-simulation path. Replayed components draw no RNG state and skip
+//! the per-tile jitter (real maps carry their own spatial variation).
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::Shape;
 use crate::util::rng::Pcg32;
 
-use super::backend::{exact_tile_cost, ExecBackend};
+use super::backend::{exact_tile_cost, BitmapSource, ExecBackend, TileGeom};
 use super::energy::{layer_energy, EnergyBreakdown};
 use super::exact::ExactPe;
 use super::memory::layer_traffic;
 use super::pe::PeModel;
-use super::tile::tile_outputs;
+use super::replay::TaskMaps;
+use super::tile::{tile_outputs, tile_windows};
 use super::wdu::redistribute;
 
 /// One GEMM-shaped unit of accelerator work (per image).
@@ -90,12 +98,28 @@ fn jitter(s: f64, cv: f64, rng: &mut Pcg32) -> f64 {
     1.0 - density
 }
 
-/// Simulate one layer task (one image) under `scheme`.
+/// Simulate one layer task (one image) under `scheme`, without replay
+/// payloads (every exact-backend pattern is sampled).
 pub fn simulate_layer(
     task: &LayerTask,
     cfg: &AcceleratorConfig,
     opts: &SimOptions,
     scheme: Scheme,
+    rng: &mut Pcg32,
+) -> LayerSimResult {
+    simulate_layer_replay(task, cfg, opts, scheme, None, rng)
+}
+
+/// [`simulate_layer`] with optional replay maps for this task
+/// (`sim::replay` resolves them per image; `engine::simulate_image`
+/// passes them down). Replay only affects the exact backend: the
+/// analytic path is expectation-based and keeps its jittered fractions.
+pub fn simulate_layer_replay(
+    task: &LayerTask,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    scheme: Scheme,
+    replay: Option<&TaskMaps>,
     rng: &mut Pcg32,
 ) -> LayerSimResult {
     let pe = PeModel::from_config(cfg);
@@ -108,22 +132,37 @@ pub fn simulate_layer(
     let exact_pe = (opts.backend == ExecBackend::Exact).then(|| ExactPe::from_config(cfg));
     let crs_exact = (task.crs.round() as usize).max(1);
 
+    // Replay maps apply only where the scheme exploits the sparsity
+    // type: a dense-compute run performs every MAC no matter what the
+    // forward pass left in DRAM. The output map must cover the task's
+    // output geometry exactly (FC tasks factorize their maps and fall
+    // back to sampling).
+    let replay = replay.filter(|_| exact_pe.is_some());
+    let replay_in = replay.and_then(|r| r.operand.as_ref()).filter(|_| s_in > 0.0);
+    let replay_out = replay
+        .and_then(|r| r.output.as_ref())
+        .filter(|rm| s_out > 0.0 && rm.map.shape == Shape::new(task.m, task.u, task.v));
+
     // Spatial tiling across the PE grid; every PE computes all M channels
     // of its spatial slice (single filter broadcast at a time, §4.2).
+    // Windows are only needed to slice bitmaps, so the analytic hot path
+    // (every paper figure) skips building them.
     let spatial = tile_outputs(task.u, task.v, cfg.tx, cfg.ty);
+    let windows =
+        exact_pe.is_some().then(|| tile_windows(task.u, task.v, cfg.tx, cfg.ty));
 
     let mut tile_busy = Vec::with_capacity(spatial.len());
     let mut performed = 0.0f64;
-    for &sp in &spatial {
+    for (t, &sp) in spatial.iter().enumerate() {
         if sp == 0 {
             tile_busy.push(0.0);
             continue;
         }
-        // Per-tile sparsity variation (drives load imbalance / WDU).
-        let s_in_t = jitter(s_in, opts.tile_sparsity_cv, rng);
-        let s_out_t = jitter(s_out, opts.tile_sparsity_cv, rng);
         match &exact_pe {
             None => {
+                // Per-tile sparsity variation (drives load imbalance / WDU).
+                let s_in_t = jitter(s_in, opts.tile_sparsity_cv, rng);
+                let s_out_t = jitter(s_out, opts.tile_sparsity_cv, rng);
                 let outputs_t = (sp * task.m) as f64;
                 let computed = outputs_t * (1.0 - s_out_t);
                 let (cyc_per_out, macs_per_out) = pe.cycles_per_output(task.crs, s_in_t);
@@ -131,13 +170,35 @@ pub fn simulate_layer(
                 performed += computed * macs_per_out;
             }
             Some(xpe) => {
+                // Sampled components draw their jittered density from the
+                // stream; replayed components touch no RNG state — the
+                // captured map carries the real per-tile variation.
+                let in_src = match &replay_in {
+                    Some(rm) => BitmapSource::Replayed { map: rm.map.as_ref() },
+                    None => BitmapSource::Sampled {
+                        density: 1.0 - jitter(s_in, opts.tile_sparsity_cv, rng),
+                        pattern: opts.pattern,
+                        blob_radius: opts.blob_radius,
+                    },
+                };
+                let out_src = match &replay_out {
+                    Some(rm) => BitmapSource::Replayed { map: rm.map.as_ref() },
+                    None => BitmapSource::Sampled {
+                        density: 1.0 - jitter(s_out, opts.tile_sparsity_cv, rng),
+                        pattern: opts.pattern,
+                        blob_radius: opts.blob_radius,
+                    },
+                };
+                let windows = windows.as_ref().expect("windows exist on the exact path");
+                let geom =
+                    TileGeom { index: t, m: task.m, u: task.u, v: task.v, window: windows[t] };
                 let (cyc, macs) = exact_tile_cost(
                     xpe,
                     crs_exact,
-                    sp * task.m,
+                    &geom,
                     opts.exact_outputs_per_tile,
-                    s_in_t,
-                    s_out_t,
+                    &in_src,
+                    &out_src,
                     rng,
                 );
                 tile_busy.push(cyc);
@@ -161,15 +222,19 @@ pub fn simulate_layer(
     };
     let compute_cycles = completion.iter().cloned().fold(0.0, f64::max);
 
-    // Memory.
+    // Memory. Replayed layers account traffic at the captured map's
+    // *measured* zero fraction (precomputed popcount), not the model's
+    // expected one.
+    let s_in_mem = replay_in.map_or(s_in, |rm| rm.sparsity);
+    let s_out_mem = replay_out.map_or(s_out, |rm| rm.sparsity);
     let output_elems = task.outputs() as f64;
     let traffic = layer_traffic(
         task.input_elems,
         task.weight_elems,
         output_elems,
         cfg.operand_bytes as f64,
-        s_in,
-        s_out,
+        s_in_mem,
+        s_out_mem,
     );
     let mem_stall = traffic.stall_cycles(cfg, compute_cycles, opts.overlap_dram);
     let cycles = compute_cycles + mem_stall;
@@ -331,6 +396,59 @@ mod tests {
         assert!((dc.performed_macs - dc.dense_macs).abs() / dc.dense_macs < 1e-9);
         assert!(dc.cycles > inp.cycles, "DC {} !> IN {}", dc.cycles, inp.cycles);
         assert!(inp.cycles > both.cycles, "IN {} !> IN+OUT {}", inp.cycles, both.cycles);
+    }
+
+    #[test]
+    fn fully_replayed_task_draws_no_rng_and_tracks_patterns() {
+        use std::sync::Arc;
+        use crate::sim::replay::{ReplayMap, TaskMaps};
+        use crate::sparsity::Bitmap;
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { backend: ExecBackend::Exact, ..SimOptions::default() };
+        let t = LayerTask {
+            name: "replayed".into(),
+            m: 32,
+            u: 16,
+            v: 16,
+            crs: 288.0,
+            in_sparsity: Some(0.5),
+            out_sparsity: Some(0.5),
+            input_elems: 32.0 * 18.0 * 18.0,
+            weight_elems: 32.0 * 288.0,
+        };
+        let mut map_rng = Pcg32::new(11);
+        let out_map = Bitmap::sample(crate::nn::Shape::new(32, 16, 16), 0.5, &mut map_rng);
+        let in_map = Bitmap::sample(crate::nn::Shape::new(32, 18, 18), 0.5, &mut map_rng);
+        let wrap = |b: &Bitmap| ReplayMap { map: Arc::new(b.clone()), sparsity: b.sparsity() };
+        let maps = TaskMaps { operand: Some(wrap(&in_map)), output: Some(wrap(&out_map)) };
+
+        // Both components replayed: the result must not depend on the
+        // stream at all (different seeds, identical outcome).
+        let run = |seed| {
+            let mut rng = Pcg32::new(seed);
+            simulate_layer_replay(&t, &cfg, &opts, Scheme::InOut, Some(&maps), &mut rng)
+        };
+        let a = run(1);
+        let b = run(999);
+        assert_eq!(a.cycles, b.cycles, "fully-replayed task must be seed-independent");
+        assert_eq!(a.performed_macs, b.performed_macs);
+
+        // A different captured pattern at the same density changes the
+        // outcome — that is the whole point of replay.
+        let out2 = Bitmap::sample(crate::nn::Shape::new(32, 16, 16), 0.5, &mut map_rng);
+        let maps2 = TaskMaps { operand: Some(wrap(&in_map)), output: Some(wrap(&out2)) };
+        let mut rng = Pcg32::new(1);
+        let c = simulate_layer_replay(&t, &cfg, &opts, Scheme::InOut, Some(&maps2), &mut rng);
+        assert_ne!(a.performed_macs, c.performed_macs);
+
+        // Dense scheme ignores replay payloads entirely.
+        let mut r1 = Pcg32::new(7);
+        let mut r2 = Pcg32::new(7);
+        let dense_replay =
+            simulate_layer_replay(&t, &cfg, &opts, Scheme::Dense, Some(&maps), &mut r1);
+        let dense_plain = simulate_layer(&t, &cfg, &opts, Scheme::Dense, &mut r2);
+        assert_eq!(dense_replay.cycles, dense_plain.cycles);
+        assert_eq!(dense_replay.performed_macs, dense_plain.performed_macs);
     }
 
     #[test]

@@ -26,20 +26,22 @@ mod energy;
 mod layer_exec;
 mod engine;
 mod exact;
+mod replay;
 mod sweep;
 
 pub use adder_tree::{tree_utilization, ReconfigMode};
-pub use backend::{exact_tile_cost, ExecBackend};
-pub use exact::{random_bitmap, ExactOutput, ExactPe};
+pub use backend::{exact_tile_cost, BitmapSource, ExecBackend, TileGeom};
+pub use exact::{count_bits_range, random_bitmap, ExactOutput, ExactPe, OperandPattern};
+pub use replay::{ReplayBank, ReplayMap, StepMaps, TaskMaps};
 pub use blocking::synapse_passes;
 pub use energy::{layer_energy, EnergyBreakdown};
 pub use engine::{
     build_image_tasks, build_task, image_stream, simulate_image, simulate_network,
     simulate_network_jobs, ImageTask, LayerAgg, NetworkSimResult, PhaseTotals,
 };
-pub use layer_exec::{simulate_layer, LayerSimResult, LayerTask};
+pub use layer_exec::{simulate_layer, simulate_layer_replay, LayerSimResult, LayerTask};
 pub use memory::{layer_traffic, MemoryModel};
 pub use pe::{expected_lane_max, expected_max_std_normal, PeModel};
 pub use sweep::{SweepCache, SweepCombo, SweepKey, SweepPlan, SweepRunner, SIM_REVISION};
-pub use tile::{tile_outputs, TileState};
+pub use tile::{tile_outputs, tile_windows, TileState};
 pub use wdu::{redistribute, WduOutcome};

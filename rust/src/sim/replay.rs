@@ -1,0 +1,275 @@
+//! Pattern replay: turn a v2 trace file's captured per-ReLU bitmaps into
+//! the per-(layer, phase) operand/output maps the exact backend slices
+//! its tile patterns from — the bridge that makes co-simulation
+//! *pattern-exact* instead of fraction-exact.
+//!
+//! Mapping (per traced step), derived from the same §2.1/§3 reasoning as
+//! `sparsity::analyze`:
+//!
+//! * **FP operand** of layer `l` — the activation bitmap of `l`'s
+//!   producing ReLU (zeros in the input feature map).
+//! * **BP operand** of `l` — the ReLU-masked *gradient* bitmap of the
+//!   ReLU consuming `l`'s output (the gradient arriving at `l`'s output;
+//!   dense when `l` feeds BatchNorm instead, so no map is attached).
+//! * **BP output mask** of `l` — the activation bitmap of `l`'s
+//!   producing ReLU (the §3.2 identity: the input-gradient footprint is
+//!   contained in the forward activation footprint, known a priori).
+//! * **WG** tasks carry no payload (joint activation×gradient operands
+//!   live on two differently-shaped maps) and fall back to sampling.
+//!
+//! Images map onto traced steps round-robin (`image % steps`), so a
+//! batch replays across every captured step deterministically — the
+//! per-image independence the parallel engine's bit-identical contract
+//! rests on is untouched, because the mapping depends on the image index
+//! only.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::nn::{Network, Phase};
+use crate::sparsity::Bitmap;
+use crate::trace::TraceFile;
+
+/// One captured map plus its precomputed zero fraction (the memory and
+/// energy accounting wants the fraction without re-popcounting the map
+/// for every image).
+#[derive(Clone, Debug)]
+pub struct ReplayMap {
+    pub map: Arc<Bitmap>,
+    pub sparsity: f64,
+}
+
+impl ReplayMap {
+    fn new(map: Arc<Bitmap>) -> ReplayMap {
+        let sparsity = map.sparsity();
+        ReplayMap { map, sparsity }
+    }
+}
+
+/// The replay payloads one (layer, phase) task consumes.
+#[derive(Clone, Debug, Default)]
+pub struct TaskMaps {
+    /// Operand (input) pattern the PE lanes drain.
+    pub operand: Option<ReplayMap>,
+    /// A-priori output mask (BP only, Fig 5c).
+    pub output: Option<ReplayMap>,
+}
+
+impl TaskMaps {
+    pub fn is_empty(&self) -> bool {
+        self.operand.is_none() && self.output.is_none()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct LayerMaps {
+    fp: TaskMaps,
+    bp: TaskMaps,
+}
+
+/// Every task's replay maps for one traced step.
+#[derive(Debug, Default)]
+pub struct StepMaps {
+    by_layer: HashMap<String, LayerMaps>,
+}
+
+impl StepMaps {
+    /// The maps a (layer, phase) task replays, if any were captured.
+    pub fn task_maps(&self, layer: &str, phase: Phase) -> Option<&TaskMaps> {
+        let lm = self.by_layer.get(layer)?;
+        let tm = match phase {
+            Phase::Forward => &lm.fp,
+            Phase::Backward => &lm.bp,
+            Phase::WeightGrad => return None,
+        };
+        (!tm.is_empty()).then_some(tm)
+    }
+}
+
+/// All replayable steps of one trace, resolved against a network.
+#[derive(Debug)]
+pub struct ReplayBank {
+    steps: Vec<StepMaps>,
+    fingerprint: u64,
+    network: String,
+}
+
+impl ReplayBank {
+    /// Resolve a trace's bitmap payloads against the network's graph.
+    /// Errors when the trace carries no payloads at all, or when a
+    /// payload's shape contradicts the named ReLU's output shape (a
+    /// mis-paired trace/network is a caller bug, not a fallback case).
+    pub fn from_trace(net: &Network, trace: &TraceFile) -> anyhow::Result<ReplayBank> {
+        anyhow::ensure!(
+            trace.has_bitmaps(),
+            "trace file for '{}' carries no bitmap payloads (v1 or scalar-only v2); \
+             capture one with `agos trace` or a payload-capturing `agos train`",
+            trace.network
+        );
+        let consumers = net.consumer_map();
+        let mut steps = Vec::new();
+        for s in &trace.steps {
+            // relu layer name -> (act map, grad map) for this step.
+            let mut relu_maps: HashMap<&str, (Option<Arc<Bitmap>>, Option<Arc<Bitmap>>)> =
+                HashMap::new();
+            for lt in &s.layers {
+                if !lt.has_bitmaps() {
+                    continue;
+                }
+                let relu = net
+                    .by_name(&lt.name)
+                    .ok_or_else(|| anyhow::anyhow!("traced layer '{}' not in '{}'", lt.name, net.name))?;
+                for (what, bm) in [("act", &lt.act_bitmap), ("grad", &lt.grad_bitmap)] {
+                    if let Some(b) = bm {
+                        anyhow::ensure!(
+                            b.shape == relu.out,
+                            "{what} bitmap of '{}' is {} but the layer produces {}",
+                            lt.name,
+                            b.shape,
+                            relu.out
+                        );
+                    }
+                }
+                relu_maps.insert(
+                    lt.name.as_str(),
+                    (
+                        lt.act_bitmap.clone().map(Arc::new),
+                        lt.grad_bitmap.clone().map(Arc::new),
+                    ),
+                );
+            }
+            if relu_maps.is_empty() {
+                continue; // scalar-only step: nothing to replay
+            }
+            let mut by_layer = HashMap::new();
+            for layer in net.compute_layers() {
+                let producer = net.layer(layer.inputs[0]);
+                let act = producer
+                    .kind
+                    .is_relu()
+                    .then(|| relu_maps.get(producer.name.as_str()))
+                    .flatten()
+                    .and_then(|(a, _)| a.clone())
+                    .map(ReplayMap::new);
+                let grad = consumers[layer.id]
+                    .iter()
+                    .map(|&k| net.layer(k))
+                    .find(|k| k.kind.is_relu())
+                    .and_then(|k| relu_maps.get(k.name.as_str()))
+                    .and_then(|(_, g)| g.clone())
+                    .map(ReplayMap::new);
+                let lm = LayerMaps {
+                    fp: TaskMaps { operand: act.clone(), output: None },
+                    bp: TaskMaps { operand: grad, output: act },
+                };
+                if !lm.fp.is_empty() || !lm.bp.is_empty() {
+                    by_layer.insert(layer.name.clone(), lm);
+                }
+            }
+            steps.push(StepMaps { by_layer });
+        }
+        anyhow::ensure!(!steps.is_empty(), "no replayable step resolved against '{}'", net.name);
+        Ok(ReplayBank {
+            steps,
+            fingerprint: trace.fingerprint(),
+            network: net.name.clone(),
+        })
+    }
+
+    /// The step image `i` replays (round-robin over captured steps).
+    pub fn step_maps(&self, image: usize) -> &StepMaps {
+        &self.steps[image % self.steps.len()]
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn network(&self) -> &str {
+        &self.network
+    }
+
+    /// The underlying trace's content fingerprint — folded into
+    /// `SimOptions::fingerprint` so replayed runs can never alias sampled
+    /// runs (or replays of a different trace) in the sweep cache.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{zoo, Shape};
+    use crate::trace::{LayerTrace, StepTrace};
+    use crate::util::rng::Pcg32;
+
+    fn traced_pair(shape: Shape, density: f64, rng: &mut Pcg32) -> (Bitmap, Bitmap) {
+        let act = Bitmap::sample(shape, density, rng);
+        let keep = Bitmap::sample(shape, 0.8, rng);
+        let grad = act.and(&keep);
+        (act, grad)
+    }
+
+    fn bitmap_trace() -> TraceFile {
+        let net = zoo::agos_cnn();
+        let mut rng = Pcg32::new(2);
+        let mut t = TraceFile::new("agos_cnn");
+        for step in 0..2 {
+            let layers = (1..=4)
+                .map(|i| {
+                    let name = format!("relu{i}");
+                    let shape = net.by_name(&name).unwrap().out;
+                    let (act, grad) = traced_pair(shape, 0.5, &mut rng);
+                    LayerTrace::from_bitmaps(&name, act, grad)
+                })
+                .collect();
+            t.steps.push(StepTrace { step, loss: 2.0 - step as f64, layers });
+        }
+        t
+    }
+
+    #[test]
+    fn bank_resolves_fp_bp_maps_against_the_graph() {
+        let net = zoo::agos_cnn();
+        let trace = bitmap_trace();
+        let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+        assert_eq!(bank.steps(), 2);
+        let s0 = bank.step_maps(0);
+        // conv2's producer is relu1, its consumer is relu2.
+        let bp = s0.task_maps("conv2", Phase::Backward).unwrap();
+        let relu1 = net.by_name("relu1").unwrap().out;
+        let relu2 = net.by_name("relu2").unwrap().out;
+        assert_eq!(bp.output.as_ref().unwrap().map.shape, relu1);
+        assert_eq!(bp.operand.as_ref().unwrap().map.shape, relu2);
+        let fp = s0.task_maps("conv2", Phase::Forward).unwrap();
+        assert_eq!(fp.operand.as_ref().unwrap().map.shape, relu1);
+        assert!(fp.output.is_none(), "FP has no a-priori output mask");
+        // conv1 reads the dense image: no FP payload.
+        assert!(s0.task_maps("conv1", Phase::Forward).is_none());
+        // WG never replays.
+        assert!(s0.task_maps("conv2", Phase::WeightGrad).is_none());
+        // Image round-robin wraps over the two steps.
+        assert!(!std::ptr::eq(bank.step_maps(0), bank.step_maps(1)));
+        assert!(std::ptr::eq(bank.step_maps(0), bank.step_maps(2)));
+        assert_eq!(bank.fingerprint(), trace.fingerprint());
+    }
+
+    #[test]
+    fn scalar_trace_and_shape_mismatch_are_rejected() {
+        let net = zoo::agos_cnn();
+        let mut scalar = TraceFile::new("agos_cnn");
+        scalar.steps.push(StepTrace {
+            step: 0,
+            loss: 1.0,
+            layers: vec![LayerTrace::scalar("relu1", 0.5, 0.5, true)],
+        });
+        assert!(ReplayBank::from_trace(&net, &scalar).is_err());
+
+        let mut wrong = bitmap_trace();
+        let mut rng = Pcg32::new(3);
+        let (act, grad) = traced_pair(Shape::new(2, 2, 2), 0.5, &mut rng);
+        wrong.steps[0].layers[0] = LayerTrace::from_bitmaps("relu1", act, grad);
+        assert!(ReplayBank::from_trace(&net, &wrong).is_err(), "shape mismatch must error");
+    }
+}

@@ -37,8 +37,10 @@ use super::engine::{simulate_network_jobs, NetworkSimResult};
 /// cache key fingerprints every *input* of a simulation but nothing
 /// about the *algorithm*; bump this whenever simulation semantics change
 /// so stale spills from older code are rejected instead of silently
-/// served.
-pub const SIM_REVISION: u64 = 2;
+/// served. (rev 3: the exact backend's draw sequence changed — masked
+/// outputs no longer consume operand draws — and replayed/patterned
+/// sources were added.)
+pub const SIM_REVISION: u64 = 3;
 
 /// Cache identity of one simulation: everything that can change the
 /// result — the network (name *and* structure), the scheme, and the

@@ -33,6 +33,29 @@ pub fn tile_outputs(u: usize, v: usize, tx: usize, ty: usize) -> Vec<usize> {
     out
 }
 
+/// The spatial window of every tile from [`tile_outputs`]'s split, in
+/// the same row-major tile order: `(r0, r1, c0, c1)` half-open row and
+/// column ranges of the `u × v` output map owned by that tile. The
+/// replay path uses these to slice a tile's real output-mask bits out of
+/// a captured bitmap; `windows[t]` always covers exactly
+/// `tile_outputs(..)[t]` positions.
+pub fn tile_windows(u: usize, v: usize, tx: usize, ty: usize) -> Vec<(usize, usize, usize, usize)> {
+    assert!(tx > 0 && ty > 0);
+    let rows = split(u, ty);
+    let cols = split(v, tx);
+    let mut out = Vec::with_capacity(tx * ty);
+    let mut r0 = 0;
+    for r in &rows {
+        let mut c0 = 0;
+        for c in &cols {
+            out.push((r0, r0 + r, c0, c0 + c));
+            c0 += c;
+        }
+        r0 += r;
+    }
+    out
+}
+
 /// Exact factorization of `n` into `(u, v)` with `u·v == n` and the pair
 /// as square as possible — used to spread non-spatial output maps (FC
 /// vectors, weight-gradient tensors) across the PE grid without
@@ -101,5 +124,25 @@ mod tests {
     fn balanced_split_is_even() {
         let tiles = tile_outputs(32, 32, 16, 16);
         assert!(tiles.iter().all(|&t| t == 4));
+    }
+
+    #[test]
+    fn windows_partition_and_match_counts() {
+        for (u, v, tx, ty) in [(224, 224, 16, 16), (7, 7, 16, 16), (28, 28, 4, 4), (1, 1, 16, 16)] {
+            let counts = tile_outputs(u, v, tx, ty);
+            let windows = tile_windows(u, v, tx, ty);
+            assert_eq!(counts.len(), windows.len());
+            let mut covered = vec![false; u * v];
+            for (t, &(r0, r1, c0, c1)) in windows.iter().enumerate() {
+                assert_eq!((r1 - r0) * (c1 - c0), counts[t], "tile {t} of ({u},{v},{tx},{ty})");
+                for y in r0..r1 {
+                    for x in c0..c1 {
+                        assert!(!covered[y * v + x], "({y},{x}) assigned twice");
+                        covered[y * v + x] = true;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "every position owned once");
+        }
     }
 }

@@ -19,7 +19,13 @@
 //!   this (all gradient locations must be evaluated, §6).
 //! * **WG operand sparsities** — activations (forward) × gradients (BP).
 
+use crate::config::BitmapPattern;
 use crate::nn::{LayerId, LayerKind, Network};
+use crate::trace::{LayerTrace, StepTrace, TraceFile};
+use crate::util::rng::Pcg32;
+
+use super::bitmap::Bitmap;
+use super::model::{SparsityModel, TraceSource};
 
 /// Which sparsity types a (layer, phase) admits — reporting convenience.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -170,6 +176,63 @@ pub fn analyze_network(net: &Network, fwd: &[f64]) -> Vec<LayerOpportunity> {
         .collect()
 }
 
+/// Synthesize a v2 trace file with packed per-ReLU bitmap payloads from
+/// the calibrated sparsity model — the capture path's stand-in when no
+/// PJRT artifacts exist (the real trainer captures real tensors through
+/// `runtime::bitmap_from_nhwc`). This is what `agos trace` writes and
+/// what the replay tests/figures feed through `sim::ReplayBank`.
+///
+/// Per step: every ReLU gets an activation bitmap drawn at its assigned
+/// forward density (iid or blobbed), and a gradient bitmap built as
+/// `act ∧ keep` with the keep rate solved from the §3-derived gradient
+/// sparsity at the ReLU's input — so footprint(grad) ⊆ footprint(act)
+/// holds *by construction* and the scalar fields derived from the maps
+/// can never disagree with the patterns.
+pub fn capture_synthetic_trace(
+    net: &Network,
+    model: &SparsityModel,
+    steps: usize,
+    pattern: BitmapPattern,
+    blob_radius: usize,
+) -> TraceFile {
+    let seed = match &model.source {
+        TraceSource::Synthetic { seed } | TraceSource::Measured { seed, .. } => *seed,
+    };
+    let per_step = model.assign_batch(net, steps.max(1));
+    let mut trace = TraceFile::new(&net.name);
+    for (si, fwd) in per_step.iter().enumerate() {
+        let gs = gradient_sparsity(net, fwd);
+        let mut rng =
+            Pcg32::new(seed ^ 0xB17A ^ (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut layers = Vec::new();
+        for l in net.layers() {
+            if !l.kind.is_relu() {
+                continue;
+            }
+            let s_act = fwd[l.id];
+            let act = match pattern {
+                BitmapPattern::Iid => Bitmap::sample(l.out, 1.0 - s_act, &mut rng),
+                BitmapPattern::Blobs => {
+                    Bitmap::sample_blobs(l.out, 1.0 - s_act, blob_radius, &mut rng)
+                }
+            };
+            // Gradient below this ReLU (at its producer's output): zeros
+            // are a superset of the mask's, so thin the activation
+            // footprint down to the analyzed gradient density.
+            let s_grad = gs[l.inputs[0]].max(s_act);
+            let keep = ((1.0 - s_grad) / (1.0 - s_act).max(1e-9)).clamp(0.0, 1.0);
+            let keep_map = Bitmap::sample(l.out, keep, &mut rng);
+            layers.push(LayerTrace::from_bitmaps(&l.name, act.clone(), act.and(&keep_map)));
+        }
+        trace.steps.push(StepTrace {
+            step: si,
+            loss: 2.3 * 0.92f64.powi(si as i32),
+            layers,
+        });
+    }
+    trace
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +361,41 @@ mod tests {
         assert!((gs[p1] - 0.0).abs() < 1e-9);
         assert!((gs[r1] - 0.75).abs() < 1e-9);
         assert!((gs[c1] - 0.75).abs() < 1e-9);
+    }
+
+    /// Synthesized v2 traces: payloads on every ReLU, identity by
+    /// construction, scalars consistent with the model's assignment.
+    #[test]
+    fn synthetic_capture_matches_model_and_holds_identity() {
+        let net = crate::nn::zoo::agos_cnn();
+        let model = SparsityModel::synthetic(5);
+        for pattern in [BitmapPattern::Iid, BitmapPattern::Blobs] {
+            let t = capture_synthetic_trace(&net, &model, 3, pattern, 2);
+            assert_eq!(t.steps.len(), 3);
+            assert!(t.has_bitmaps());
+            assert!(t.identity_holds(), "grad ⊆ act must hold by construction");
+            for step in &t.steps {
+                assert_eq!(step.layers.len(), 4, "one entry per ReLU");
+                for l in &step.layers {
+                    let relu = net.by_name(&l.name).unwrap();
+                    let act = l.act_bitmap.as_ref().unwrap();
+                    assert_eq!(act.shape, relu.out);
+                    assert!(
+                        l.grad_sparsity >= l.act_sparsity - 1e-12,
+                        "{}: gradient can only be more sparse",
+                        l.name
+                    );
+                    assert!((0.05..0.95).contains(&l.act_sparsity), "{}", l.act_sparsity);
+                }
+            }
+            // Deterministic from the model.
+            let t2 = capture_synthetic_trace(&net, &model, 3, pattern, 2);
+            assert_eq!(t.fingerprint(), t2.fingerprint());
+        }
+        // Different patterns produce different payloads at the same means.
+        let iid = capture_synthetic_trace(&net, &model, 1, BitmapPattern::Iid, 2);
+        let blobs = capture_synthetic_trace(&net, &model, 1, BitmapPattern::Blobs, 2);
+        assert_ne!(iid.fingerprint(), blobs.fingerprint());
     }
 
     /// Residual Add passes gradient sparsity through to both branches.

@@ -5,10 +5,21 @@
 //! forward pass leaves in DRAM for the backward pass's output-sparsity
 //! address generator (Fig 9), and what the trace pipeline extracts from
 //! real activations.
+//!
+//! The packed `u64` words are part of the public contract: the exact PE
+//! (`sim::exact`) drains operands word-by-word with masked popcounts (the
+//! §4.3 SRAM streaming order), and the v2 trace format (`trace`)
+//! persists the words as hex so captured patterns replay bit-exactly.
 
 use crate::nn::Shape;
+use crate::util::fnv::Fnv1a;
 
 /// One bit per neuron, layout `c * (h*w) + y * w + x`, LSB-first words.
+///
+/// Invariant: bits at index `>= shape.len()` in the last word are zero —
+/// every constructor maintains it, so word-wise consumers (`and`,
+/// `contained_in`, `channel_words`, popcounts) need no defensive tail
+/// masking of their own.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Bitmap {
     pub shape: Shape,
@@ -53,17 +64,163 @@ impl Bitmap {
         b
     }
 
-    /// One channel's bits in within-channel (row-major spatial) order —
-    /// the drain order the exact PE walks (`sim::exact`).
-    pub fn channel_bits(&self, c: usize) -> Vec<bool> {
+    /// Spatially-correlated random bitmap: non-zeros are planted as
+    /// square blobs of Chebyshev radius `blob_radius` around random
+    /// centers (within one channel) until exactly
+    /// `round(density · len)` bits are set — the clustered zero
+    /// footprints real ReLU maps exhibit, versus `sample`'s iid draws.
+    /// `blob_radius == 0` degenerates to iid-without-replacement.
+    ///
+    /// Deterministic from the stream; densities `<= 0`, `>= 1` take the
+    /// same draw-free fast paths as `sample`, and densities above the
+    /// blob algorithm's efficient range fall back to iid sampling (the
+    /// clustering is indistinguishable that close to dense anyway).
+    pub fn sample_blobs(
+        shape: Shape,
+        density: f64,
+        blob_radius: usize,
+        rng: &mut crate::util::rng::Pcg32,
+    ) -> Bitmap {
+        if density <= 0.0 || density >= 0.97 {
+            return Bitmap::sample(shape, density, rng);
+        }
+        let n = shape.len();
+        if n == 0 {
+            return Bitmap::zeros(shape);
+        }
+        let target = ((density * n as f64).round() as usize).clamp(1, n);
+        let mut b = Bitmap::zeros(shape);
+        let mut nz = 0usize;
+        let r = blob_radius as isize;
+        while nz < target {
+            let c = rng.below(shape.c as u32) as usize;
+            let cy = rng.below(shape.h as u32) as isize;
+            let cx = rng.below(shape.w as u32) as isize;
+            for dy in -r..=r {
+                for dx in -r..=r {
+                    let (y, x) = (cy + dy, cx + dx);
+                    if y < 0 || x < 0 || y >= shape.h as isize || x >= shape.w as isize {
+                        continue;
+                    }
+                    let (y, x) = (y as usize, x as usize);
+                    if !b.get(c, y, x) {
+                        b.set(c, y, x, true);
+                        nz += 1;
+                        if nz >= target {
+                            return b;
+                        }
+                    }
+                }
+            }
+        }
+        b
+    }
+
+    /// One channel's bits in within-channel (row-major spatial) order,
+    /// packed LSB-first into `u64` words — the §4.3 streaming order the
+    /// exact PE drains word-by-word (`sim::exact`). The final word is
+    /// tail-masked. Replaces the old per-lane `Vec<bool>` expansion
+    /// (`channel_bits`), which dominated replay-scale walks.
+    pub fn channel_words(&self, c: usize) -> ChannelWords<'_> {
         let hw = self.shape.h * self.shape.w;
-        let base = c * hw;
-        (0..hw)
-            .map(|i| {
-                let j = base + i;
-                (self.words[j / 64] >> (j % 64)) & 1 == 1
-            })
-            .collect()
+        ChannelWords { map: self, base: c * hw, len: hw, pos: 0 }
+    }
+
+    /// Up to 64 bits starting at absolute bit `lo` (no wrap; the caller
+    /// keeps `lo + nbits <= shape.len()`), LSB-aligned and tail-masked.
+    #[inline]
+    pub(crate) fn extract_bits(&self, lo: usize, nbits: usize) -> u64 {
+        debug_assert!(nbits >= 1 && nbits <= 64);
+        let wi = lo / 64;
+        let sh = lo % 64;
+        let mut w = self.words[wi] >> sh;
+        if sh != 0 && wi + 1 < self.words.len() {
+            w |= self.words[wi + 1] << (64 - sh);
+        }
+        if nbits < 64 {
+            w &= (1u64 << nbits) - 1;
+        }
+        w
+    }
+
+    /// Copy `len` bits starting at `start` (mod the map size, wrapping)
+    /// into `out` as packed LSB-first words — how the replay path slices
+    /// one output's operand window out of a captured map without
+    /// expanding to bools. `out` is cleared and resized; windows longer
+    /// than the map wrap and repeat.
+    pub fn window_words_into(&self, start: usize, len: usize, out: &mut Vec<u64>) {
+        let n = self.shape.len();
+        assert!(n > 0 && len > 0, "window over empty bitmap");
+        out.clear();
+        out.resize(len.div_ceil(64), 0);
+        let mut filled = 0usize;
+        while filled < len {
+            let pos = (start + filled) % n;
+            let take = 64.min(len - filled).min(n - pos);
+            let bits = self.extract_bits(pos, take);
+            let (wi, sh) = (filled / 64, filled % 64);
+            out[wi] |= bits << sh;
+            if sh != 0 && sh + take > 64 {
+                out[wi + 1] |= bits >> (64 - sh);
+            }
+            filled += take;
+        }
+    }
+
+    /// The packed words (LSB-first; tail bits beyond `len` are zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Hex payload of the packed words (16 chars per word) — the v2
+    /// trace-file encoding (`trace`).
+    pub fn encode_hex(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::with_capacity(self.words.len() * 16);
+        for w in &self.words {
+            let _ = write!(s, "{w:016x}");
+        }
+        s
+    }
+
+    /// Parse an `encode_hex` payload back under `shape`. Rejects wrong
+    /// payload lengths and set bits beyond `shape.len()` (a corrupt or
+    /// mis-shaped payload must not load as "good" data).
+    pub fn decode_hex(shape: Shape, hex: &str) -> anyhow::Result<Bitmap> {
+        let n_words = shape.len().div_ceil(64);
+        anyhow::ensure!(
+            hex.len() == n_words * 16,
+            "bitmap payload is {} hex chars, shape {shape} needs {}",
+            hex.len(),
+            n_words * 16
+        );
+        let mut words = Vec::with_capacity(n_words);
+        for i in 0..n_words {
+            let chunk = &hex[i * 16..(i + 1) * 16];
+            words.push(
+                u64::from_str_radix(chunk, 16)
+                    .map_err(|_| anyhow::anyhow!("bad bitmap hex word '{chunk}'"))?,
+            );
+        }
+        let tail = shape.len() % 64;
+        if tail > 0 {
+            anyhow::ensure!(
+                words[n_words - 1] & !((1u64 << tail) - 1) == 0,
+                "bitmap payload has bits set beyond shape {shape}"
+            );
+        }
+        Ok(Bitmap { shape, words })
+    }
+
+    /// Stable content fingerprint (shape + words) — folded into sweep
+    /// cache keys so replayed patterns can never alias (`sim::sweep`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.put(self.shape.c as u64).put(self.shape.h as u64).put(self.shape.w as u64);
+        for w in &self.words {
+            h.put(*w);
+        }
+        h.finish()
     }
 
     /// Build from an f32 tensor in `[C,H,W]` order: bit set ⇔ value ≠ 0.
@@ -130,16 +287,23 @@ impl Bitmap {
 
     /// Non-zero count along the channel axis at a spatial location — the
     /// "through channel" (TC) view used by input-sparsity indexing.
+    /// A strided word-indexed walk (stride `h·w` bits, one bit tested
+    /// per word access) instead of per-bit `get` address arithmetic.
     pub fn tc_nz(&self, y: usize, x: usize) -> usize {
-        (0..self.shape.c).filter(|&c| self.get(c, y, x)).count()
+        let hw = self.shape.h * self.shape.w;
+        let mut i = y * self.shape.w + x;
+        let mut n = 0usize;
+        for _ in 0..self.shape.c {
+            n += ((self.words[i / 64] >> (i % 64)) & 1) as usize;
+            i += hw;
+        }
+        n
     }
 
     /// Non-zero count within one channel — the "within channel" (WC)
-    /// view that drives output skipping.
+    /// view that drives output skipping. A masked-word popcount walk.
     pub fn wc_nz(&self, c: usize) -> usize {
-        (0..self.shape.h)
-            .map(|y| (0..self.shape.w).filter(|&x| self.get(c, y, x)).count())
-            .sum()
+        self.channel_words(c).map(|w| w.count_ones() as usize).sum()
     }
 
     /// Per-channel sparsity vector.
@@ -169,6 +333,35 @@ impl Bitmap {
     pub fn contained_in(&self, other: &Bitmap) -> bool {
         assert_eq!(self.shape, other.shape);
         self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+}
+
+/// Word iterator over one channel's bits (see [`Bitmap::channel_words`]).
+/// Yields `ceil(h·w / 64)` words; the last is tail-masked.
+pub struct ChannelWords<'a> {
+    map: &'a Bitmap,
+    base: usize,
+    len: usize,
+    pos: usize,
+}
+
+impl Iterator for ChannelWords<'_> {
+    type Item = u64;
+
+    #[inline]
+    fn next(&mut self) -> Option<u64> {
+        if self.pos >= self.len {
+            return None;
+        }
+        let nbits = 64.min(self.len - self.pos);
+        let w = self.map.extract_bits(self.base + self.pos, nbits);
+        self.pos += 64;
+        Some(w)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.len - self.pos.min(self.len)).div_ceil(64);
+        (left, Some(left))
     }
 }
 
@@ -248,14 +441,149 @@ mod tests {
     }
 
     #[test]
-    fn channel_bits_match_get() {
+    fn channel_words_match_get() {
         let mut b = Bitmap::zeros(Shape::new(3, 2, 2));
         b.set(1, 0, 1, true);
         b.set(1, 1, 0, true);
         b.set(2, 1, 1, true);
-        assert_eq!(b.channel_bits(0), vec![false; 4]);
-        assert_eq!(b.channel_bits(1), vec![false, true, true, false]);
-        assert_eq!(b.channel_bits(2), vec![false, false, false, true]);
+        // hw = 4 bits per channel, one masked word each.
+        assert_eq!(b.channel_words(0).collect::<Vec<_>>(), vec![0b0000]);
+        assert_eq!(b.channel_words(1).collect::<Vec<_>>(), vec![0b0110]);
+        assert_eq!(b.channel_words(2).collect::<Vec<_>>(), vec![0b1000]);
+    }
+
+    #[test]
+    fn channel_words_cross_word_boundaries() {
+        // hw = 100 bits per channel: channel 1 starts at bit 100, so its
+        // words straddle the packed-word grid; verify against `get`.
+        let shape = Shape::new(3, 10, 10);
+        let mut rng = crate::util::rng::Pcg32::new(21);
+        let b = Bitmap::sample(shape, 0.37, &mut rng);
+        for c in 0..shape.c {
+            let words: Vec<u64> = b.channel_words(c).collect();
+            assert_eq!(words.len(), 2); // ceil(100/64)
+            for i in 0..100 {
+                let bit = (words[i / 64] >> (i % 64)) & 1 == 1;
+                assert_eq!(bit, b.get(c, i / 10, i % 10), "c={c} i={i}");
+            }
+            // tail of the last word is masked
+            assert_eq!(words[1] >> 36, 0);
+            assert_eq!(
+                words.iter().map(|w| w.count_ones() as usize).sum::<usize>(),
+                b.wc_nz(c)
+            );
+        }
+    }
+
+    #[test]
+    fn window_words_wrap_and_match_get() {
+        let shape = Shape::new(2, 5, 5); // 50 bits
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        let b = Bitmap::sample(shape, 0.5, &mut rng);
+        let flat: Vec<bool> = (0..50)
+            .map(|i| b.get(i / 25, (i % 25) / 5, i % 5))
+            .collect();
+        let mut out = Vec::new();
+        for (start, len) in [(0usize, 50usize), (13, 64), (47, 10), (3, 130)] {
+            b.window_words_into(start, len, &mut out);
+            assert_eq!(out.len(), len.div_ceil(64));
+            for j in 0..len {
+                let bit = (out[j / 64] >> (j % 64)) & 1 == 1;
+                assert_eq!(bit, flat[(start + j) % 50], "start={start} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip_and_corruption_rejected() {
+        let shape = Shape::new(3, 7, 9); // 189 bits, non-aligned tail
+        let mut rng = crate::util::rng::Pcg32::new(77);
+        let b = Bitmap::sample(shape, 0.4, &mut rng);
+        let hex = b.encode_hex();
+        assert_eq!(hex.len(), 3 * 16);
+        let b2 = Bitmap::decode_hex(shape, &hex).unwrap();
+        assert_eq!(b, b2);
+        // wrong length
+        assert!(Bitmap::decode_hex(shape, &hex[..32]).is_err());
+        // bits beyond the shape
+        let mut bad = hex.clone();
+        bad.replace_range(32..48, "ffffffffffffffff");
+        assert!(Bitmap::decode_hex(shape, &bad).is_err());
+        // non-hex garbage
+        let mut garbage = hex;
+        garbage.replace_range(0..1, "z");
+        assert!(Bitmap::decode_hex(shape, &garbage).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_and_shape() {
+        let mut rng = crate::util::rng::Pcg32::new(1);
+        let a = Bitmap::sample(Shape::new(4, 8, 8), 0.5, &mut rng);
+        let mut b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.set(0, 0, 0, !b.get(0, 0, 0));
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Same (empty) words, different shape must differ too.
+        let e1 = Bitmap::zeros(Shape::new(1, 8, 8));
+        let e2 = Bitmap::zeros(Shape::new(8, 8, 1));
+        assert_ne!(e1.fingerprint(), e2.fingerprint());
+    }
+
+    #[test]
+    fn blob_sampling_hits_density_and_clusters() {
+        use crate::util::rng::Pcg32;
+        let shape = Shape::new(8, 32, 32);
+        let mut rng = crate::util::rng::Pcg32::new(9);
+        let b = Bitmap::sample_blobs(shape, 0.4, 2, &mut rng);
+        // Exact-count construction: sparsity is exact to rounding.
+        assert!((b.sparsity() - 0.6).abs() < 1e-3, "sparsity {}", b.sparsity());
+        // Clustering: a non-zero's 4-neighborhood is far more likely to be
+        // non-zero than the marginal density. Count neighbor agreements.
+        let mut nz_pairs = 0usize;
+        let mut nz_total = 0usize;
+        for c in 0..shape.c {
+            for y in 0..shape.h {
+                for x in 0..shape.w - 1 {
+                    if b.get(c, y, x) {
+                        nz_total += 1;
+                        if b.get(c, y, x + 1) {
+                            nz_pairs += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let neighbor_density = nz_pairs as f64 / nz_total as f64;
+        assert!(
+            neighbor_density > 0.6,
+            "blobs must cluster: P(right neighbor nz | nz) = {neighbor_density:.2}"
+        );
+        // iid at the same density shows no such correlation.
+        let iid = Bitmap::sample(shape, 0.4, &mut rng);
+        let mut iid_pairs = 0usize;
+        let mut iid_total = 0usize;
+        for c in 0..shape.c {
+            for y in 0..shape.h {
+                for x in 0..shape.w - 1 {
+                    if iid.get(c, y, x) {
+                        iid_total += 1;
+                        if iid.get(c, y, x + 1) {
+                            iid_pairs += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert!((iid_pairs as f64 / iid_total as f64) < 0.5);
+        // Determinism + degenerate fast paths.
+        let d1 = Bitmap::sample_blobs(shape, 0.3, 1, &mut Pcg32::new(4));
+        let d2 = Bitmap::sample_blobs(shape, 0.3, 1, &mut Pcg32::new(4));
+        assert_eq!(d1, d2);
+        let mut a = Pcg32::new(2);
+        let mut c = Pcg32::new(2);
+        assert_eq!(Bitmap::sample_blobs(shape, 0.0, 2, &mut a).count_nz(), 0);
+        assert_eq!(Bitmap::sample_blobs(shape, 1.0, 2, &mut a).count_nz(), shape.len());
+        assert_eq!(a.next_u32(), c.next_u32(), "degenerate blobs must not draw");
     }
 
     #[test]

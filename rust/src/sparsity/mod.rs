@@ -7,7 +7,9 @@ mod encode;
 mod analyze;
 mod model;
 
-pub use analyze::{analyze_network, gradient_sparsity, LayerOpportunity, SparsityKind};
-pub use bitmap::Bitmap;
+pub use analyze::{
+    analyze_network, capture_synthetic_trace, gradient_sparsity, LayerOpportunity, SparsityKind,
+};
+pub use bitmap::{Bitmap, ChannelWords};
 pub use encode::{decode_group, encode_bitmap, encode_tensor, EncodedTensor, OffsetGroup, GROUP};
 pub use model::{SparsityModel, TraceSource};

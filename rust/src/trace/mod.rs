@@ -1,12 +1,30 @@
 //! Sparsity trace files: what the coordinator extracts from real training
 //! through the AOT artifacts, persisted as JSON for the co-simulation
 //! driver and the figures.
+//!
+//! Two on-disk revisions:
+//!
+//! * **v1** — scalar per-layer measurements only (name, activation /
+//!   gradient zero fractions, identity flag). Files written before the
+//!   bitmap-native pipeline carry no `version` key.
+//! * **v2** — additionally carries optional *packed bitmaps* per ReLU
+//!   layer per step: the within-channel zero footprints of the forward
+//!   activation (Fig 7) and of the ReLU-masked gradient, encoded as
+//!   `{shape: [c, h, w], words: "<hex u64 words>"}`. These are what
+//!   `agos cosim --replay` feeds pattern-exactly into the exact backend
+//!   (`sim::replay`). v1 files still load (payloads are simply absent).
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::nn::Shape;
+use crate::sparsity::Bitmap;
+use crate::util::fnv::Fnv1a;
 use crate::util::json::Json;
+
+/// Current trace-file schema revision.
+pub const TRACE_VERSION: u64 = 2;
 
 /// Per-layer measurement at one training step.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,6 +37,43 @@ pub struct LayerTrace {
     pub grad_sparsity: f64,
     /// Whether footprint(gradient) ⊆ footprint(activation) held exactly.
     pub identity_ok: bool,
+    /// v2: packed forward-activation zero footprint (the Fig 7 bitmap the
+    /// forward pass leaves in DRAM), if captured.
+    pub act_bitmap: Option<Bitmap>,
+    /// v2: packed ReLU-masked gradient zero footprint, if captured.
+    pub grad_bitmap: Option<Bitmap>,
+}
+
+impl LayerTrace {
+    /// A scalar-only (v1-shaped) measurement.
+    pub fn scalar(name: &str, act_sparsity: f64, grad_sparsity: f64, identity_ok: bool) -> LayerTrace {
+        LayerTrace {
+            name: name.to_string(),
+            act_sparsity,
+            grad_sparsity,
+            identity_ok,
+            act_bitmap: None,
+            grad_bitmap: None,
+        }
+    }
+
+    /// A v2 measurement with payloads: the scalar fields are *derived*
+    /// from the maps (fractions from popcounts, identity from footprint
+    /// containment), so scalars and patterns can never disagree.
+    pub fn from_bitmaps(name: &str, act: Bitmap, grad: Bitmap) -> LayerTrace {
+        LayerTrace {
+            name: name.to_string(),
+            act_sparsity: act.sparsity(),
+            grad_sparsity: grad.sparsity(),
+            identity_ok: grad.contained_in(&act),
+            act_bitmap: Some(act),
+            grad_bitmap: Some(grad),
+        }
+    }
+
+    pub fn has_bitmaps(&self) -> bool {
+        self.act_bitmap.is_some() || self.grad_bitmap.is_some()
+    }
 }
 
 /// One traced training step.
@@ -34,6 +89,28 @@ pub struct StepTrace {
 pub struct TraceFile {
     pub network: String,
     pub steps: Vec<StepTrace>,
+}
+
+fn bitmap_to_json(b: &Bitmap) -> Json {
+    Json::from_pairs(vec![
+        (
+            "shape",
+            Json::Arr(vec![b.shape.c.into(), b.shape.h.into(), b.shape.w.into()]),
+        ),
+        ("words", b.encode_hex().into()),
+    ])
+}
+
+fn bitmap_from_json(j: &Json, what: &str) -> Result<Option<Bitmap>> {
+    if matches!(j, Json::Null) {
+        return Ok(None);
+    }
+    let dims = j.get("shape").as_arr().with_context(|| format!("{what}.shape"))?;
+    anyhow::ensure!(dims.len() == 3, "{what}.shape must be [c, h, w]");
+    let dim = |i: usize| dims[i].as_usize().with_context(|| format!("{what}.shape[{i}]"));
+    let shape = Shape::new(dim(0)?, dim(1)?, dim(2)?);
+    let hex = j.get("words").as_str().with_context(|| format!("{what}.words"))?;
+    Ok(Some(Bitmap::decode_hex(shape, hex).context(what.to_string())?))
 }
 
 impl TraceFile {
@@ -60,6 +137,42 @@ impl TraceFile {
         self.steps.iter().all(|s| s.layers.iter().all(|l| l.identity_ok))
     }
 
+    /// Does any step carry packed bitmap payloads (v2 content)?
+    pub fn has_bitmaps(&self) -> bool {
+        self.steps.iter().any(|s| s.layers.iter().any(|l| l.has_bitmaps()))
+    }
+
+    /// Stable content fingerprint over *everything* in the trace —
+    /// network, per-step scalars and bitmap payloads. Folded into
+    /// `SimOptions::fingerprint` by the cosim driver so two different
+    /// trace files can never share a sweep-cache entry, even when their
+    /// per-layer mean sparsities happen to coincide.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.put_str(&self.network);
+        h.put(self.steps.len() as u64);
+        for s in &self.steps {
+            h.put(s.step as u64).put_f64(s.loss);
+            for l in &s.layers {
+                h.put_str(&l.name)
+                    .put_f64(l.act_sparsity)
+                    .put_f64(l.grad_sparsity)
+                    .put(l.identity_ok as u64);
+                // Presence tags keep (None, Some(b)) and (Some(b), None)
+                // from aliasing.
+                match &l.act_bitmap {
+                    Some(b) => h.put(1).put(b.fingerprint()),
+                    None => h.put(0),
+                };
+                match &l.grad_bitmap {
+                    Some(b) => h.put(1).put(b.fingerprint()),
+                    None => h.put(0),
+                };
+            }
+        }
+        h.finish()
+    }
+
     pub fn to_json(&self) -> Json {
         let steps: Vec<Json> = self
             .steps
@@ -69,12 +182,19 @@ impl TraceFile {
                     .layers
                     .iter()
                     .map(|l| {
-                        Json::from_pairs(vec![
+                        let mut j = Json::from_pairs(vec![
                             ("name", l.name.as_str().into()),
                             ("act_sparsity", l.act_sparsity.into()),
                             ("grad_sparsity", l.grad_sparsity.into()),
                             ("identity_ok", l.identity_ok.into()),
-                        ])
+                        ]);
+                        if let Some(b) = &l.act_bitmap {
+                            j.set("act_bitmap", bitmap_to_json(b));
+                        }
+                        if let Some(b) = &l.grad_bitmap {
+                            j.set("grad_bitmap", bitmap_to_json(b));
+                        }
+                        j
                     })
                     .collect();
                 Json::from_pairs(vec![
@@ -85,12 +205,22 @@ impl TraceFile {
             })
             .collect();
         Json::from_pairs(vec![
+            ("version", TRACE_VERSION.into()),
             ("network", self.network.as_str().into()),
             ("steps", Json::Arr(steps)),
         ])
     }
 
     pub fn from_json(j: &Json) -> Result<TraceFile> {
+        // v1 files predate the version key; absent means 1.
+        let version = match j.get("version") {
+            Json::Null => 1,
+            v => v.as_u64().context("trace.version")?,
+        };
+        anyhow::ensure!(
+            (1..=TRACE_VERSION).contains(&version),
+            "unsupported trace version {version} (this build reads 1..={TRACE_VERSION})"
+        );
         let network = j.get("network").as_str().context("trace.network")?.to_string();
         let mut steps = Vec::new();
         for s in j.get("steps").as_arr().context("trace.steps")? {
@@ -101,6 +231,8 @@ impl TraceFile {
                     act_sparsity: l.get("act_sparsity").as_f64().context("act")?,
                     grad_sparsity: l.get("grad_sparsity").as_f64().context("grad")?,
                     identity_ok: l.get("identity_ok").as_bool().context("ok")?,
+                    act_bitmap: bitmap_from_json(l.get("act_bitmap"), "act_bitmap")?,
+                    grad_bitmap: bitmap_from_json(l.get("grad_bitmap"), "grad_bitmap")?,
                 });
             }
             steps.push(StepTrace {
@@ -124,6 +256,7 @@ impl TraceFile {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
 
     fn sample() -> TraceFile {
         TraceFile {
@@ -133,32 +266,28 @@ mod tests {
                     step: 0,
                     loss: 2.3,
                     layers: vec![
-                        LayerTrace {
-                            name: "relu1".into(),
-                            act_sparsity: 0.5,
-                            grad_sparsity: 0.52,
-                            identity_ok: true,
-                        },
-                        LayerTrace {
-                            name: "relu2".into(),
-                            act_sparsity: 0.4,
-                            grad_sparsity: 0.4,
-                            identity_ok: true,
-                        },
+                        LayerTrace::scalar("relu1", 0.5, 0.52, true),
+                        LayerTrace::scalar("relu2", 0.4, 0.4, true),
                     ],
                 },
                 StepTrace {
                     step: 50,
                     loss: 1.1,
-                    layers: vec![LayerTrace {
-                        name: "relu1".into(),
-                        act_sparsity: 0.7,
-                        grad_sparsity: 0.71,
-                        identity_ok: true,
-                    }],
+                    layers: vec![LayerTrace::scalar("relu1", 0.7, 0.71, true)],
                 },
             ],
         }
+    }
+
+    fn sample_v2() -> TraceFile {
+        let shape = Shape::new(4, 6, 6);
+        let mut rng = Pcg32::new(3);
+        let act = Bitmap::sample(shape, 0.6, &mut rng);
+        let keep = Bitmap::sample(shape, 0.8, &mut rng);
+        let grad = act.and(&keep); // containment by construction
+        let mut t = sample();
+        t.steps[0].layers[0] = LayerTrace::from_bitmaps("relu1", act, grad);
+        t
     }
 
     #[test]
@@ -169,10 +298,44 @@ mod tests {
     }
 
     #[test]
+    fn v2_payloads_roundtrip_bit_exact() {
+        let t = sample_v2();
+        assert!(t.has_bitmaps());
+        assert!(t.identity_holds(), "containment-built grad must satisfy identity");
+        let j = t.to_json();
+        assert_eq!(j.get("version").as_u64(), Some(TRACE_VERSION));
+        let t2 = TraceFile::from_json(&j).unwrap();
+        assert_eq!(t, t2);
+        let l = &t2.steps[0].layers[0];
+        assert_eq!(l.act_bitmap, t.steps[0].layers[0].act_bitmap);
+        // Derived scalars agree with the payload popcounts.
+        assert!((l.act_sparsity - l.act_bitmap.as_ref().unwrap().sparsity()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // A pre-payload file: no version key, no bitmap fields.
+        let v1 = r#"{
+            "network": "agos_cnn",
+            "steps": [{"step": 0, "loss": 2.0, "layers": [
+                {"name": "relu1", "act_sparsity": 0.5,
+                 "grad_sparsity": 0.6, "identity_ok": true}
+            ]}]
+        }"#;
+        let t = TraceFile::from_json(&Json::parse(v1).unwrap()).unwrap();
+        assert_eq!(t.network, "agos_cnn");
+        assert!(!t.has_bitmaps());
+        assert_eq!(t.steps[0].layers[0].act_bitmap, None);
+        // Unknown future revisions are rejected loudly.
+        let v9 = r#"{"version": 9, "network": "x", "steps": []}"#;
+        assert!(TraceFile::from_json(&Json::parse(v9).unwrap()).is_err());
+    }
+
+    #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("agos_trace_test");
         let path = dir.join("t.json");
-        let t = sample();
+        let t = sample_v2();
         t.save(&path).unwrap();
         assert_eq!(TraceFile::load(&path).unwrap(), t);
         std::fs::remove_dir_all(dir).ok();
@@ -192,5 +355,26 @@ mod tests {
         assert!(t.identity_holds());
         t.steps[0].layers[0].identity_ok = false;
         assert!(!t.identity_holds());
+    }
+
+    #[test]
+    fn fingerprint_tracks_scalars_and_payloads() {
+        let base = sample();
+        assert_eq!(base.fingerprint(), sample().fingerprint());
+        let mut scalars = sample();
+        scalars.steps[0].layers[1].act_sparsity = 0.41;
+        assert_ne!(base.fingerprint(), scalars.fingerprint());
+        // Different patterns with identical scalars: the v2 payload must
+        // separate them (the soundness gap the cosim cache key closes).
+        let a = sample_v2();
+        let mut b = a.clone();
+        let l = &mut b.steps[0].layers[0];
+        let map = l.act_bitmap.as_mut().unwrap();
+        map.set(0, 0, 0, !map.get(0, 0, 0));
+        let scalar_clone = LayerTrace { act_bitmap: a.steps[0].layers[0].act_bitmap.clone(), ..l.clone() };
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Sanity: restoring the payload restores the fingerprint.
+        b.steps[0].layers[0] = scalar_clone;
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 }

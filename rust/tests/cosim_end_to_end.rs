@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use agos::config::{AcceleratorConfig, SimOptions, TrainOptions};
+use agos::config::{AcceleratorConfig, ExecBackend, SimOptions, TrainOptions};
 use agos::coordinator::{cosim_from_traces, run_training_pipeline, Trainer};
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -67,11 +67,15 @@ fn pipeline_matches_trainer_and_feeds_cosim() {
     assert!(!log.traces.steps.is_empty());
     assert!(log.traces.identity_holds());
 
+    // Real captures carry v2 bitmap payloads (image 0 per traced step).
+    assert!(log.traces.has_bitmaps(), "trainer must capture packed bitmaps");
+
     // Feed the real traces straight into the simulator.
     let report = cosim_from_traces(
         &log.traces,
         &AcceleratorConfig::default(),
         &SimOptions { batch: 4, ..SimOptions::default() },
+        false,
     )
     .unwrap();
     assert_eq!(report.network, "agos_cnn");
@@ -81,4 +85,21 @@ fn pipeline_matches_trainer_and_feeds_cosim() {
         report.bp_speedup
     );
     assert!(report.total_speedup > 1.05, "total {:.2}", report.total_speedup);
+
+    // Pattern-exact replay of the same real captures through the exact
+    // backend — the full bitmap-native loop on genuine training data.
+    let replayed = cosim_from_traces(
+        &log.traces,
+        &AcceleratorConfig::default(),
+        &SimOptions {
+            batch: 2,
+            backend: ExecBackend::Exact,
+            exact_outputs_per_tile: 16,
+            ..SimOptions::default()
+        },
+        true,
+    )
+    .unwrap();
+    assert!(replayed.replayed);
+    assert!(replayed.bp_speedup > 1.1, "replayed BP {:.2}", replayed.bp_speedup);
 }

@@ -110,7 +110,7 @@ fn engine_totals_equal_independent_per_image_simulations() {
     for image in (0..batch.len()).rev() {
         let tasks = build_image_tasks(&net, &batch[image]);
         let mut rng = image_stream(opts.seed, image);
-        let results = simulate_image(&tasks, &cfg, &opts, scheme, &mut rng);
+        let results = simulate_image(&tasks, &cfg, &opts, scheme, image, &mut rng);
         for (t, r) in tasks.iter().zip(&results) {
             let e = per_combo.entry((t.layer.clone(), t.phase.label())).or_default();
             // Keep image order inside each group for bit-equal folds.

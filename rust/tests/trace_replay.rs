@@ -1,0 +1,210 @@
+//! Bitmap-native trace pipeline contract (ISSUE 3 acceptance):
+//!
+//! * **Format**: v2 trace files round-trip their packed payloads
+//!   bit-exactly through disk; v1 files (no version key, no payloads)
+//!   still load.
+//! * **Equivalence**: replaying captured patterns at a given density
+//!   tracks the sampled exact backend at the matched density within a
+//!   tolerance — replay changes *patterns*, not the workload.
+//! * **Determinism**: the replay path is bit-identical at any `--jobs`
+//!   level, including the sweep runner's per-image fan-out (replayed
+//!   slices draw no RNG at all, so this is even stronger than the
+//!   sampled contract).
+//! * **Cache soundness**: two traces with identical per-layer means but
+//!   different patterns can never share a sweep-cache entry.
+
+use std::sync::Arc;
+
+use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions};
+use agos::nn::zoo;
+use agos::sim::{simulate_network, simulate_network_jobs, ReplayBank, SweepKey, SweepPlan, SweepRunner};
+use agos::sparsity::{capture_synthetic_trace, SparsityModel};
+use agos::trace::TraceFile;
+use agos::util::json::Json;
+
+fn exact_opts(batch: usize) -> SimOptions {
+    SimOptions {
+        batch,
+        backend: ExecBackend::Exact,
+        // Small per-tile sample keeps the debug-mode walk fast; the
+        // aggregate over hundreds of tiles still pins the mean tightly.
+        exact_outputs_per_tile: 16,
+        ..SimOptions::default()
+    }
+}
+
+fn replay_opts(batch: usize, trace: &TraceFile, bank: ReplayBank) -> SimOptions {
+    SimOptions {
+        trace_fingerprint: Some(trace.fingerprint()),
+        replay: Some(Arc::new(bank)),
+        ..exact_opts(batch)
+    }
+}
+
+#[test]
+fn v2_trace_file_roundtrips_payloads_through_disk() {
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(9);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+    assert!(trace.has_bitmaps());
+
+    let dir = std::env::temp_dir().join("agos_trace_replay_roundtrip");
+    let path = dir.join("v2.json");
+    trace.save(&path).unwrap();
+    let loaded = TraceFile::load(&path).unwrap();
+    assert_eq!(trace, loaded, "payloads must survive disk bit-exactly");
+    assert_eq!(trace.fingerprint(), loaded.fingerprint());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v1_trace_file_still_loads() {
+    let dir = std::env::temp_dir().join("agos_trace_replay_v1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v1.json");
+    // Byte-for-byte what the pre-payload pipeline wrote: no version key,
+    // scalar layer entries only.
+    std::fs::write(
+        &path,
+        r#"{
+  "network": "agos_cnn",
+  "steps": [
+    {"step": 0, "loss": 2.1, "layers": [
+      {"name": "relu1", "act_sparsity": 0.5, "grad_sparsity": 0.55, "identity_ok": true},
+      {"name": "relu2", "act_sparsity": 0.4, "grad_sparsity": 0.4, "identity_ok": true}
+    ]}
+  ]
+}"#,
+    )
+    .unwrap();
+    let t = TraceFile::load(&path).unwrap();
+    assert_eq!(t.network, "agos_cnn");
+    assert_eq!(t.steps[0].layers.len(), 2);
+    assert!(!t.has_bitmaps());
+    assert!(t.identity_holds());
+    // And a v1 load re-saves as v2 without inventing payloads.
+    let resaved = TraceFile::from_json(&Json::parse(&t.to_json().pretty()).unwrap()).unwrap();
+    assert_eq!(t, resaved);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replayed_tracks_sampled_at_matched_density() {
+    // The capture's patterns are drawn at exactly the densities the
+    // model assigns, so replaying them must land near the sampled exact
+    // backend — pattern-exactness changes the *variance structure*, not
+    // the workload.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(11);
+    let sampled_o = exact_opts(2);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+    let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+    let replay_o = replay_opts(2, &trace, bank);
+    for scheme in [Scheme::In, Scheme::InOut, Scheme::InOutWr] {
+        let s = simulate_network(&net, &cfg, &sampled_o, &model, scheme);
+        let r = simulate_network(&net, &cfg, &replay_o, &model, scheme);
+        let (st, rt) = (s.total_cycles(), r.total_cycles());
+        let err = (rt - st).abs() / st;
+        assert!(
+            err < 0.25,
+            "{}: replayed {rt:.0} vs sampled {st:.0} cycles ({:.1}% deviation)",
+            scheme.label(),
+            err * 100.0
+        );
+        let (sm, rm) = (
+            s.phase(agos::nn::Phase::Backward).performed_macs,
+            r.phase(agos::nn::Phase::Backward).performed_macs,
+        );
+        let mac_err = (rm - sm).abs() / sm;
+        assert!(
+            mac_err < 0.25,
+            "{}: BP macs deviate {:.1}%",
+            scheme.label(),
+            mac_err * 100.0
+        );
+    }
+}
+
+#[test]
+fn replay_jobs_invariance_golden() {
+    // One combo under replay: the 4-thread runner must use the per-image
+    // fan-out (plan smaller than jobs) and still reproduce the
+    // sequential engine bit-for-bit.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(0xA605);
+    let trace = capture_synthetic_trace(&net, &model, 3, BitmapPattern::Blobs, 2);
+    let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+    let opts = replay_opts(5, &trace, bank);
+
+    let sequential = simulate_network(&net, &cfg, &opts, &model, Scheme::InOutWr);
+    let fanned = simulate_network_jobs(&net, &cfg, &opts, &model, Scheme::InOutWr, 4);
+    let plan = SweepPlan::grid(std::slice::from_ref(&net), &[Scheme::InOutWr], &cfg, &opts);
+    let via_runner = SweepRunner::new(4).run(&plan, &model);
+
+    for (label, got) in [("fanout", &fanned), ("runner", &via_runner[0])] {
+        assert_eq!(sequential.total_cycles(), got.total_cycles(), "{label}");
+        assert_eq!(sequential.total_energy_j(), got.total_energy_j(), "{label}");
+        assert_eq!(sequential.per_layer.len(), got.per_layer.len());
+        for (a, b) in sequential.per_layer.iter().zip(&got.per_layer) {
+            assert_eq!(a.cycles, b.cycles, "{label}: {} {}", a.name, a.phase.label());
+            assert_eq!(a.performed_macs, b.performed_macs, "{label}: {}", a.name);
+            assert_eq!(a.tile_mean, b.tile_mean, "{label}: {}", a.name);
+        }
+    }
+}
+
+#[test]
+fn different_patterns_same_means_never_share_cache_entries() {
+    // The SweepCache soundness gap this PR closes: same network, same
+    // per-layer mean sparsities, different captured patterns — the keys
+    // must differ, for both the replay handle and the bare trace
+    // fingerprint (the non-replay cosim path).
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(4);
+    // Same model, same densities; only the drawn patterns differ.
+    let t_iid = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+    let t_blob = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+    assert_ne!(t_iid.fingerprint(), t_blob.fingerprint());
+
+    let o_iid = replay_opts(2, &t_iid, ReplayBank::from_trace(&net, &t_iid).unwrap());
+    let o_blob = replay_opts(2, &t_blob, ReplayBank::from_trace(&net, &t_blob).unwrap());
+    let k_iid = SweepKey::new(&net, Scheme::InOut, &cfg, &o_iid, &model);
+    let k_blob = SweepKey::new(&net, Scheme::InOut, &cfg, &o_blob, &model);
+    assert_ne!(k_iid, k_blob, "replayed traces must never alias in the cache");
+
+    // Replayed vs sampled at the same everything-else must differ too.
+    let k_sampled = SweepKey::new(&net, Scheme::InOut, &cfg, &exact_opts(2), &model);
+    assert_ne!(k_iid, k_sampled);
+
+    // And the fingerprint-only path (no replay handle, e.g. analytic
+    // cosim of two different trace files) separates as well.
+    let f_a = SimOptions { trace_fingerprint: Some(t_iid.fingerprint()), ..exact_opts(2) };
+    let f_b = SimOptions { trace_fingerprint: Some(t_blob.fingerprint()), ..exact_opts(2) };
+    assert_ne!(
+        SweepKey::new(&net, Scheme::InOut, &cfg, &f_a, &model),
+        SweepKey::new(&net, Scheme::InOut, &cfg, &f_b, &model)
+    );
+}
+
+#[test]
+fn blob_pattern_flows_through_the_engine() {
+    // `--pattern blobs` must change results (clustered lane imbalance)
+    // while keeping MAC accounting at the same density.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(6);
+    let iid = exact_opts(1);
+    let blobs = SimOptions { pattern: BitmapPattern::Blobs, blob_radius: 4, ..exact_opts(1) };
+    let a = simulate_network(&net, &cfg, &iid, &model, Scheme::InOutWr);
+    let b = simulate_network(&net, &cfg, &blobs, &model, Scheme::InOutWr);
+    assert_ne!(a.total_cycles(), b.total_cycles(), "pattern must reach the PE walk");
+    let (am, bm) = (
+        a.phase(agos::nn::Phase::Backward).performed_macs,
+        b.phase(agos::nn::Phase::Backward).performed_macs,
+    );
+    let mac_err = (bm - am).abs() / am;
+    assert!(mac_err < 0.2, "density preserved across patterns ({mac_err:.3})");
+}
