@@ -24,9 +24,13 @@ fn main() {
         out_sparsity: Some(s),
         input_elems: 128.0 * 30.0 * 30.0,
         weight_elems: 128.0 * 1152.0,
+        geom: Default::default(),
     };
 
-    println!("{:>9} {:>10} {:>10} {:>10} {:>14}", "sparsity", "IN", "IN+OUT", "IN+OUT+WR", "OUT-only gain");
+    println!(
+        "{:>9} {:>10} {:>10} {:>10} {:>14}",
+        "sparsity", "IN", "IN+OUT", "IN+OUT+WR", "OUT-only gain"
+    );
     for pct in (10..=90).step_by(10) {
         let s = pct as f64 / 100.0;
         let task = mk(s);

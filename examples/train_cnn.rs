@@ -45,7 +45,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---- sparsity identity -------------------------------------------------
     anyhow::ensure!(log.traces.identity_holds(), "sparsity identity violated!");
-    println!("\nsparsity identity (gradient zeros ⊇ activation zeros): HOLDS on all {} traced steps", log.traces.steps.len());
+    println!(
+        "\nsparsity identity (gradient zeros ⊇ activation zeros): HOLDS on all {} traced steps",
+        log.traces.steps.len()
+    );
     println!("measured activation sparsity per layer (mean over traced steps):");
     for (name, s) in log.traces.mean_act_sparsity() {
         println!("  {name}: {s:.3}");
@@ -54,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     // ---- co-simulation on measured sparsity --------------------------------
     let cfg = AcceleratorConfig::default();
     let sim_opts = SimOptions { batch: 16, ..SimOptions::default() };
-    let report = cosim_from_traces(&log.traces, &cfg, &sim_opts, false)?;
+    let report = cosim_from_traces(&log.traces, &cfg, &sim_opts, false, 0)?;
     println!("\naccelerator co-simulation on the measured traces:");
     for (scheme, total, bp, energy) in &report.rows {
         println!("  {scheme:<10} total {total:>12.0} cycles  BP {bp:>12.0} cycles  {energy:.4} J");

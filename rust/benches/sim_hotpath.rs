@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions};
+use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions};
 use agos::nn::{zoo, Shape};
 use agos::sim::{
     redistribute, simulate_layer, simulate_network, LayerTask, PeModel, ReplayBank, SweepPlan,
@@ -44,6 +44,7 @@ fn main() {
         out_sparsity: Some(0.5),
         input_elems: 128.0 * 30.0 * 30.0,
         weight_elems: 128.0 * 1152.0,
+        geom: Default::default(),
     };
     b.case("simulate_layer_inoutwr", || {
         let mut rng = Pcg32::new(7);
@@ -116,6 +117,14 @@ fn main() {
     b.case("backend_exact_replay_agos_b1", || {
         simulate_network(&anet, &cfg, &replay_opts, &model, Scheme::InOutWr).total_cycles()
     });
+    // The legacy streaming-slice window, kept as the gather baseline:
+    // geometry-exact replay must not cost materially more than the
+    // approximation it replaced (BENCH_baseline.json gates the ratio).
+    let replay_stream_opts =
+        SimOptions { gather: GatherMode::Streaming, ..replay_opts.clone() };
+    b.case("backend_exact_replay_stream_agos_b1", || {
+        simulate_network(&anet, &cfg, &replay_stream_opts, &model, Scheme::InOutWr).total_cycles()
+    });
 
     // Bitmap drain walks: the legacy per-bool channel expansion (what
     // `Bitmap::channel_bits` cost the hot loop before the word refactor)
@@ -152,6 +161,7 @@ fn main() {
     let analytic = find("backend_analytic_agos_b1");
     let exact = find("backend_exact_agos_b1");
     let replay = find("backend_exact_replay_agos_b1");
+    let replay_stream = find("backend_exact_replay_stream_agos_b1");
     let bool_walk = find("bitmap_channel_bool_walk_64x56x56");
     let word_walk = find("bitmap_channel_word_walk_64x56x56");
     let j = Json::from_pairs(vec![
@@ -175,6 +185,9 @@ fn main() {
         ("backend_exact_replay_mean_s", replay.mean.into()),
         ("backend_exact_replay_std_s", replay.std.into()),
         ("backend_replay_vs_sampled", (replay.mean / exact.mean).into()),
+        // Geometry-exact gather vs the legacy streaming slice.
+        ("backend_exact_replay_stream_mean_s", replay_stream.mean.into()),
+        ("replay_geometry_vs_streaming", (replay.mean / replay_stream.mean).into()),
         // Word-level drain refactor: per-bool channel walk vs packed
         // word/popcount walk over a 64x56x56 map.
         ("bitmap_bool_walk_mean_s", bool_walk.mean.into()),

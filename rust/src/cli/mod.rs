@@ -15,7 +15,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::config::{
-    AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions, TrainOptions,
+    AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions, TrainOptions,
 };
 use crate::coordinator::{cosim_from_traces, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
@@ -45,6 +45,10 @@ fn app() -> App {
                 opts: vec![
                     opt("steps", "optimizer steps (default 300)"),
                     opt("trace-every", "extract sparsity traces every N steps (default 50)"),
+                    opt(
+                        "trace-images",
+                        "images captured per traced step, each its own trace step (default 1)",
+                    ),
                     opt("seed", "dataset seed (default 7)"),
                     opt("artifacts", "artifacts directory (default artifacts)"),
                     opt("out", "write loss curve + traces JSON here"),
@@ -97,7 +101,8 @@ fn app() -> App {
             },
             Command {
                 name: "figure",
-                about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b fig13 fig15 fig16 fig17 figval | ablations | all)",
+                about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b \
+fig13 fig15 fig16 fig17 figval | ablations | all)",
                 opts: vec![
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
@@ -139,10 +144,23 @@ fn app() -> App {
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
                     opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
                     opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
+                    opt("gather", "replay window assembly: geometry|streaming (default geometry)"),
+                    opt("jobs", "worker threads (default: all cores; results identical)"),
+                    opt("out", "write the co-simulation report JSON here"),
                     flag(
                         "replay",
-                        "replay the trace's packed v2 bitmaps pattern-exactly (exact backend)",
+                        "replay the trace's packed v2 bitmaps: geometry-exact patterns (exact) \
+or measured per-tile densities (analytic)",
                     ),
+                ],
+            },
+            Command {
+                name: "bench-check",
+                about: "gate bench output against the committed perf baseline",
+                opts: vec![
+                    opt("current", "bench output JSON (default BENCH_sweep.json)"),
+                    opt("baseline", "committed baseline JSON (default BENCH_baseline.json)"),
+                    flag("bless", "rewrite the baseline from the current measurements"),
                 ],
             },
             Command {
@@ -174,6 +192,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
         "table" => cmd_figure(args), // same dispatch: ids disambiguate
         "sparsity" => cmd_sparsity(args),
         "cosim" => cmd_cosim(args),
+        "bench-check" => cmd_bench_check(args),
         "info" => cmd_info(args),
         other => anyhow::bail!("unhandled command {other}"),
     }
@@ -194,6 +213,9 @@ fn apply_backend_opts(opts: &mut SimOptions, args: &Args) -> anyhow::Result<()> 
         opts.pattern = BitmapPattern::parse(p)?;
     }
     opts.blob_radius = args.opt_usize("blob-radius", opts.blob_radius)?;
+    if let Some(g) = args.opt("gather") {
+        opts.gather = GatherMode::parse(g)?;
+    }
     Ok(())
 }
 
@@ -251,6 +273,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
     let opts = TrainOptions {
         steps: args.opt_usize("steps", 300)?,
         trace_every: args.opt_usize("trace-every", 50)?,
+        trace_images: args.opt_usize("trace-images", 1)?,
         seed: args.opt_u64("seed", 7)?,
         artifacts_dir: PathBuf::from(args.opt_or("artifacts", "artifacts")),
         ..TrainOptions::default()
@@ -321,7 +344,8 @@ fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
         println!("  {name:<20} mean act sparsity {s:.3}");
     }
     println!(
-        "  payloads: {payload_bits} bits packed ({:.1} KiB), identity holds: {}, fingerprint {:016x}",
+        "  payloads: {payload_bits} bits packed ({:.1} KiB), identity holds: {}, \
+         fingerprint {:016x}",
         payload_bits as f64 / 8.0 / 1024.0,
         trace.identity_holds(),
         trace.fingerprint()
@@ -336,8 +360,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
         Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
         None => AcceleratorConfig::default(),
     };
-    let mut opts = SimOptions::default();
-    opts.batch = args.opt_usize("batch", 16)?;
+    let mut opts = SimOptions { batch: args.opt_usize("batch", 16)?, ..SimOptions::default() };
     opts.seed = args.opt_u64("seed", opts.seed)?;
     apply_backend_opts(&mut opts, args)?;
     let model = SparsityModel::synthetic(opts.seed);
@@ -387,8 +410,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
         Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
         None => AcceleratorConfig::default(),
     };
-    let mut opts = SimOptions::default();
-    opts.batch = args.opt_usize("batch", 16)?;
+    let mut opts = SimOptions { batch: args.opt_usize("batch", 16)?, ..SimOptions::default() };
     opts.seed = args.opt_u64("seed", opts.seed)?;
     apply_backend_opts(&mut opts, args)?;
     let model = SparsityModel::synthetic(opts.seed);
@@ -509,11 +531,16 @@ fn cmd_sparsity(args: &Args) -> anyhow::Result<i32> {
 fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
     let path = args.opt("traces").ok_or_else(|| anyhow::anyhow!("--traces required"))?;
     let traces = TraceFile::load(Path::new(path))?;
-    let mut opts = SimOptions::default();
-    opts.batch = args.opt_usize("batch", 16)?;
+    let mut opts = SimOptions { batch: args.opt_usize("batch", 16)?, ..SimOptions::default() };
     apply_backend_opts(&mut opts, args)?;
-    let report =
-        cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts, args.flag("replay"))?;
+    let jobs = args.opt_usize("jobs", 0)?;
+    let report = cosim_from_traces(
+        &traces,
+        &AcceleratorConfig::default(),
+        &opts,
+        args.flag("replay"),
+        jobs,
+    )?;
     println!(
         "co-simulation of '{}' [{} backend{}] (mean measured sparsity {:.2})",
         report.network,
@@ -528,12 +555,76 @@ fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
         "  speedup: total {:.2}x, BP {:.2}x",
         report.total_speedup, report.bp_speedup
     );
+    if let Some(out) = args.opt("out") {
+        // The report carries no timing or thread-count fields, so two
+        // invocations at different --jobs must write byte-identical
+        // files — the CI determinism cross-check diffs exactly this.
+        let path = Path::new(out);
+        report.to_json().write_file(path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
+/// Gate `BENCH_sweep.json` against the committed `BENCH_baseline.json`:
+/// exit 1 when any tracked row regresses past its tolerance (the CI
+/// `bench` job's teeth). `--bless` rewrites the baseline from the
+/// current measurements instead.
+fn cmd_bench_check(args: &Args) -> anyhow::Result<i32> {
+    use crate::util::bench_gate::BenchGate;
+    let baseline_path = PathBuf::from(args.opt_or("baseline", "BENCH_baseline.json"));
+    let current_path = PathBuf::from(args.opt_or("current", "BENCH_sweep.json"));
+    let gate = BenchGate::load(&baseline_path)?;
+    let current = Json::parse_file(&current_path)?;
+    if args.flag("bless") {
+        let blessed = gate.bless(&current)?;
+        blessed.write_file(&baseline_path)?;
+        println!(
+            "blessed {} rows of {} from {}",
+            gate.rows.len(),
+            baseline_path.display(),
+            current_path.display()
+        );
+        return Ok(0);
+    }
+    let outcomes = gate.check(&current);
+    println!(
+        "bench-check '{}': {} vs baseline {}",
+        gate.bench,
+        current_path.display(),
+        baseline_path.display()
+    );
+    let mut failed = 0usize;
+    for o in &outcomes {
+        let current_s =
+            o.current.map_or_else(|| "missing".to_string(), |v| format!("{v:.4}"));
+        println!(
+            "  {} {:<32} current {:>10}  baseline {:>10.4}  allowed {:>10.4}",
+            if o.regressed { "FAIL" } else { "ok  " },
+            o.name,
+            current_s,
+            o.baseline,
+            o.allowed,
+        );
+        failed += o.regressed as usize;
+    }
+    if failed > 0 {
+        eprintln!("bench-check: {failed} tracked row(s) regressed past tolerance");
+        return Ok(1);
+    }
+    println!("bench-check: all {} tracked rows within tolerance", outcomes.len());
     Ok(0)
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<i32> {
     let cfg = AcceleratorConfig::default();
-    println!("design point: {}x{} PEs, {} lanes, {:.0} MHz", cfg.tx, cfg.ty, cfg.lanes, cfg.freq_hz / 1e6);
+    println!(
+        "design point: {}x{} PEs, {} lanes, {:.0} MHz",
+        cfg.tx,
+        cfg.ty,
+        cfg.lanes,
+        cfg.freq_hz / 1e6
+    );
     println!(
         "  peak {:.0} GFLOPs/s, {:.1} W node power, PE capacity {}",
         cfg.peak_flops() / 1e9,
@@ -761,6 +852,95 @@ mod tests {
         );
         // Bad pattern names are rejected at the CLI boundary.
         assert!(run(&sv(&["trace", "--pattern", "plaid", "--out", &path_s])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cosim_replay_reports_are_identical_across_jobs_levels() {
+        // The CI determinism cross-check in miniature: the same replay
+        // cosim at --jobs 1 and --jobs 4 writes byte-identical reports,
+        // for both backends and both gather modes.
+        let dir = std::env::temp_dir().join("agos_cli_cosim_jobs_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let traces = dir.join("traces.json");
+        let traces_s = traces.to_string_lossy().to_string();
+        assert_eq!(
+            run(&sv(&["trace", "--network", "agos_cnn", "--steps", "2", "--out", &traces_s]))
+                .unwrap(),
+            0
+        );
+        for (backend, gather) in
+            [("exact", "geometry"), ("exact", "streaming"), ("analytic", "geometry")]
+        {
+            let out = |jobs: &str| dir.join(format!("cosim-{backend}-{gather}-j{jobs}.json"));
+            for jobs in ["1", "4"] {
+                let out_s = out(jobs).to_string_lossy().to_string();
+                assert_eq!(
+                    run(&sv(&[
+                        "cosim", "--traces", &traces_s, "--batch", "2", "--backend", backend,
+                        "--gather", gather, "--exact-cap", "8", "--replay", "--jobs", jobs,
+                        "--out", &out_s,
+                    ]))
+                    .unwrap(),
+                    0,
+                    "{backend}/{gather} jobs {jobs}"
+                );
+            }
+            let a = std::fs::read(out("1")).unwrap();
+            let b = std::fs::read(out("4")).unwrap();
+            assert_eq!(a, b, "{backend}/{gather}: jobs must not change the report");
+        }
+        // Geometry and streaming gathers are genuinely different models.
+        let geo = std::fs::read(dir.join("cosim-exact-geometry-j1.json")).unwrap();
+        let stream = std::fs::read(dir.join("cosim-exact-streaming-j1.json")).unwrap();
+        assert_ne!(geo, stream, "gather mode must reach the replay path");
+        // Bad gather names are rejected at the CLI boundary.
+        assert!(run(&sv(&[
+            "cosim", "--traces", &traces_s, "--backend", "exact", "--replay", "--gather",
+            "teleport",
+        ]))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_check_gates_and_blesses() {
+        let dir = std::env::temp_dir().join("agos_cli_bench_check_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let baseline = dir.join("BENCH_baseline.json");
+        let current = dir.join("BENCH_sweep.json");
+        std::fs::write(
+            &baseline,
+            r#"{"bench": "sim_hotpath", "tolerance": 0.25, "rows": [
+                {"name": "speedup", "baseline": 2.0, "better": "higher"},
+                {"name": "backend_exact_slowdown", "baseline": 100.0, "better": "lower"}
+            ]}"#,
+        )
+        .unwrap();
+        let baseline_s = baseline.to_string_lossy().to_string();
+        let current_s = current.to_string_lossy().to_string();
+        let argv = sv(&["bench-check", "--baseline", &baseline_s, "--current", &current_s]);
+
+        // Within tolerance: exit 0.
+        std::fs::write(&current, r#"{"speedup": 1.8, "backend_exact_slowdown": 110.0}"#).unwrap();
+        assert_eq!(run(&argv).unwrap(), 0);
+        // A >25% regression on a tracked row: exit 1 (the CI gate).
+        std::fs::write(&current, r#"{"speedup": 1.2, "backend_exact_slowdown": 110.0}"#).unwrap();
+        assert_eq!(run(&argv).unwrap(), 1);
+        // A missing tracked row also fails.
+        std::fs::write(&current, r#"{"speedup": 1.8}"#).unwrap();
+        assert_eq!(run(&argv).unwrap(), 1);
+        // --bless rewrites the baseline from the measurements.
+        std::fs::write(&current, r#"{"speedup": 3.0, "backend_exact_slowdown": 80.0}"#).unwrap();
+        let mut bless = argv.clone();
+        bless.push("--bless".into());
+        assert_eq!(run(&bless).unwrap(), 0);
+        assert_eq!(run(&argv).unwrap(), 0, "freshly blessed baseline must pass");
+        let re_read = std::fs::read_to_string(&baseline).unwrap();
+        assert!(re_read.contains("3"), "blessed baseline carries the new value");
+        // Missing files are loud errors, not silent passes.
+        assert!(run(&sv(&["bench-check", "--baseline", "/nonexistent.json"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,7 +7,7 @@ mod sim_opts;
 mod train_opts;
 
 pub use accel::{AcceleratorConfig, EnergyTable, MemoryConfig};
-pub use sim_opts::{BitmapPattern, Scheme, SimOptions};
+pub use sim_opts::{BitmapPattern, GatherMode, Scheme, SimOptions};
 pub use train_opts::TrainOptions;
 
 /// Re-exported next to `Scheme`/`SimOptions` for consumers that select a

@@ -88,6 +88,48 @@ impl BitmapPattern {
     }
 }
 
+/// How replayed operand windows are assembled from a captured map on the
+/// exact backend: the geometry-exact strided receptive-field gather (the
+/// default — every output reads exactly the operand bits its kernel ×
+/// stride × padding coordinates name), or the legacy contiguous
+/// streaming-slice window (kept as the comparison baseline for
+/// `figure figval`). Irrelevant without `--replay`; the analytic
+/// backend's pattern-informed densities don't depend on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum GatherMode {
+    #[default]
+    Geometry,
+    Streaming,
+}
+
+impl GatherMode {
+    pub const ALL: [GatherMode; 2] = [GatherMode::Geometry, GatherMode::Streaming];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GatherMode::Geometry => "geometry",
+            GatherMode::Streaming => "streaming",
+        }
+    }
+
+    /// Stable tag folded into `SimOptions::fingerprint` when replay is
+    /// armed (the mode changes no result otherwise).
+    pub fn tag(&self) -> u64 {
+        match self {
+            GatherMode::Geometry => 1,
+            GatherMode::Streaming => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<GatherMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "geometry" | "geo" | "gather" => Ok(GatherMode::Geometry),
+            "streaming" | "stream" | "slice" => Ok(GatherMode::Streaming),
+            other => anyhow::bail!("unknown gather mode '{other}' (geometry|streaming)"),
+        }
+    }
+}
+
 /// Options controlling a simulation run.
 #[derive(Clone, Debug)]
 pub struct SimOptions {
@@ -115,10 +157,14 @@ pub struct SimOptions {
     /// never share a sweep-cache entry even when their per-layer mean
     /// sparsities coincide (set by `coordinator::cosim_from_traces`).
     pub trace_fingerprint: Option<u64>,
-    /// Captured-bitmap replay bank (exact backend): tasks with payloads
-    /// slice real patterns instead of sampling (`sim::replay`). A live
-    /// handle, not serialized; its trace fingerprint is folded into
-    /// `fingerprint()`.
+    /// Replayed operand-window assembly: geometry-exact strided gather
+    /// (default) vs the legacy streaming slice.
+    pub gather: GatherMode,
+    /// Captured-bitmap replay bank: tasks with payloads slice real
+    /// patterns instead of sampling (`sim::replay`) — pattern-exact
+    /// windows on the exact backend, measured per-tile densities on the
+    /// analytic backend. A live handle, not serialized; its trace
+    /// fingerprint is folded into `fingerprint()`.
     pub replay: Option<Arc<ReplayBank>>,
 }
 
@@ -134,6 +180,7 @@ impl Default for SimOptions {
             pattern: BitmapPattern::Iid,
             blob_radius: 2,
             trace_fingerprint: None,
+            gather: GatherMode::Geometry,
             replay: None,
         }
     }
@@ -164,9 +211,12 @@ impl SimOptions {
             None => h.put(0),
             Some(fp) => h.put(1).put(fp),
         };
+        // The gather mode only changes results when a replay bank is
+        // armed, so it separates keys only then (mirrors the blob-radius
+        // rule above).
         match &self.replay {
             None => h.put(0),
-            Some(bank) => h.put(1).put(bank.fingerprint()),
+            Some(bank) => h.put(1).put(bank.fingerprint()).put(self.gather.tag()),
         };
         h.finish()
     }
@@ -181,6 +231,7 @@ impl SimOptions {
             ("backend", self.backend.label().into()),
             ("pattern", self.pattern.label().into()),
             ("blob_radius", self.blob_radius.into()),
+            ("gather", self.gather.label().into()),
         ]);
         // The replay bank is a live in-memory handle; record what it
         // replays (for result provenance) without pretending a JSON blob
@@ -222,6 +273,10 @@ impl SimOptions {
                 "blob_radius" => {
                     o.blob_radius =
                         v.as_usize().ok_or_else(|| anyhow::anyhow!("blob_radius: usize"))?
+                }
+                "gather" => {
+                    let s = v.as_str().ok_or_else(|| anyhow::anyhow!("gather: string"))?;
+                    o.gather = GatherMode::parse(s)?;
                 }
                 // Provenance stamps written by to_json; a parsed options
                 // object cannot resurrect the live bank, so they are
@@ -287,6 +342,32 @@ mod tests {
     }
 
     #[test]
+    fn gather_mode_parse_and_key_separation() {
+        for g in GatherMode::ALL {
+            assert_eq!(GatherMode::parse(g.label()).unwrap(), g);
+        }
+        assert_eq!(GatherMode::parse("STREAM").unwrap(), GatherMode::Streaming);
+        assert!(GatherMode::parse("teleport").is_err());
+        assert_eq!(GatherMode::default(), GatherMode::Geometry);
+
+        // Without a replay bank the mode changes nothing, so keys agree.
+        let base = SimOptions::default();
+        let streaming = SimOptions { gather: GatherMode::Streaming, ..base.clone() };
+        assert_eq!(base.fingerprint(), streaming.fingerprint());
+
+        // With a bank armed, the two modes must never share a cache entry.
+        let net = crate::nn::zoo::agos_cnn();
+        let model = crate::sparsity::SparsityModel::synthetic(3);
+        let trace =
+            crate::sparsity::capture_synthetic_trace(&net, &model, 1, BitmapPattern::Iid, 2);
+        let bank = Arc::new(crate::sim::ReplayBank::from_trace(&net, &trace).unwrap());
+        let geo = SimOptions { replay: Some(bank.clone()), ..base.clone() };
+        let stream = SimOptions { gather: GatherMode::Streaming, ..geo.clone() };
+        assert_ne!(geo.fingerprint(), stream.fingerprint());
+        assert_ne!(geo.fingerprint(), base.fingerprint());
+    }
+
+    #[test]
     fn pattern_parse_roundtrip() {
         for p in BitmapPattern::ALL {
             assert_eq!(BitmapPattern::parse(p.label()).unwrap(), p);
@@ -304,6 +385,7 @@ mod tests {
             backend: ExecBackend::Exact,
             pattern: BitmapPattern::Blobs,
             blob_radius: 5,
+            gather: GatherMode::Streaming,
             trace_fingerprint: Some(0xABCD),
             ..SimOptions::default()
         };
@@ -313,6 +395,7 @@ mod tests {
         assert_eq!(o2.backend, ExecBackend::Exact);
         assert_eq!(o2.pattern, BitmapPattern::Blobs);
         assert_eq!(o2.blob_radius, 5);
+        assert_eq!(o2.gather, GatherMode::Streaming);
         // Provenance stamps are not resurrected into live state.
         assert_eq!(o2.trace_fingerprint, None);
         assert!(o2.replay.is_none());

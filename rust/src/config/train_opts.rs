@@ -14,6 +14,11 @@ pub struct TrainOptions {
     pub seed: u64,
     /// Extract sparsity traces every N steps (0 = never).
     pub trace_every: usize,
+    /// Images whose packed bitmaps are captured per traced step (each
+    /// becomes its own trace-file step, so the replay bank's round-robin
+    /// cycles through them; clamped to the artifact batch). Payload size
+    /// scales linearly — 1 keeps trace files small.
+    pub trace_images: usize,
     /// Directory containing AOT artifacts.
     pub artifacts_dir: std::path::PathBuf,
     /// Log loss every N steps.
@@ -28,6 +33,7 @@ impl Default for TrainOptions {
             lr: 0.05,
             seed: 7,
             trace_every: 50,
+            trace_images: 1,
             artifacts_dir: std::path::PathBuf::from("artifacts"),
             log_every: 10,
         }
@@ -42,6 +48,7 @@ impl TrainOptions {
             ("lr", self.lr.into()),
             ("seed", self.seed.into()),
             ("trace_every", self.trace_every.into()),
+            ("trace_images", self.trace_images.into()),
             ("log_every", self.log_every.into()),
             ("artifacts_dir", self.artifacts_dir.to_string_lossy().to_string().into()),
         ])
@@ -56,6 +63,8 @@ mod tests {
     fn defaults_sane() {
         let t = TrainOptions::default();
         assert!(t.steps > 0 && t.batch > 0);
+        assert_eq!(t.trace_images, 1);
+        assert_eq!(t.to_json().get("trace_images").as_usize(), Some(1));
         assert!(t.to_json().get("steps").as_usize().unwrap() == t.steps);
     }
 }

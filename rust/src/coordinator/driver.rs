@@ -7,8 +7,10 @@
 //! bitmaps* (each image's per-tile operand/output patterns drawn from
 //! its derived stream and drained through the cycle-accurate PE) rather
 //! than as expected values. With `replay` requested, a v2 trace's packed
-//! payloads are replayed pattern-exactly instead (`sim::replay`) — no
-//! RNG is involved for any layer that carries a payload.
+//! payloads drive the run instead (`sim::replay`): the exact backend
+//! gathers each output's true receptive-field pattern, the analytic
+//! backend substitutes measured per-tile densities for its stochastic
+//! jitter — no RNG is involved for any layer that carries a payload.
 //!
 //! Cache soundness: the trace's content fingerprint is folded into the
 //! options (and with it the sweep-cache key) *whether or not* replay is
@@ -17,7 +19,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions};
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::{zoo, Phase};
 use crate::sim::{ReplayBank, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
@@ -69,13 +71,18 @@ impl CosimReport {
 
 /// Run the simulator over the trace file's measured sparsity. With
 /// `replay`, additionally resolve the trace's v2 bitmap payloads into a
-/// `ReplayBank` so the exact backend consumes the captured patterns
-/// end to end (requires `--backend exact` and a payload-bearing trace).
+/// `ReplayBank` so the backend consumes the captured patterns end to
+/// end: the exact backend slices/gathers per-output patterns, the
+/// analytic backend substitutes measured per-tile densities for its
+/// stochastic jitter (the pattern-informed fast path). Requires a
+/// payload-bearing trace. `jobs` sizes the sweep's worker pool
+/// (0 = all cores) — results are bit-identical at any level.
 pub fn cosim_from_traces(
     traces: &TraceFile,
     cfg: &AcceleratorConfig,
     opts: &SimOptions,
     replay: bool,
+    jobs: usize,
 ) -> anyhow::Result<CosimReport> {
     anyhow::ensure!(!traces.steps.is_empty(), "trace file has no steps");
     anyhow::ensure!(
@@ -96,17 +103,13 @@ pub fn cosim_from_traces(
     let mut opts = opts.clone();
     opts.trace_fingerprint = Some(traces.fingerprint());
     if replay {
-        anyhow::ensure!(
-            opts.backend == ExecBackend::Exact,
-            "--replay requires the exact backend (patterns mean nothing to the analytic model)"
-        );
         opts.replay = Some(Arc::new(ReplayBank::from_trace(&net, traces)?));
     }
 
     // All four schemes as one parallel sweep (results identical to the
     // sequential loop this replaced — see sim::sweep's determinism
     // contract).
-    let runner = SweepRunner::new(0);
+    let runner = SweepRunner::new(jobs);
     let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, cfg, &opts);
     let results = runner.run(&plan, &model);
 
@@ -142,6 +145,7 @@ pub fn cosim_from_traces(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ExecBackend;
     use crate::trace::{LayerTrace, StepTrace};
 
     fn fake_traces(sparsity: f64) -> TraceFile {
@@ -161,7 +165,7 @@ mod tests {
     fn cosim_produces_speedup_from_measured_sparsity() {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions { batch: 2, ..SimOptions::default() };
-        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false).unwrap();
+        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false, 0).unwrap();
         assert_eq!(report.rows.len(), 4);
         assert!(!report.replayed);
         assert!(report.total_speedup > 1.1, "{}", report.total_speedup);
@@ -178,14 +182,14 @@ mod tests {
             exact_outputs_per_tile: 16,
             ..SimOptions::default()
         };
-        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false).unwrap();
+        let report = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false, 0).unwrap();
         assert_eq!(report.backend, "exact");
         assert_eq!(report.rows.len(), 4);
         assert!(report.total_speedup > 1.1, "{}", report.total_speedup);
         assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
         assert_eq!(report.to_json().get("backend").as_str(), Some("exact"));
         // Deterministic: the same traces + options reproduce bit-exactly.
-        let again = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false).unwrap();
+        let again = cosim_from_traces(&fake_traces(0.5), &cfg, &opts, false, 0).unwrap();
         for (a, b) in report.rows.iter().zip(&again.rows) {
             assert_eq!(a, b);
         }
@@ -209,27 +213,41 @@ mod tests {
             crate::config::BitmapPattern::Iid,
             2,
         );
-        let report = cosim_from_traces(&traces, &cfg, &opts, true).unwrap();
+        let report = cosim_from_traces(&traces, &cfg, &opts, true, 0).unwrap();
         assert!(report.replayed);
         assert_eq!(report.backend, "exact");
         assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
         assert_eq!(report.to_json().get("replayed").as_bool(), Some(true));
-        // Replay is deterministic end to end.
-        let again = cosim_from_traces(&traces, &cfg, &opts, true).unwrap();
+        // Replay is deterministic end to end, at any jobs level.
+        let again = cosim_from_traces(&traces, &cfg, &opts, true, 0).unwrap();
         assert_eq!(report.rows, again.rows);
-        // Guard rails: analytic + replay is a user error, and a
-        // payload-free trace cannot replay.
+        let j1 = cosim_from_traces(&traces, &cfg, &opts, true, 1).unwrap();
+        let j4 = cosim_from_traces(&traces, &cfg, &opts, true, 4).unwrap();
+        assert_eq!(j1.rows, j4.rows, "replay must be jobs-invariant");
+        assert_eq!(report.rows, j1.rows);
+        // The pattern-informed analytic fast path replays too: measured
+        // per-tile densities instead of stochastic jitter.
         let analytic = SimOptions { backend: ExecBackend::Analytic, ..opts.clone() };
-        assert!(cosim_from_traces(&traces, &cfg, &analytic, true).is_err());
-        assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &opts, true).is_err());
+        let ar = cosim_from_traces(&traces, &cfg, &analytic, true, 0).unwrap();
+        assert!(ar.replayed);
+        assert_eq!(ar.backend, "analytic");
+        assert!(ar.bp_speedup > 1.2, "{}", ar.bp_speedup);
+        // …and it lands near the exact replay on this validated-CRS stack.
+        for ((_, at, _, _), (_, et, _, _)) in ar.rows.iter().zip(&report.rows) {
+            let err = (at - et).abs() / et;
+            assert!(err < 0.35, "analytic-replay {at:.0} vs exact-replay {et:.0}");
+        }
+        // A payload-free trace cannot replay on either backend.
+        assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &opts, true, 0).is_err());
+        assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &analytic, true, 0).is_err());
     }
 
     #[test]
     fn more_sparsity_more_speedup() {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions { batch: 2, ..SimOptions::default() };
-        let lo = cosim_from_traces(&fake_traces(0.3), &cfg, &opts, false).unwrap();
-        let hi = cosim_from_traces(&fake_traces(0.7), &cfg, &opts, false).unwrap();
+        let lo = cosim_from_traces(&fake_traces(0.3), &cfg, &opts, false, 0).unwrap();
+        let hi = cosim_from_traces(&fake_traces(0.7), &cfg, &opts, false, 0).unwrap();
         assert!(hi.total_speedup > lo.total_speedup);
     }
 
@@ -238,17 +256,17 @@ mod tests {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions::default();
         let empty = TraceFile::new("agos_cnn");
-        assert!(cosim_from_traces(&empty, &cfg, &opts, false).is_err());
+        assert!(cosim_from_traces(&empty, &cfg, &opts, false, 0).is_err());
         let mut bad = fake_traces(0.5);
         bad.steps[0].layers[0].identity_ok = false;
-        assert!(cosim_from_traces(&bad, &cfg, &opts, false).is_err());
+        assert!(cosim_from_traces(&bad, &cfg, &opts, false, 0).is_err());
     }
 
     #[test]
     fn report_serializes() {
         let cfg = AcceleratorConfig::default();
         let opts = SimOptions { batch: 1, ..SimOptions::default() };
-        let report = cosim_from_traces(&fake_traces(0.4), &cfg, &opts, false).unwrap();
+        let report = cosim_from_traces(&fake_traces(0.4), &cfg, &opts, false, 0).unwrap();
         let j = report.to_json();
         assert_eq!(j.get("network").as_str(), Some("agos_cnn"));
         assert_eq!(j.get("rows").as_arr().unwrap().len(), 4);

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::config::TrainOptions;
 use crate::runtime::{HostTensor, Runtime};
-use crate::trace::{LayerTrace, StepTrace, TraceFile};
+use crate::trace::{StepTrace, TraceFile};
 
 use super::dataset::SyntheticDataset;
 use super::trainer::TrainLog;
@@ -49,29 +49,39 @@ pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
 
     // --- analyst: sparsity extraction off the hot path --------------------
     let (trace_tx, trace_rx) = mpsc::channel::<(usize, f64, Vec<HostTensor>)>();
+    let trace_images = opts.trace_images.clamp(1, batch.max(1));
     let analyst = thread::spawn(move || -> Vec<StepTrace> {
         let mut out = Vec::new();
         while let Ok((step, loss, tensors)) = trace_rx.recv() {
             let relu_count = tensors.len() / 2;
-            let mut layers = Vec::with_capacity(relu_count);
-            for i in 0..relu_count {
-                let a = &tensors[i];
-                let g = &tensors[i + relu_count];
-                let (av, gv) = (a.as_f32().unwrap(), g.as_f32().unwrap());
-                let identity_ok =
-                    av.iter().zip(gv).all(|(aa, gg)| *aa != 0.0 || *gg == 0.0);
-                layers.push(LayerTrace {
-                    name: format!("relu{}", i + 1),
-                    act_sparsity: a.zero_fraction(),
-                    grad_sparsity: g.zero_fraction(),
-                    identity_ok,
-                    // v2 payload: image 0's packed footprints (see
-                    // `Trainer::traced_step`).
-                    act_bitmap: crate::runtime::bitmap_from_nhwc(a, 0),
-                    grad_bitmap: crate::runtime::bitmap_from_nhwc(g, 0),
-                });
+            // Batch-wide identity per layer, once; see `Trainer::traced_step`.
+            let batch_ok: Vec<bool> = (0..relu_count)
+                .map(|i| {
+                    super::trainer::batch_identity_ok(&tensors[i], &tensors[i + relu_count])
+                        .expect("trace tensors are f32")
+                })
+                .collect();
+            // One StepTrace per captured image (see `Trainer::traced_step`):
+            // the replay bank round-robins the step axis, so multi-image
+            // captures widen replay coverage with no format change.
+            for image in 0..trace_images {
+                let mut layers = Vec::with_capacity(relu_count);
+                for i in 0..relu_count {
+                    let a = &tensors[i];
+                    let g = &tensors[i + relu_count];
+                    layers.push(
+                        super::trainer::layer_trace_for_image(
+                            &format!("relu{}", i + 1),
+                            a,
+                            g,
+                            image,
+                            batch_ok[i],
+                        )
+                        .expect("trace tensors are f32"),
+                    );
+                }
+                out.push(StepTrace { step, loss, layers });
             }
-            out.push(StepTrace { step, loss, layers });
         }
         out
     });

@@ -18,6 +18,50 @@ pub struct TrainLog {
     pub steps_per_sec: f64,
 }
 
+/// Element-wise §3.2 identity over the *whole batch*: every gradient
+/// non-zero sits on an activation non-zero. Checked once per layer per
+/// traced step — the batch-wide invariant the trainer aborts on, which
+/// must not narrow to just the captured image(s).
+pub(crate) fn batch_identity_ok(a: &HostTensor, g: &HostTensor) -> Result<bool> {
+    let av = a.as_f32()?;
+    let gv = g.as_f32()?;
+    Ok(av.iter().zip(gv).all(|(aa, gg)| *aa != 0.0 || *gg == 0.0))
+}
+
+/// One ReLU's trace entry for one image of a traced step: packed
+/// per-image footprints when the tensors are 4-D (scalars derived from
+/// the payloads, so they can never disagree), batch-level scalars as the
+/// fallback for payload-less shapes. `batch_ok` is the batch-wide
+/// identity verdict ([`batch_identity_ok`], computed once per layer) and
+/// bounds the recorded flag: a violation anywhere in the batch marks the
+/// trace bad even when the captured image happens to be clean. Shared by
+/// the blocking trainer and the threaded pipeline's analyst.
+pub(crate) fn layer_trace_for_image(
+    name: &str,
+    a: &HostTensor,
+    g: &HostTensor,
+    image: usize,
+    batch_ok: bool,
+) -> Result<LayerTrace> {
+    let (ab, gb) = (
+        crate::runtime::bitmap_from_nhwc(a, image),
+        crate::runtime::bitmap_from_nhwc(g, image),
+    );
+    if let (Some(ab), Some(gb)) = (ab, gb) {
+        let mut lt = LayerTrace::from_bitmaps(name, ab, gb);
+        lt.identity_ok &= batch_ok;
+        return Ok(lt);
+    }
+    Ok(LayerTrace {
+        name: name.to_string(),
+        act_sparsity: a.zero_fraction(),
+        grad_sparsity: g.zero_fraction(),
+        identity_ok: batch_ok,
+        act_bitmap: None,
+        grad_bitmap: None,
+    })
+}
+
 /// Owns the runtime, parameters and dataset for one training run.
 pub struct Trainer {
     runtime: Runtime,
@@ -59,8 +103,13 @@ impl Trainer {
     }
 
     /// One traced step: returns (loss, per-relu traces) without updating
-    /// parameters (the trace artifact is read-only on params).
-    pub fn traced_step(&mut self, step: usize) -> Result<StepTrace> {
+    /// parameters (the trace artifact is read-only on params). One
+    /// `StepTrace` per captured image (`opts.trace_images`, clamped to
+    /// the artifact batch): the trace file's step axis is exactly what
+    /// the replay bank round-robins over, so multi-image captures widen
+    /// replay coverage with no format change — and the extra steps fold
+    /// into the trace fingerprint, keeping cache keys honest.
+    pub fn traced_step(&mut self, step: usize) -> Result<Vec<StepTrace>> {
         let batch = self.runtime.manifest.batch;
         let (x, y) = self.dataset.batch(batch);
         let mut inputs = self.params.clone();
@@ -70,29 +119,30 @@ impl Trainer {
         // outputs: loss, a1..a4, g1..g4
         let loss = out[0].as_f32()?[0] as f64;
         let relu_count = (out.len() - 1) / 2;
-        let mut layers = Vec::with_capacity(relu_count);
+        let images = self.opts.trace_images.clamp(1, batch);
+        // Batch-wide identity per layer, computed once and stamped into
+        // every captured image's entry.
+        let mut batch_ok = Vec::with_capacity(relu_count);
         for i in 1..=relu_count {
-            let a = &out[i];
-            let g = &out[i + relu_count];
-            let av = a.as_f32()?;
-            let gv = g.as_f32()?;
-            let identity_ok = av
-                .iter()
-                .zip(gv)
-                .all(|(aa, gg)| *aa != 0.0 || *gg == 0.0);
-            layers.push(LayerTrace {
-                name: format!("relu{i}"),
-                act_sparsity: a.zero_fraction(),
-                grad_sparsity: g.zero_fraction(),
-                identity_ok,
-                // v2 payload: image 0's packed footprints (one image per
-                // step keeps trace files small; steps are the batch axis
-                // the replay path cycles over).
-                act_bitmap: crate::runtime::bitmap_from_nhwc(a, 0),
-                grad_bitmap: crate::runtime::bitmap_from_nhwc(g, 0),
-            });
+            batch_ok.push(batch_identity_ok(&out[i], &out[i + relu_count])?);
         }
-        Ok(StepTrace { step, loss, layers })
+        let mut steps = Vec::with_capacity(images);
+        for image in 0..images {
+            let mut layers = Vec::with_capacity(relu_count);
+            for i in 1..=relu_count {
+                let a = &out[i];
+                let g = &out[i + relu_count];
+                layers.push(layer_trace_for_image(
+                    &format!("relu{i}"),
+                    a,
+                    g,
+                    image,
+                    batch_ok[i - 1],
+                )?);
+            }
+            steps.push(StepTrace { step, loss, layers });
+        }
+        Ok(steps)
     }
 
     /// Run the configured number of steps, tracing every
@@ -105,12 +155,13 @@ impl Trainer {
         let t0 = Instant::now();
         for step in 0..self.opts.steps {
             if self.opts.trace_every > 0 && step % self.opts.trace_every == 0 {
-                let trace = self.traced_step(step)?;
-                anyhow::ensure!(
-                    trace.layers.iter().all(|l| l.identity_ok),
-                    "sparsity identity violated at step {step}"
-                );
-                log.traces.steps.push(trace);
+                for trace in self.traced_step(step)? {
+                    anyhow::ensure!(
+                        trace.layers.iter().all(|l| l.identity_ok),
+                        "sparsity identity violated at step {step}"
+                    );
+                    log.traces.steps.push(trace);
+                }
             }
             let loss = self.step()?;
             anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");

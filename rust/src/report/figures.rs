@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::config::{ExecBackend, Scheme, SimOptions};
+use crate::config::{ExecBackend, GatherMode, Scheme, SimOptions};
 use crate::nn::{zoo, Network, Phase};
 use crate::sim::{NetworkSimResult, PeModel, ReconfigMode, SweepPlan};
 use crate::sparsity::gradient_sparsity;
@@ -165,7 +165,8 @@ pub fn fig15_overall(ctx: &ReportCtx) -> Figure {
         "Normalized CNN execution time (FP+BP+WG)",
         &["DC", "IN", "IN+OUT", "IN+OUT+WR", "speedup", "FP_frac", "BP_frac", "WG_frac"],
     );
-    fig.notes = "execution time normalized to DC; *_frac is the phase breakdown of IN+OUT+WR".into();
+    fig.notes =
+        "execution time normalized to DC; *_frac is the phase breakdown of IN+OUT+WR".into();
     for net in zoo::all_networks() {
         let runs = sweep(&net, ctx);
         let dc = runs["DC"].total_cycles();
@@ -216,15 +217,17 @@ pub fn fig16_reconfig(ctx: &ReportCtx) -> Figure {
     fig
 }
 
-/// Backend validation (figval): analytic vs exact-sampled vs
-/// exact-replayed total cycles per scheme on the traced CNN — the
-/// engine-level closure of the per-output
-/// `analytic_model_tracks_exact_simulation` check, now three-way. The
-/// replay column synthesizes a v2 bitmap capture at the context model's
-/// densities (`sparsity::capture_synthetic_trace`) and replays it
-/// pattern-exactly, so sampled-vs-replayed deviation at matched density
-/// is visible per scheme. All columns pin their backend explicitly, so
-/// this figure is meaningful even under `--backend exact`.
+/// Backend validation (figval): analytic vs exact-sampled vs replayed
+/// total cycles per scheme on the traced CNN — the engine-level closure
+/// of the per-output `analytic_model_tracks_exact_simulation` check. The
+/// replay columns synthesize a v2 bitmap capture at the context model's
+/// densities (`sparsity::capture_synthetic_trace`) and replay it twice:
+/// through the geometry-exact strided receptive-field gather (the
+/// production mode — true operand identity, replayed WG pairs) and
+/// through the legacy streaming-slice window it replaced, so the
+/// geometry upgrade's fidelity is visible per scheme next to the
+/// analytic expectation. All columns pin their backend/gather
+/// explicitly, so this figure is meaningful under any `--backend`.
 pub fn figval_backend(ctx: &ReportCtx) -> Figure {
     let net = zoo::agos_cnn();
     let analytic = SimOptions { backend: ExecBackend::Analytic, ..ctx.opts.clone() };
@@ -237,22 +240,34 @@ pub fn figval_backend(ctx: &ReportCtx) -> Figure {
         ctx.opts.pattern,
         ctx.opts.blob_radius,
     );
-    let bank = crate::sim::ReplayBank::from_trace(&net, &trace)
-        .expect("synthesized traces always carry payloads");
-    let replayed = SimOptions {
+    let bank = Arc::new(
+        crate::sim::ReplayBank::from_trace(&net, &trace)
+            .expect("synthesized traces always carry payloads"),
+    );
+    let replay_geo = SimOptions {
         backend: ExecBackend::Exact,
+        gather: GatherMode::Geometry,
         trace_fingerprint: Some(trace.fingerprint()),
-        replay: Some(Arc::new(bank)),
+        replay: Some(bank.clone()),
         ..ctx.opts.clone()
     };
+    let replay_stream = SimOptions { gather: GatherMode::Streaming, ..replay_geo.clone() };
     let mut fig = Figure::new(
         "figval",
         "Analytic vs exact backend, sampled and replayed (total cycles)",
-        &["analytic", "exact-sampled", "exact-replay", "sampled/analytic", "replay/analytic"],
+        &[
+            "analytic",
+            "exact-sampled",
+            "replay-geometry",
+            "replay-streaming",
+            "geometry/analytic",
+            "streaming/analytic",
+        ],
     );
     fig.notes = format!(
         "agos_cnn, batch {}, seed {}, exact cap {} outputs/tile, {} sampling, \
-         replaying a {steps}-step synthesized capture; rows are schemes",
+         replaying a {steps}-step synthesized capture through the geometry-exact \
+         gather and the legacy streaming slice; rows are schemes",
         ctx.opts.batch,
         ctx.opts.seed,
         ctx.opts.exact_outputs_per_tile,
@@ -261,15 +276,17 @@ pub fn figval_backend(ctx: &ReportCtx) -> Figure {
     for scheme in Scheme::ALL {
         let a = ctx.sweep.one(&net, &ctx.cfg, &analytic, &ctx.model, scheme);
         let e = ctx.sweep.one(&net, &ctx.cfg, &exact, &ctx.model, scheme);
-        let r = ctx.sweep.one(&net, &ctx.cfg, &replayed, &ctx.model, scheme);
+        let g = ctx.sweep.one(&net, &ctx.cfg, &replay_geo, &ctx.model, scheme);
+        let s = ctx.sweep.one(&net, &ctx.cfg, &replay_stream, &ctx.model, scheme);
         fig.row(
             scheme.label(),
             vec![
                 a.total_cycles(),
                 e.total_cycles(),
-                r.total_cycles(),
-                e.total_cycles() / a.total_cycles(),
-                r.total_cycles() / a.total_cycles(),
+                g.total_cycles(),
+                s.total_cycles(),
+                g.total_cycles() / a.total_cycles(),
+                s.total_cycles() / a.total_cycles(),
             ],
         );
     }
@@ -402,31 +419,42 @@ mod tests {
     }
 
     #[test]
-    fn figval_backends_agree_within_tolerance() {
+    fn figval_backends_agree_and_geometry_is_no_worse_than_streaming() {
         let mut ctx = ReportCtx::with_batch(1);
         ctx.opts.exact_outputs_per_tile = 16; // keep the debug-mode walk fast
         let f = figval_backend(&ctx);
         assert_eq!(f.rows.len(), 4);
+        let mut geo_err_sum = 0.0;
+        let mut stream_err_sum = 0.0;
         for (label, v) in &f.rows {
-            let sampled = v[3];
+            let sampled = v[1] / v[0];
             assert!(
                 (0.65..1.55).contains(&sampled),
                 "{label}: sampled/analytic ratio {sampled:.3} out of band"
             );
-            // Replayed patterns at matched density must stay in a band
-            // around the analytic expectation too — the
-            // replayed-vs-sampled equivalence check, per scheme.
-            let replay = v[4];
+            // Both replay assemblies at matched density must stay in a
+            // band around the analytic expectation.
+            let (geo, stream) = (v[4], v[5]);
             assert!(
-                (0.55..1.7).contains(&replay),
-                "{label}: replay/analytic ratio {replay:.3} out of band"
+                (0.55..1.7).contains(&geo),
+                "{label}: geometry-replay/analytic ratio {geo:.3} out of band"
             );
-            let ratio = replay / sampled;
             assert!(
-                (0.6..1.6).contains(&ratio),
-                "{label}: replayed vs sampled diverge ({ratio:.3})"
+                (0.55..1.7).contains(&stream),
+                "{label}: streaming-replay/analytic ratio {stream:.3} out of band"
             );
+            geo_err_sum += (geo - 1.0).abs();
+            stream_err_sum += (stream - 1.0).abs();
         }
+        // The acceptance bar for the gather upgrade: averaged over the
+        // schemes, the geometry-exact series sits at least as close to
+        // the analytic expectation as the streaming slice it replaced
+        // (small slack for the finite per-tile sample).
+        assert!(
+            geo_err_sum <= stream_err_sum + 0.20,
+            "geometry replay drifted: sum|geo-1| = {geo_err_sum:.3} \
+             vs sum|stream-1| = {stream_err_sum:.3}"
+        );
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::sparsity::{analyze_network, LayerOpportunity, SparsityModel};
 use crate::util::json::Json;
 use crate::util::rng::{Pcg32, SplitMix64};
 
+use super::backend::TaskGeom;
 use super::energy::EnergyBreakdown;
 use super::tile::factor2;
 use super::layer_exec::{simulate_layer_replay, LayerSimResult, LayerTask};
@@ -219,15 +220,24 @@ pub fn build_task(
         LayerKind::Fc { out } => (out * in_shape.len()) as f64,
         _ => unreachable!(),
     };
+    // Conv geometry for the replay gather (kernel, stride, padding and
+    // whether the operand gather is per-channel). FC layers read their
+    // whole input per output.
+    let (stride, pad, dw) = match layer.kind {
+        LayerKind::Conv { stride, pad, .. } => (stride, pad, false),
+        LayerKind::DwConv { stride, pad, .. } => (stride, pad, true),
+        LayerKind::Fc { .. } => (1, 0, false),
+        _ => unreachable!(),
+    };
     let task = match phase {
         Phase::Forward => {
             // FC outputs are a vector; spread them 2-D across the PE grid
             // (a [4096] map would otherwise land on a single PE tile).
-            let (m, u, v) = if matches!(layer.kind, LayerKind::Fc { .. }) {
+            let (m, u, v, geom) = if matches!(layer.kind, LayerKind::Fc { .. }) {
                 let (u, v) = factor2(out.c);
-                (1, u, v)
+                (1, u, v, TaskGeom::Full)
             } else {
-                (out.c, out.h, out.w)
+                (out.c, out.h, out.w, TaskGeom::Conv { r, s, stride, pad, dw })
             };
             LayerTask {
                 name: layer.name.clone(),
@@ -239,6 +249,7 @@ pub fn build_task(
                 out_sparsity: None, // output sparsity exists only in BP
                 input_elems: in_shape.len() as f64,
                 weight_elems,
+                geom,
             }
         }
         Phase::Backward => {
@@ -251,11 +262,16 @@ pub fn build_task(
             // (= M·R·S/stride² on average for strided convs).
             let fwd_macs = crate::nn::layer_macs(net, layer, Phase::Forward) as f64;
             let crs = fwd_macs / in_shape.len() as f64;
-            let (m, u, v) = if matches!(layer.kind, LayerKind::Fc { .. }) {
+            let (m, u, v, geom) = if matches!(layer.kind, LayerKind::Fc { .. }) {
                 let (u, v) = factor2(in_shape.len());
-                (1, u, v)
+                (1, u, v, TaskGeom::Full)
             } else {
-                (in_shape.c, in_shape.h, in_shape.w)
+                (
+                    in_shape.c,
+                    in_shape.h,
+                    in_shape.w,
+                    TaskGeom::ConvT { r, s, stride, pad, dw },
+                )
             };
             LayerTask {
                 name: layer.name.clone(),
@@ -267,20 +283,39 @@ pub fn build_task(
                 out_sparsity: opp.bp_output,
                 input_elems: out.len() as f64, // incoming gradient map
                 weight_elems,
+                geom,
             }
         }
         Phase::WeightGrad => {
             // dW[m, c, r, s] reduces over the U·V output positions; the
             // (c·r·s) weight plane is spread squarely across the PE grid.
-            let (wm, wu, wv, crs) = match layer.kind {
+            let (wm, wu, wv, crs, geom) = match layer.kind {
                 LayerKind::Conv { m, .. } => {
                     let (u, v) = factor2(in_shape.c * r * s);
-                    (m, u, v, out.h * out.w)
+                    let geom =
+                        TaskGeom::Wg { r, s, stride, pad, gu: out.h, gv: out.w, dw: false };
+                    (m, u, v, out.h * out.w, geom)
                 }
-                LayerKind::DwConv { .. } => (in_shape.c, r, s, out.h * out.w),
+                LayerKind::DwConv { .. } => {
+                    let geom =
+                        TaskGeom::Wg { r, s, stride, pad, gu: out.h, gv: out.w, dw: true };
+                    (in_shape.c, r, s, out.h * out.w, geom)
+                }
                 LayerKind::Fc { out: o } => {
                     let (u, v) = factor2(in_shape.len());
-                    (o, u, v, 1)
+                    // dW[o, (c, h, w)]: the single "output position" pairs
+                    // grad[o] with act[c, h, w] — a 1-position Wg whose
+                    // kernel is the whole input plane.
+                    let geom = TaskGeom::Wg {
+                        r: in_shape.h,
+                        s: in_shape.w,
+                        stride: 1,
+                        pad: 0,
+                        gu: 1,
+                        gv: 1,
+                        dw: false,
+                    };
+                    (o, u, v, 1, geom)
                 }
                 _ => unreachable!(),
             };
@@ -299,6 +334,7 @@ pub fn build_task(
                 out_sparsity: None, // dW is dense
                 input_elems: in_shape.len() as f64 + out.len() as f64,
                 weight_elems: 0.0, // no weight streaming in WG
+                geom,
             }
         }
     };
@@ -448,7 +484,8 @@ pub fn simulate_network_jobs(
         let (tmin, tmax) = busy.iter().fold((f64::MAX, 0.0f64), |(lo, hi), &c| {
             (lo.min(c), hi.max(c))
         });
-        let tmean = if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
+        let tmean =
+            if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
 
         per_layer.push(LayerAgg {
             name: name.clone(),
@@ -574,6 +611,53 @@ mod tests {
         let dc = sim(&net, Scheme::Dense).total_energy_j();
         let wr = sim(&net, Scheme::InOutWr).total_energy_j();
         assert!(wr < dc, "energy {wr} !< {dc}");
+    }
+
+    #[test]
+    fn build_task_registers_the_replay_geometry() {
+        let net = zoo::agos_cnn();
+        let model = SparsityModel::synthetic(1);
+        let fwd = model.assign(&net);
+        let tasks = build_image_tasks(&net, &fwd);
+        let find = |name: &str, phase: Phase| {
+            tasks
+                .iter()
+                .find(|t| t.layer == name && t.phase == phase)
+                .unwrap_or_else(|| panic!("{name} {phase:?}"))
+        };
+        // conv2: 3x3 stride-2 pad-1 — FP gathers, BP transposes, WG pairs.
+        assert_eq!(
+            find("conv2", Phase::Forward).task.geom,
+            TaskGeom::Conv { r: 3, s: 3, stride: 2, pad: 1, dw: false }
+        );
+        assert_eq!(
+            find("conv2", Phase::Backward).task.geom,
+            TaskGeom::ConvT { r: 3, s: 3, stride: 2, pad: 1, dw: false }
+        );
+        // conv2 reads relu1's 32x32 map and writes 16x16: the WG pair
+        // reduces over the 16x16 forward output positions.
+        assert_eq!(
+            find("conv2", Phase::WeightGrad).task.geom,
+            TaskGeom::Wg { r: 3, s: 3, stride: 2, pad: 1, gu: 16, gv: 16, dw: false }
+        );
+        // fc reads the whole flattened input; its WG kernel is the plane.
+        assert_eq!(find("fc", Phase::Forward).task.geom, TaskGeom::Full);
+        assert_eq!(
+            find("fc", Phase::WeightGrad).task.geom,
+            TaskGeom::Wg { r: 1, s: 1, stride: 1, pad: 0, gu: 1, gv: 1, dw: false }
+        );
+        // Depthwise convs gather per-channel.
+        let mnet = zoo::mobilenet_v1();
+        let mfwd = model.assign(&mnet);
+        let mtasks = build_image_tasks(&mnet, &mfwd);
+        let dwt = mtasks
+            .iter()
+            .find(|t| {
+                t.phase == Phase::Forward
+                    && matches!(t.task.geom, TaskGeom::Conv { dw: true, .. })
+            })
+            .expect("mobilenet has depthwise convs");
+        assert!(matches!(dwt.task.geom, TaskGeom::Conv { r: 3, s: 3, .. }));
     }
 
     #[test]

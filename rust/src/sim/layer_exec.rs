@@ -7,11 +7,12 @@
 //! co-simulation path. Replayed components draw no RNG state and skip
 //! the per-tile jitter (real maps carry their own spatial variation).
 
-use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::config::{AcceleratorConfig, GatherMode, Scheme, SimOptions};
 use crate::nn::Shape;
+use crate::sparsity::Bitmap;
 use crate::util::rng::Pcg32;
 
-use super::backend::{exact_tile_cost, BitmapSource, ExecBackend, TileGeom};
+use super::backend::{exact_tile_cost, BitmapSource, ExecBackend, TaskGeom, TileGeom};
 use super::energy::{layer_energy, EnergyBreakdown};
 use super::exact::ExactPe;
 use super::memory::layer_traffic;
@@ -38,6 +39,9 @@ pub struct LayerTask {
     /// Traffic accounting (elements).
     pub input_elems: f64,
     pub weight_elems: f64,
+    /// How outputs map onto captured operand bitmaps when this task
+    /// replays (`sim::backend::TaskGeom`); `Streaming` when unknown.
+    pub geom: TaskGeom,
 }
 
 impl LayerTask {
@@ -110,10 +114,34 @@ pub fn simulate_layer(
     simulate_layer_replay(task, cfg, opts, scheme, None, rng)
 }
 
+/// Measured non-zero density of a replayed map inside one output tile's
+/// window, the tile window scaled into the map's plane when the two
+/// differ (operand maps live on the input grid, output tiles on the
+/// output grid). Pure arithmetic over the captured words — no RNG.
+fn tile_window_density(
+    map: &Bitmap,
+    window: (usize, usize, usize, usize),
+    u: usize,
+    v: usize,
+) -> f64 {
+    let (r0, r1, c0, c1) = window;
+    let (mh, mw) = (map.shape.h, map.shape.w);
+    let scale = |a: usize, n: usize, m: usize| (a * m / n.max(1)).min(m);
+    let (y0, x0) = (scale(r0, u, mh), scale(c0, v, mw));
+    let (y1, x1) = (scale(r1, u, mh).max(y0 + 1).min(mh), scale(c1, v, mw).max(x0 + 1).min(mw));
+    if y0 >= y1 || x0 >= x1 {
+        return 1.0 - map.sparsity();
+    }
+    let area = map.shape.c * (y1 - y0) * (x1 - x0);
+    map.window_nz(y0, y1, x0, x1) as f64 / area as f64
+}
+
 /// [`simulate_layer`] with optional replay maps for this task
 /// (`sim::replay` resolves them per image; `engine::simulate_image`
-/// passes them down). Replay only affects the exact backend: the
-/// analytic path is expectation-based and keeps its jittered fractions.
+/// passes them down). On the exact backend, replayed tasks slice/gather
+/// real patterns; on the analytic backend they substitute *measured*
+/// per-tile densities for the RNG jitter (the pattern-informed fast
+/// path), so a replayed task draws no RNG state on either backend.
 pub fn simulate_layer_replay(
     task: &LayerTask,
     cfg: &AcceleratorConfig,
@@ -137,19 +165,28 @@ pub fn simulate_layer_replay(
     // forward pass left in DRAM. The output map must cover the task's
     // output geometry exactly (FC tasks factorize their maps and fall
     // back to sampling).
-    let replay = replay.filter(|_| exact_pe.is_some());
     let replay_in = replay.and_then(|r| r.operand.as_ref()).filter(|_| s_in > 0.0);
     let replay_out = replay
         .and_then(|r| r.output.as_ref())
         .filter(|rm| s_out > 0.0 && rm.map.shape == Shape::new(task.m, task.u, task.v));
+    // The WG pair exists only under geometry gathering: `--gather
+    // streaming` is kept as the pre-gather baseline, where WG sampled
+    // and windows were streaming slices.
+    let geometry = opts.gather == GatherMode::Geometry;
+    let replay_pair = replay
+        .and_then(|r| r.pair.as_ref())
+        .filter(|_| geometry && s_in > 0.0 && matches!(task.geom, TaskGeom::Wg { .. }));
 
     // Spatial tiling across the PE grid; every PE computes all M channels
     // of its spatial slice (single filter broadcast at a time, §4.2).
-    // Windows are only needed to slice bitmaps, so the analytic hot path
-    // (every paper figure) skips building them.
+    // Windows slice bitmaps (exact) and measured per-tile densities
+    // (analytic replay); the plain analytic hot path (every paper
+    // figure) still skips building them.
     let spatial = tile_outputs(task.u, task.v, cfg.tx, cfg.ty);
-    let windows =
-        exact_pe.is_some().then(|| tile_windows(task.u, task.v, cfg.tx, cfg.ty));
+    let windows = (exact_pe.is_some()
+        || replay_in.is_some()
+        || replay_out.is_some())
+    .then(|| tile_windows(task.u, task.v, cfg.tx, cfg.ty));
 
     let mut tile_busy = Vec::with_capacity(spatial.len());
     let mut performed = 0.0f64;
@@ -160,9 +197,24 @@ pub fn simulate_layer_replay(
         }
         match &exact_pe {
             None => {
-                // Per-tile sparsity variation (drives load imbalance / WDU).
-                let s_in_t = jitter(s_in, opts.tile_sparsity_cv, rng);
-                let s_out_t = jitter(s_out, opts.tile_sparsity_cv, rng);
+                // Per-tile sparsity variation. Replayed maps supply the
+                // *measured* density of each tile's slice — the captured
+                // pattern's real spatial imbalance, no RNG; sampled
+                // fractions keep the calibrated stochastic jitter.
+                let s_in_t = if let Some(pm) = &replay_pair {
+                    pm.joint_sparsity()
+                } else if let Some(rm) = &replay_in {
+                    let windows = windows.as_ref().expect("windows exist under replay");
+                    1.0 - tile_window_density(&rm.map, windows[t], task.u, task.v)
+                } else {
+                    jitter(s_in, opts.tile_sparsity_cv, rng)
+                };
+                let s_out_t = if let Some(rm) = &replay_out {
+                    let windows = windows.as_ref().expect("windows exist under replay");
+                    1.0 - tile_window_density(&rm.map, windows[t], task.u, task.v)
+                } else {
+                    jitter(s_out, opts.tile_sparsity_cv, rng)
+                };
                 let outputs_t = (sp * task.m) as f64;
                 let computed = outputs_t * (1.0 - s_out_t);
                 let (cyc_per_out, macs_per_out) = pe.cycles_per_output(task.crs, s_in_t);
@@ -173,16 +225,27 @@ pub fn simulate_layer_replay(
                 // Sampled components draw their jittered density from the
                 // stream; replayed components touch no RNG state — the
                 // captured map carries the real per-tile variation.
-                let in_src = match &replay_in {
-                    Some(rm) => BitmapSource::Replayed { map: rm.map.as_ref() },
-                    None => BitmapSource::Sampled {
+                let in_src = if let Some(pm) = &replay_pair {
+                    BitmapSource::Pair {
+                        act: pm.act.as_ref().map(|m| m.map.as_ref()),
+                        grad: pm.grad.as_ref().map(|m| m.map.as_ref()),
+                        geom: task.geom,
+                    }
+                } else if let Some(rm) = &replay_in {
+                    if geometry && task.geom.gathers() {
+                        BitmapSource::Gathered { map: rm.map.as_ref(), geom: task.geom }
+                    } else {
+                        BitmapSource::Streamed { map: rm.map.as_ref() }
+                    }
+                } else {
+                    BitmapSource::Sampled {
                         density: 1.0 - jitter(s_in, opts.tile_sparsity_cv, rng),
                         pattern: opts.pattern,
                         blob_radius: opts.blob_radius,
-                    },
+                    }
                 };
                 let out_src = match &replay_out {
-                    Some(rm) => BitmapSource::Replayed { map: rm.map.as_ref() },
+                    Some(rm) => BitmapSource::Streamed { map: rm.map.as_ref() },
                     None => BitmapSource::Sampled {
                         density: 1.0 - jitter(s_out, opts.tile_sparsity_cv, rng),
                         pattern: opts.pattern,
@@ -224,8 +287,12 @@ pub fn simulate_layer_replay(
 
     // Memory. Replayed layers account traffic at the captured map's
     // *measured* zero fraction (precomputed popcount), not the model's
-    // expected one.
-    let s_in_mem = replay_in.map_or(s_in, |rm| rm.sparsity);
+    // expected one; a WG pair contributes its measured joint fraction.
+    let s_in_mem = match (&replay_pair, &replay_in) {
+        (Some(pm), _) => pm.joint_sparsity(),
+        (None, Some(rm)) => rm.sparsity,
+        (None, None) => s_in,
+    };
     let s_out_mem = replay_out.map_or(s_out, |rm| rm.sparsity);
     let output_elems = task.outputs() as f64;
     let traffic = layer_traffic(
@@ -282,6 +349,7 @@ mod tests {
             out_sparsity: out_sp,
             input_elems: 128.0 * 30.0 * 30.0,
             weight_elems: 128.0 * 1152.0,
+            geom: TaskGeom::Streaming,
         }
     }
 
@@ -381,6 +449,7 @@ mod tests {
             out_sparsity: Some(0.5),
             input_elems: 32.0 * 18.0 * 18.0,
             weight_elems: 32.0 * 288.0,
+            geom: TaskGeom::Streaming,
         };
         let run = |scheme, seed| {
             let mut rng = Pcg32::new(seed);
@@ -415,12 +484,19 @@ mod tests {
             out_sparsity: Some(0.5),
             input_elems: 32.0 * 18.0 * 18.0,
             weight_elems: 32.0 * 288.0,
+            // 32ch 18x18 -> 16x16 via 3x3 stride-1 pad-0: the gather
+            // geometry the replayed operand map is exercised through.
+            geom: TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 0, dw: false },
         };
         let mut map_rng = Pcg32::new(11);
         let out_map = Bitmap::sample(crate::nn::Shape::new(32, 16, 16), 0.5, &mut map_rng);
         let in_map = Bitmap::sample(crate::nn::Shape::new(32, 18, 18), 0.5, &mut map_rng);
         let wrap = |b: &Bitmap| ReplayMap { map: Arc::new(b.clone()), sparsity: b.sparsity() };
-        let maps = TaskMaps { operand: Some(wrap(&in_map)), output: Some(wrap(&out_map)) };
+        let maps = TaskMaps {
+            operand: Some(wrap(&in_map)),
+            output: Some(wrap(&out_map)),
+            pair: None,
+        };
 
         // Both components replayed: the result must not depend on the
         // stream at all (different seeds, identical outcome).
@@ -436,7 +512,8 @@ mod tests {
         // A different captured pattern at the same density changes the
         // outcome — that is the whole point of replay.
         let out2 = Bitmap::sample(crate::nn::Shape::new(32, 16, 16), 0.5, &mut map_rng);
-        let maps2 = TaskMaps { operand: Some(wrap(&in_map)), output: Some(wrap(&out2)) };
+        let maps2 =
+            TaskMaps { operand: Some(wrap(&in_map)), output: Some(wrap(&out2)), pair: None };
         let mut rng = Pcg32::new(1);
         let c = simulate_layer_replay(&t, &cfg, &opts, Scheme::InOut, Some(&maps2), &mut rng);
         assert_ne!(a.performed_macs, c.performed_macs);
@@ -449,6 +526,115 @@ mod tests {
         let dense_plain = simulate_layer(&t, &cfg, &opts, Scheme::Dense, &mut r2);
         assert_eq!(dense_replay.cycles, dense_plain.cycles);
         assert_eq!(dense_replay.performed_macs, dense_plain.performed_macs);
+    }
+
+    #[test]
+    fn wg_pair_replay_is_rng_free_and_tracks_joint_density() {
+        use std::sync::Arc;
+        use crate::sim::replay::{PairMaps, ReplayMap, TaskMaps};
+        use crate::sparsity::Bitmap;
+        let cfg = AcceleratorConfig::default();
+        // WG of a 3x3 stride-1 pad-1 conv: 8 filters, 4ch 8x8 input.
+        let t = LayerTask {
+            name: "wg".into(),
+            m: 8,
+            u: 6,
+            v: 6, // factor2(4·3·3)
+            crs: 64.0, // 8x8 output positions
+            in_sparsity: Some(0.7),
+            out_sparsity: None,
+            input_elems: 4.0 * 64.0 + 8.0 * 64.0,
+            weight_elems: 0.0,
+            geom: TaskGeom::Wg { r: 3, s: 3, stride: 1, pad: 1, gu: 8, gv: 8, dw: false },
+        };
+        let mut map_rng = Pcg32::new(5);
+        let act = Bitmap::sample(crate::nn::Shape::new(4, 8, 8), 0.5, &mut map_rng);
+        let grad = Bitmap::sample(crate::nn::Shape::new(8, 8, 8), 0.6, &mut map_rng);
+        let wrap = |b: &Bitmap| ReplayMap { map: Arc::new(b.clone()), sparsity: b.sparsity() };
+        let maps = TaskMaps {
+            pair: Some(PairMaps { act: Some(wrap(&act)), grad: Some(wrap(&grad)) }),
+            ..TaskMaps::default()
+        };
+        for backend in [ExecBackend::Exact, ExecBackend::Analytic] {
+            let opts = SimOptions { backend, ..SimOptions::default() };
+            let run = |seed| {
+                let mut rng = Pcg32::new(seed);
+                simulate_layer_replay(&t, &cfg, &opts, Scheme::In, Some(&maps), &mut rng)
+            };
+            let a = run(1);
+            let b = run(999);
+            assert_eq!(a.cycles, b.cycles, "{backend:?} pair replay must be seed-independent");
+            assert_eq!(a.performed_macs, b.performed_macs);
+            // Joint density: act 0.5 nz x grad 0.6 nz ≈ 0.30 of dense.
+            let frac = a.performed_macs / a.dense_macs;
+            assert!((0.2..0.4).contains(&frac), "{backend:?} joint MAC fraction {frac:.3}");
+        }
+        // Streaming gather mode keeps the PR 3 baseline: WG falls back
+        // to sampling and so depends on the stream again.
+        let opts = SimOptions {
+            backend: ExecBackend::Exact,
+            gather: GatherMode::Streaming,
+            ..SimOptions::default()
+        };
+        let mut r1 = Pcg32::new(1);
+        let mut r2 = Pcg32::new(999);
+        let a = simulate_layer_replay(&t, &cfg, &opts, Scheme::In, Some(&maps), &mut r1);
+        let b = simulate_layer_replay(&t, &cfg, &opts, Scheme::In, Some(&maps), &mut r2);
+        assert_ne!(a.cycles, b.cycles, "streaming mode samples WG");
+    }
+
+    #[test]
+    fn analytic_replay_measures_per_tile_densities() {
+        use std::sync::Arc;
+        use crate::sim::replay::{ReplayMap, TaskMaps};
+        use crate::sparsity::Bitmap;
+        let cfg = AcceleratorConfig::default();
+        // 16x16 output on the 16x16 grid: one position per tile, so the
+        // measured tile densities are the map bits themselves.
+        let t = LayerTask {
+            name: "bp".into(),
+            m: 4,
+            u: 16,
+            v: 16,
+            crs: 256.0,
+            in_sparsity: None,
+            out_sparsity: Some(0.5),
+            input_elems: 4.0 * 256.0,
+            weight_elems: 4.0 * 256.0,
+            geom: TaskGeom::Streaming,
+        };
+        // Left half dense, right half empty — strong spatial imbalance a
+        // global mean would erase.
+        let mut out_map = Bitmap::zeros(crate::nn::Shape::new(4, 16, 16));
+        for c in 0..4 {
+            for y in 0..16 {
+                for x in 0..8 {
+                    out_map.set(c, y, x, true);
+                }
+            }
+        }
+        let maps = TaskMaps {
+            output: Some(ReplayMap { map: Arc::new(out_map), sparsity: 0.5 }),
+            ..TaskMaps::default()
+        };
+        let opts = SimOptions::default(); // analytic backend
+        let run = |seed| {
+            let mut rng = Pcg32::new(seed);
+            simulate_layer_replay(&t, &cfg, &opts, Scheme::InOut, Some(&maps), &mut rng)
+        };
+        let a = run(3);
+        let b = run(777);
+        assert_eq!(a.cycles, b.cycles, "measured densities draw no RNG");
+        // Exactly the dense half of the outputs computes…
+        assert!((a.performed_macs - 0.5 * a.dense_macs).abs() / a.dense_macs < 1e-9);
+        // …and the imbalance shows up tile-by-tile: half the busy grid
+        // idles, which jittered global fractions could never produce.
+        let idle = a.tile_busy.iter().filter(|c| **c == 0.0).count();
+        assert_eq!(idle, 128, "right-half tiles are measured empty");
+        // The non-replay analytic path at the same mean stays balanced.
+        let mut rng = Pcg32::new(3);
+        let plain = simulate_layer(&t, &cfg, &opts, Scheme::InOut, &mut rng);
+        assert_eq!(plain.tile_busy.iter().filter(|c| **c == 0.0).count(), 0);
     }
 
     #[test]
@@ -466,6 +652,7 @@ mod tests {
             out_sparsity: None,
             input_elems: 512.0 * 9.0 * 9.0,
             weight_elems: 512.0 * 4608.0,
+            geom: TaskGeom::Streaming,
         };
         let r = simulate_layer(&t, &cfg, &opts, Scheme::Dense, &mut rng);
         let idle = r.tile_busy.iter().filter(|c| **c == 0.0).count();

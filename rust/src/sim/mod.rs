@@ -30,9 +30,9 @@ mod replay;
 mod sweep;
 
 pub use adder_tree::{tree_utilization, ReconfigMode};
-pub use backend::{exact_tile_cost, BitmapSource, ExecBackend, TileGeom};
+pub use backend::{exact_tile_cost, BitmapSource, ExecBackend, TaskGeom, TileGeom};
 pub use exact::{count_bits_range, random_bitmap, ExactOutput, ExactPe, OperandPattern};
-pub use replay::{ReplayBank, ReplayMap, StepMaps, TaskMaps};
+pub use replay::{PairMaps, ReplayBank, ReplayMap, StepMaps, TaskMaps};
 pub use blocking::synapse_passes;
 pub use energy::{layer_energy, EnergyBreakdown};
 pub use engine::{

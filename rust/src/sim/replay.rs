@@ -14,8 +14,20 @@
 //! * **BP output mask** of `l` — the activation bitmap of `l`'s
 //!   producing ReLU (the §3.2 identity: the input-gradient footprint is
 //!   contained in the forward activation footprint, known a priori).
-//! * **WG** tasks carry no payload (joint activation×gradient operands
-//!   live on two differently-shaped maps) and fall back to sampling.
+//! * **WG** tasks carry a *pair*: the producer activation footprint and
+//!   the consumer-ReLU gradient map, joined tap-by-tap by the exact
+//!   backend (`sim::backend::BitmapSource::Pair`) — the dominant WG
+//!   phase replays instead of sampling. A missing side (raw-image
+//!   activations, BatchNorm-densified gradients) is structurally dense.
+//!
+//! Activation footprints additionally propagate *exactly* through
+//! pooling and concatenation: ReLU outputs are non-negative, so a
+//! max/avg-pool output is non-zero iff any window element is — an OR
+//! over the window — and GAP reduces to a per-channel any. Convs fed
+//! through pool/GAP/concat therefore still replay measured operands
+//! (the scheme gates in `sim::layer_exec` decide, as before, whether a
+//! map is *exploitable*; a MaxPool producer still yields no BP output
+//! sparsity).
 //!
 //! Images map onto traced steps round-robin (`image % steps`), so a
 //! batch replays across every captured step deterministically — the
@@ -26,7 +38,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::nn::{Network, Phase};
+use crate::nn::{LayerId, LayerKind, Network, Phase, Shape};
 use crate::sparsity::Bitmap;
 use crate::trace::TraceFile;
 
@@ -46,18 +58,43 @@ impl ReplayMap {
     }
 }
 
+/// Joint activation×gradient payload of a weight-gradient task. A
+/// missing side is structurally dense (raw-image activations, or a
+/// BatchNorm-densified gradient); at least one side is always present.
+#[derive(Clone, Debug)]
+pub struct PairMaps {
+    /// Producer activation footprint (the conv's input map).
+    pub act: Option<ReplayMap>,
+    /// Consumer-ReLU gradient map (the conv's output gradient).
+    pub grad: Option<ReplayMap>,
+}
+
+impl PairMaps {
+    /// Measured joint zero fraction: a WG MAC survives only when both
+    /// operands are non-zero (the two maps live at different positions,
+    /// so independence is the right combination rule — the same one
+    /// `engine::build_task` applies to the modeled fractions).
+    pub fn joint_sparsity(&self) -> f64 {
+        let sa = self.act.as_ref().map_or(0.0, |m| m.sparsity);
+        let sg = self.grad.as_ref().map_or(0.0, |m| m.sparsity);
+        1.0 - (1.0 - sa) * (1.0 - sg)
+    }
+}
+
 /// The replay payloads one (layer, phase) task consumes.
 #[derive(Clone, Debug, Default)]
 pub struct TaskMaps {
-    /// Operand (input) pattern the PE lanes drain.
+    /// Operand (input) pattern the PE lanes drain (FP/BP).
     pub operand: Option<ReplayMap>,
     /// A-priori output mask (BP only, Fig 5c).
     pub output: Option<ReplayMap>,
+    /// Joint activation×gradient operand (WG only).
+    pub pair: Option<PairMaps>,
 }
 
 impl TaskMaps {
     pub fn is_empty(&self) -> bool {
-        self.operand.is_none() && self.output.is_none()
+        self.operand.is_none() && self.output.is_none() && self.pair.is_none()
     }
 }
 
@@ -65,6 +102,7 @@ impl TaskMaps {
 struct LayerMaps {
     fp: TaskMaps,
     bp: TaskMaps,
+    wg: TaskMaps,
 }
 
 /// Every task's replay maps for one traced step.
@@ -80,10 +118,102 @@ impl StepMaps {
         let tm = match phase {
             Phase::Forward => &lm.fp,
             Phase::Backward => &lm.bp,
-            Phase::WeightGrad => return None,
+            Phase::WeightGrad => &lm.wg,
         };
         (!tm.is_empty()).then_some(tm)
     }
+}
+
+/// OR-pool a footprint: the pooled output is non-zero iff any window
+/// element is — exact for max/avg pooling of non-negative (post-ReLU)
+/// values, which is the only place pooling appears in these networks.
+fn pooled_footprint(src: &Bitmap, out: Shape, k: usize, stride: usize, pad: usize) -> Bitmap {
+    debug_assert_eq!(src.shape.c, out.c);
+    let mut b = Bitmap::zeros(out);
+    for c in 0..out.c {
+        for oy in 0..out.h {
+            for ox in 0..out.w {
+                'win: for ky in 0..k {
+                    for kx in 0..k {
+                        let y = (oy * stride + ky) as isize - pad as isize;
+                        let x = (ox * stride + kx) as isize - pad as isize;
+                        if y >= 0
+                            && x >= 0
+                            && (y as usize) < src.shape.h
+                            && (x as usize) < src.shape.w
+                            && src.get(c, y as usize, x as usize)
+                        {
+                            b.set(c, oy, ox, true);
+                            break 'win;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    b
+}
+
+/// A-priori non-zero footprint at layer `id`'s output, derived from one
+/// step's captured ReLU activation maps: the captured map for a ReLU,
+/// exact OR-propagation through Max/Avg/GlobalAvgPool and Concat, `None`
+/// for anything whose footprint is not known a priori (conv/fc/bn/add
+/// outputs can be non-zero anywhere).
+fn derive_footprint(
+    net: &Network,
+    id: LayerId,
+    acts: &HashMap<&str, Arc<Bitmap>>,
+    memo: &mut HashMap<LayerId, Option<Arc<Bitmap>>>,
+) -> Option<Arc<Bitmap>> {
+    if let Some(hit) = memo.get(&id) {
+        return hit.clone();
+    }
+    let l = net.layer(id);
+    let got: Option<Arc<Bitmap>> = match l.kind {
+        LayerKind::ReLU => acts.get(l.name.as_str()).cloned(),
+        LayerKind::MaxPool { k, stride, pad } | LayerKind::AvgPool { k, stride, pad } => {
+            derive_footprint(net, l.inputs[0], acts, memo)
+                .map(|src| Arc::new(pooled_footprint(&src, l.out, k, stride, pad)))
+        }
+        LayerKind::GlobalAvgPool => {
+            derive_footprint(net, l.inputs[0], acts, memo).map(|src| {
+                let mut b = Bitmap::zeros(l.out);
+                for c in 0..l.out.c {
+                    if src.wc_nz(c) > 0 {
+                        b.set(c, 0, 0, true);
+                    }
+                }
+                Arc::new(b)
+            })
+        }
+        LayerKind::Concat => {
+            let srcs: Option<Vec<Arc<Bitmap>>> = l
+                .inputs
+                .iter()
+                .map(|&i| derive_footprint(net, i, acts, memo))
+                .collect();
+            srcs.map(|srcs| {
+                let mut b = Bitmap::zeros(l.out);
+                let mut c0 = 0usize;
+                for src in &srcs {
+                    for c in 0..src.shape.c {
+                        for y in 0..src.shape.h {
+                            for x in 0..src.shape.w {
+                                if src.get(c, y, x) {
+                                    b.set(c0 + c, y, x, true);
+                                }
+                            }
+                        }
+                    }
+                    c0 += src.shape.c;
+                }
+                Arc::new(b)
+            })
+        }
+        _ => None,
+    };
+    memo.insert(id, got.clone());
+    got
 }
 
 /// All replayable steps of one trace, resolved against a network.
@@ -116,9 +246,9 @@ impl ReplayBank {
                 if !lt.has_bitmaps() {
                     continue;
                 }
-                let relu = net
-                    .by_name(&lt.name)
-                    .ok_or_else(|| anyhow::anyhow!("traced layer '{}' not in '{}'", lt.name, net.name))?;
+                let relu = net.by_name(&lt.name).ok_or_else(|| {
+                    anyhow::anyhow!("traced layer '{}' not in '{}'", lt.name, net.name)
+                })?;
                 for (what, bm) in [("act", &lt.act_bitmap), ("grad", &lt.grad_bitmap)] {
                     if let Some(b) = bm {
                         anyhow::ensure!(
@@ -141,15 +271,16 @@ impl ReplayBank {
             if relu_maps.is_empty() {
                 continue; // scalar-only step: nothing to replay
             }
+            let acts: HashMap<&str, Arc<Bitmap>> = relu_maps
+                .iter()
+                .filter_map(|(name, (a, _))| a.clone().map(|a| (*name, a)))
+                .collect();
+            let mut memo: HashMap<LayerId, Option<Arc<Bitmap>>> = HashMap::new();
             let mut by_layer = HashMap::new();
             for layer in net.compute_layers() {
-                let producer = net.layer(layer.inputs[0]);
-                let act = producer
-                    .kind
-                    .is_relu()
-                    .then(|| relu_maps.get(producer.name.as_str()))
-                    .flatten()
-                    .and_then(|(a, _)| a.clone())
+                // Producer footprint: the captured ReLU map, or its exact
+                // OR-propagation through pooling/concat.
+                let act = derive_footprint(net, layer.inputs[0], &acts, &mut memo)
                     .map(ReplayMap::new);
                 let grad = consumers[layer.id]
                     .iter()
@@ -158,11 +289,14 @@ impl ReplayBank {
                     .and_then(|k| relu_maps.get(k.name.as_str()))
                     .and_then(|(_, g)| g.clone())
                     .map(ReplayMap::new);
+                let pair = (act.is_some() || grad.is_some())
+                    .then(|| PairMaps { act: act.clone(), grad: grad.clone() });
                 let lm = LayerMaps {
-                    fp: TaskMaps { operand: act.clone(), output: None },
-                    bp: TaskMaps { operand: grad, output: act },
+                    fp: TaskMaps { operand: act.clone(), ..TaskMaps::default() },
+                    bp: TaskMaps { operand: grad, output: act, pair: None },
+                    wg: TaskMaps { pair, ..TaskMaps::default() },
                 };
-                if !lm.fp.is_empty() || !lm.bp.is_empty() {
+                if !lm.fp.is_empty() || !lm.bp.is_empty() || !lm.wg.is_empty() {
                     by_layer.insert(layer.name.clone(), lm);
                 }
             }
@@ -247,12 +381,67 @@ mod tests {
         assert!(fp.output.is_none(), "FP has no a-priori output mask");
         // conv1 reads the dense image: no FP payload.
         assert!(s0.task_maps("conv1", Phase::Forward).is_none());
-        // WG never replays.
-        assert!(s0.task_maps("conv2", Phase::WeightGrad).is_none());
+        // WG replays the joint pair: conv2's act side is relu1, grad side
+        // relu2; conv1's act side is the raw image (dense, absent).
+        let wg = s0.task_maps("conv2", Phase::WeightGrad).unwrap();
+        let pair = wg.pair.as_ref().unwrap();
+        assert_eq!(pair.act.as_ref().unwrap().map.shape, relu1);
+        assert_eq!(pair.grad.as_ref().unwrap().map.shape, relu2);
+        assert!(pair.joint_sparsity() > pair.grad.as_ref().unwrap().sparsity - 1e-12);
+        let wg1 = s0.task_maps("conv1", Phase::WeightGrad).unwrap();
+        let pair1 = wg1.pair.as_ref().unwrap();
+        assert!(pair1.act.is_none(), "conv1 activations are the raw image");
+        assert!(pair1.grad.is_some());
         // Image round-robin wraps over the two steps.
         assert!(!std::ptr::eq(bank.step_maps(0), bank.step_maps(1)));
         assert!(std::ptr::eq(bank.step_maps(0), bank.step_maps(2)));
         assert_eq!(bank.fingerprint(), trace.fingerprint());
+    }
+
+    #[test]
+    fn footprints_propagate_exactly_through_gap_to_the_fc() {
+        // agos_cnn: fc's producer is GAP(relu4). The derived [64,1,1]
+        // footprint must be the per-channel any() of relu4's map — exact
+        // for non-negative activations — so the fc task replays too.
+        let net = zoo::agos_cnn();
+        let trace = bitmap_trace();
+        let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+        let s0 = bank.step_maps(0);
+        let fc = s0.task_maps("fc", Phase::Forward).unwrap();
+        let derived = &fc.operand.as_ref().unwrap().map;
+        assert_eq!(derived.shape, Shape::new(64, 1, 1));
+        // Reference against the captured relu4 map of step 0.
+        let relu4 = trace.steps[0]
+            .layers
+            .iter()
+            .find(|l| l.name == "relu4")
+            .and_then(|l| l.act_bitmap.clone())
+            .unwrap();
+        for c in 0..64 {
+            assert_eq!(derived.get(c, 0, 0), relu4.wc_nz(c) > 0, "channel {c}");
+        }
+        // fc WG pair: act side is the derived GAP footprint, grad side is
+        // absent (softmax consumer).
+        let wg = s0.task_maps("fc", Phase::WeightGrad).unwrap();
+        let pair = wg.pair.as_ref().unwrap();
+        assert_eq!(pair.act.as_ref().unwrap().map.shape, Shape::new(64, 1, 1));
+        assert!(pair.grad.is_none());
+    }
+
+    #[test]
+    fn pooled_footprint_is_the_window_or() {
+        let mut src = Bitmap::zeros(Shape::new(1, 4, 4));
+        src.set(0, 0, 0, true);
+        src.set(0, 3, 3, true);
+        let out = pooled_footprint(&src, Shape::new(1, 2, 2), 2, 2, 0);
+        assert!(out.get(0, 0, 0));
+        assert!(!out.get(0, 0, 1));
+        assert!(!out.get(0, 1, 0));
+        assert!(out.get(0, 1, 1));
+        // Padding windows that reach off the map see only zeros there.
+        let padded = pooled_footprint(&src, Shape::new(1, 3, 3), 2, 2, 1);
+        assert!(padded.get(0, 0, 0), "(-1,-1)..(0,0) window sees (0,0)");
+        assert_eq!(padded.count_nz(), 2);
     }
 
     #[test]

@@ -39,8 +39,11 @@ use super::engine::{simulate_network_jobs, NetworkSimResult};
 /// so stale spills from older code are rejected instead of silently
 /// served. (rev 3: the exact backend's draw sequence changed — masked
 /// outputs no longer consume operand draws — and replayed/patterned
-/// sources were added.)
-pub const SIM_REVISION: u64 = 3;
+/// sources were added. rev 4: geometry-exact replay — strided
+/// receptive-field gather, replayed WG pairs, measured per-tile analytic
+/// densities — changed every replayed result and the options identity
+/// grew the gather mode.)
+pub const SIM_REVISION: u64 = 4;
 
 /// Cache identity of one simulation: everything that can change the
 /// result — the network (name *and* structure), the scheme, and the

@@ -130,7 +130,7 @@ impl Bitmap {
     /// keeps `lo + nbits <= shape.len()`), LSB-aligned and tail-masked.
     #[inline]
     pub(crate) fn extract_bits(&self, lo: usize, nbits: usize) -> u64 {
-        debug_assert!(nbits >= 1 && nbits <= 64);
+        debug_assert!((1..=64).contains(&nbits));
         let wi = lo / 64;
         let sh = lo % 64;
         let mut w = self.words[wi] >> sh;
@@ -141,6 +141,87 @@ impl Bitmap {
             w &= (1u64 << nbits) - 1;
         }
         w
+    }
+
+    /// Assemble the packed operand pattern of one receptive-field window:
+    /// channels `c0..c1`, `wh × ww` spatial taps anchored at `(ay, ax)`
+    /// (top-left, in map coordinates — negative or past-the-edge anchors
+    /// are how conv padding arrives here). Out-of-bounds taps contribute
+    /// structural zero bits, exactly like the zero padding the dense GEMM
+    /// would multiply by. Bits land in channel-major, row-major tap order
+    /// — the §4.3 streaming order of the true strided gather.
+    ///
+    /// `out` is cleared and resized (allocation-free once warm); in-map
+    /// row runs go through [`Bitmap::extract_bits`] a word at a time, so
+    /// no per-tap address arithmetic survives in the hot loop. Returns
+    /// the pattern length `(c1 − c0)·wh·ww` in bits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather_window_words(
+        &self,
+        c0: usize,
+        c1: usize,
+        ay: isize,
+        ax: isize,
+        wh: usize,
+        ww: usize,
+        out: &mut Vec<u64>,
+    ) -> usize {
+        debug_assert!(c0 < c1 && c1 <= self.shape.c, "channel range {c0}..{c1}");
+        let len = (c1 - c0) * wh * ww;
+        out.clear();
+        out.resize(len.div_ceil(64), 0);
+        let (h, w) = (self.shape.h as isize, self.shape.w as isize);
+        let mut pos = 0usize;
+        for c in c0..c1 {
+            for ky in 0..wh {
+                let y = ay + ky as isize;
+                if y < 0 || y >= h {
+                    pos += ww; // whole row out of bounds: zeros (already cleared)
+                    continue;
+                }
+                let x_lo = ax.max(0);
+                let x_hi = (ax + ww as isize).min(w);
+                if x_lo >= x_hi {
+                    pos += ww;
+                    continue;
+                }
+                pos += (x_lo - ax) as usize; // structural zeros left of the map
+                let mut base = self.index(c, y as usize, x_lo as usize);
+                let mut left = (x_hi - x_lo) as usize;
+                while left > 0 {
+                    let take = left.min(64);
+                    or_bits(out, pos, self.extract_bits(base, take), take);
+                    pos += take;
+                    base += take;
+                    left -= take;
+                }
+                pos += (ax + ww as isize - x_hi) as usize; // zeros right of the map
+            }
+        }
+        debug_assert_eq!(pos, len);
+        len
+    }
+
+    /// Non-zero count over the spatial window `[y0, y1) × [x0, x1)`
+    /// summed across every channel — the per-tile *measured* density the
+    /// pattern-informed analytic backend slices out of a replayed map
+    /// (`sim::layer_exec`). Word-extracted row runs, no per-bit `get`.
+    pub fn window_nz(&self, y0: usize, y1: usize, x0: usize, x1: usize) -> usize {
+        debug_assert!(y1 <= self.shape.h && x1 <= self.shape.w && y0 <= y1 && x0 <= x1);
+        let mut n = 0usize;
+        for c in 0..self.shape.c {
+            for y in y0..y1 {
+                let mut base = self.index(c, y, x0);
+                let mut left = x1 - x0;
+                while left > 0 {
+                    let take = left.min(64);
+                    n += self.extract_bits(base, take).count_ones() as usize;
+                    base += take;
+                    left -= take;
+                }
+            }
+        }
+        n
     }
 
     /// Copy `len` bits starting at `start` (mod the map size, wrapping)
@@ -336,6 +417,20 @@ impl Bitmap {
     }
 }
 
+/// OR `n` LSB-aligned bits (`n <= 64`, `bits` masked to `n`) into a
+/// packed buffer at bit position `pos`. The buffer must be pre-zeroed at
+/// the target range — this writes, it does not clear. Shared by the
+/// window gathers here and the joint-pair assembly in `sim::backend`.
+#[inline]
+pub(crate) fn or_bits(out: &mut [u64], pos: usize, bits: u64, n: usize) {
+    debug_assert!((1..=64).contains(&n));
+    let (wi, sh) = (pos / 64, pos % 64);
+    out[wi] |= bits << sh;
+    if sh != 0 && sh + n > 64 {
+        out[wi + 1] |= bits >> (64 - sh);
+    }
+}
+
 /// Word iterator over one channel's bits (see [`Bitmap::channel_words`]).
 /// Yields `ceil(h·w / 64)` words; the last is tail-masked.
 pub struct ChannelWords<'a> {
@@ -492,6 +587,70 @@ mod tests {
                 assert_eq!(bit, flat[(start + j) % 50], "start={start} j={j}");
             }
         }
+    }
+
+    #[test]
+    fn gather_window_matches_get_reference() {
+        let shape = Shape::new(5, 11, 13); // non-word-aligned rows on purpose
+        let mut rng = crate::util::rng::Pcg32::new(31);
+        let b = Bitmap::sample(shape, 0.45, &mut rng);
+        let mut out = Vec::new();
+        // Anchors inside, straddling every edge, and fully outside.
+        let cases: &[(usize, usize, isize, isize, usize, usize)] = &[
+            (0, 5, 0, 0, 3, 3),
+            (0, 5, -1, -1, 3, 3),   // top-left padding
+            (0, 5, 9, 11, 3, 3),    // bottom-right padding
+            (2, 3, 4, 2, 1, 13),    // single channel, full-width row
+            (1, 4, -2, -2, 15, 17), // window bigger than the map
+            (0, 5, -5, 0, 2, 3),    // entirely above the map
+            (0, 1, 0, -70, 1, 66),  // >64-bit row, mostly out of bounds
+        ];
+        for &(c0, c1, ay, ax, wh, ww) in cases {
+            let len = b.gather_window_words(c0, c1, ay, ax, wh, ww, &mut out);
+            assert_eq!(len, (c1 - c0) * wh * ww);
+            assert_eq!(out.len(), len.div_ceil(64));
+            let mut j = 0usize;
+            for c in c0..c1 {
+                for ky in 0..wh {
+                    for kx in 0..ww {
+                        let (y, x) = (ay + ky as isize, ax + kx as isize);
+                        let expect = y >= 0
+                            && x >= 0
+                            && (y as usize) < shape.h
+                            && (x as usize) < shape.w
+                            && b.get(c, y as usize, x as usize);
+                        let got = (out[j / 64] >> (j % 64)) & 1 == 1;
+                        let ctx = format!("c={c} ky={ky} kx={kx} case {c0}..{c1}@({ay},{ax})");
+                        assert_eq!(got, expect, "{ctx}");
+                        j += 1;
+                    }
+                }
+            }
+            // Bits past the pattern length stay zero (PE tail invariant).
+            let tail = len % 64;
+            if tail > 0 {
+                assert_eq!(out[len / 64] >> tail, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn window_nz_matches_per_bit_count() {
+        let shape = Shape::new(3, 9, 70); // rows cross word boundaries
+        let mut rng = crate::util::rng::Pcg32::new(8);
+        let b = Bitmap::sample(shape, 0.5, &mut rng);
+        for (y0, y1, x0, x1) in [(0, 9, 0, 70), (2, 5, 3, 66), (0, 1, 69, 70), (4, 4, 0, 70)] {
+            let mut expect = 0usize;
+            for c in 0..shape.c {
+                for y in y0..y1 {
+                    for x in x0..x1 {
+                        expect += b.get(c, y, x) as usize;
+                    }
+                }
+            }
+            assert_eq!(b.window_nz(y0, y1, x0, x1), expect, "[{y0},{y1})x[{x0},{x1})");
+        }
+        assert_eq!(b.window_nz(0, b.shape.h, 0, b.shape.w), b.count_nz());
     }
 
     #[test]

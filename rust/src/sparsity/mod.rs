@@ -11,5 +11,6 @@ pub use analyze::{
     analyze_network, capture_synthetic_trace, gradient_sparsity, LayerOpportunity, SparsityKind,
 };
 pub use bitmap::{Bitmap, ChannelWords};
+pub(crate) use bitmap::or_bits;
 pub use encode::{decode_group, encode_bitmap, encode_tensor, EncodedTensor, OffsetGroup, GROUP};
 pub use model::{SparsityModel, TraceSource};

@@ -1,0 +1,254 @@
+//! Perf-regression gate over the bench harness's JSON output.
+//!
+//! `benches/sim_hotpath.rs` persists a flat JSON object of measurements
+//! (`BENCH_sweep.json`); a committed baseline (`BENCH_baseline.json`)
+//! names the rows that are tracked, their reference values, and which
+//! direction is "better". `agos bench-check` compares the two and fails
+//! when any tracked row moves more than its tolerance in the worse
+//! direction.
+//!
+//! The committed baseline deliberately tracks *ratio* rows (parallel
+//! speedup, exact-vs-analytic slowdown, replay-vs-sampled, word-walk
+//! speedup): ratios divide out the host's absolute speed, so one
+//! baseline gates every machine — laptop and CI runner alike — where
+//! absolute `*_mean_s` rows would need per-host blessing. Absolute rows
+//! *can* be tracked; they just don't belong in a shared baseline.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::json::Json;
+
+/// Which way a tracked metric improves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller is better (times, slowdown ratios).
+    Lower,
+    /// Larger is better (speedup ratios).
+    Higher,
+}
+
+impl Direction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Direction::Lower => "lower",
+            Direction::Higher => "higher",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Direction> {
+        match s.to_ascii_lowercase().as_str() {
+            "lower" => Ok(Direction::Lower),
+            "higher" => Ok(Direction::Higher),
+            other => anyhow::bail!("unknown direction '{other}' (lower|higher)"),
+        }
+    }
+}
+
+/// One tracked row of the baseline.
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    /// Key in the bench JSON (e.g. "speedup").
+    pub name: String,
+    /// Reference value a regression is measured against.
+    pub baseline: f64,
+    pub better: Direction,
+    /// Per-row tolerance override (fraction, e.g. 0.25 = 25%).
+    pub tolerance: Option<f64>,
+}
+
+/// The committed perf baseline: tracked rows plus a default tolerance.
+#[derive(Clone, Debug)]
+pub struct BenchGate {
+    pub bench: String,
+    pub tolerance: f64,
+    pub rows: Vec<GateRow>,
+    /// Top-level fields other than bench/tolerance/rows ("note",
+    /// "source", …) — carried through `bless()` verbatim so re-blessing
+    /// never strips the baseline's self-documentation.
+    extra: Vec<(String, Json)>,
+}
+
+/// Verdict for one tracked row.
+#[derive(Clone, Debug)]
+pub struct RowOutcome {
+    pub name: String,
+    pub baseline: f64,
+    /// Measured value, `None` when the bench JSON lacks the row (always
+    /// a failure — a silently dropped row is how gates rot).
+    pub current: Option<f64>,
+    /// The bound the row must stay within to pass.
+    pub allowed: f64,
+    pub regressed: bool,
+}
+
+impl BenchGate {
+    pub fn from_json(j: &Json) -> Result<BenchGate> {
+        let bench = j.get("bench").as_str().context("baseline.bench")?.to_string();
+        let tolerance = j.get("tolerance").as_f64().unwrap_or(0.25);
+        anyhow::ensure!(tolerance > 0.0, "baseline.tolerance must be positive");
+        let mut rows = Vec::new();
+        for r in j.get("rows").as_arr().context("baseline.rows")? {
+            rows.push(GateRow {
+                name: r.get("name").as_str().context("row.name")?.to_string(),
+                baseline: r.get("baseline").as_f64().context("row.baseline")?,
+                better: Direction::parse(
+                    r.get("better").as_str().context("row.better")?,
+                )?,
+                tolerance: r.get("tolerance").as_f64(),
+            });
+        }
+        anyhow::ensure!(!rows.is_empty(), "baseline tracks no rows");
+        let extra = j
+            .as_obj()
+            .map(|obj| {
+                obj.iter()
+                    .filter(|(k, _)| !matches!(k.as_str(), "bench" | "tolerance" | "rows"))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(BenchGate { bench, tolerance, rows, extra })
+    }
+
+    pub fn load(path: &Path) -> Result<BenchGate> {
+        BenchGate::from_json(&Json::parse_file(path)?)
+            .with_context(|| format!("loading bench baseline {}", path.display()))
+    }
+
+    /// Compare every tracked row against the bench JSON's measurements.
+    pub fn check(&self, current: &Json) -> Vec<RowOutcome> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let tol = row.tolerance.unwrap_or(self.tolerance);
+                let allowed = match row.better {
+                    Direction::Lower => row.baseline * (1.0 + tol),
+                    Direction::Higher => row.baseline * (1.0 - tol),
+                };
+                let current_v = current.get(&row.name).as_f64();
+                let regressed = match current_v {
+                    None => true,
+                    Some(v) => match row.better {
+                        Direction::Lower => v > allowed,
+                        Direction::Higher => v < allowed,
+                    },
+                };
+                RowOutcome {
+                    name: row.name.clone(),
+                    baseline: row.baseline,
+                    current: current_v,
+                    allowed,
+                    regressed,
+                }
+            })
+            .collect()
+    }
+
+    /// Re-bless: the same tracked rows and tolerances with baselines
+    /// replaced by the current measurements. Errors if a tracked row is
+    /// missing from the measurements (blessing must not drop coverage).
+    pub fn bless(&self, current: &Json) -> Result<Json> {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let v = current.get(&row.name).as_f64().with_context(|| {
+                    format!("bench output lacks tracked row '{}'", row.name)
+                })?;
+                let mut r = Json::from_pairs(vec![
+                    ("name", row.name.as_str().into()),
+                    ("baseline", v.into()),
+                    ("better", row.better.label().into()),
+                ]);
+                if let Some(t) = row.tolerance {
+                    r.set("tolerance", t.into());
+                }
+                Ok(r)
+            })
+            .collect::<Result<_>>()?;
+        let mut j = Json::from_pairs(vec![
+            ("bench", self.bench.as_str().into()),
+            ("tolerance", self.tolerance.into()),
+        ]);
+        for (k, v) in &self.extra {
+            j.set(k, v.clone());
+        }
+        j.set("rows", Json::Arr(rows));
+        Ok(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline() -> Json {
+        Json::parse(
+            r#"{
+          "bench": "sim_hotpath",
+          "note": "ratio rows only",
+          "tolerance": 0.25,
+          "rows": [
+            {"name": "speedup", "baseline": 2.0, "better": "higher"},
+            {"name": "slowdown", "baseline": 10.0, "better": "lower", "tolerance": 0.5}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn passes_within_tolerance_fails_beyond() {
+        let gate = BenchGate::from_json(&baseline()).unwrap();
+        assert_eq!(gate.rows.len(), 2);
+        // Both rows comfortably inside their bounds.
+        let good = Json::from_pairs(vec![("speedup", 1.9.into()), ("slowdown", 12.0.into())]);
+        assert!(gate.check(&good).iter().all(|o| !o.regressed));
+        // speedup below 2.0·0.75 = 1.5 regresses; slowdown above
+        // 10·1.5 = 15 regresses (per-row tolerance override).
+        let bad_speed = Json::from_pairs(vec![("speedup", 1.4.into()), ("slowdown", 9.0.into())]);
+        let out = gate.check(&bad_speed);
+        assert!(out[0].regressed && !out[1].regressed);
+        assert!((out[0].allowed - 1.5).abs() < 1e-12);
+        let bad_slow = Json::from_pairs(vec![("speedup", 2.0.into()), ("slowdown", 15.1.into())]);
+        let out = gate.check(&bad_slow);
+        assert!(!out[0].regressed && out[1].regressed);
+        assert!((out[1].allowed - 15.0).abs() < 1e-12);
+        // Better-than-baseline never fails.
+        let fast = Json::from_pairs(vec![("speedup", 9.0.into()), ("slowdown", 0.1.into())]);
+        assert!(gate.check(&fast).iter().all(|o| !o.regressed));
+    }
+
+    #[test]
+    fn missing_rows_fail_and_blessing_preserves_coverage() {
+        let gate = BenchGate::from_json(&baseline()).unwrap();
+        let partial = Json::from_pairs(vec![("speedup", 2.0.into())]);
+        let out = gate.check(&partial);
+        assert!(!out[0].regressed);
+        assert!(out[1].regressed, "missing tracked row must fail");
+        assert!(out[1].current.is_none());
+        // bless() refuses incomplete measurements…
+        assert!(gate.bless(&partial).is_err());
+        // …and otherwise rewrites baselines in place, keeping overrides.
+        let full = Json::from_pairs(vec![("speedup", 3.0.into()), ("slowdown", 8.0.into())]);
+        let blessed = gate.bless(&full).unwrap();
+        let gate2 = BenchGate::from_json(&blessed).unwrap();
+        assert_eq!(gate2.rows[0].baseline, 3.0);
+        assert_eq!(gate2.rows[1].baseline, 8.0);
+        assert_eq!(gate2.rows[1].tolerance, Some(0.5));
+        assert!(gate2.check(&full).iter().all(|o| !o.regressed));
+        // Self-documentation fields survive re-blessing verbatim.
+        assert_eq!(blessed.get("note").as_str(), Some("ratio rows only"));
+    }
+
+    #[test]
+    fn malformed_baselines_are_rejected() {
+        assert!(BenchGate::from_json(&Json::parse(r#"{"bench":"x","rows":[]}"#).unwrap()).is_err());
+        let sideways =
+            r#"{"bench":"x","rows":[{"name":"a","baseline":1.0,"better":"sideways"}]}"#;
+        assert!(BenchGate::from_json(&Json::parse(sideways).unwrap()).is_err());
+        assert!(Direction::parse("HIGHER").is_ok());
+    }
+}

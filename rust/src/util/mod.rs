@@ -12,6 +12,7 @@ pub mod rng;
 pub mod json;
 pub mod stats;
 pub mod bench;
+pub mod bench_gate;
 pub mod cli;
 pub mod prop;
 pub mod log;

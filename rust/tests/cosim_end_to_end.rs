@@ -76,6 +76,7 @@ fn pipeline_matches_trainer_and_feeds_cosim() {
         &AcceleratorConfig::default(),
         &SimOptions { batch: 4, ..SimOptions::default() },
         false,
+        0,
     )
     .unwrap();
     assert_eq!(report.network, "agos_cnn");
@@ -98,6 +99,7 @@ fn pipeline_matches_trainer_and_feeds_cosim() {
             ..SimOptions::default()
         },
         true,
+        0,
     )
     .unwrap();
     assert!(replayed.replayed);

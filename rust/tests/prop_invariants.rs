@@ -25,6 +25,7 @@ fn arb_task(g: &mut Gen) -> LayerTask {
         out_sparsity: g.bool().then(|| g.f64_in(0.0, 0.95)),
         input_elems: (m * u * v) as f64,
         weight_elems: m as f64 * crs,
+        geom: Default::default(),
     }
 }
 

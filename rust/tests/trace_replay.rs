@@ -15,12 +15,16 @@
 
 use std::sync::Arc;
 
-use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions};
-use agos::nn::zoo;
-use agos::sim::{simulate_network, simulate_network_jobs, ReplayBank, SweepKey, SweepPlan, SweepRunner};
-use agos::sparsity::{capture_synthetic_trace, SparsityModel};
+use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions};
+use agos::nn::{zoo, Phase, Shape};
+use agos::sim::{
+    exact_tile_cost, simulate_network, simulate_network_jobs, BitmapSource, ExactPe, ReplayBank,
+    SweepKey, SweepPlan, SweepRunner, TaskGeom, TileGeom,
+};
+use agos::sparsity::{capture_synthetic_trace, Bitmap, SparsityModel};
 use agos::trace::TraceFile;
 use agos::util::json::Json;
+use agos::util::rng::Pcg32;
 
 fn exact_opts(batch: usize) -> SimOptions {
     SimOptions {
@@ -187,6 +191,151 @@ fn different_patterns_same_means_never_share_cache_entries() {
         SweepKey::new(&net, Scheme::InOut, &cfg, &f_a, &model),
         SweepKey::new(&net, Scheme::InOut, &cfg, &f_b, &model)
     );
+}
+
+#[test]
+fn gather_equals_streaming_on_single_channel_1x1_stride1_convs() {
+    // The one geometry where the two window assemblies must coincide
+    // bit-for-bit: a single-channel 1×1 stride-1 pad-0 conv. The
+    // geometry gather reads exactly the map bit at (0, y, x); the
+    // streaming slice anchors at the identically-scaled flat position
+    // y·w + x and takes crs = 1 bit — the same bit. Whole tiles must
+    // therefore cost identically through both paths.
+    let pe = ExactPe::default();
+    let mut rng = Pcg32::new(3);
+    let map = Bitmap::sample(Shape::new(1, 12, 12), 0.5, &mut rng);
+    let geom = TileGeom { index: 0, m: 1, u: 12, v: 12, window: (0, 12, 0, 12) };
+    let conv = TaskGeom::Conv { r: 1, s: 1, stride: 1, pad: 0, dw: false };
+    let dense_out = BitmapSource::Sampled {
+        density: 1.0,
+        pattern: BitmapPattern::Iid,
+        blob_radius: 0,
+    };
+    let gathered = exact_tile_cost(
+        &pe,
+        1,
+        &geom,
+        4096,
+        &BitmapSource::Gathered { map: &map, geom: conv },
+        &dense_out,
+        &mut Pcg32::new(1),
+    );
+    let streamed = exact_tile_cost(
+        &pe,
+        1,
+        &geom,
+        4096,
+        &BitmapSource::Streamed { map: &map },
+        &dense_out,
+        &mut Pcg32::new(1),
+    );
+    assert_eq!(gathered, streamed, "1x1/s1/p0 single-channel windows must be bit-identical");
+    assert_eq!(gathered.1, map.count_nz() as f64, "MACs are exactly the map popcount");
+}
+
+#[test]
+fn wg_pair_replay_tracks_sampled_wg_at_matched_density() {
+    // The WG phase replayed through joint act×grad pairs must land near
+    // the sampled exact backend at the model's matched joint density —
+    // the pair changes patterns, not the workload.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(21);
+    let sampled_o = exact_opts(2);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+    let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+    let replay_o = replay_opts(2, &trace, bank);
+    for scheme in [Scheme::In, Scheme::InOutWr] {
+        let s = simulate_network(&net, &cfg, &sampled_o, &model, scheme);
+        let r = simulate_network(&net, &cfg, &replay_o, &model, scheme);
+        let (sw, rw) = (s.phase(Phase::WeightGrad), r.phase(Phase::WeightGrad));
+        let cyc_err = (rw.cycles - sw.cycles).abs() / sw.cycles;
+        let mac_err = (rw.performed_macs - sw.performed_macs).abs() / sw.performed_macs;
+        assert!(
+            cyc_err < 0.30,
+            "{}: WG pair {:.0} vs sampled {:.0} cycles ({:.1}%)",
+            scheme.label(),
+            rw.cycles,
+            sw.cycles,
+            cyc_err * 100.0
+        );
+        assert!(mac_err < 0.30, "{}: WG macs deviate {:.1}%", scheme.label(), mac_err * 100.0);
+    }
+}
+
+#[test]
+fn replayed_cosim_draws_zero_rng_in_all_three_phases() {
+    // The acceptance bar: with geometry-exact replay armed, every task
+    // of every phase (FP operand gathers, BP operand/mask, WG pairs,
+    // pool/GAP-derived FC operands) resolves from captured maps — so
+    // the engine's per-image RNG streams are never touched, and changing
+    // the stream seed cannot change any result, on either backend.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(11);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+    for backend in [ExecBackend::Exact, ExecBackend::Analytic] {
+        let mk = |seed: u64| SimOptions {
+            seed,
+            backend,
+            ..replay_opts(3, &trace, ReplayBank::from_trace(&net, &trace).unwrap())
+        };
+        for scheme in Scheme::ALL {
+            let a = simulate_network(&net, &cfg, &mk(1), &model, scheme);
+            let b = simulate_network(&net, &cfg, &mk(0xDEAD_BEEF), &model, scheme);
+            assert_eq!(
+                a.total_cycles(),
+                b.total_cycles(),
+                "{backend:?}/{}: replay must be seed-independent (zero RNG)",
+                scheme.label()
+            );
+            assert_eq!(a.total_energy_j(), b.total_energy_j());
+            for (x, y) in a.per_layer.iter().zip(&b.per_layer) {
+                assert_eq!(x.cycles, y.cycles, "{backend:?} {} {}", x.name, x.phase.label());
+                assert_eq!(x.performed_macs, y.performed_macs);
+            }
+        }
+    }
+    // The streaming legacy mode, by contrast, still samples WG — seeds
+    // must matter there (the contrast proves the test has teeth).
+    let stream = |seed: u64| SimOptions {
+        seed,
+        gather: GatherMode::Streaming,
+        ..replay_opts(3, &trace, ReplayBank::from_trace(&net, &trace).unwrap())
+    };
+    let a = simulate_network(&net, &cfg, &stream(1), &model, Scheme::InOutWr);
+    let b = simulate_network(&net, &cfg, &stream(0xDEAD_BEEF), &model, Scheme::InOutWr);
+    assert_ne!(a.total_cycles(), b.total_cycles(), "streaming WG still samples");
+}
+
+#[test]
+fn analytic_replay_agrees_with_exact_replay_on_validated_crs_stacks() {
+    // The pattern-informed analytic fast path must track the exact
+    // replay within the same kind of tolerance the sampled backends
+    // hold to (backend_equivalence) — agos_cnn's receptive fields all
+    // sit in the PE-validated CRS range.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(31);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+    for scheme in [Scheme::Dense, Scheme::In, Scheme::InOut, Scheme::InOutWr] {
+        let exact_o = replay_opts(2, &trace, ReplayBank::from_trace(&net, &trace).unwrap());
+        let analytic_o = SimOptions {
+            backend: ExecBackend::Analytic,
+            ..replay_opts(2, &trace, ReplayBank::from_trace(&net, &trace).unwrap())
+        };
+        let e = simulate_network(&net, &cfg, &exact_o, &model, scheme);
+        let a = simulate_network(&net, &cfg, &analytic_o, &model, scheme);
+        let err = (a.total_cycles() - e.total_cycles()).abs() / e.total_cycles();
+        assert!(
+            err < 0.30,
+            "{}: analytic-replay {:.0} vs exact-replay {:.0} cycles ({:.1}%)",
+            scheme.label(),
+            a.total_cycles(),
+            e.total_cycles(),
+            err * 100.0
+        );
+    }
 }
 
 #[test]
