@@ -146,6 +146,21 @@ fn main() {
         }
         black_box(n)
     });
+
+    // TraceFile v3 codec on a realistically sparse blobbed map (the
+    // batch-wide capture payload): RLE decode throughput next to the
+    // legacy hex decode, plus the deterministic payload-size ratio the
+    // bench gate tracks (seeded map → identical on every host).
+    let v3_map = Bitmap::sample_blobs(Shape::new(64, 56, 56), 0.03, 4, &mut Pcg32::new(9));
+    let v3_rle = v3_map.encode_rle();
+    let v3_hex = v3_map.encode_hex();
+    b.case("trace_v3_encode_rle_64x56x56", || black_box(v3_map.encode_rle().len()));
+    b.case("trace_v3_decode_rle_64x56x56", || {
+        Bitmap::decode_rle(v3_map.shape, black_box(&v3_rle)).unwrap().count_nz()
+    });
+    b.case("trace_v2_decode_hex_64x56x56", || {
+        Bitmap::decode_hex(v3_map.shape, black_box(&v3_hex)).unwrap().count_nz()
+    });
     b.finish();
 
     // Persist the sweep trajectory point (sequential vs parallel).
@@ -164,6 +179,8 @@ fn main() {
     let replay_stream = find("backend_exact_replay_stream_agos_b1");
     let bool_walk = find("bitmap_channel_bool_walk_64x56x56");
     let word_walk = find("bitmap_channel_word_walk_64x56x56");
+    let v3_decode = find("trace_v3_decode_rle_64x56x56");
+    let hex_decode = find("trace_v2_decode_hex_64x56x56");
     let j = Json::from_pairs(vec![
         ("bench", "sweep_googlenet_4schemes".into()),
         ("network", "googlenet".into()),
@@ -193,6 +210,11 @@ fn main() {
         ("bitmap_bool_walk_mean_s", bool_walk.mean.into()),
         ("bitmap_word_walk_mean_s", word_walk.mean.into()),
         ("bitmap_word_walk_speedup", (bool_walk.mean / word_walk.mean).into()),
+        // TraceFile v3 codec: decode throughput vs the hex decode and
+        // the deterministic payload-size ratio (seeded blob map).
+        ("trace_v3_decode_mean_s", v3_decode.mean.into()),
+        ("trace_v3_decode_vs_hex", (v3_decode.mean / hex_decode.mean).into()),
+        ("trace_v3_rle_bytes_ratio", (v3_rle.len() as f64 / v3_hex.len() as f64).into()),
     ]);
     j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
     println!(

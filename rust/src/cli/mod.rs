@@ -15,13 +15,14 @@
 use std::path::{Path, PathBuf};
 
 use crate::config::{
-    AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions, TrainOptions,
+    AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions, TraceFormat,
+    TrainOptions,
 };
 use crate::coordinator::{cosim_from_traces, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
 use crate::sim::{simulate_network, SweepPlan, SweepRunner};
-use crate::sparsity::{analyze_network, capture_synthetic_trace, SparsityModel};
+use crate::sparsity::{analyze_network, capture_synthetic_trace_images, SparsityModel};
 use crate::trace::TraceFile;
 use crate::util::cli::{App, Args, Command, OptSpec};
 use crate::util::json::Json;
@@ -49,6 +50,7 @@ fn app() -> App {
                         "trace-images",
                         "images captured per traced step, each its own trace step (default 1)",
                     ),
+                    opt("trace-format", "trace payload encoding: v2|v3 (default v3 delta/RLE)"),
                     opt("seed", "dataset seed (default 7)"),
                     opt("artifacts", "artifacts directory (default artifacts)"),
                     opt("out", "write loss curve + traces JSON here"),
@@ -56,10 +58,15 @@ fn app() -> App {
             },
             Command {
                 name: "trace",
-                about: "synthesize a v2 trace file with packed per-ReLU bitmaps (no PJRT needed)",
+                about: "synthesize a trace file with packed bitmap payloads (no PJRT needed)",
                 opts: vec![
                     opt("network", "network to capture (default agos_cnn)"),
                     opt("steps", "traced steps to synthesize (default 4)"),
+                    opt(
+                        "trace-images",
+                        "images captured per traced step, each its own trace step (default 1)",
+                    ),
+                    opt("trace-format", "trace payload encoding: v2|v3 (default v3 delta/RLE)"),
                     opt("seed", "sparsity model seed"),
                     opt("pattern", "iid|blobs bitmap structure (default iid)"),
                     opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
@@ -274,6 +281,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
         steps: args.opt_usize("steps", 300)?,
         trace_every: args.opt_usize("trace-every", 50)?,
         trace_images: args.opt_usize("trace-images", 1)?,
+        trace_format: TraceFormat::parse(args.opt_or("trace-format", "v3"))?,
         seed: args.opt_u64("seed", 7)?,
         artifacts_dir: PathBuf::from(args.opt_or("artifacts", "artifacts")),
         ..TrainOptions::default()
@@ -308,19 +316,24 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
-/// Synthesize a v2 trace file (packed per-ReLU bitmaps) from the
-/// calibrated sparsity model — the capture path that needs no PJRT
-/// artifacts, and the producer side of the capture→replay smoke
+/// Synthesize a payload-bearing trace file (v3 delta/RLE by default,
+/// incl. post-Add footprints on residual nets) from the calibrated
+/// sparsity model — the capture path that needs no PJRT artifacts, and
+/// the producer side of the capture→replay smoke
 /// (`agos trace … && agos cosim --replay --backend exact …`). With
 /// artifacts built, `agos train --out` captures *real* payloads instead.
 fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
     let net = zoo::by_name(args.opt_or("network", "agos_cnn"))?;
     let steps = args.opt_usize("steps", 4)?;
+    let images = args.opt_usize("trace-images", 1)?;
+    let format = TraceFormat::parse(args.opt_or("trace-format", "v3"))?;
     let seed = args.opt_u64("seed", 0xA605)?;
     let pattern = BitmapPattern::parse(args.opt_or("pattern", "iid"))?;
     let blob_radius = args.opt_usize("blob-radius", 2)?;
     let model = SparsityModel::synthetic(seed);
-    let trace = capture_synthetic_trace(&net, &model, steps, pattern, blob_radius);
+    let mut trace =
+        capture_synthetic_trace_images(&net, &model, steps, images, pattern, blob_radius);
+    trace.format = format;
 
     let path = PathBuf::from(args.opt_or("out", "results/traces.json"));
     trace.save(&path)?;
@@ -333,11 +346,12 @@ fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
         .sum();
     let means = trace.mean_act_sparsity();
     println!(
-        "captured {} steps x {} ReLU layers of '{}' [{} pattern] -> {}",
+        "captured {} steps x {} traced layers of '{}' [{} pattern, {} format] -> {}",
         trace.steps.len(),
         trace.steps.first().map_or(0, |s| s.layers.len()),
         net.name,
         pattern.label(),
+        format.label(),
         path.display()
     );
     for (name, s) in &means {
@@ -530,17 +544,27 @@ fn cmd_sparsity(args: &Args) -> anyhow::Result<i32> {
 
 fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
     let path = args.opt("traces").ok_or_else(|| anyhow::anyhow!("--traces required"))?;
-    let traces = TraceFile::load(Path::new(path))?;
+    // Lenient load: a corrupt/truncated bitmap payload is dropped with a
+    // layer/step-contexted warning instead of killing the run — a
+    // damaged capture degrades, it does not panic. Structural damage
+    // (bad JSON, missing scalars) still errors.
+    let (traces, warnings) = TraceFile::load_lenient(Path::new(path))?;
+    for w in &warnings {
+        eprintln!("cosim: trace warning: {w}");
+    }
+    let mut replay = args.flag("replay");
+    if replay && !warnings.is_empty() && !traces.has_bitmaps() {
+        // Every payload was corrupt: fall back to the scalar cosim the
+        // surviving fractions still support. (A trace that never had
+        // payloads stays a hard error below — that is a usage mistake,
+        // not data damage.)
+        eprintln!("cosim: all bitmap payloads dropped — falling back to scalar co-simulation");
+        replay = false;
+    }
     let mut opts = SimOptions { batch: args.opt_usize("batch", 16)?, ..SimOptions::default() };
     apply_backend_opts(&mut opts, args)?;
     let jobs = args.opt_usize("jobs", 0)?;
-    let report = cosim_from_traces(
-        &traces,
-        &AcceleratorConfig::default(),
-        &opts,
-        args.flag("replay"),
-        jobs,
-    )?;
+    let report = cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts, replay, jobs)?;
     println!(
         "co-simulation of '{}' [{} backend{}] (mean measured sparsity {:.2})",
         report.network,
@@ -782,6 +806,7 @@ mod tests {
                     .map(|i| LayerTrace::scalar(&format!("relu{i}"), 0.5, 0.5, true))
                     .collect(),
             }],
+            ..TraceFile::default()
         };
         traces.save(&path).unwrap();
         let path_s = path.to_string_lossy().to_string();
@@ -900,6 +925,96 @@ mod tests {
             "teleport",
         ]))
         .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_format_and_images_flags_flow_through() {
+        use crate::trace::{TraceFile, TraceFormat};
+        let dir = std::env::temp_dir().join("agos_cli_trace_v3_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let v2 = dir.join("v2.json");
+        let v3 = dir.join("v3.json");
+        for (path, fmt) in [(&v2, "v2"), (&v3, "v3")] {
+            let path_s = path.to_string_lossy().to_string();
+            assert_eq!(
+                run(&sv(&[
+                    "trace",
+                    "--network",
+                    "agos_resnet",
+                    "--steps",
+                    "1",
+                    "--trace-images",
+                    "2",
+                    "--trace-format",
+                    fmt,
+                    "--out",
+                    &path_s,
+                ]))
+                .unwrap(),
+                0
+            );
+        }
+        let t2 = TraceFile::load(&v2).unwrap();
+        let t3 = TraceFile::load(&v3).unwrap();
+        assert_eq!(t2.format, TraceFormat::V2);
+        assert_eq!(t3.format, TraceFormat::V3);
+        assert_eq!(t2.steps, t3.steps, "same content under both encodings");
+        assert_eq!(t3.steps.len(), 2, "one StepTrace per captured image");
+        assert!(
+            std::fs::metadata(&v3).unwrap().len() < std::fs::metadata(&v2).unwrap().len(),
+            "v3 files are smaller"
+        );
+        // The v3 residual capture replays through cosim.
+        let v3_s = v3.to_string_lossy().to_string();
+        assert_eq!(
+            run(&sv(&[
+                "cosim", "--traces", &v3_s, "--batch", "2", "--backend", "exact",
+                "--exact-cap", "8", "--replay",
+            ]))
+            .unwrap(),
+            0
+        );
+        // Bad format names are rejected at the CLI boundary.
+        assert!(run(&sv(&["trace", "--trace-format", "v9", "--out", &v3_s])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cosim_falls_back_to_scalars_when_every_payload_is_corrupt() {
+        let dir = std::env::temp_dir().join("agos_cli_cosim_corrupt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("traces.json");
+        let path_s = path.to_string_lossy().to_string();
+        assert_eq!(
+            run(&sv(&["trace", "--network", "agos_cnn", "--steps", "1", "--out", &path_s]))
+                .unwrap(),
+            0
+        );
+        // Corrupt every payload's word stream in place.
+        let mut j = Json::parse_file(&path).unwrap();
+        let Json::Obj(top) = &mut j else { unreachable!() };
+        let Json::Arr(steps) = top.get_mut("steps").unwrap() else { unreachable!() };
+        for s in steps {
+            let Json::Obj(step) = s else { unreachable!() };
+            let Json::Arr(layers) = step.get_mut("layers").unwrap() else { unreachable!() };
+            for l in layers {
+                for slot in ["act_bitmap", "grad_bitmap"] {
+                    if let Json::Obj(layer) = l {
+                        if let Some(Json::Obj(bm)) = layer.get_mut(slot) {
+                            bm.insert("words".into(), Json::Str("!!".into()));
+                        }
+                    }
+                }
+            }
+        }
+        j.write_file(&path).unwrap();
+        // --replay on the damaged file warns and falls back, exit 0.
+        assert_eq!(
+            run(&sv(&["cosim", "--traces", &path_s, "--batch", "1", "--replay"])).unwrap(),
+            0,
+            "corrupt payloads must degrade, not die"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

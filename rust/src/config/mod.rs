@@ -14,3 +14,4 @@ pub use train_opts::TrainOptions;
 /// backend without caring about the `sim` internals; the type itself
 /// lives with the execution backends (`sim::backend`).
 pub use crate::sim::ExecBackend;
+pub use crate::trace::TraceFormat;

@@ -1,5 +1,6 @@
 //! Training-loop options for the end-to-end coordinator example.
 
+use crate::trace::TraceFormat;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -16,9 +17,13 @@ pub struct TrainOptions {
     pub trace_every: usize,
     /// Images whose packed bitmaps are captured per traced step (each
     /// becomes its own trace-file step, so the replay bank's round-robin
-    /// cycles through them; clamped to the artifact batch). Payload size
-    /// scales linearly — 1 keeps trace files small.
+    /// cycles through them; clamped to the artifact batch). Under the v3
+    /// delta/RLE encoding the payload growth is sub-linear, which is
+    /// what makes batch-wide capture practical.
     pub trace_images: usize,
+    /// On-disk trace payload encoding (`--trace-format`): v3 delta/RLE
+    /// by default, v2 raw hex for older tooling.
+    pub trace_format: TraceFormat,
     /// Directory containing AOT artifacts.
     pub artifacts_dir: std::path::PathBuf,
     /// Log loss every N steps.
@@ -34,6 +39,7 @@ impl Default for TrainOptions {
             seed: 7,
             trace_every: 50,
             trace_images: 1,
+            trace_format: TraceFormat::default(),
             artifacts_dir: std::path::PathBuf::from("artifacts"),
             log_every: 10,
         }
@@ -49,6 +55,7 @@ impl TrainOptions {
             ("seed", self.seed.into()),
             ("trace_every", self.trace_every.into()),
             ("trace_images", self.trace_images.into()),
+            ("trace_format", self.trace_format.label().into()),
             ("log_every", self.log_every.into()),
             ("artifacts_dir", self.artifacts_dir.to_string_lossy().to_string().into()),
         ])
@@ -64,7 +71,9 @@ mod tests {
         let t = TrainOptions::default();
         assert!(t.steps > 0 && t.batch > 0);
         assert_eq!(t.trace_images, 1);
+        assert_eq!(t.trace_format, TraceFormat::V3, "new captures default to v3");
         assert_eq!(t.to_json().get("trace_images").as_usize(), Some(1));
+        assert_eq!(t.to_json().get("trace_format").as_str(), Some("v3"));
         assert!(t.to_json().get("steps").as_usize().unwrap() == t.steps);
     }
 }

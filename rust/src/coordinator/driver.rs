@@ -158,6 +158,7 @@ mod tests {
                     .map(|i| LayerTrace::scalar(&format!("relu{i}"), sparsity, sparsity, true))
                     .collect(),
             }],
+            ..TraceFile::default()
         }
     }
 

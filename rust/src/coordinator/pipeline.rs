@@ -88,6 +88,7 @@ pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
 
     // --- main loop: PJRT execution ----------------------------------------
     let mut log = TrainLog { traces: TraceFile::new("agos_cnn"), ..TrainLog::default() };
+    log.traces.format = opts.trace_format;
     let t0 = Instant::now();
     for step in 0..opts.steps {
         if opts.trace_every > 0 && step % opts.trace_every == 0 {

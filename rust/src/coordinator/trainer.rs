@@ -59,6 +59,7 @@ pub(crate) fn layer_trace_for_image(
         identity_ok: batch_ok,
         act_bitmap: None,
         grad_bitmap: None,
+        footprint: false,
     })
 }
 
@@ -146,12 +147,19 @@ impl Trainer {
     }
 
     /// Run the configured number of steps, tracing every
-    /// `opts.trace_every` steps.
+    /// `opts.trace_every` steps. The trace file is stamped with the
+    /// configured on-disk format (`--trace-format`, v3 delta/RLE by
+    /// default), so `log.traces.save()` writes exactly what the CLI
+    /// asked for. Post-Add footprints ride the same path: any act-only
+    /// tensor pair the artifact exposes for an Add layer would land as
+    /// a `LayerTrace::from_act` entry (the trained CNN is Add-free, so
+    /// the synthetic capture is where that today materializes).
     pub fn run(&mut self) -> Result<TrainLog> {
         let mut log = TrainLog {
             traces: TraceFile::new("agos_cnn"),
             ..TrainLog::default()
         };
+        log.traces.format = self.opts.trace_format;
         let t0 = Instant::now();
         for step in 0..self.opts.steps {
             if self.opts.trace_every > 0 && step % self.opts.trace_every == 0 {

@@ -1,0 +1,95 @@
+//! A compact BN-free residual CNN in the `agos_cnn` family — the
+//! trace/replay testbed for **Add-fed backpropagation**.
+//!
+//! ResNet-18 interleaves BatchNorm, which re-densifies gradients (§2.1,
+//! Fig 3c), so its BP tail is dense and an Add node never carries an
+//! exploitable gradient map. This network drops BN (conv–ReLU blocks
+//! like VGG/GoogLeNet) so the §3 sparsity survives *through* the
+//! residual Adds:
+//!
+//! * `b1_conv2` feeds the Add directly — the gradient arriving at its
+//!   output is the post-Add ReLU's masked gradient passed through the
+//!   Add unchanged (Add backward is the identity into both branches).
+//!   Replaying it requires the gradient pass-through resolution in
+//!   `sim::replay` (v3 traces).
+//! * `b3_add` feeds GAP → fc with **no** post-Add ReLU (the pre-act
+//!   shortcut style), so the head's operand footprint derives through
+//!   an Add node — resolvable only from a captured post-Add footprint
+//!   (conv summands can be negative; the footprint is capture-time
+//!   data, see DESIGN.md).
+
+use crate::nn::Network;
+
+/// Build the 3-block residual AGOS CNN at 32×32×3.
+pub fn agos_resnet() -> Network {
+    let mut net = Network::new("agos_resnet");
+    let x = net.input(3, 32, 32);
+    let c1 = net.conv("conv1", x, 16, 3, 1, 1);
+    let r1 = net.relu("relu1", c1);
+
+    // Block 1: identity shortcut, post-add ReLU.
+    let b1c1 = net.conv("b1_conv1", r1, 16, 3, 1, 1);
+    let b1r1 = net.relu("b1_relu1", b1c1);
+    let b1c2 = net.conv("b1_conv2", b1r1, 16, 3, 1, 1);
+    let b1a = net.add("b1_add", b1c2, r1);
+    let b1r2 = net.relu("b1_relu2", b1a);
+
+    // Block 2: downsampling with a 1×1 projection shortcut.
+    let b2c1 = net.conv("b2_conv1", b1r2, 32, 3, 2, 1);
+    let b2r1 = net.relu("b2_relu1", b2c1);
+    let b2c2 = net.conv("b2_conv2", b2r1, 32, 3, 1, 1);
+    let b2p = net.conv("b2_proj", b1r2, 32, 1, 2, 0);
+    let b2a = net.add("b2_add", b2c2, b2p);
+    let b2r2 = net.relu("b2_relu2", b2a);
+
+    // Block 3: pre-act-style shortcut from the previous Add output, and
+    // the block's own Add feeds the head with no ReLU in between.
+    let b3c1 = net.conv("b3_conv1", b2r2, 32, 3, 1, 1);
+    let b3r1 = net.relu("b3_relu1", b3c1);
+    let b3c2 = net.conv("b3_conv2", b3r1, 32, 3, 1, 1);
+    let b3a = net.add("b3_add", b3c2, b2a);
+
+    let g = net.gap("gap", b3a);
+    let f = net.fc("fc", g, 10);
+    net.softmax("prob", f);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{LayerKind, Shape};
+
+    #[test]
+    fn structure() {
+        let n = agos_resnet();
+        n.validate().unwrap();
+        // stem + 2 convs/block × 3 + projection + fc = 9 compute layers.
+        assert_eq!(n.compute_layers().len(), 9);
+        assert_eq!(n.by_name("b1_add").unwrap().out, Shape::new(16, 32, 32));
+        assert_eq!(n.by_name("b2_add").unwrap().out, Shape::new(32, 16, 16));
+        assert_eq!(n.by_name("b3_add").unwrap().out, Shape::new(32, 16, 16));
+        assert_eq!(n.by_name("fc").unwrap().out, Shape::new(10, 1, 1));
+        // BN-free on purpose: the whole point is Add-fed gradient maps.
+        assert!(n.layers().iter().all(|l| !matches!(l.kind, LayerKind::BatchNorm)));
+    }
+
+    #[test]
+    fn add_fed_wiring_is_what_the_replay_tests_rely_on() {
+        let n = agos_resnet();
+        // b1_conv2's only consumer is the Add; the Add's only consumer
+        // is the post-add ReLU — the gradient pass-through chain.
+        let b1c2 = n.by_name("b1_conv2").unwrap().id;
+        let b1a = n.by_name("b1_add").unwrap().id;
+        assert_eq!(n.consumers(b1c2), vec![b1a]);
+        assert_eq!(n.consumers(b1a), vec![n.by_name("b1_relu2").unwrap().id]);
+        // b3_add feeds GAP directly (no ReLU): the head's footprint must
+        // come from a captured post-Add map.
+        let b3a = n.by_name("b3_add").unwrap().id;
+        assert_eq!(n.consumers(b3a), vec![n.by_name("gap").unwrap().id]);
+        assert!(matches!(n.layer(n.by_name("gap").unwrap().id).kind, LayerKind::GlobalAvgPool));
+        // b2_add has two consumers (the post-add ReLU and block 3's
+        // shortcut) — summed gradients, so its branches stay dense.
+        assert_eq!(n.consumers(n.by_name("b2_add").unwrap().id).len(), 2);
+    }
+}

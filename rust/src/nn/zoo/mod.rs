@@ -7,6 +7,7 @@
 //! structural distinction §6 organizes its results around.
 
 mod agos_cnn;
+mod agos_resnet;
 mod vgg16;
 mod resnet18;
 mod googlenet;
@@ -14,6 +15,7 @@ mod densenet121;
 mod mobilenetv1;
 
 pub use agos_cnn::agos_cnn;
+pub use agos_resnet::agos_resnet;
 pub use densenet121::densenet121;
 pub use googlenet::googlenet;
 pub use mobilenetv1::mobilenet_v1;
@@ -36,8 +38,10 @@ pub fn by_name(name: &str) -> anyhow::Result<Network> {
         "densenet" | "densenet121" | "densenet-121" => Ok(densenet121()),
         "mobilenet" | "mobilenetv1" | "mobilenet-v1" | "mobilenet_v1" => Ok(mobilenet_v1()),
         "agos_cnn" | "agos-cnn" | "agos" => Ok(agos_cnn()),
+        "agos_resnet" | "agos-resnet" => Ok(agos_resnet()),
         other => anyhow::bail!(
-            "unknown network '{other}' (vgg16|resnet18|googlenet|densenet121|mobilenet|agos_cnn)"
+            "unknown network '{other}' \
+             (vgg16|resnet18|googlenet|densenet121|mobilenet|agos_cnn|agos_resnet)"
         ),
     }
 }
@@ -48,7 +52,15 @@ mod tests {
 
     #[test]
     fn by_name_resolves_all() {
-        for n in ["vgg16", "resnet18", "googlenet", "densenet121", "mobilenet", "agos_cnn"] {
+        for n in [
+            "vgg16",
+            "resnet18",
+            "googlenet",
+            "densenet121",
+            "mobilenet",
+            "agos_cnn",
+            "agos_resnet",
+        ] {
             assert!(by_name(n).is_ok(), "{n}");
         }
         assert!(by_name("AGOS_CNN").is_ok(), "case-insensitive");

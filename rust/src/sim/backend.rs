@@ -257,7 +257,12 @@ fn ones(n: usize) -> u64 {
 /// `n` activation taps along one map row for the WG joint pattern: tap
 /// `t` reads column `(v0 + t)·sd + off` of row `ya`, channel `ca`;
 /// out-of-bounds taps are zero. Stride-1 rows are one word extract;
-/// strided rows fall back to a per-tap walk.
+/// strided rows do a gather-stride-aware word walk — each covering
+/// source word is read once and its resident taps are selected in
+/// registers, so no per-tap address arithmetic or bounds test survives
+/// in the loop (the last per-bit loop on the replay path, pinned
+/// against the per-tap reference walk by `strided_act_rows_match_the_
+/// per_tap_reference`).
 fn act_row_bits(
     a: &Bitmap,
     ca: usize,
@@ -272,8 +277,8 @@ fn act_row_bits(
     }
     let y = ya as usize;
     let w = a.shape.w as isize;
+    let x0 = (v0 * sd) as isize + off;
     if sd == 1 {
-        let x0 = v0 as isize + off;
         let lo = x0.max(0);
         let hi = (x0 + n as isize).min(w);
         if lo >= hi {
@@ -282,11 +287,27 @@ fn act_row_bits(
         let bits = a.extract_bits(a.index(ca, y, lo as usize), (hi - lo) as usize);
         return bits << (lo - x0) as usize;
     }
+    // Clamp the tap range to the in-bounds columns: tap `t` reads column
+    // `x0 + t·sd`, so the first/last valid taps bracket `[0, w)`.
+    let sd_i = sd as isize;
+    let t_lo = if x0 >= 0 { 0 } else { (-x0 + sd_i - 1) / sd_i };
+    let t_hi = (w - 1 - x0).div_euclid(sd_i).min(n as isize - 1);
+    if t_lo > t_hi {
+        return 0;
+    }
+    let row_base = a.index(ca, y, 0) as isize;
+    let words = a.words();
     let mut bits = 0u64;
-    for t in 0..n {
-        let x = ((v0 + t) * sd) as isize + off;
-        if x >= 0 && x < w && a.get(ca, y, x as usize) {
-            bits |= 1 << t;
+    let mut t = t_lo;
+    while t <= t_hi {
+        let bit = (row_base + x0 + t * sd_i) as usize;
+        let (wi, mut sh) = (bit / 64, bit % 64);
+        let w64 = words[wi];
+        // Consume every tap resident in this source word.
+        while t <= t_hi && sh < 64 {
+            bits |= ((w64 >> sh) & 1) << (t as usize);
+            t += 1;
+            sh += sd;
         }
     }
     bits
@@ -862,6 +883,70 @@ mod tests {
         let tg1 = TaskGeom::ConvT { r: 1, s: 1, stride: 2, pad: 0, dw: false };
         assert_eq!(gather_operand_words(&gmap, tg1, 0, 1, 0, &mut scratch), 0);
         assert!(gather_operand_words(&gmap, tg1, 0, 2, 2, &mut scratch) > 0);
+    }
+
+    /// The pre-word-extract per-tap walk, kept verbatim as the
+    /// independent reference for the strided row gather.
+    fn act_row_bits_reference(
+        a: &Bitmap,
+        ca: usize,
+        ya: isize,
+        v0: usize,
+        n: usize,
+        sd: usize,
+        off: isize,
+    ) -> u64 {
+        if ya < 0 || ya >= a.shape.h as isize {
+            return 0;
+        }
+        let y = ya as usize;
+        let w = a.shape.w as isize;
+        let mut bits = 0u64;
+        for t in 0..n {
+            let x = ((v0 + t) * sd) as isize + off;
+            if x >= 0 && x < w && a.get(ca, y, x as usize) {
+                bits |= 1 << t;
+            }
+        }
+        bits
+    }
+
+    #[test]
+    fn strided_act_rows_match_the_per_tap_reference() {
+        // The gather-stride-aware word extract must agree bit-for-bit
+        // with the per-tap walk it replaced, across strides, offsets,
+        // word-boundary-straddling rows and out-of-bounds tap ranges.
+        let mut rng = Pcg32::new(53);
+        let maps = [
+            Bitmap::sample(Shape::new(3, 9, 70), 0.5, &mut rng), // rows cross words
+            Bitmap::sample(Shape::new(5, 16, 16), 0.3, &mut rng),
+            Bitmap::sample(Shape::new(1, 4, 130), 0.7, &mut rng), // >2 words per row
+        ];
+        for a in &maps {
+            for sd in [2usize, 3, 4, 7] {
+                for off in [-5isize, -1, 0, 1, 3, 64] {
+                    for v0 in [0usize, 1, 5] {
+                        for n in [1usize, 7, 33, 64] {
+                            for ya in [-1isize, 0, 2, a.shape.h as isize - 1, a.shape.h as isize]
+                            {
+                                let ca = (v0 + n) % a.shape.c;
+                                let got = act_row_bits(a, ca, ya, v0, n, sd, off);
+                                let expect = act_row_bits_reference(a, ca, ya, v0, n, sd, off);
+                                assert_eq!(
+                                    got, expect,
+                                    "sd={sd} off={off} v0={v0} n={n} ya={ya} shape {}",
+                                    a.shape
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // Stride 1 keeps its single-extract fast path.
+            let got = act_row_bits(a, 0, 1, 2, 16, 1, -3);
+            let expect = act_row_bits_reference(a, 0, 1, 2, 16, 1, -3);
+            assert_eq!(got, expect);
+        }
     }
 
     #[test]

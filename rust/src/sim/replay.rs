@@ -1,4 +1,4 @@
-//! Pattern replay: turn a v2 trace file's captured per-ReLU bitmaps into
+//! Pattern replay: turn a trace file's captured bitmaps (v2/v3) into
 //! the per-(layer, phase) operand/output maps the exact backend slices
 //! its tile patterns from — the bridge that makes co-simulation
 //! *pattern-exact* instead of fraction-exact.
@@ -9,16 +9,21 @@
 //! * **FP operand** of layer `l` — the activation bitmap of `l`'s
 //!   producing ReLU (zeros in the input feature map).
 //! * **BP operand** of `l` — the ReLU-masked *gradient* bitmap of the
-//!   ReLU consuming `l`'s output (the gradient arriving at `l`'s output;
-//!   dense when `l` feeds BatchNorm instead, so no map is attached).
+//!   ReLU consuming `l`'s output (the gradient arriving at `l`'s
+//!   output), resolved **through residual Adds**: Add backward is the
+//!   identity into every branch, so a conv feeding an Add whose (only)
+//!   consumer chain ends at a ReLU replays that ReLU's gradient map —
+//!   the Add-fed BP tail of BN-free residual networks. Dense when `l`
+//!   feeds BatchNorm, or when gradients from several consumers sum.
 //! * **BP output mask** of `l` — the activation bitmap of `l`'s
 //!   producing ReLU (the §3.2 identity: the input-gradient footprint is
 //!   contained in the forward activation footprint, known a priori).
 //! * **WG** tasks carry a *pair*: the producer activation footprint and
-//!   the consumer-ReLU gradient map, joined tap-by-tap by the exact
-//!   backend (`sim::backend::BitmapSource::Pair`) — the dominant WG
-//!   phase replays instead of sampling. A missing side (raw-image
-//!   activations, BatchNorm-densified gradients) is structurally dense.
+//!   the consumer gradient map (same Add-aware resolution), joined
+//!   tap-by-tap by the exact backend (`sim::backend::BitmapSource::
+//!   Pair`) — the dominant WG phase replays instead of sampling. A
+//!   missing side (raw-image activations, BatchNorm-densified
+//!   gradients) is structurally dense.
 //!
 //! Activation footprints additionally propagate *exactly* through
 //! pooling and concatenation: ReLU outputs are non-negative, so a
@@ -27,7 +32,11 @@
 //! through pool/GAP/concat therefore still replay measured operands
 //! (the scheme gates in `sim::layer_exec` decide, as before, whether a
 //! map is *exploitable*; a MaxPool producer still yields no BP output
-//! sparsity).
+//! sparsity). Add outputs are the one place derivation stops — conv
+//! summands can be negative, so the footprint is knowable only at
+//! capture time — which is exactly what the v3 trace format's
+//! **post-Add footprints** (act-only Add entries) provide; a captured
+//! map always takes precedence over re-derivation.
 //!
 //! Images map onto traced steps round-robin (`image % steps`), so a
 //! batch replays across every captured step deterministically — the
@@ -155,10 +164,14 @@ fn pooled_footprint(src: &Bitmap, out: Shape, k: usize, stride: usize, pad: usiz
 }
 
 /// A-priori non-zero footprint at layer `id`'s output, derived from one
-/// step's captured ReLU activation maps: the captured map for a ReLU,
-/// exact OR-propagation through Max/Avg/GlobalAvgPool and Concat, `None`
-/// for anything whose footprint is not known a priori (conv/fc/bn/add
-/// outputs can be non-zero anywhere).
+/// step's captured activation maps. A *captured* map for this layer —
+/// a ReLU's bitmap, or a v3 trace's post-Add footprint — always wins;
+/// otherwise the footprint propagates exactly through
+/// Max/Avg/GlobalAvgPool and Concat, and is `None` for anything whose
+/// footprint is not known a priori (conv/fc/bn outputs can be non-zero
+/// anywhere, and an *uncaptured* Add stops derivation because its
+/// summands' signs are unknown — the v2-era limitation the post-Add
+/// capture removes).
 fn derive_footprint(
     net: &Network,
     id: LayerId,
@@ -169,51 +182,81 @@ fn derive_footprint(
         return hit.clone();
     }
     let l = net.layer(id);
-    let got: Option<Arc<Bitmap>> = match l.kind {
-        LayerKind::ReLU => acts.get(l.name.as_str()).cloned(),
-        LayerKind::MaxPool { k, stride, pad } | LayerKind::AvgPool { k, stride, pad } => {
-            derive_footprint(net, l.inputs[0], acts, memo)
-                .map(|src| Arc::new(pooled_footprint(&src, l.out, k, stride, pad)))
-        }
-        LayerKind::GlobalAvgPool => {
-            derive_footprint(net, l.inputs[0], acts, memo).map(|src| {
-                let mut b = Bitmap::zeros(l.out);
-                for c in 0..l.out.c {
-                    if src.wc_nz(c) > 0 {
-                        b.set(c, 0, 0, true);
+    let got: Option<Arc<Bitmap>> = if let Some(m) = acts.get(l.name.as_str()) {
+        Some(m.clone())
+    } else {
+        match l.kind {
+            LayerKind::MaxPool { k, stride, pad } | LayerKind::AvgPool { k, stride, pad } => {
+                derive_footprint(net, l.inputs[0], acts, memo)
+                    .map(|src| Arc::new(pooled_footprint(&src, l.out, k, stride, pad)))
+            }
+            LayerKind::GlobalAvgPool => {
+                derive_footprint(net, l.inputs[0], acts, memo).map(|src| {
+                    let mut b = Bitmap::zeros(l.out);
+                    for c in 0..l.out.c {
+                        if src.wc_nz(c) > 0 {
+                            b.set(c, 0, 0, true);
+                        }
                     }
-                }
-                Arc::new(b)
-            })
-        }
-        LayerKind::Concat => {
-            let srcs: Option<Vec<Arc<Bitmap>>> = l
-                .inputs
-                .iter()
-                .map(|&i| derive_footprint(net, i, acts, memo))
-                .collect();
-            srcs.map(|srcs| {
-                let mut b = Bitmap::zeros(l.out);
-                let mut c0 = 0usize;
-                for src in &srcs {
-                    for c in 0..src.shape.c {
-                        for y in 0..src.shape.h {
-                            for x in 0..src.shape.w {
-                                if src.get(c, y, x) {
-                                    b.set(c0 + c, y, x, true);
+                    Arc::new(b)
+                })
+            }
+            LayerKind::Concat => {
+                let srcs: Option<Vec<Arc<Bitmap>>> = l
+                    .inputs
+                    .iter()
+                    .map(|&i| derive_footprint(net, i, acts, memo))
+                    .collect();
+                srcs.map(|srcs| {
+                    let mut b = Bitmap::zeros(l.out);
+                    let mut c0 = 0usize;
+                    for src in &srcs {
+                        for c in 0..src.shape.c {
+                            for y in 0..src.shape.h {
+                                for x in 0..src.shape.w {
+                                    if src.get(c, y, x) {
+                                        b.set(c0 + c, y, x, true);
+                                    }
                                 }
                             }
                         }
+                        c0 += src.shape.c;
                     }
-                    c0 += src.shape.c;
-                }
-                Arc::new(b)
-            })
+                    Arc::new(b)
+                })
+            }
+            _ => None,
         }
-        _ => None,
     };
     memo.insert(id, got.clone());
     got
+}
+
+/// Gradient map arriving at layer `id`'s output, resolved through the
+/// graph: the masked gradient bitmap of a directly-consuming ReLU, or
+/// the same map passed *unchanged through a residual Add* (Add backward
+/// is the identity into every branch) — the resolution that lets the
+/// Add-fed BP tail of BN-free residual networks replay. A layer with
+/// more than one consumer sums gradient contributions, so no single
+/// captured map describes it (`None`, structurally dense/unknown);
+/// BatchNorm/conv/pool consumers densify or scatter and yield `None`
+/// exactly as before.
+fn derive_grad(
+    net: &Network,
+    consumers: &[Vec<LayerId>],
+    id: LayerId,
+    grads: &HashMap<&str, Arc<Bitmap>>,
+) -> Option<Arc<Bitmap>> {
+    let cs = &consumers[id];
+    if cs.len() != 1 {
+        return None;
+    }
+    let k = net.layer(cs[0]);
+    match k.kind {
+        LayerKind::ReLU => grads.get(k.name.as_str()).cloned(),
+        LayerKind::Add => derive_grad(net, consumers, k.id, grads),
+        _ => None,
+    }
 }
 
 /// All replayable steps of one trace, resolved against a network.
@@ -239,28 +282,29 @@ impl ReplayBank {
         let consumers = net.consumer_map();
         let mut steps = Vec::new();
         for s in &trace.steps {
-            // relu layer name -> (act map, grad map) for this step.
-            let mut relu_maps: HashMap<&str, (Option<Arc<Bitmap>>, Option<Arc<Bitmap>>)> =
+            // traced layer name -> (act map, grad map) for this step —
+            // ReLU act+grad pairs, plus act-only post-Add footprints.
+            let mut traced: HashMap<&str, (Option<Arc<Bitmap>>, Option<Arc<Bitmap>>)> =
                 HashMap::new();
             for lt in &s.layers {
                 if !lt.has_bitmaps() {
                     continue;
                 }
-                let relu = net.by_name(&lt.name).ok_or_else(|| {
+                let traced_layer = net.by_name(&lt.name).ok_or_else(|| {
                     anyhow::anyhow!("traced layer '{}' not in '{}'", lt.name, net.name)
                 })?;
                 for (what, bm) in [("act", &lt.act_bitmap), ("grad", &lt.grad_bitmap)] {
                     if let Some(b) = bm {
                         anyhow::ensure!(
-                            b.shape == relu.out,
+                            b.shape == traced_layer.out,
                             "{what} bitmap of '{}' is {} but the layer produces {}",
                             lt.name,
                             b.shape,
-                            relu.out
+                            traced_layer.out
                         );
                     }
                 }
-                relu_maps.insert(
+                traced.insert(
                     lt.name.as_str(),
                     (
                         lt.act_bitmap.clone().map(Arc::new),
@@ -268,27 +312,28 @@ impl ReplayBank {
                     ),
                 );
             }
-            if relu_maps.is_empty() {
+            if traced.is_empty() {
                 continue; // scalar-only step: nothing to replay
             }
-            let acts: HashMap<&str, Arc<Bitmap>> = relu_maps
+            let acts: HashMap<&str, Arc<Bitmap>> = traced
                 .iter()
                 .filter_map(|(name, (a, _))| a.clone().map(|a| (*name, a)))
+                .collect();
+            let grads: HashMap<&str, Arc<Bitmap>> = traced
+                .iter()
+                .filter_map(|(name, (_, g))| g.clone().map(|g| (*name, g)))
                 .collect();
             let mut memo: HashMap<LayerId, Option<Arc<Bitmap>>> = HashMap::new();
             let mut by_layer = HashMap::new();
             for layer in net.compute_layers() {
-                // Producer footprint: the captured ReLU map, or its exact
-                // OR-propagation through pooling/concat.
+                // Producer footprint: the captured map (ReLU or post-Add),
+                // or its exact OR-propagation through pooling/concat.
                 let act = derive_footprint(net, layer.inputs[0], &acts, &mut memo)
                     .map(ReplayMap::new);
-                let grad = consumers[layer.id]
-                    .iter()
-                    .map(|&k| net.layer(k))
-                    .find(|k| k.kind.is_relu())
-                    .and_then(|k| relu_maps.get(k.name.as_str()))
-                    .and_then(|(_, g)| g.clone())
-                    .map(ReplayMap::new);
+                // Gradient at this layer's output: a consuming ReLU's
+                // masked map, resolved through residual Adds.
+                let grad =
+                    derive_grad(net, &consumers, layer.id, &grads).map(ReplayMap::new);
                 let pair = (act.is_some() || grad.is_some())
                     .then(|| PairMaps { act: act.clone(), grad: grad.clone() });
                 let lm = LayerMaps {
@@ -442,6 +487,81 @@ mod tests {
         let padded = pooled_footprint(&src, Shape::new(1, 3, 3), 2, 2, 1);
         assert!(padded.get(0, 0, 0), "(-1,-1)..(0,0) window sees (0,0)");
         assert_eq!(padded.count_nz(), 2);
+    }
+
+    #[test]
+    fn grad_maps_pass_through_residual_adds() {
+        // agos_resnet's b1_conv2 feeds its Add directly; the gradient at
+        // its output is b1_relu2's masked map passed through the Add.
+        use crate::config::BitmapPattern;
+        use crate::sparsity::{capture_synthetic_trace, SparsityModel};
+        let net = zoo::agos_resnet();
+        let model = SparsityModel::synthetic(7);
+        let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+        let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+        let s0 = bank.step_maps(0);
+
+        let relu_grad = |name: &str| {
+            trace.steps[0]
+                .layers
+                .iter()
+                .find(|l| l.name == name)
+                .and_then(|l| l.grad_bitmap.clone())
+                .unwrap()
+        };
+        let bp = s0.task_maps("b1_conv2", Phase::Backward).unwrap();
+        assert_eq!(
+            *bp.operand.as_ref().unwrap().map,
+            relu_grad("b1_relu2"),
+            "Add backward is the identity: the post-add ReLU's grad map replays"
+        );
+        // The WG pair's grad side resolves through the Add too.
+        let wg = s0.task_maps("b1_conv2", Phase::WeightGrad).unwrap();
+        let pair = wg.pair.as_ref().unwrap();
+        assert_eq!(*pair.grad.as_ref().unwrap().map, relu_grad("b1_relu2"));
+        // b2_add has two consumers (post-add ReLU + block 3's shortcut):
+        // gradients sum there, so its branches stay structurally dense.
+        let bp2 = s0.task_maps("b2_conv2", Phase::Backward).unwrap();
+        assert!(bp2.operand.is_none(), "summed gradients have no single map");
+        assert!(bp2.output.is_some(), "the output mask still replays");
+    }
+
+    #[test]
+    fn post_add_footprints_resolve_the_add_fed_head() {
+        // b3_add feeds GAP -> fc with no post-add ReLU: the fc operand
+        // footprint must derive from the captured post-Add map.
+        use crate::config::BitmapPattern;
+        use crate::sparsity::{capture_synthetic_trace, SparsityModel};
+        let net = zoo::agos_resnet();
+        let model = SparsityModel::synthetic(9);
+        let trace = capture_synthetic_trace(&net, &model, 1, BitmapPattern::Iid, 2);
+        let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+        let s0 = bank.step_maps(0);
+        let fc = s0.task_maps("fc", Phase::Forward).unwrap();
+        let derived = &fc.operand.as_ref().unwrap().map;
+        assert_eq!(derived.shape, Shape::new(32, 1, 1));
+        // Reference: per-channel any() of the captured b3_add footprint.
+        let post_add = trace.steps[0]
+            .layers
+            .iter()
+            .find(|l| l.name == "b3_add")
+            .and_then(|l| l.act_bitmap.clone())
+            .expect("v3 capture records post-Add footprints");
+        for c in 0..32 {
+            assert_eq!(derived.get(c, 0, 0), post_add.wc_nz(c) > 0, "channel {c}");
+        }
+        // Without the post-Add entries (v2-era trace), the head's
+        // derivation stops at the Add and the fc task has no FP operand.
+        let mut v2_era = trace.clone();
+        for s in &mut v2_era.steps {
+            s.layers.retain(|l| !l.name.ends_with("_add"));
+        }
+        let old_bank = ReplayBank::from_trace(&net, &v2_era).unwrap();
+        let old_fc = old_bank.step_maps(0).task_maps("fc", Phase::Forward);
+        assert!(
+            old_fc.is_none() || old_fc.unwrap().operand.is_none(),
+            "derivation must stop at an uncaptured Add"
+        );
     }
 
     #[test]

@@ -42,8 +42,11 @@ use super::engine::{simulate_network_jobs, NetworkSimResult};
 /// sources were added. rev 4: geometry-exact replay — strided
 /// receptive-field gather, replayed WG pairs, measured per-tile analytic
 /// densities — changed every replayed result and the options identity
-/// grew the gather mode.)
-pub const SIM_REVISION: u64 = 4;
+/// grew the gather mode. rev 5: trace fingerprints fold the on-disk
+/// format (v2/v3), post-Add footprints and Add-pass-through gradient
+/// maps changed replayed residual-network results, and the WG strided
+/// row gather was word-rewritten.)
+pub const SIM_REVISION: u64 = 5;
 
 /// Cache identity of one simulation: everything that can change the
 /// result — the network (name *and* structure), the scheme, and the

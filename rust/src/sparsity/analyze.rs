@@ -176,8 +176,34 @@ pub fn analyze_network(net: &Network, fwd: &[f64]) -> Vec<LayerOpportunity> {
         .collect()
 }
 
-/// Synthesize a v2 trace file with packed per-ReLU bitmap payloads from
-/// the calibrated sparsity model — the capture path's stand-in when no
+/// Synthetic stand-in for a layer's capture-time output footprint,
+/// used to record **post-Add footprints**: a ReLU contributes its
+/// sampled map, an Add the OR of its branches (exact for non-negative
+/// summands), and anything else — conv/BN/fc outputs, which are
+/// non-zero at generic positions — contributes a dense map. Real
+/// capture writes the actual value bitmap instead; the dense arms here
+/// mirror what those values generically are.
+fn synth_footprint(
+    net: &Network,
+    id: crate::nn::LayerId,
+    relu_acts: &std::collections::HashMap<crate::nn::LayerId, Bitmap>,
+) -> Bitmap {
+    let l = net.layer(id);
+    match l.kind {
+        LayerKind::ReLU => relu_acts[&id].clone(),
+        LayerKind::Add => {
+            let mut acc = synth_footprint(net, l.inputs[0], relu_acts);
+            for &i in &l.inputs[1..] {
+                acc = acc.or(&synth_footprint(net, i, relu_acts));
+            }
+            acc
+        }
+        _ => Bitmap::ones(l.out),
+    }
+}
+
+/// Synthesize a payload-bearing trace file (v3 by default) from the
+/// calibrated sparsity model — the capture path's stand-in when no
 /// PJRT artifacts exist (the real trainer captures real tensors through
 /// `runtime::bitmap_from_nhwc`). This is what `agos trace` writes and
 /// what the replay tests/figures feed through `sim::ReplayBank`.
@@ -187,7 +213,10 @@ pub fn analyze_network(net: &Network, fwd: &[f64]) -> Vec<LayerOpportunity> {
 /// `act ∧ keep` with the keep rate solved from the §3-derived gradient
 /// sparsity at the ReLU's input — so footprint(grad) ⊆ footprint(act)
 /// holds *by construction* and the scalar fields derived from the maps
-/// can never disagree with the patterns.
+/// can never disagree with the patterns. Every residual Add layer
+/// additionally records an act-only **post-Add footprint**
+/// ([`synth_footprint`]) so `sim::replay::derive_footprint` no longer
+/// stops at Add nodes.
 pub fn capture_synthetic_trace(
     net: &Network,
     model: &SparsityModel,
@@ -195,40 +224,85 @@ pub fn capture_synthetic_trace(
     pattern: BitmapPattern,
     blob_radius: usize,
 ) -> TraceFile {
+    capture_synthetic_trace_images(net, model, steps, 1, pattern, blob_radius)
+}
+
+/// [`capture_synthetic_trace`] with a per-step image count: each of the
+/// `images` captures becomes its own trace step (same `step` number,
+/// distinct patterns), mirroring `agos train --trace-images N` — the
+/// replay bank's round-robin widens with no format change, and the v3
+/// delta/RLE encoding keeps the payload growth sub-linear. `images == 1`
+/// reproduces [`capture_synthetic_trace`] bit-for-bit.
+pub fn capture_synthetic_trace_images(
+    net: &Network,
+    model: &SparsityModel,
+    steps: usize,
+    images: usize,
+    pattern: BitmapPattern,
+    blob_radius: usize,
+) -> TraceFile {
     let seed = match &model.source {
         TraceSource::Synthetic { seed } | TraceSource::Measured { seed, .. } => *seed,
     };
     let per_step = model.assign_batch(net, steps.max(1));
+    let images = images.max(1);
+    let steps_n = per_step.len();
+    // Post-Add footprints only exist on residual graphs; skip the
+    // per-ReLU map retention entirely for Add-free networks.
+    let has_adds = net.layers().iter().any(|l| matches!(l.kind, LayerKind::Add));
     let mut trace = TraceFile::new(&net.name);
     for (si, fwd) in per_step.iter().enumerate() {
         let gs = gradient_sparsity(net, fwd);
-        let mut rng =
-            Pcg32::new(seed ^ 0xB17A ^ (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut layers = Vec::new();
-        for l in net.layers() {
-            if !l.kind.is_relu() {
-                continue;
-            }
-            let s_act = fwd[l.id];
-            let act = match pattern {
-                BitmapPattern::Iid => Bitmap::sample(l.out, 1.0 - s_act, &mut rng),
-                BitmapPattern::Blobs => {
-                    Bitmap::sample_blobs(l.out, 1.0 - s_act, blob_radius, &mut rng)
+        for image in 0..images {
+            // Image-major flat stream index: image 0 of step `si` keeps
+            // the index `si` the single-image capture used, so widening
+            // a capture never perturbs the patterns that already existed
+            // — extra images append fresh stream indices instead.
+            let flat = (image * steps_n + si) as u64;
+            let mut rng =
+                Pcg32::new(seed ^ 0xB17A ^ flat.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut layers = Vec::new();
+            let mut relu_acts: std::collections::HashMap<crate::nn::LayerId, Bitmap> =
+                Default::default();
+            for l in net.layers() {
+                if !l.kind.is_relu() {
+                    continue;
                 }
-            };
-            // Gradient below this ReLU (at its producer's output): zeros
-            // are a superset of the mask's, so thin the activation
-            // footprint down to the analyzed gradient density.
-            let s_grad = gs[l.inputs[0]].max(s_act);
-            let keep = ((1.0 - s_grad) / (1.0 - s_act).max(1e-9)).clamp(0.0, 1.0);
-            let keep_map = Bitmap::sample(l.out, keep, &mut rng);
-            layers.push(LayerTrace::from_bitmaps(&l.name, act.clone(), act.and(&keep_map)));
+                let s_act = fwd[l.id];
+                let act = match pattern {
+                    BitmapPattern::Iid => Bitmap::sample(l.out, 1.0 - s_act, &mut rng),
+                    BitmapPattern::Blobs => {
+                        Bitmap::sample_blobs(l.out, 1.0 - s_act, blob_radius, &mut rng)
+                    }
+                };
+                // Gradient below this ReLU (at its producer's output): zeros
+                // are a superset of the mask's, so thin the activation
+                // footprint down to the analyzed gradient density.
+                let s_grad = gs[l.inputs[0]].max(s_act);
+                let keep = ((1.0 - s_grad) / (1.0 - s_act).max(1e-9)).clamp(0.0, 1.0);
+                let keep_map = Bitmap::sample(l.out, keep, &mut rng);
+                if has_adds {
+                    relu_acts.insert(l.id, act.clone());
+                }
+                layers.push(LayerTrace::from_bitmaps(&l.name, act.clone(), act.and(&keep_map)));
+            }
+            // Post-Add footprints: capture-time data, not derivable from
+            // the ReLU maps (conv summands can be negative). Near-dense
+            // in practice — and therefore nearly free under the v3 RLE.
+            if has_adds {
+                for l in net.layers() {
+                    if matches!(l.kind, LayerKind::Add) {
+                        let fp = synth_footprint(net, l.id, &relu_acts);
+                        layers.push(LayerTrace::from_act(&l.name, fp));
+                    }
+                }
+            }
+            trace.steps.push(StepTrace {
+                step: si,
+                loss: 2.3 * 0.92f64.powi(si as i32),
+                layers,
+            });
         }
-        trace.steps.push(StepTrace {
-            step: si,
-            loss: 2.3 * 0.92f64.powi(si as i32),
-            layers,
-        });
     }
     trace
 }
@@ -396,6 +470,45 @@ mod tests {
         let iid = capture_synthetic_trace(&net, &model, 1, BitmapPattern::Iid, 2);
         let blobs = capture_synthetic_trace(&net, &model, 1, BitmapPattern::Blobs, 2);
         assert_ne!(iid.fingerprint(), blobs.fingerprint());
+    }
+
+    /// Multi-image capture: one StepTrace per (step, image), image 0
+    /// bit-identical to the single-image capture, and residual Adds get
+    /// act-only post-Add footprint entries.
+    #[test]
+    fn capture_images_widen_steps_and_record_post_add_footprints() {
+        let net = crate::nn::zoo::agos_resnet();
+        let model = SparsityModel::synthetic(13);
+        let one = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+        let wide = capture_synthetic_trace_images(&net, &model, 2, 3, BitmapPattern::Iid, 2);
+        assert_eq!(one.steps.len(), 2);
+        assert_eq!(wide.steps.len(), 6, "steps x images StepTraces");
+        // Image 0 of each step reproduces the single-image capture.
+        assert_eq!(wide.steps[0], one.steps[0]);
+        assert_eq!(wide.steps[3], one.steps[1]);
+        assert_eq!(wide.steps[0].step, wide.steps[1].step, "images share the step number");
+        assert_ne!(wide.steps[0].layers, wide.steps[1].layers, "but not the patterns");
+        // Every Add layer carries an act-only footprint entry.
+        let adds: Vec<_> = net
+            .layers()
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Add))
+            .collect();
+        assert!(!adds.is_empty(), "agos_resnet has residual Adds");
+        for a in &adds {
+            let entry = one.steps[0]
+                .layers
+                .iter()
+                .find(|lt| lt.name == a.name)
+                .unwrap_or_else(|| panic!("no post-Add entry for {}", a.name));
+            let map = entry.act_bitmap.as_ref().expect("post-Add footprint captured");
+            assert_eq!(map.shape, a.out);
+            assert!(entry.grad_bitmap.is_none(), "post-Add entries are act-only");
+            assert!(entry.identity_ok);
+            // A conv summand makes the generic post-Add footprint dense.
+            assert_eq!(map.count_nz(), a.out.len(), "{} is generically dense", a.name);
+        }
+        assert!(one.identity_holds());
     }
 
     /// Residual Add passes gradient sparsity through to both branches.

@@ -32,6 +32,18 @@ impl Bitmap {
         Bitmap { shape, words: vec![0; n.div_ceil(64)] }
     }
 
+    /// Every neuron non-zero (the structurally dense footprint — e.g.
+    /// what a conv output contributes to a synthetic post-Add capture).
+    pub fn ones(shape: Shape) -> Bitmap {
+        let n = shape.len();
+        let mut b = Bitmap { shape, words: vec![!0; n.div_ceil(64)] };
+        let tail = n % 64;
+        if tail > 0 {
+            *b.words.last_mut().unwrap() &= (1u64 << tail) - 1;
+        }
+        b
+    }
+
     /// Sample a random bitmap where every bit is independently non-zero
     /// with probability `density` — the exact execution backend's stand-in
     /// for a measured operand bitmap (`sim::backend`). Degenerate
@@ -293,6 +305,35 @@ impl Bitmap {
         Ok(Bitmap { shape, words })
     }
 
+    /// Run-length encoding of the packed words — the TraceFile v3
+    /// payload (`trace`): `zN`/`oN` zero/full word runs, literal
+    /// leading-zero-stripped hex otherwise (`sparsity::encode::
+    /// rle_encode_words`). Same bit stream as `encode_hex`, compacted.
+    pub fn encode_rle(&self) -> String {
+        super::encode::rle_encode_words(&self.words, self.shape.len())
+    }
+
+    /// Parse an `encode_rle` payload back under `shape`. Strict like
+    /// `decode_hex`: wrong word totals, malformed tokens and bits beyond
+    /// `shape.len()` are errors, never silently-loaded data.
+    pub fn decode_rle(shape: Shape, s: &str) -> anyhow::Result<Bitmap> {
+        use anyhow::Context;
+        let words = super::encode::rle_decode_words(s, shape.len())
+            .with_context(|| format!("RLE bitmap payload for shape {shape}"))?;
+        Ok(Bitmap { shape, words })
+    }
+
+    /// Bitwise XOR (symmetric difference of footprints) — the delta the
+    /// v3 trace encoder stores between consecutive captured steps of the
+    /// same layer. Tail bits stay zero because both operands' do.
+    pub fn xor(&self, other: &Bitmap) -> Bitmap {
+        assert_eq!(self.shape, other.shape);
+        Bitmap {
+            shape: self.shape,
+            words: self.words.iter().zip(&other.words).map(|(a, b)| a ^ b).collect(),
+        }
+    }
+
     /// Stable content fingerprint (shape + words) — folded into sweep
     /// cache keys so replayed patterns can never alias (`sim::sweep`).
     pub fn fingerprint(&self) -> u64 {
@@ -393,6 +434,17 @@ impl Bitmap {
         (0..self.shape.c)
             .map(|c| 1.0 - self.wc_nz(c) as f64 / hw)
             .collect()
+    }
+
+    /// Logical OR (union of non-zero footprints) — exact for sums of
+    /// non-negative maps, and how a synthetic post-Add footprint
+    /// combines its branch footprints.
+    pub fn or(&self, other: &Bitmap) -> Bitmap {
+        assert_eq!(self.shape, other.shape);
+        Bitmap {
+            shape: self.shape,
+            words: self.words.iter().zip(&other.words).map(|(a, b)| a | b).collect(),
+        }
     }
 
     /// Logical AND (intersection of non-zero footprints).
@@ -672,6 +724,81 @@ mod tests {
         let mut garbage = hex;
         garbage.replace_range(0..1, "z");
         assert!(Bitmap::decode_hex(shape, &garbage).is_err());
+    }
+
+    #[test]
+    fn rle_roundtrips_bit_identical_across_patterns() {
+        use crate::util::rng::Pcg32;
+        // Property-style sweep: iid + blobbed + degenerate maps, shapes
+        // with word-aligned and ragged tails, densities across the range.
+        let shapes = [Shape::new(3, 7, 9), Shape::new(4, 8, 8), Shape::new(1, 1, 1)];
+        let mut rng = Pcg32::new(41);
+        for shape in shapes {
+            for density in [0.0, 0.03, 0.5, 0.97, 1.0] {
+                for blobbed in [false, true] {
+                    let b = if blobbed {
+                        Bitmap::sample_blobs(shape, density, 2, &mut rng)
+                    } else {
+                        Bitmap::sample(shape, density, &mut rng)
+                    };
+                    let s = b.encode_rle();
+                    let back = Bitmap::decode_rle(shape, &s).unwrap();
+                    assert_eq!(b, back, "shape {shape} density {density} blobbed {blobbed}");
+                }
+            }
+        }
+        // Degenerate maps collapse to a single run token.
+        let zeros = Bitmap::zeros(Shape::new(8, 16, 16));
+        assert_eq!(zeros.encode_rle(), "z32");
+        let ones = Bitmap::sample(Shape::new(3, 3, 3), 1.0, &mut rng); // 27-bit tail
+        assert_eq!(ones.encode_rle(), "o1");
+        assert_eq!(Bitmap::decode_rle(Shape::new(3, 3, 3), "o1").unwrap(), ones);
+        // Strictness mirrors decode_hex.
+        assert!(Bitmap::decode_rle(Shape::new(3, 3, 3), "z2").is_err());
+        assert!(Bitmap::decode_rle(Shape::new(3, 3, 3), "ffffffffffffffff").is_err());
+    }
+
+    #[test]
+    fn ones_and_or_respect_the_tail_invariant() {
+        use crate::util::rng::Pcg32;
+        let shape = Shape::new(3, 3, 3); // 27-bit tail
+        let dense = Bitmap::ones(shape);
+        assert_eq!(dense.count_nz(), 27);
+        assert_eq!(dense, Bitmap::sample(shape, 1.0, &mut Pcg32::new(1)));
+        let mut rng = Pcg32::new(2);
+        let a = Bitmap::sample(shape, 0.4, &mut rng);
+        let b = Bitmap::sample(shape, 0.4, &mut rng);
+        let u = a.or(&b);
+        for c in 0..3 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    assert_eq!(u.get(c, y, x), a.get(c, y, x) || b.get(c, y, x));
+                }
+            }
+        }
+        assert_eq!(a.or(&dense), dense, "OR with dense saturates");
+    }
+
+    #[test]
+    fn xor_is_the_footprint_delta() {
+        use crate::util::rng::Pcg32;
+        let shape = Shape::new(2, 9, 9); // ragged 162-bit tail
+        let mut rng = Pcg32::new(17);
+        let a = Bitmap::sample(shape, 0.5, &mut rng);
+        let b = Bitmap::sample(shape, 0.5, &mut rng);
+        let d = a.xor(&b);
+        for c in 0..shape.c {
+            for y in 0..shape.h {
+                for x in 0..shape.w {
+                    assert_eq!(d.get(c, y, x), a.get(c, y, x) != b.get(c, y, x));
+                }
+            }
+        }
+        // Applying the delta reconstructs the original (the v3 decoder's
+        // step), and self-delta is empty (identical steps cost ~nothing).
+        assert_eq!(b.xor(&d), a);
+        assert_eq!(a.xor(&a).count_nz(), 0);
+        assert_eq!(a.xor(&a).encode_rle(), format!("z{}", shape.len().div_ceil(64)));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Non-zero offset encoding — the indexing stage of §4.2.
+//! Non-zero offset encoding — the indexing stage of §4.2 — plus the
+//! word-level RLE codec behind the TraceFile v3 payload format.
 //!
 //! The design indexes the generated feature/gradient map once per layer,
 //! through the channel dimension, **32 values at a time**: each group of
@@ -6,6 +7,12 @@
 //! offsets of its non-zero entries. The indexed values are then reused
 //! `O(M·k²)` times, amortizing the encoding cost; neurons are *indexed,
 //! not compressed*, preserving memory-access regularity.
+//!
+//! The RLE codec ([`rle_encode_words`]/[`rle_decode_words`]) is a
+//! different animal: it compresses a bitmap's *packed word stream* for
+//! persistence (TensorDash-style bit-map compaction), not for the
+//! hardware's indexing path. Runs never reorder anything — the stream
+//! stays in the within-channel §4.3 order the PE drains.
 
 use super::Bitmap;
 
@@ -96,6 +103,141 @@ pub fn decode_group(enc: &EncodedTensor, gi: usize) -> Vec<usize> {
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Word-level RLE — the TraceFile v3 payload codec.
+// ---------------------------------------------------------------------------
+
+/// All-ones mask of the *valid* bits of word `wi` in a `len_bits`-bit
+/// packed stream: `!0` for interior words, the tail mask for the final
+/// word. "Full" in the run-length grammar means equal to this mask, so
+/// an all-ones bitmap whose length is not word-aligned still encodes as
+/// one `oN` run.
+fn word_mask(wi: usize, len_bits: usize) -> u64 {
+    let lo = wi * 64;
+    debug_assert!(lo < len_bits);
+    if len_bits - lo >= 64 {
+        !0
+    } else {
+        (1u64 << (len_bits - lo)) - 1
+    }
+}
+
+/// Run-length encode a packed LSB-first word stream (`len_bits` valid
+/// bits, channel-major §4.3 order). Space-separated tokens:
+///
+/// * `zN` — `N` consecutive all-zero words;
+/// * `oN` — `N` consecutive all-ones words (ones = every valid bit set);
+/// * `<hex>` — one literal word, lowercase, leading zeros stripped.
+///
+/// Zero and full words dominate real ReLU/gradient footprints (whole
+/// channels dark, dense post-Add maps), so payloads shrink by the run
+/// structure alone; sparse literal words shrink further by the stripped
+/// leading zeros. The stream order is untouched — this is persistence
+/// compaction, not a new drain order.
+pub fn rle_encode_words(words: &[u64], len_bits: usize) -> String {
+    use std::fmt::Write;
+    debug_assert_eq!(words.len(), len_bits.div_ceil(64), "word count vs bit length");
+    let mut out = String::new();
+    let mut i = 0usize;
+    while i < words.len() {
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        let w = words[i];
+        if w == 0 {
+            let mut n = 1;
+            while i + n < words.len() && words[i + n] == 0 {
+                n += 1;
+            }
+            let _ = write!(out, "z{n}");
+            i += n;
+        } else if w == word_mask(i, len_bits) {
+            let mut n = 1;
+            while i + n < words.len() && words[i + n] == word_mask(i + n, len_bits) {
+                n += 1;
+            }
+            let _ = write!(out, "o{n}");
+            i += n;
+        } else {
+            let _ = write!(out, "{w:x}");
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Decode an [`rle_encode_words`] payload back into packed words.
+/// Strict: malformed tokens, runs that overrun the expected word count,
+/// payloads that stop short, and bits set beyond `len_bits` are all hard
+/// errors — a corrupt payload must never load as "good" data.
+pub fn rle_decode_words(s: &str, len_bits: usize) -> anyhow::Result<Vec<u64>> {
+    let n_words = len_bits.div_ceil(64);
+    let mut words: Vec<u64> = Vec::with_capacity(n_words);
+    for tok in s.split_ascii_whitespace() {
+        anyhow::ensure!(
+            words.len() < n_words,
+            "RLE payload continues past its {n_words}-word shape (at token '{tok}')"
+        );
+        // Exactly the emitted grammar, nothing looser: run lengths are
+        // bare ASCII digits without leading zeros and literals bare
+        // lowercase hex with leading zeros stripped (so a zero word is
+        // always a `z` run, never a literal) — the `+` signs, leading
+        // zeros and uppercase that `parse`/`from_str_radix` would
+        // otherwise tolerate are corruption, not data.
+        let run = |tail: &str| -> anyhow::Result<usize> {
+            anyhow::ensure!(
+                !tail.is_empty()
+                    && !tail.starts_with('0')
+                    && tail.bytes().all(|b| b.is_ascii_digit()),
+                "bad run length in RLE token '{tok}'"
+            );
+            let n: usize = tail
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad run length in RLE token '{tok}'"))?;
+            anyhow::ensure!(n >= 1, "empty run in RLE token '{tok}'");
+            anyhow::ensure!(
+                words.len() + n <= n_words,
+                "run '{tok}' overruns the {n_words}-word shape"
+            );
+            Ok(n)
+        };
+        match tok.as_bytes()[0] {
+            b'z' => {
+                let n = run(&tok[1..])?;
+                words.resize(words.len() + n, 0);
+            }
+            b'o' => {
+                for _ in 0..run(&tok[1..])? {
+                    words.push(word_mask(words.len(), len_bits));
+                }
+            }
+            _ => {
+                anyhow::ensure!(
+                    !tok.starts_with('0')
+                        && tok.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f')),
+                    "bad RLE word token '{tok}'"
+                );
+                words.push(
+                    u64::from_str_radix(tok, 16)
+                        .map_err(|_| anyhow::anyhow!("bad RLE word token '{tok}'"))?,
+                );
+            }
+        }
+    }
+    anyhow::ensure!(
+        words.len() == n_words,
+        "RLE payload covers {} of {n_words} words",
+        words.len()
+    );
+    if n_words > 0 {
+        anyhow::ensure!(
+            words[n_words - 1] & !word_mask(n_words - 1, len_bits) == 0,
+            "RLE payload has bits set beyond the {len_bits}-bit shape"
+        );
+    }
+    Ok(words)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +289,44 @@ mod tests {
                 assert!(o < 32);
             }
         }
+    }
+
+    #[test]
+    fn rle_runs_collapse_zero_and_full_words() {
+        // 5 words, 300 valid bits (tail word = 44 bits).
+        let tail = (1u64 << 44) - 1;
+        let words = vec![0, 0, 0xdead_beef, !0, tail];
+        let s = rle_encode_words(&words, 300);
+        assert_eq!(s, "z2 deadbeef o2");
+        assert_eq!(rle_decode_words(&s, 300).unwrap(), words);
+        // All-zero and all-ones streams are single tokens.
+        assert_eq!(rle_encode_words(&[0, 0, 0, 0, 0], 300), "z5");
+        assert_eq!(rle_encode_words(&[!0, !0, !0, !0, tail], 300), "o5");
+        assert_eq!(rle_decode_words("o5", 300).unwrap(), vec![!0, !0, !0, !0, tail]);
+    }
+
+    #[test]
+    fn rle_rejects_malformed_payloads() {
+        // Wrong totals: short, long, overlong runs.
+        assert!(rle_decode_words("z1", 300).is_err(), "covers 1 of 5 words");
+        assert!(rle_decode_words("z6", 300).is_err(), "run overruns the shape");
+        assert!(rle_decode_words("z5 z1", 300).is_err(), "tokens past the shape");
+        // Malformed tokens.
+        assert!(rle_decode_words("z0 z5", 300).is_err(), "empty run");
+        assert!(rle_decode_words("z", 300).is_err(), "run without a length");
+        assert!(rle_decode_words("qq z4", 300).is_err(), "non-hex literal");
+        assert!(rle_decode_words("o-1 z4", 300).is_err(), "negative run");
+        // The grammar is exactly what the encoder emits — the laxer
+        // forms std's parsers accept are corruption here.
+        assert!(rle_decode_words("z+5", 300).is_err(), "signed run length");
+        assert!(rle_decode_words("z05", 300).is_err(), "leading-zero run length");
+        assert!(rle_decode_words("z4 DEADBEEF", 300).is_err(), "uppercase literal");
+        assert!(rle_decode_words("z4 +1f", 300).is_err(), "signed literal");
+        assert!(rle_decode_words("z4 0deadbeef", 300).is_err(), "leading-zero literal");
+        assert!(rle_decode_words("z4 0", 300).is_err(), "zero literal must be a z run");
+        // Bits beyond the shape in the tail word.
+        assert!(rle_decode_words("z4 ffffffffffffffff", 300).is_err());
+        // The same bits are fine when the shape is word-aligned.
+        assert!(rle_decode_words("z4 ffffffffffffffff", 320).is_ok());
     }
 }

@@ -8,7 +8,8 @@ mod analyze;
 mod model;
 
 pub use analyze::{
-    analyze_network, capture_synthetic_trace, gradient_sparsity, LayerOpportunity, SparsityKind,
+    analyze_network, capture_synthetic_trace, capture_synthetic_trace_images, gradient_sparsity,
+    LayerOpportunity, SparsityKind,
 };
 pub use bitmap::{Bitmap, ChannelWords};
 pub(crate) use bitmap::or_bits;

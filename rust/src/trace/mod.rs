@@ -2,18 +2,32 @@
 //! through the AOT artifacts, persisted as JSON for the co-simulation
 //! driver and the figures.
 //!
-//! Two on-disk revisions:
+//! Three on-disk revisions:
 //!
 //! * **v1** — scalar per-layer measurements only (name, activation /
 //!   gradient zero fractions, identity flag). Files written before the
 //!   bitmap-native pipeline carry no `version` key.
-//! * **v2** — additionally carries optional *packed bitmaps* per ReLU
+//! * **v2** — additionally carries optional *packed bitmaps* per traced
 //!   layer per step: the within-channel zero footprints of the forward
 //!   activation (Fig 7) and of the ReLU-masked gradient, encoded as
 //!   `{shape: [c, h, w], words: "<hex u64 words>"}`. These are what
 //!   `agos cosim --replay` feeds pattern-exactly into the exact backend
-//!   (`sim::replay`). v1 files still load (payloads are simply absent).
+//!   (`sim::replay`).
+//! * **v3** — the same payload *content* under a delta/RLE word encoding
+//!   (`{shape, enc: "rle"|"delta"|"hex", words}`): `zN`/`oN` runs of
+//!   zero/full words, literal hex otherwise (`Bitmap::encode_rle`), and
+//!   optionally the run-length of the XOR against the *previous step's*
+//!   map of the same layer when that is smaller (`enc: "delta"`). This
+//!   is what makes batch-wide capture (`--trace-images N`) practical:
+//!   payload bytes stop growing linearly with raw map size. v3 is also
+//!   the first revision that records **post-Add footprints** (act-only
+//!   entries for residual Add layers) so the replay bank no longer stops
+//!   deriving footprints at Add nodes.
+//!
+//! All three revisions load; [`TraceFile::format`] selects which of
+//! v2/v3 `save` writes (v3 is the default for new captures).
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -24,12 +38,59 @@ use crate::util::fnv::Fnv1a;
 use crate::util::json::Json;
 
 /// Current trace-file schema revision.
-pub const TRACE_VERSION: u64 = 2;
+pub const TRACE_VERSION: u64 = 3;
+
+/// Which on-disk payload encoding a [`TraceFile`] saves as. Decoding is
+/// format-agnostic (every revision loads); this only steers `to_json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TraceFormat {
+    /// `"version": 2` — raw hex word payloads.
+    V2,
+    /// `"version": 3` — delta/RLE word payloads (the default).
+    #[default]
+    V3,
+}
+
+impl TraceFormat {
+    pub const ALL: [TraceFormat; 2] = [TraceFormat::V2, TraceFormat::V3];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceFormat::V2 => "v2",
+            TraceFormat::V3 => "v3",
+        }
+    }
+
+    /// The `version` key this format writes.
+    pub fn version(&self) -> u64 {
+        match self {
+            TraceFormat::V2 => 2,
+            TraceFormat::V3 => 3,
+        }
+    }
+
+    /// Stable tag folded into [`TraceFile::fingerprint`] — and through
+    /// it into `SimOptions::fingerprint` and the sweep-cache key — so
+    /// the same content persisted under different encodings never
+    /// aliases in the cache.
+    pub fn tag(&self) -> u64 {
+        self.version()
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<TraceFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "v2" | "2" | "hex" => Ok(TraceFormat::V2),
+            "v3" | "3" | "rle" => Ok(TraceFormat::V3),
+            other => anyhow::bail!("unknown trace format '{other}' (v2|v3)"),
+        }
+    }
+}
 
 /// Per-layer measurement at one training step.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerTrace {
-    /// ReLU layer name (matches the `nn::Network` layer names).
+    /// Traced layer name (matches the `nn::Network` layer names): a ReLU
+    /// for act+grad entries, a residual Add for act-only footprints.
     pub name: String,
     /// Forward activation zero fraction.
     pub act_sparsity: f64,
@@ -37,11 +98,18 @@ pub struct LayerTrace {
     pub grad_sparsity: f64,
     /// Whether footprint(gradient) ⊆ footprint(activation) held exactly.
     pub identity_ok: bool,
-    /// v2: packed forward-activation zero footprint (the Fig 7 bitmap the
-    /// forward pass leaves in DRAM), if captured.
+    /// v2+: packed forward-activation zero footprint (the Fig 7 bitmap
+    /// the forward pass leaves in DRAM), if captured.
     pub act_bitmap: Option<Bitmap>,
-    /// v2: packed ReLU-masked gradient zero footprint, if captured.
+    /// v2+: packed ReLU-masked gradient zero footprint, if captured.
     pub grad_bitmap: Option<Bitmap>,
+    /// v3: this entry is a replay-layout *footprint* (a post-Add map),
+    /// not a ReLU sparsity measurement — excluded from
+    /// [`TraceFile::mean_act_sparsity`]. An explicit marker rather than
+    /// "act payload without a grad payload" inference, because the
+    /// lenient loader can drop payloads and must not let a damaged
+    /// measurement masquerade as a footprint (or vice versa).
+    pub footprint: bool,
 }
 
 impl LayerTrace {
@@ -54,10 +122,11 @@ impl LayerTrace {
             identity_ok,
             act_bitmap: None,
             grad_bitmap: None,
+            footprint: false,
         }
     }
 
-    /// A v2 measurement with payloads: the scalar fields are *derived*
+    /// A payload-bearing measurement: the scalar fields are *derived*
     /// from the maps (fractions from popcounts, identity from footprint
     /// containment), so scalars and patterns can never disagree.
     pub fn from_bitmaps(name: &str, act: Bitmap, grad: Bitmap) -> LayerTrace {
@@ -68,6 +137,25 @@ impl LayerTrace {
             identity_ok: grad.contained_in(&act),
             act_bitmap: Some(act),
             grad_bitmap: Some(grad),
+            footprint: false,
+        }
+    }
+
+    /// An activation-only footprint entry — how **post-Add footprints**
+    /// are recorded (v3 capture). An Add output has no ReLU-masked
+    /// gradient of its own and its footprint is not derivable from ReLU
+    /// maps (conv summands can be negative), so the forward pass writes
+    /// the bitmap at capture time; the gradient side stays absent and
+    /// the identity check is trivially satisfied.
+    pub fn from_act(name: &str, act: Bitmap) -> LayerTrace {
+        LayerTrace {
+            name: name.to_string(),
+            act_sparsity: act.sparsity(),
+            grad_sparsity: 0.0,
+            identity_ok: true,
+            act_bitmap: Some(act),
+            grad_bitmap: None,
+            footprint: true,
         }
     }
 
@@ -89,19 +177,59 @@ pub struct StepTrace {
 pub struct TraceFile {
     pub network: String,
     pub steps: Vec<StepTrace>,
+    /// On-disk payload encoding `save`/`to_json` emit (decoding accepts
+    /// every revision regardless). Captures default to v3.
+    pub format: TraceFormat,
 }
 
-fn bitmap_to_json(b: &Bitmap) -> Json {
+/// Key of the previous-map table the delta codec chains on: one slot per
+/// (layer name, act|grad side), updated step by step in file order.
+type SlotKey = (String, &'static str);
+
+fn shape_to_json(b: &Bitmap) -> Json {
+    Json::Arr(vec![b.shape.c.into(), b.shape.h.into(), b.shape.w.into()])
+}
+
+/// v2 payload: raw hex words.
+fn bitmap_to_json_hex(b: &Bitmap) -> Json {
+    Json::from_pairs(vec![("shape", shape_to_json(b)), ("words", b.encode_hex().into())])
+}
+
+/// v3 payload: the smallest of the raw words' RLE, the RLE of the XOR
+/// against the previous step's same-slot map, and plain hex. The hex
+/// floor matters at mid densities, where zero/full words are
+/// vanishingly rare and space-separated literals would cost slightly
+/// *more* than packed hex — v3 payloads are therefore never larger
+/// than their v2 encoding.
+fn bitmap_to_json_rle(b: &Bitmap, prev: Option<&Bitmap>) -> Json {
+    let (mut enc, mut payload) = ("rle", b.encode_rle());
+    if let Some(p) = prev {
+        if p.shape == b.shape {
+            let delta = b.xor(p).encode_rle();
+            if delta.len() < payload.len() {
+                (enc, payload) = ("delta", delta);
+            }
+        }
+    }
+    if b.words().len() * 16 < payload.len() {
+        (enc, payload) = ("hex", b.encode_hex());
+    }
     Json::from_pairs(vec![
-        (
-            "shape",
-            Json::Arr(vec![b.shape.c.into(), b.shape.h.into(), b.shape.w.into()]),
-        ),
-        ("words", b.encode_hex().into()),
+        ("shape", shape_to_json(b)),
+        ("enc", enc.into()),
+        ("words", payload.into()),
     ])
 }
 
-fn bitmap_from_json(j: &Json, what: &str) -> Result<Option<Bitmap>> {
+/// Decode one bitmap payload. `version` gates which encodings are legal
+/// (`enc` keys may only appear in v3+ files); `prev` is the previous
+/// step's decoded map of the same (layer, slot), the delta base.
+fn bitmap_from_json(
+    j: &Json,
+    what: &str,
+    version: u64,
+    prev: Option<&Bitmap>,
+) -> Result<Option<Bitmap>> {
     if matches!(j, Json::Null) {
         return Ok(None);
     }
@@ -109,21 +237,58 @@ fn bitmap_from_json(j: &Json, what: &str) -> Result<Option<Bitmap>> {
     anyhow::ensure!(dims.len() == 3, "{what}.shape must be [c, h, w]");
     let dim = |i: usize| dims[i].as_usize().with_context(|| format!("{what}.shape[{i}]"));
     let shape = Shape::new(dim(0)?, dim(1)?, dim(2)?);
-    let hex = j.get("words").as_str().with_context(|| format!("{what}.words"))?;
-    Ok(Some(Bitmap::decode_hex(shape, hex).context(what.to_string())?))
+    let words = j.get("words").as_str().with_context(|| format!("{what}.words"))?;
+    let map = match j.get("enc") {
+        Json::Null => Bitmap::decode_hex(shape, words).context(what.to_string())?,
+        enc => {
+            let enc = enc.as_str().with_context(|| format!("{what}.enc must be a string"))?;
+            anyhow::ensure!(
+                version >= 3,
+                "{what}: '{enc}' payload encoding in a v{version} trace"
+            );
+            match enc {
+                "hex" => Bitmap::decode_hex(shape, words).context(what.to_string())?,
+                "rle" => Bitmap::decode_rle(shape, words).context(what.to_string())?,
+                "delta" => {
+                    let prev = prev.with_context(|| {
+                        format!("{what}: delta payload without a previous step's map")
+                    })?;
+                    anyhow::ensure!(
+                        prev.shape == shape,
+                        "{what}: delta shape {shape} vs previous step's {}",
+                        prev.shape
+                    );
+                    Bitmap::decode_rle(shape, words).context(what.to_string())?.xor(prev)
+                }
+                other => anyhow::bail!("{what}: unknown payload encoding '{other}'"),
+            }
+        }
+    };
+    Ok(Some(map))
 }
 
 impl TraceFile {
     pub fn new(network: &str) -> TraceFile {
-        TraceFile { network: network.to_string(), steps: Vec::new() }
+        TraceFile {
+            network: network.to_string(),
+            steps: Vec::new(),
+            format: TraceFormat::default(),
+        }
     }
 
     /// Mean activation sparsity per layer across all traced steps —
-    /// the input to `SparsityModel::measured`.
+    /// the input to `SparsityModel::measured`. Footprint entries
+    /// (post-Add captures) are excluded: they are replay layout data,
+    /// not ReLU sparsity measurements, and their near-zero sparsity
+    /// would dilute the means the measured model and the cosim report
+    /// are built from.
     pub fn mean_act_sparsity(&self) -> std::collections::BTreeMap<String, f64> {
         let mut sums: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
         for step in &self.steps {
             for l in &step.layers {
+                if l.footprint {
+                    continue;
+                }
                 let e = sums.entry(l.name.clone()).or_insert((0.0, 0));
                 e.0 += l.act_sparsity;
                 e.1 += 1;
@@ -137,19 +302,22 @@ impl TraceFile {
         self.steps.iter().all(|s| s.layers.iter().all(|l| l.identity_ok))
     }
 
-    /// Does any step carry packed bitmap payloads (v2 content)?
+    /// Does any step carry packed bitmap payloads (v2+ content)?
     pub fn has_bitmaps(&self) -> bool {
         self.steps.iter().any(|s| s.layers.iter().any(|l| l.has_bitmaps()))
     }
 
     /// Stable content fingerprint over *everything* in the trace —
-    /// network, per-step scalars and bitmap payloads. Folded into
-    /// `SimOptions::fingerprint` by the cosim driver so two different
-    /// trace files can never share a sweep-cache entry, even when their
-    /// per-layer mean sparsities happen to coincide.
+    /// network, the on-disk format, per-step scalars and bitmap
+    /// payloads. Folded into `SimOptions::fingerprint` by the cosim
+    /// driver so two different trace files can never share a sweep-cache
+    /// entry, even when their per-layer mean sparsities happen to
+    /// coincide — and so the same content persisted as v2 vs v3 keys
+    /// separately too (the format changes what a re-run would read).
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv1a::new();
         h.put_str(&self.network);
+        h.put(self.format.tag());
         h.put(self.steps.len() as u64);
         for s in &self.steps {
             h.put(s.step as u64).put_f64(s.loss);
@@ -157,7 +325,8 @@ impl TraceFile {
                 h.put_str(&l.name)
                     .put_f64(l.act_sparsity)
                     .put_f64(l.grad_sparsity)
-                    .put(l.identity_ok as u64);
+                    .put(l.identity_ok as u64)
+                    .put(l.footprint as u64);
                 // Presence tags keep (None, Some(b)) and (Some(b), None)
                 // from aliasing.
                 match &l.act_bitmap {
@@ -174,6 +343,25 @@ impl TraceFile {
     }
 
     pub fn to_json(&self) -> Json {
+        // Previous-map table for the v3 delta chain, keyed (layer, slot)
+        // and updated in file order — the decoder walks the same chain.
+        // Everything borrows from `self`, so the table holds references
+        // (no per-payload map clones while serializing a batch capture).
+        fn emit<'a>(
+            format: TraceFormat,
+            prev: &mut HashMap<(&'a str, &'static str), &'a Bitmap>,
+            name: &'a str,
+            slot: &'static str,
+            b: &'a Bitmap,
+        ) -> Json {
+            let j = match format {
+                TraceFormat::V2 => bitmap_to_json_hex(b),
+                TraceFormat::V3 => bitmap_to_json_rle(b, prev.get(&(name, slot)).copied()),
+            };
+            prev.insert((name, slot), b);
+            j
+        }
+        let mut prev: HashMap<(&str, &'static str), &Bitmap> = HashMap::new();
         let steps: Vec<Json> = self
             .steps
             .iter()
@@ -188,11 +376,24 @@ impl TraceFile {
                             ("grad_sparsity", l.grad_sparsity.into()),
                             ("identity_ok", l.identity_ok.into()),
                         ]);
+                        // Emit the marker for every footprint entry, and
+                        // for act-only measurements (a lenient drop can
+                        // produce those), where the reader's key-based
+                        // inference would otherwise guess wrong.
+                        if l.footprint || (l.act_bitmap.is_some() && l.grad_bitmap.is_none()) {
+                            j.set("footprint", l.footprint.into());
+                        }
                         if let Some(b) = &l.act_bitmap {
-                            j.set("act_bitmap", bitmap_to_json(b));
+                            j.set(
+                                "act_bitmap",
+                                emit(self.format, &mut prev, &l.name, "act_bitmap", b),
+                            );
                         }
                         if let Some(b) = &l.grad_bitmap {
-                            j.set("grad_bitmap", bitmap_to_json(b));
+                            j.set(
+                                "grad_bitmap",
+                                emit(self.format, &mut prev, &l.name, "grad_bitmap", b),
+                            );
                         }
                         j
                     })
@@ -205,13 +406,32 @@ impl TraceFile {
             })
             .collect();
         Json::from_pairs(vec![
-            ("version", TRACE_VERSION.into()),
+            ("version", self.format.version().into()),
             ("network", self.network.as_str().into()),
             ("steps", Json::Arr(steps)),
         ])
     }
 
+    /// Strict parse: the first structural problem or corrupt payload is
+    /// a hard error carrying the step index, layer name and payload slot
+    /// (`step N layer 'x' act_bitmap: …`).
     pub fn from_json(j: &Json) -> Result<TraceFile> {
+        let (t, warnings) = TraceFile::parse(j, false)?;
+        debug_assert!(warnings.is_empty(), "strict parse collects no warnings");
+        Ok(t)
+    }
+
+    /// Lenient parse: structural problems are still hard errors, but a
+    /// corrupt/truncated bitmap *payload* is dropped (the scalar entry
+    /// survives) and reported as a warning with its layer/step context —
+    /// what `agos cosim` uses to warn-and-fall-back instead of dying on
+    /// a damaged capture. Dropping a payload also breaks any later delta
+    /// chained on it, so those drop (with their own warnings) too.
+    pub fn from_json_lenient(j: &Json) -> Result<(TraceFile, Vec<String>)> {
+        TraceFile::parse(j, true)
+    }
+
+    fn parse(j: &Json, lenient: bool) -> Result<(TraceFile, Vec<String>)> {
         // v1 files predate the version key; absent means 1.
         let version = match j.get("version") {
             Json::Null => 1,
@@ -221,18 +441,69 @@ impl TraceFile {
             (1..=TRACE_VERSION).contains(&version),
             "unsupported trace version {version} (this build reads 1..={TRACE_VERSION})"
         );
+        let format = if version >= 3 { TraceFormat::V3 } else { TraceFormat::V2 };
         let network = j.get("network").as_str().context("trace.network")?.to_string();
+        let mut warnings = Vec::new();
+        let mut prev: HashMap<SlotKey, Bitmap> = HashMap::new();
         let mut steps = Vec::new();
-        for s in j.get("steps").as_arr().context("trace.steps")? {
+        for (si, s) in j.get("steps").as_arr().context("trace.steps")?.iter().enumerate() {
             let mut layers = Vec::new();
             for l in s.get("layers").as_arr().context("step.layers")? {
+                let name = l.get("name").as_str().context("layer.name")?.to_string();
+                let mut slot = |slot: &'static str| -> Result<Option<Bitmap>> {
+                    let what = format!("step {si} layer '{name}' {slot}");
+                    let key = (name.clone(), slot);
+                    match bitmap_from_json(l.get(slot), &what, version, prev.get(&key)) {
+                        Ok(Some(b)) => {
+                            // The delta base is only consultable in v3+
+                            // files (enc keys are version-gated), so
+                            // don't pay a per-payload map clone to
+                            // maintain it for v1/v2 loads. (For v3 the
+                            // clone is deliberate: an owned table keeps
+                            // the chain logic trivially correct; an
+                            // index back into the partially-built steps
+                            // would save one copy per payload at the
+                            // cost of cross-referencing a structure
+                            // still under construction.)
+                            if version >= 3 {
+                                prev.insert(key, b.clone());
+                            }
+                            Ok(Some(b))
+                        }
+                        Ok(None) => Ok(None),
+                        Err(e) if lenient => {
+                            warnings.push(format!("{e:#} — payload dropped"));
+                            // Evict the delta base: a later delta chained
+                            // on the dropped map must fail loudly (and
+                            // drop too), never silently decode against a
+                            // stale earlier step.
+                            prev.remove(&key);
+                            Ok(None)
+                        }
+                        Err(e) => Err(e),
+                    }
+                };
+                let act_bitmap = slot("act_bitmap")?;
+                let grad_bitmap = slot("grad_bitmap")?;
+                // Footprint marker: the explicit flag when present,
+                // otherwise inferred from the *file's* payload keys —
+                // which, unlike the decoded options above, survive the
+                // lenient loader dropping a corrupt payload.
+                let footprint = match l.get("footprint") {
+                    Json::Null => {
+                        !matches!(l.get("act_bitmap"), Json::Null)
+                            && matches!(l.get("grad_bitmap"), Json::Null)
+                    }
+                    v => v.as_bool().context("layer.footprint")?,
+                };
                 layers.push(LayerTrace {
-                    name: l.get("name").as_str().context("layer.name")?.to_string(),
                     act_sparsity: l.get("act_sparsity").as_f64().context("act")?,
                     grad_sparsity: l.get("grad_sparsity").as_f64().context("grad")?,
                     identity_ok: l.get("identity_ok").as_bool().context("ok")?,
-                    act_bitmap: bitmap_from_json(l.get("act_bitmap"), "act_bitmap")?,
-                    grad_bitmap: bitmap_from_json(l.get("grad_bitmap"), "grad_bitmap")?,
+                    name,
+                    act_bitmap,
+                    grad_bitmap,
+                    footprint,
                 });
             }
             steps.push(StepTrace {
@@ -241,7 +512,7 @@ impl TraceFile {
                 layers,
             });
         }
-        Ok(TraceFile { network, steps })
+        Ok((TraceFile { network, steps, format }, warnings))
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -250,6 +521,12 @@ impl TraceFile {
 
     pub fn load(path: &Path) -> Result<TraceFile> {
         TraceFile::from_json(&Json::parse_file(path)?)
+    }
+
+    /// [`TraceFile::load`] with the lenient payload policy of
+    /// [`TraceFile::from_json_lenient`].
+    pub fn load_lenient(path: &Path) -> Result<(TraceFile, Vec<String>)> {
+        TraceFile::from_json_lenient(&Json::parse_file(path)?)
     }
 }
 
@@ -276,10 +553,11 @@ mod tests {
                     layers: vec![LayerTrace::scalar("relu1", 0.7, 0.71, true)],
                 },
             ],
+            format: TraceFormat::default(),
         }
     }
 
-    fn sample_v2() -> TraceFile {
+    fn sample_payloads() -> TraceFile {
         let shape = Shape::new(4, 6, 6);
         let mut rng = Pcg32::new(3);
         let act = Bitmap::sample(shape, 0.6, &mut rng);
@@ -298,8 +576,8 @@ mod tests {
     }
 
     #[test]
-    fn v2_payloads_roundtrip_bit_exact() {
-        let t = sample_v2();
+    fn v3_payloads_roundtrip_bit_exact() {
+        let t = sample_payloads();
         assert!(t.has_bitmaps());
         assert!(t.identity_holds(), "containment-built grad must satisfy identity");
         let j = t.to_json();
@@ -310,6 +588,61 @@ mod tests {
         assert_eq!(l.act_bitmap, t.steps[0].layers[0].act_bitmap);
         // Derived scalars agree with the payload popcounts.
         assert!((l.act_sparsity - l.act_bitmap.as_ref().unwrap().sparsity()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v2_format_still_saves_and_roundtrips() {
+        let t = TraceFile { format: TraceFormat::V2, ..sample_payloads() };
+        let j = t.to_json();
+        assert_eq!(j.get("version").as_u64(), Some(2));
+        let payload = j.get("steps").as_arr().unwrap()[0].get("layers").as_arr().unwrap()[0]
+            .get("act_bitmap");
+        assert!(matches!(payload.get("enc"), Json::Null), "v2 payloads carry no enc key");
+        let t2 = TraceFile::from_json(&j).unwrap();
+        assert_eq!(t, t2);
+        // Same content under the two formats: payload maps identical,
+        // fingerprints deliberately distinct (cache-key separation).
+        let v3 = sample_payloads();
+        let v3_rt = TraceFile::from_json(&v3.to_json()).unwrap();
+        assert_eq!(t2.steps, v3_rt.steps);
+        assert_ne!(t2.fingerprint(), v3_rt.fingerprint());
+    }
+
+    #[test]
+    fn delta_encoding_kicks_in_across_correlated_steps() {
+        // Step 1 repeats step 0's map with one bit flipped: the v3
+        // encoder must choose the delta (a near-empty XOR) and the
+        // decoder must chain it back bit-exactly.
+        let shape = Shape::new(4, 8, 8);
+        let mut rng = Pcg32::new(9);
+        let act = Bitmap::sample(shape, 0.5, &mut rng);
+        let grad = act.and(&Bitmap::sample(shape, 0.8, &mut rng));
+        let mut act2 = act.clone();
+        act2.set(0, 0, 0, !act2.get(0, 0, 0));
+        let t = TraceFile {
+            network: "agos_cnn".into(),
+            steps: vec![
+                StepTrace {
+                    step: 0,
+                    loss: 2.0,
+                    layers: vec![LayerTrace::from_bitmaps("relu1", act, grad.clone())],
+                },
+                StepTrace {
+                    step: 1,
+                    loss: 1.9,
+                    layers: vec![LayerTrace::from_bitmaps("relu1", act2, grad)],
+                },
+            ],
+            format: TraceFormat::V3,
+        };
+        let j = t.to_json();
+        let step1 = &j.get("steps").as_arr().unwrap()[1].get("layers").as_arr().unwrap()[0];
+        assert_eq!(step1.get("act_bitmap").get("enc").as_str(), Some("delta"));
+        // grad repeats exactly: the delta is all-zero runs.
+        assert_eq!(step1.get("grad_bitmap").get("enc").as_str(), Some("delta"));
+        let grad_words = step1.get("grad_bitmap").get("words").as_str().unwrap();
+        assert_eq!(grad_words, "z4", "identical steps delta to a single zero run");
+        assert_eq!(TraceFile::from_json(&j).unwrap(), t);
     }
 
     #[test]
@@ -326,16 +659,93 @@ mod tests {
         assert_eq!(t.network, "agos_cnn");
         assert!(!t.has_bitmaps());
         assert_eq!(t.steps[0].layers[0].act_bitmap, None);
+        assert_eq!(t.format, TraceFormat::V2, "v1 loads re-save as v2");
         // Unknown future revisions are rejected loudly.
         let v9 = r#"{"version": 9, "network": "x", "steps": []}"#;
         assert!(TraceFile::from_json(&Json::parse(v9).unwrap()).is_err());
+        // v3-only encodings are rejected inside v2 files.
+        let bad = r#"{"version": 2, "network": "x", "steps": [
+            {"step": 0, "loss": 1.0, "layers": [
+                {"name": "relu1", "act_sparsity": 0.0, "grad_sparsity": 0.0,
+                 "identity_ok": true,
+                 "act_bitmap": {"shape": [1, 1, 1], "enc": "rle", "words": "o1"}}
+            ]}]}"#;
+        let err = TraceFile::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("v2"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_payload_errors_carry_step_and_layer_context() {
+        let mut t = sample_payloads();
+        t.format = TraceFormat::V3;
+        let mut j = t.to_json();
+        // Truncate the act payload of step 0 / relu1.
+        let Json::Obj(top) = &mut j else { unreachable!() };
+        let Json::Arr(steps) = top.get_mut("steps").unwrap() else { unreachable!() };
+        let Json::Obj(s0) = &mut steps[0] else { unreachable!() };
+        let Json::Arr(layers) = s0.get_mut("layers").unwrap() else { unreachable!() };
+        let Json::Obj(l0) = &mut layers[0] else { unreachable!() };
+        let Json::Obj(bm) = l0.get_mut("act_bitmap").unwrap() else { unreachable!() };
+        bm.insert("words".into(), Json::Str("z1".into()));
+        let err = TraceFile::from_json(&j).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("step 0"), "{msg}");
+        assert!(msg.contains("relu1"), "{msg}");
+        assert!(msg.contains("act_bitmap"), "{msg}");
+        // Lenient: the payload drops with a warning, scalars survive.
+        let (lenient, warnings) = TraceFile::from_json_lenient(&j).unwrap();
+        assert_eq!(warnings.len(), 1, "{warnings:?}");
+        assert!(warnings[0].contains("relu1"), "{warnings:?}");
+        assert!(lenient.steps[0].layers[0].act_bitmap.is_none());
+        assert!(lenient.steps[0].layers[0].grad_bitmap.is_some(), "grad survives");
+        assert!((lenient.steps[0].layers[0].act_sparsity - t.steps[0].layers[0].act_sparsity)
+            .abs()
+            < 1e-12);
+        // A measurement whose payload was dropped stays a measurement:
+        // it must not fall out of the means the cosim model consumes.
+        assert!(!lenient.steps[0].layers[0].footprint);
+        assert!(lenient.mean_act_sparsity().contains_key("relu1"));
+    }
+
+    #[test]
+    fn lenient_drop_breaks_later_delta_chains_loudly() {
+        // Step 1's payload is corrupt and step 2 is a delta chained on
+        // it: step 2 must drop too (own warning), never silently decode
+        // against step 0's stale map.
+        let j = Json::parse(
+            r#"{
+          "version": 3, "network": "x",
+          "steps": [
+            {"step": 0, "loss": 1.0, "layers": [{"name": "r", "act_sparsity": 0.0,
+              "grad_sparsity": 0.0, "identity_ok": true,
+              "act_bitmap": {"shape": [1, 1, 64], "enc": "rle", "words": "o1"}}]},
+            {"step": 1, "loss": 1.0, "layers": [{"name": "r", "act_sparsity": 0.0,
+              "grad_sparsity": 0.0, "identity_ok": true,
+              "act_bitmap": {"shape": [1, 1, 64], "enc": "rle", "words": "qq"}}]},
+            {"step": 2, "loss": 1.0, "layers": [{"name": "r", "act_sparsity": 0.0,
+              "grad_sparsity": 0.0, "identity_ok": true,
+              "act_bitmap": {"shape": [1, 1, 64], "enc": "delta", "words": "z1"}}]}
+          ]}"#,
+        )
+        .unwrap();
+        assert!(TraceFile::from_json(&j).is_err(), "strict mode still errors");
+        let (t, warnings) = TraceFile::from_json_lenient(&j).unwrap();
+        assert_eq!(warnings.len(), 2, "{warnings:?}");
+        assert!(warnings[0].contains("step 1"), "{warnings:?}");
+        assert!(
+            warnings[1].contains("step 2") && warnings[1].contains("previous"),
+            "{warnings:?}"
+        );
+        assert!(t.steps[0].layers[0].act_bitmap.is_some());
+        assert!(t.steps[1].layers[0].act_bitmap.is_none());
+        assert!(t.steps[2].layers[0].act_bitmap.is_none());
     }
 
     #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("agos_trace_test");
         let path = dir.join("t.json");
-        let t = sample_v2();
+        let t = sample_payloads();
         t.save(&path).unwrap();
         assert_eq!(TraceFile::load(&path).unwrap(), t);
         std::fs::remove_dir_all(dir).ok();
@@ -358,15 +768,50 @@ mod tests {
     }
 
     #[test]
-    fn fingerprint_tracks_scalars_and_payloads() {
+    fn act_only_entries_model_post_add_footprints() {
+        let shape = Shape::new(2, 4, 4);
+        let mut rng = Pcg32::new(5);
+        let post_add = Bitmap::sample(shape, 0.9, &mut rng); // near-dense
+        let lt = LayerTrace::from_act("b1_add", post_add.clone());
+        assert!(lt.identity_ok, "act-only entries satisfy identity trivially");
+        assert!(lt.grad_bitmap.is_none());
+        assert!(lt.footprint, "from_act marks the entry as layout data");
+        assert!(!LayerTrace::scalar("r", 0.5, 0.5, true).footprint);
+        assert!((lt.act_sparsity - post_add.sparsity()).abs() < 1e-12);
+        let mut t = sample_payloads();
+        let means_before = t.mean_act_sparsity();
+        t.steps[0].layers.push(lt);
+        let t2 = TraceFile::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, t2, "act-only payloads roundtrip like any other");
+        assert!(t2.steps[0].layers[2].footprint, "marker survives the roundtrip");
+        // Footprint entries are layout data, not measurements: the means
+        // the measured model / cosim report consume must not see them.
+        assert_eq!(t.mean_act_sparsity(), means_before);
+        assert!(!t.mean_act_sparsity().contains_key("b1_add"));
+    }
+
+    #[test]
+    fn trace_format_parses_and_tags() {
+        for f in TraceFormat::ALL {
+            assert_eq!(TraceFormat::parse(f.label()).unwrap(), f);
+            assert_eq!(f.tag(), f.version());
+        }
+        assert_eq!(TraceFormat::parse("V3").unwrap(), TraceFormat::V3);
+        assert_eq!(TraceFormat::parse("2").unwrap(), TraceFormat::V2);
+        assert!(TraceFormat::parse("v9").is_err());
+        assert_eq!(TraceFormat::default(), TraceFormat::V3);
+    }
+
+    #[test]
+    fn fingerprint_tracks_scalars_payloads_and_format() {
         let base = sample();
         assert_eq!(base.fingerprint(), sample().fingerprint());
         let mut scalars = sample();
         scalars.steps[0].layers[1].act_sparsity = 0.41;
         assert_ne!(base.fingerprint(), scalars.fingerprint());
-        // Different patterns with identical scalars: the v2 payload must
+        // Different patterns with identical scalars: the payload must
         // separate them (the soundness gap the cosim cache key closes).
-        let a = sample_v2();
+        let a = sample_payloads();
         let mut b = a.clone();
         let l = &mut b.steps[0].layers[0];
         let map = l.act_bitmap.as_mut().unwrap();
@@ -376,5 +821,8 @@ mod tests {
         // Sanity: restoring the payload restores the fingerprint.
         b.steps[0].layers[0] = scalar_clone;
         assert_eq!(a.fingerprint(), b.fingerprint());
+        // Same content, different on-disk format: keys must separate.
+        let v2 = TraceFile { format: TraceFormat::V2, ..a.clone() };
+        assert_ne!(a.fingerprint(), v2.fingerprint());
     }
 }

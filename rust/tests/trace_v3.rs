@@ -1,0 +1,380 @@
+//! TraceFile v3 conformance suite (ISSUE 5 acceptance):
+//!
+//! * **Codec**: the delta/RLE word encoding round-trips bit-identically
+//!   (property-style over iid, blobbed, all-zero and all-ones maps),
+//!   and a committed v1/v2/v3 fixture corpus under `tests/data/` pins
+//!   the on-disk grammar against accidental format drift.
+//! * **Size**: on the blob pattern a v3 payload is ≤ 1/3 of the v2 hex
+//!   payload — the property that makes `--trace-images N` batch-wide
+//!   capture practical.
+//! * **Equivalence**: the same capture saved as v2 and as v3 replays to
+//!   bit-identical co-simulation rows — the encoding changes bytes,
+//!   never results.
+//! * **Residual replay**: a v3 trace of `agos_resnet` (post-Add
+//!   footprints + Add-pass-through gradient maps) replays the Add-fed
+//!   BP tail with zero RNG draws, bit-identical at any `--jobs` level.
+//! * **Cache soundness**: the same content under different formats (and
+//!   different patterns at the same means) never shares a sweep-cache
+//!   entry.
+//! * **Robustness**: corrupt/truncated v3 payloads error with layer and
+//!   step context on the strict path and drop-with-warning on the
+//!   lenient path `agos cosim` uses.
+
+use std::path::{Path, PathBuf};
+
+use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions};
+use agos::coordinator::cosim_from_traces;
+use agos::nn::{zoo, Shape};
+use agos::sim::{simulate_network, ReplayBank, SweepKey};
+use agos::sparsity::{
+    capture_synthetic_trace, capture_synthetic_trace_images, Bitmap, SparsityModel,
+};
+use agos::trace::{LayerTrace, StepTrace, TraceFile, TraceFormat};
+use agos::util::json::Json;
+use agos::util::rng::Pcg32;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+/// Total characters of bitmap payload (`words` fields) in a serialized
+/// trace — the quantity the v3 encoding exists to shrink.
+fn payload_chars(j: &Json) -> usize {
+    let mut total = 0usize;
+    for s in j.get("steps").as_arr().expect("steps") {
+        for l in s.get("layers").as_arr().expect("layers") {
+            for slot in ["act_bitmap", "grad_bitmap"] {
+                if let Some(w) = l.get(slot).get("words").as_str() {
+                    total += w.len();
+                }
+            }
+        }
+    }
+    total
+}
+
+#[test]
+fn rle_roundtrip_is_bit_identical_property_style() {
+    // iid + blobbed + degenerate maps across ragged and aligned shapes;
+    // every encode→decode must reproduce the exact words.
+    let shapes = [
+        Shape::new(16, 32, 32), // word-aligned
+        Shape::new(3, 7, 9),    // 189-bit ragged tail
+        Shape::new(64, 1, 1),   // channel-per-bit (GAP-shaped)
+        Shape::new(1, 1, 1),    // single bit
+    ];
+    let mut rng = Pcg32::new(0xC0DE);
+    for shape in shapes {
+        for density in [0.0, 0.02, 0.25, 0.5, 0.85, 1.0] {
+            for radius in [0usize, 2, 4] {
+                let maps = [
+                    Bitmap::sample(shape, density, &mut rng),
+                    Bitmap::sample_blobs(shape, density, radius, &mut rng),
+                ];
+                for b in maps {
+                    let enc = b.encode_rle();
+                    let back = Bitmap::decode_rle(shape, &enc).unwrap();
+                    assert_eq!(b, back, "shape {shape} density {density} radius {radius}");
+                    // Hex and RLE describe the same words.
+                    assert_eq!(Bitmap::decode_hex(shape, &b.encode_hex()).unwrap(), back);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fixture_corpus_loads_across_revisions() {
+    // v1: scalar-only, no version key.
+    let v1 = TraceFile::load(&fixture("trace_v1.json")).unwrap();
+    assert_eq!(v1.network, "fixture_net");
+    assert!(!v1.has_bitmaps());
+    assert_eq!(v1.format, TraceFormat::V2, "v1 loads re-save as v2");
+    assert!((v1.steps[0].layers[0].act_sparsity - 0.5).abs() < 1e-12);
+
+    // v2: raw hex payloads. Pin the decoded bits, not just "it loads".
+    let v2 = TraceFile::load(&fixture("trace_v2.json")).unwrap();
+    let act = v2.steps[0].layers[0].act_bitmap.as_ref().unwrap();
+    assert_eq!(act.shape, Shape::new(2, 3, 3));
+    assert_eq!(act.words(), &[0x15555]);
+    let grad = v2.steps[0].layers[0].grad_bitmap.as_ref().unwrap();
+    assert_eq!(grad.words(), &[0x11115]);
+    assert!(grad.contained_in(act), "fixture satisfies the §3.2 identity");
+
+    // v3: rle + delta payloads, incl. an act-only post-Add entry.
+    let v3 = TraceFile::load(&fixture("trace_v3.json")).unwrap();
+    assert_eq!(v3.format, TraceFormat::V3);
+    assert_eq!(v3.steps.len(), 2);
+    let s0 = &v3.steps[0];
+    let r1 = s0.layers.iter().find(|l| l.name == "relu1").unwrap();
+    assert_eq!(r1.act_bitmap.as_ref().unwrap().words(), &[0x15555]);
+    assert_eq!(r1.grad_bitmap.as_ref().unwrap().words(), &[0x11115]);
+    let r2 = s0.layers.iter().find(|l| l.name == "relu2").unwrap();
+    assert_eq!(r2.act_bitmap.as_ref().unwrap().count_nz(), 0, "z-run decodes all-zero");
+    let add = s0.layers.iter().find(|l| l.name == "add1").unwrap();
+    assert_eq!(add.act_bitmap.as_ref().unwrap().count_nz(), 18, "o-run decodes all-ones");
+    assert!(add.grad_bitmap.is_none(), "post-Add entries are act-only");
+    assert!(add.footprint, "act-only entries infer the footprint marker");
+    assert!(!r1.footprint);
+    // Footprints are layout data: the per-layer means exclude them.
+    assert!(!v3.mean_act_sparsity().contains_key("add1"));
+    assert!(v3.mean_act_sparsity().contains_key("relu1"));
+    // Step 1 chains deltas: act flips exactly bit 1, grad repeats.
+    let s1r1 = v3.steps[1].layers.iter().find(|l| l.name == "relu1").unwrap();
+    assert_eq!(s1r1.act_bitmap.as_ref().unwrap().words(), &[0x15557]);
+    assert_eq!(s1r1.grad_bitmap.as_ref().unwrap().words(), &[0x11115]);
+    let s1add = v3.steps[1].layers.iter().find(|l| l.name == "add1").unwrap();
+    assert_eq!(s1add.act_bitmap.as_ref().unwrap().count_nz(), 18);
+
+    // Re-saving every fixture round-trips bit-exactly in memory.
+    for t in [&v1, &v2, &v3] {
+        assert_eq!(TraceFile::from_json(&t.to_json()).unwrap(), *t);
+    }
+}
+
+#[test]
+fn v3_payload_is_at_most_a_third_of_v2_on_the_blob_pattern() {
+    // Batch-wide capture of a realistically sparse blobbed map: two
+    // images whose footprints are strongly correlated step to step
+    // (what consecutive captures of a training run look like).
+    let shape = Shape::new(32, 32, 32);
+    let mut rng = Pcg32::new(7);
+    let act0 = Bitmap::sample_blobs(shape, 0.04, 4, &mut rng);
+    let keep = Bitmap::sample(shape, 0.5, &mut rng);
+    let grad0 = act0.and(&keep);
+    // Step 1 = step 0 with a handful of flipped sites.
+    let mut act1 = act0.clone();
+    for i in 0..20usize {
+        let (c, y, x) = (i % 32, (i * 7) % 32, (i * 13) % 32);
+        act1.set(c, y, x, !act1.get(c, y, x));
+    }
+    let grad1 = grad0.clone();
+    let mk = |format: TraceFormat| TraceFile {
+        network: "blob_bench".into(),
+        steps: vec![
+            StepTrace {
+                step: 0,
+                loss: 2.0,
+                layers: vec![LayerTrace::from_bitmaps("relu1", act0.clone(), grad0.clone())],
+            },
+            StepTrace {
+                step: 0,
+                loss: 2.0,
+                layers: vec![LayerTrace::from_bitmaps("relu1", act1.clone(), grad1.clone())],
+            },
+        ],
+        format,
+    };
+    let v2_chars = payload_chars(&mk(TraceFormat::V2).to_json());
+    let v3_chars = payload_chars(&mk(TraceFormat::V3).to_json());
+    assert!(
+        v3_chars * 3 <= v2_chars,
+        "v3 payload must be <= 1/3 of v2 on the blob pattern: {v3_chars} vs {v2_chars}"
+    );
+    // And both decode back to the same maps.
+    let a = TraceFile::from_json(&mk(TraceFormat::V2).to_json()).unwrap();
+    let b = TraceFile::from_json(&mk(TraceFormat::V3).to_json()).unwrap();
+    assert_eq!(a.steps, b.steps);
+}
+
+#[test]
+fn v3_replay_equals_v2_replay_cosim_golden() {
+    // The encoding must never change a result: the same capture saved
+    // as v2 and v3, re-loaded from disk, co-simulates to identical rows
+    // on both backends.
+    let dir = std::env::temp_dir().join("agos_trace_v3_golden");
+    std::fs::remove_dir_all(&dir).ok();
+    let net = zoo::agos_resnet();
+    let model = SparsityModel::synthetic(0xA605);
+    let capture = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+    let mut loaded = Vec::new();
+    for format in TraceFormat::ALL {
+        let mut t = capture.clone();
+        t.format = format;
+        let path = dir.join(format!("trace-{}.json", format.label()));
+        t.save(&path).unwrap();
+        loaded.push(TraceFile::load(&path).unwrap());
+    }
+    assert_eq!(loaded[0].steps, loaded[1].steps, "decoded content identical");
+    let cfg = AcceleratorConfig::default();
+    for backend in [ExecBackend::Exact, ExecBackend::Analytic] {
+        let opts = SimOptions {
+            batch: 2,
+            backend,
+            exact_outputs_per_tile: 16,
+            ..SimOptions::default()
+        };
+        let r2 = cosim_from_traces(&loaded[0], &cfg, &opts, true, 0).unwrap();
+        let r3 = cosim_from_traces(&loaded[1], &cfg, &opts, true, 0).unwrap();
+        assert_eq!(r2.rows, r3.rows, "{backend:?}: v2 and v3 replay must agree bit-for-bit");
+        assert!(r2.replayed && r3.replayed);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn residual_add_fed_bp_tail_replays_with_zero_rng_at_any_jobs_level() {
+    // The acceptance bar: a v3 trace of the BN-free residual network
+    // resolves every sparsity-bearing task — including b1_conv2, whose
+    // gradient arrives through the residual Add, and the fc head fed
+    // through GAP(post-Add) — so replay draws no RNG (the engine's
+    // per-image stream seed cannot change any result) and is
+    // bit-identical across --jobs levels.
+    let net = zoo::agos_resnet();
+    let model = SparsityModel::synthetic(11);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+    let cfg = AcceleratorConfig::default();
+    for backend in [ExecBackend::Exact, ExecBackend::Analytic] {
+        // Fixed model, varying stream seed: only RNG draws could differ.
+        let mk = |seed: u64| SimOptions {
+            seed,
+            batch: 3,
+            backend,
+            exact_outputs_per_tile: 16,
+            trace_fingerprint: Some(trace.fingerprint()),
+            replay: Some(std::sync::Arc::new(ReplayBank::from_trace(&net, &trace).unwrap())),
+            ..SimOptions::default()
+        };
+        for scheme in Scheme::ALL {
+            let a = simulate_network(&net, &cfg, &mk(1), &model, scheme);
+            let b = simulate_network(&net, &cfg, &mk(0xDEAD_BEEF), &model, scheme);
+            assert_eq!(
+                a.total_cycles(),
+                b.total_cycles(),
+                "{backend:?}/{}: residual replay must be seed-independent (zero RNG)",
+                scheme.label()
+            );
+            assert_eq!(a.total_energy_j(), b.total_energy_j());
+            for (x, y) in a.per_layer.iter().zip(&b.per_layer) {
+                assert_eq!(x.cycles, y.cycles, "{backend:?} {} {}", x.name, x.phase.label());
+                assert_eq!(x.performed_macs, y.performed_macs);
+            }
+        }
+        // End-to-end: the same replay cosim at --jobs 1 and --jobs 4 is
+        // bit-identical (the CI report-diff contract, driver-level).
+        let opts = SimOptions {
+            batch: 3,
+            backend,
+            exact_outputs_per_tile: 16,
+            ..SimOptions::default()
+        };
+        let j1 = cosim_from_traces(&trace, &cfg, &opts, true, 1).unwrap();
+        let j4 = cosim_from_traces(&trace, &cfg, &opts, true, 4).unwrap();
+        assert_eq!(j1.rows, j4.rows, "{backend:?}: jobs must not change replay");
+        assert!(j1.replayed);
+    }
+    // Contrast (the test's teeth): strip the Add entries — the v2-era
+    // capture — and the Add-fed BP tail falls back to sampling... but
+    // gradients still pass through the Add graph-side, so the only
+    // remaining sampling would come from unresolved maps. Verify the
+    // bank itself shows the difference instead: b1_conv2's BP operand
+    // resolves with the full capture and its FP operand survives, while
+    // the fc head loses its operand without post-Add footprints.
+    let bank = ReplayBank::from_trace(&net, &trace).unwrap();
+    let s0 = bank.step_maps(0);
+    assert!(s0
+        .task_maps("b1_conv2", agos::nn::Phase::Backward)
+        .is_some_and(|m| m.operand.is_some()));
+    assert!(s0
+        .task_maps("fc", agos::nn::Phase::Forward)
+        .is_some_and(|m| m.operand.is_some()));
+    let mut stripped = trace.clone();
+    for s in &mut stripped.steps {
+        s.layers.retain(|l| !l.name.ends_with("_add"));
+    }
+    let old = ReplayBank::from_trace(&net, &stripped).unwrap();
+    let old_fc = old.step_maps(0).task_maps("fc", agos::nn::Phase::Forward);
+    assert!(
+        old_fc.is_none() || old_fc.unwrap().operand.is_none(),
+        "without post-Add footprints the head's derivation stops at the Add"
+    );
+}
+
+#[test]
+fn cache_keys_separate_formats_and_fingerprints_fold_the_encoding() {
+    let net = zoo::agos_resnet();
+    let model = SparsityModel::synthetic(4);
+    let cfg = AcceleratorConfig::default();
+    let capture = capture_synthetic_trace(&net, &model, 1, BitmapPattern::Iid, 2);
+    let v2 = TraceFile { format: TraceFormat::V2, ..capture.clone() };
+    let v3 = TraceFile { format: TraceFormat::V3, ..capture };
+    assert_ne!(v2.fingerprint(), v3.fingerprint(), "format folds into the fingerprint");
+
+    let opts_for = |t: &TraceFile| SimOptions {
+        batch: 2,
+        trace_fingerprint: Some(t.fingerprint()),
+        replay: Some(std::sync::Arc::new(ReplayBank::from_trace(&net, t).unwrap())),
+        ..SimOptions::default()
+    };
+    let k2 = SweepKey::new(&net, Scheme::InOut, &cfg, &opts_for(&v2), &model);
+    let k3 = SweepKey::new(&net, Scheme::InOut, &cfg, &opts_for(&v3), &model);
+    assert_ne!(k2, k3, "v2 and v3 runs of the same content must not alias in the cache");
+}
+
+#[test]
+fn corrupt_and_truncated_v3_files_error_with_context_and_degrade_leniently() {
+    let dir = std::env::temp_dir().join("agos_trace_v3_corrupt");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.json");
+
+    // A v3 file whose second payload token stream is truncated
+    // (covers 1 of 2 words) and whose delta has no previous step.
+    let bad = r#"{
+      "version": 3,
+      "network": "fixture_net",
+      "steps": [
+        {"step": 0, "loss": 2.0, "layers": [
+          {"name": "relu1", "act_sparsity": 0.5, "grad_sparsity": 0.5,
+           "identity_ok": true,
+           "act_bitmap": {"shape": [2, 6, 6], "enc": "rle", "words": "z1"}},
+          {"name": "relu2", "act_sparsity": 0.5, "grad_sparsity": 0.5,
+           "identity_ok": true,
+           "grad_bitmap": {"shape": [1, 4, 4], "enc": "delta", "words": "z1"}}
+        ]}
+      ]
+    }"#;
+    std::fs::write(&path, bad).unwrap();
+    // Strict: the first bad payload is a hard error naming its site.
+    let err = TraceFile::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("step 0"), "{msg}");
+    assert!(msg.contains("relu1"), "{msg}");
+    assert!(msg.contains("act_bitmap"), "{msg}");
+    // Lenient: both payloads drop, each with its own contexted warning;
+    // the scalar content survives.
+    let (lenient, warnings) = TraceFile::load_lenient(&path).unwrap();
+    assert_eq!(warnings.len(), 2, "{warnings:?}");
+    assert!(warnings[0].contains("relu1") && warnings[0].contains("act_bitmap"));
+    assert!(warnings[1].contains("relu2") && warnings[1].contains("delta"));
+    assert!(!lenient.has_bitmaps());
+    assert_eq!(lenient.steps[0].layers.len(), 2);
+
+    // Structural damage is a hard error even leniently.
+    std::fs::write(&path, r#"{"version": 3, "network": "x"}"#).unwrap();
+    assert!(TraceFile::load_lenient(&path).is_err());
+    // Unknown encodings are rejected, not guessed at.
+    let unknown = bad.replace("\"rle\"", "\"lz4\"");
+    std::fs::write(&path, unknown).unwrap();
+    let err = format!("{:#}", TraceFile::load(&path).unwrap_err());
+    assert!(err.contains("lz4"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_image_capture_widens_the_replay_round_robin() {
+    let net = zoo::agos_resnet();
+    let model = SparsityModel::synthetic(3);
+    let wide = capture_synthetic_trace_images(&net, &model, 2, 4, BitmapPattern::Iid, 2);
+    assert_eq!(wide.steps.len(), 8, "steps x images trace steps");
+    let bank = ReplayBank::from_trace(&net, &wide).unwrap();
+    assert_eq!(bank.steps(), 8);
+    // The round-robin wraps at steps x images, and distinct images get
+    // distinct maps.
+    assert!(std::ptr::eq(bank.step_maps(0), bank.step_maps(8)));
+    assert!(!std::ptr::eq(bank.step_maps(0), bank.step_maps(1)));
+    // Image 0 reproduces the narrow capture exactly.
+    let narrow = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Iid, 2);
+    assert_eq!(narrow.steps[0], wide.steps[0]);
+    assert_eq!(narrow.steps[1], wide.steps[4]);
+}
