@@ -9,8 +9,8 @@ use std::sync::Arc;
 use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions};
 use agos::nn::{zoo, Shape};
 use agos::sim::{
-    redistribute, simulate_layer, simulate_network, LayerTask, PeModel, ReplayBank, SweepPlan,
-    SweepRunner,
+    redistribute, simulate_layer, simulate_network, GatherPlanCache, LayerTask, PeModel,
+    ReplayBank, SkipStats, SweepPlan, SweepRunner, TaskGeom,
 };
 use agos::sparsity::{capture_synthetic_trace, Bitmap, SparsityModel};
 use agos::util::bench::{black_box, Bench};
@@ -125,6 +125,60 @@ fn main() {
     b.case("backend_exact_replay_stream_agos_b1", || {
         simulate_network(&anet, &cfg, &replay_stream_opts, &model, Scheme::InOutWr).total_cycles()
     });
+    // The same replay with gather plans disabled — the per-window
+    // re-derivation the plan cache replaces (results are bit-identical;
+    // only the wall-clock differs).
+    let replay_noplan_opts = SimOptions { gather_plans: None, ..replay_opts.clone() };
+    b.case("backend_exact_replay_noplan_agos_b1", || {
+        simulate_network(&anet, &cfg, &replay_noplan_opts, &model, Scheme::InOutWr).total_cycles()
+    });
+
+    // Gather micro-bench: one conv plane's receptive-field assembly,
+    // direct (`Bitmap::gather_window_words`) vs plan-driven vs
+    // plan-driven with RLE zero-skip, on a realistically blob-sparse map
+    // (~5% dense → most operand words are skippable). The two ratio rows
+    // the bench gate tracks (`exact_gather_plan_speedup`,
+    // `exact_zero_skip_speedup`) come from these three cases.
+    let gshape = Shape::new(64, 28, 28);
+    let gconv = TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: false };
+    let gmap = Bitmap::sample_blobs(gshape, 0.05, 3, &mut Pcg32::new(11));
+    let gruns = gmap.run_index();
+    let gcache = GatherPlanCache::new();
+    let gplan = gcache.plan_for(gshape, gconv, 28, 28).expect("conv plans");
+    b.case("gather_direct_conv3x3_64x28x28", || {
+        let mut out = Vec::new();
+        let mut acc = 0usize;
+        for y in 0..28usize {
+            for x in 0..28usize {
+                acc += gmap.gather_window_words(
+                    0,
+                    64,
+                    y as isize - 1,
+                    x as isize - 1,
+                    3,
+                    3,
+                    black_box(&mut out),
+                );
+            }
+        }
+        black_box(acc)
+    });
+    let planned_walk = |runs: Option<&agos::sparsity::RunIndex>| {
+        let mut out = Vec::new();
+        let mut stats = SkipStats::default();
+        let mut acc = 0usize;
+        for y in 0..28usize {
+            for x in 0..28usize {
+                match gplan.gather(&gmap, runs, 0, y, x, &mut stats, black_box(&mut out)) {
+                    agos::sim::PlannedGather::Words { len }
+                    | agos::sim::PlannedGather::AllOnes { len } => acc += len,
+                }
+            }
+        }
+        black_box(acc)
+    };
+    b.case("gather_planned_conv3x3_64x28x28", || planned_walk(None));
+    b.case("gather_planned_skip_conv3x3_64x28x28", || planned_walk(Some(&gruns)));
 
     // Bitmap drain walks: the legacy per-bool channel expansion (what
     // `Bitmap::channel_bits` cost the hot loop before the word refactor)
@@ -177,6 +231,10 @@ fn main() {
     let exact = find("backend_exact_agos_b1");
     let replay = find("backend_exact_replay_agos_b1");
     let replay_stream = find("backend_exact_replay_stream_agos_b1");
+    let replay_noplan = find("backend_exact_replay_noplan_agos_b1");
+    let gather_direct = find("gather_direct_conv3x3_64x28x28");
+    let gather_planned = find("gather_planned_conv3x3_64x28x28");
+    let gather_skip = find("gather_planned_skip_conv3x3_64x28x28");
     let bool_walk = find("bitmap_channel_bool_walk_64x56x56");
     let word_walk = find("bitmap_channel_word_walk_64x56x56");
     let v3_decode = find("trace_v3_decode_rle_64x56x56");
@@ -205,6 +263,16 @@ fn main() {
         // Geometry-exact gather vs the legacy streaming slice.
         ("backend_exact_replay_stream_mean_s", replay_stream.mean.into()),
         ("replay_geometry_vs_streaming", (replay.mean / replay_stream.mean).into()),
+        // Gather plans + RLE zero-skip (PR 6). Plan speedup is the
+        // per-window re-derivation cost the plan cache eliminates;
+        // zero-skip is the further win from eliding all-zero operand
+        // words on a blob-sparse map. Both ratios are gated.
+        ("backend_exact_replay_noplan_mean_s", replay_noplan.mean.into()),
+        ("gather_direct_mean_s", gather_direct.mean.into()),
+        ("gather_planned_mean_s", gather_planned.mean.into()),
+        ("gather_planned_skip_mean_s", gather_skip.mean.into()),
+        ("exact_gather_plan_speedup", (gather_direct.mean / gather_planned.mean).into()),
+        ("exact_zero_skip_speedup", (gather_planned.mean / gather_skip.mean).into()),
         // Word-level drain refactor: per-bool channel walk vs packed
         // word/popcount walk over a 64x56x56 map.
         ("bitmap_bool_walk_mean_s", bool_walk.mean.into()),

@@ -159,6 +159,11 @@ fig13 fig15 fig16 fig17 figval | ablations | all)",
                         "replay the trace's packed v2 bitmaps: geometry-exact patterns (exact) \
 or measured per-tile densities (analytic)",
                     ),
+                    flag(
+                        "verbose",
+                        "also print gather-plan skip-effectiveness counters (exact backend; \
+diagnostics only, never written to --out)",
+                    ),
                 ],
             },
             Command {
@@ -364,6 +369,15 @@ fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
         trace.identity_holds(),
         trace.fingerprint()
     );
+    let (zero_w, one_w, total_w) = trace.payload_run_stats();
+    if total_w > 0 {
+        println!(
+            "  run structure: {:.1}% all-zero words (zero-skip potential), \
+{:.1}% all-ones words, {total_w} words total",
+            100.0 * zero_w as f64 / total_w as f64,
+            100.0 * one_w as f64 / total_w as f64,
+        );
+    }
     Ok(0)
 }
 
@@ -579,6 +593,24 @@ fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
         "  speedup: total {:.2}x, BP {:.2}x",
         report.total_speedup, report.bp_speedup
     );
+    if args.flag("verbose") {
+        // Diagnostics only: the counters stay out of the --out JSON so
+        // the report is byte-identical with plans/skip on or off.
+        match &report.skip {
+            Some(s) => {
+                let denom = (s.words_gathered + s.words_skipped).max(1);
+                println!(
+                    "  gather plans: {} words gathered, {} skipped ({:.1}% of planned), \
+{} windows short-circuited dense",
+                    s.words_gathered,
+                    s.words_skipped,
+                    100.0 * s.words_skipped as f64 / denom as f64,
+                    s.windows_shortcircuited,
+                );
+            }
+            None => println!("  gather plans: disabled"),
+        }
+    }
     if let Some(out) = args.opt("out") {
         // The report carries no timing or thread-count fields, so two
         // invocations at different --jobs must write byte-identical
@@ -871,6 +903,7 @@ mod tests {
                 "--exact-cap",
                 "8",
                 "--replay",
+                "--verbose",
             ]))
             .unwrap(),
             0

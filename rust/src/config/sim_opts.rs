@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use crate::sim::{ExecBackend, ReplayBank};
+use crate::sim::{ExecBackend, GatherPlanCache, ReplayBank};
 use crate::util::json::Json;
 
 /// Execution scheme — the four bars of Fig 11/12/13.
@@ -166,6 +166,14 @@ pub struct SimOptions {
     /// analytic backend. A live handle, not serialized; its trace
     /// fingerprint is folded into `fingerprint()`.
     pub replay: Option<Arc<ReplayBank>>,
+    /// Shared gather-plan cache for the exact backend's replayed
+    /// windowed gathers (`sim::plan`): precomputed segment schedules
+    /// plus RLE-run zero-skip, shared across images, steps, schemes and
+    /// worker threads. `None` runs the plan-free reference path. Pure
+    /// execution strategy — deliberately NOT part of `fingerprint()`
+    /// (results are bit-identical either way, pinned by
+    /// `sim::engine` tests) and never serialized.
+    pub gather_plans: Option<Arc<GatherPlanCache>>,
 }
 
 impl Default for SimOptions {
@@ -182,6 +190,7 @@ impl Default for SimOptions {
             trace_fingerprint: None,
             gather: GatherMode::Geometry,
             replay: None,
+            gather_plans: Some(Arc::new(GatherPlanCache::new())),
         }
     }
 }
@@ -339,6 +348,25 @@ mod tests {
             SimOptions { trace_fingerprint: Some(1), ..base.clone() }.fingerprint(),
             SimOptions { trace_fingerprint: Some(2), ..base.clone() }.fingerprint()
         );
+    }
+
+    #[test]
+    fn gather_plans_are_fingerprint_neutral() {
+        // The plan cache is pure execution strategy: on, off, or a
+        // different instance must all share one sweep-cache key (results
+        // are bit-identical, pinned by the engine tests), and the handle
+        // never leaks into the serialized form.
+        let base = SimOptions::default();
+        assert!(base.gather_plans.is_some(), "plans are on by default");
+        let off = SimOptions { gather_plans: None, ..base.clone() };
+        let other =
+            SimOptions { gather_plans: Some(Arc::new(GatherPlanCache::plans_only())), ..base.clone() };
+        assert_eq!(base.fingerprint(), off.fingerprint());
+        assert_eq!(base.fingerprint(), other.fingerprint());
+        let json = base.to_json().dump();
+        assert!(!json.contains("plan"), "plan cache must not serialize: {json}");
+        // from_json restores the default-on cache.
+        assert!(SimOptions::from_json(&base.to_json()).unwrap().gather_plans.is_some());
     }
 
     #[test]

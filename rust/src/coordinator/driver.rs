@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
 use crate::nn::{zoo, Phase};
-use crate::sim::{ReplayBank, SweepPlan, SweepRunner};
+use crate::sim::{ReplayBank, SkipStats, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
 use crate::trace::TraceFile;
 use crate::util::json::Json;
@@ -41,6 +41,11 @@ pub struct CosimReport {
     pub bp_speedup: f64,
     /// Measured mean activation sparsity fed to the model.
     pub mean_sparsity: f64,
+    /// Gather-plan skip-effectiveness counters accumulated over this run
+    /// (exact backend with a plan cache only). Diagnostics for humans:
+    /// deliberately *not* serialized by `to_json` — the `--out` report
+    /// must stay byte-identical whether plans/skip are on or off.
+    pub skip: Option<SkipStats>,
 }
 
 impl CosimReport {
@@ -111,7 +116,15 @@ pub fn cosim_from_traces(
     // contract).
     let runner = SweepRunner::new(jobs);
     let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, cfg, &opts);
+    // Snapshot the plan cache's lifetime counters around the sweep so the
+    // report carries only *this run's* delta (the cache is shared and
+    // long-lived by design).
+    let skip_before = opts.gather_plans.as_ref().map(|c| c.stats());
     let results = runner.run(&plan, &model);
+    let skip = match (&opts.gather_plans, skip_before) {
+        (Some(cache), Some(before)) => Some(cache.stats().delta_from(&before)),
+        _ => None,
+    };
 
     let mut rows = Vec::new();
     let mut dense_total = 0.0;
@@ -139,6 +152,7 @@ pub fn cosim_from_traces(
         total_speedup: dense_total / wr_total,
         bp_speedup: dense_bp / wr_bp,
         mean_sparsity,
+        skip,
     })
 }
 
@@ -219,6 +233,17 @@ mod tests {
         assert_eq!(report.backend, "exact");
         assert!(report.bp_speedup > 1.2, "{}", report.bp_speedup);
         assert_eq!(report.to_json().get("replayed").as_bool(), Some(true));
+        // The default plan cache was exercised and its counters surfaced —
+        // but never serialized (the --out report is plan-invariant).
+        let skip = report.skip.expect("plan cache on by default");
+        assert!(skip.words_gathered > 0, "{skip:?}");
+        assert!(!report.to_json().dump().contains("skip"));
+        // Plans off: same rows, no counters.
+        let off = SimOptions { gather_plans: None, ..opts.clone() };
+        let off_report = cosim_from_traces(&traces, &cfg, &off, true, 0).unwrap();
+        assert!(off_report.skip.is_none());
+        assert_eq!(report.rows, off_report.rows, "plans must not change a cycle");
+        assert_eq!(report.to_json().dump(), off_report.to_json().dump());
         // Replay is deterministic end to end, at any jobs level.
         let again = cosim_from_traces(&traces, &cfg, &opts, true, 0).unwrap();
         assert_eq!(report.rows, again.rows);

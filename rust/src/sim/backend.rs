@@ -28,18 +28,21 @@
 //! the PR 1 determinism contract (bit-identical results at any `--jobs`
 //! level) holds for every source.
 
+use std::collections::HashMap;
+
 use crate::config::BitmapPattern;
 use crate::nn::Shape;
-use crate::sparsity::{or_bits, Bitmap};
+use crate::sparsity::{or_bits, Bitmap, RunIndex};
 use crate::util::rng::Pcg32;
 
-use super::exact::ExactPe;
+use super::exact::{ExactOutput, ExactPe, OperandPattern};
+use super::plan::{GatherPlanCache, PlannedGather, SkipStats};
 
 /// How a task's outputs map onto captured operand bitmaps — the conv
 /// geometry that turns a replayed map into per-output operand patterns.
 /// Built by `engine::build_task` from the layer's kind and phase; only
 /// consulted when the task actually replays (`sim::replay`).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum TaskGeom {
     /// No registered geometry: replayed operand windows fall back to the
     /// streaming-slice anchoring ([`BitmapSource::Streamed`]).
@@ -124,8 +127,12 @@ pub enum BitmapSource<'a> {
     /// for output masks it is always the exact per-position slice.
     Streamed { map: &'a Bitmap },
     /// Geometry-exact operand gather: assemble each output's true
-    /// strided receptive field from the captured map per `geom`.
-    Gathered { map: &'a Bitmap, geom: TaskGeom },
+    /// strided receptive field from the captured map per `geom`. `runs`
+    /// is the map's optional word-run structure (`sparsity::RunIndex`),
+    /// consulted only as an execution strategy — planned gathers skip
+    /// all-zero source words and short-circuit all-ones windows through
+    /// it, without changing a single assembled bit.
+    Gathered { map: &'a Bitmap, geom: TaskGeom, runs: Option<&'a RunIndex> },
     /// Weight-gradient joint operand: `act ∧ grad` over the reduction
     /// positions (`TaskGeom::Wg`). A missing side is structurally dense
     /// (e.g. conv1's activations are the raw image).
@@ -193,7 +200,7 @@ fn operand_window_start(geom: &TileGeom, j: usize, map: &Bitmap) -> usize {
 /// maps that output to. Returns the pattern length in bits — `0` for a
 /// structurally empty window (a strided-BP position no gradient tap
 /// reaches), which the caller costs as zero cycles and zero MACs.
-fn gather_operand_words(
+pub(crate) fn gather_operand_words(
     map: &Bitmap,
     tg: TaskGeom,
     ch: usize,
@@ -414,6 +421,14 @@ fn sample_pattern_words(
 /// exist on this path.
 ///
 /// Returns `(cycles, macs)` as the engine's f64 accounting expects.
+///
+/// `plans` is the optional shared gather-plan cache (`sim::plan`): with
+/// it, windowed replayed gathers run plan-driven — precomputed segment
+/// schedules, RLE-run zero-skip, all-ones dense short-circuit — instead
+/// of re-deriving the window math per output. Strictly an execution
+/// strategy: `planned_gathers_cost_identically_to_direct` pins that
+/// `Some` vs `None` never changes a returned cycle or MAC, and the
+/// cache participates in no fingerprint.
 pub fn exact_tile_cost(
     pe: &ExactPe,
     crs: usize,
@@ -421,6 +436,7 @@ pub fn exact_tile_cost(
     max_sampled: usize,
     operands: &BitmapSource<'_>,
     outputs: &BitmapSource<'_>,
+    plans: Option<&GatherPlanCache>,
     rng: &mut Pcg32,
 ) -> (f64, f64) {
     let n_out = geom.outputs();
@@ -462,11 +478,24 @@ pub fn exact_tile_cost(
     // FC fast path: under `Full` geometry every output reads the entire
     // operand map, so one PE walk prices all unmasked outputs — running
     // it per output would redo an identical word walk up to `k` times.
-    if let BitmapSource::Gathered { map, geom: TaskGeom::Full } = operands {
+    if let BitmapSource::Gathered { map, geom: TaskGeom::Full, .. } = operands {
         let res = pe.simulate_output_words(map.words(), map.shape.len());
         let live: u64 = mask.iter().map(|w| w.count_ones() as u64).sum();
         return ((live * res.cycles) as f64 * scale, (live * res.macs) as f64 * scale);
     }
+
+    // Resolve the reusable gather plan once per tile — every output of a
+    // windowed replayed gather shares one precomputed segment schedule.
+    let planned = match (plans, operands) {
+        (Some(cache), BitmapSource::Gathered { map, geom: tg, .. })
+            if matches!(tg, TaskGeom::Conv { .. } | TaskGeom::ConvT { .. }) =>
+        {
+            cache.plan_for(map.shape, *tg, geom.u, geom.v).map(|p| (p, cache))
+        }
+        _ => None,
+    };
+    let mut stats = SkipStats::default();
+    let mut dense_memo: HashMap<usize, ExactOutput> = HashMap::new();
 
     let mut cycles = 0u64;
     let mut macs = 0u64;
@@ -485,9 +514,27 @@ pub fn exact_tile_cost(
                 map.window_words_into(start, crs, &mut scratch);
                 crs
             }
-            BitmapSource::Gathered { map, geom: tg } => {
+            BitmapSource::Gathered { map, geom: tg, runs } => {
                 let (ch, y, x) = geom.coords(pick(i));
-                gather_operand_words(map, *tg, ch, y, x, &mut scratch)
+                if let Some((plan, cache)) = &planned {
+                    let runs = if cache.zero_skip() { *runs } else { None };
+                    match plan.gather(map, runs, ch, y, x, &mut stats, &mut scratch) {
+                        PlannedGather::Words { len } => len,
+                        PlannedGather::AllOnes { len } => {
+                            // The gathered pattern is provably dense:
+                            // serve the PE walk from a per-length memo.
+                            let res = *dense_memo.entry(len).or_insert_with(|| {
+                                let p = OperandPattern::dense(len);
+                                pe.simulate_output_words(p.words(), len)
+                            });
+                            cycles += res.cycles;
+                            macs += res.macs;
+                            continue;
+                        }
+                    }
+                } else {
+                    gather_operand_words(map, *tg, ch, y, x, &mut scratch)
+                }
             }
             BitmapSource::Pair { act, grad, geom: tg } => {
                 let TaskGeom::Wg { r, s, stride, pad, gu, gv, dw } = *tg else {
@@ -525,6 +572,9 @@ pub fn exact_tile_cost(
         cycles += res.cycles;
         macs += res.macs;
     }
+    if let Some((_, cache)) = planned {
+        cache.absorb(&stats); // one batch of atomic adds per tile
+    }
     (cycles as f64 * scale, macs as f64 * scale)
 }
 
@@ -556,9 +606,9 @@ mod tests {
         let pe = ExactPe::default();
         let geom = full_geom(4, 4, 4);
         let a =
-            exact_tile_cost(&pe, 288, &geom, 32, &sampled(0.5), &sampled(0.5), &mut Pcg32::new(9));
+            exact_tile_cost(&pe, 288, &geom, 32, &sampled(0.5), &sampled(0.5), None, &mut Pcg32::new(9));
         let b =
-            exact_tile_cost(&pe, 288, &geom, 32, &sampled(0.5), &sampled(0.5), &mut Pcg32::new(9));
+            exact_tile_cost(&pe, 288, &geom, 32, &sampled(0.5), &sampled(0.5), None, &mut Pcg32::new(9));
         assert_eq!(a, b);
     }
 
@@ -574,6 +624,7 @@ mod tests {
             4096,
             &sampled(1.0),
             &sampled(1.0),
+            None,
             &mut Pcg32::new(1),
         );
         // 8 dense 256-wide outputs: deterministic arithmetic.
@@ -593,10 +644,11 @@ mod tests {
             4096,
             &sampled(1.0),
             &sampled(1.0),
+            None,
             &mut Pcg32::new(2),
         );
         let (cyc_sub, macs_sub) =
-            exact_tile_cost(&pe, 512, &geom, 64, &sampled(1.0), &sampled(1.0), &mut Pcg32::new(2));
+            exact_tile_cost(&pe, 512, &geom, 64, &sampled(1.0), &sampled(1.0), None, &mut Pcg32::new(2));
         // Dense patterns have zero variance, so scaling is exact.
         assert_eq!(cyc_sub, cyc_full);
         assert_eq!(macs_sub, macs_full);
@@ -613,6 +665,7 @@ mod tests {
             4096,
             &sampled(0.7),
             &sampled(1.0),
+            None,
             &mut Pcg32::new(5),
         );
         let (masked_c, masked_m) = exact_tile_cost(
@@ -622,6 +675,7 @@ mod tests {
             4096,
             &sampled(0.7),
             &sampled(0.4),
+            None,
             &mut Pcg32::new(5),
         );
         assert!(masked_c < dense_c * 0.7, "{masked_c} vs {dense_c}");
@@ -646,6 +700,7 @@ mod tests {
             4096,
             &BitmapSource::Streamed { map: &in_map },
             &BitmapSource::Streamed { map: &out_map },
+            None,
             &mut rng,
         );
         assert_eq!(rng.next_u32(), untouched.next_u32(), "replay must not draw");
@@ -659,6 +714,7 @@ mod tests {
             4096,
             &BitmapSource::Streamed { map: &in_map },
             &BitmapSource::Streamed { map: &out_map },
+            None,
             &mut rng2,
         );
         assert_eq!((cyc, macs), again);
@@ -684,6 +740,7 @@ mod tests {
             4096,
             &sampled(1.0),
             &BitmapSource::Streamed { map: &out_map },
+            None,
             &mut rng,
         );
         let one = pe.simulate_output(&vec![true; 256]);
@@ -709,8 +766,8 @@ mod tests {
         }
         let replayed = BitmapSource::Streamed { map: &out_map };
         let mut rng = Pcg32::new(1);
-        let full = exact_tile_cost(&pe, 256, &geom, 4096, &sampled(1.0), &replayed, &mut rng);
-        let capped = exact_tile_cost(&pe, 256, &geom, 16, &sampled(1.0), &replayed, &mut rng);
+        let full = exact_tile_cost(&pe, 256, &geom, 4096, &sampled(1.0), &replayed, None, &mut rng);
+        let capped = exact_tile_cost(&pe, 256, &geom, 16, &sampled(1.0), &replayed, None, &mut rng);
         assert_eq!(capped, full, "strided subsample must be channel-unbiased here");
         let one = pe.simulate_output(&vec![true; 256]);
         assert_eq!(full.1, 32.0 * 256.0, "exactly the two dense channels compute");
@@ -732,6 +789,7 @@ mod tests {
                 4096,
                 &BitmapSource::Streamed { map: &in_map },
                 &sampled(1.0),
+                None,
                 &mut rng,
             );
             let density = macs / (geom.outputs() as f64 * 1024.0);
@@ -759,9 +817,9 @@ mod tests {
             blob_radius: 8,
         };
         let (cyc_iid, macs_iid) =
-            exact_tile_cost(&pe, 2048, &geom, 4096, &iid, &sampled(1.0), &mut Pcg32::new(2));
+            exact_tile_cost(&pe, 2048, &geom, 4096, &iid, &sampled(1.0), None, &mut Pcg32::new(2));
         let (cyc_blob, macs_blob) =
-            exact_tile_cost(&pe, 2048, &geom, 4096, &blobs, &sampled(1.0), &mut Pcg32::new(2));
+            exact_tile_cost(&pe, 2048, &geom, 4096, &blobs, &sampled(1.0), None, &mut Pcg32::new(2));
         let mac_err = (macs_blob - macs_iid).abs() / macs_iid;
         assert!(mac_err < 0.02, "same density, same expected MACs ({mac_err:.3})");
         assert!(
@@ -1028,8 +1086,9 @@ mod tests {
             72,
             &geom_fp,
             64,
-            &BitmapSource::Gathered { map: &in_map, geom: conv },
+            &BitmapSource::Gathered { map: &in_map, geom: conv, runs: None },
             &sampled(1.0),
+            None,
             &mut rng,
         );
         let b = exact_tile_cost(
@@ -1039,6 +1098,7 @@ mod tests {
             64,
             &BitmapSource::Pair { act: Some(&act), grad: Some(&grad), geom: wg },
             &sampled(1.0),
+            None,
             &mut rng,
         );
         assert_eq!(rng.next_u32(), untouched.next_u32(), "gather/pair must not draw");
@@ -1053,9 +1113,67 @@ mod tests {
             64,
             &BitmapSource::Pair { act: Some(&act), grad: Some(&grad), geom: wg },
             &sampled(1.0),
+            None,
             &mut rng2,
         );
         assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn planned_gathers_cost_identically_to_direct() {
+        // The whole point of the plan cache: Some vs None (and zero-skip
+        // on vs off) must never change a returned cycle or MAC, across
+        // geometries, densities and subsampling.
+        let pe = ExactPe::default();
+        let mut map_rng = Pcg32::new(61);
+        let full = GatherPlanCache::new();
+        let plans_only = GatherPlanCache::plans_only();
+        for (density, tg) in [
+            (0.01, TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: false }),
+            (0.5, TaskGeom::Conv { r: 5, s: 5, stride: 2, pad: 2, dw: true }),
+            (1.0, TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: false }),
+            (0.4, TaskGeom::ConvT { r: 3, s: 3, stride: 2, pad: 1, dw: false }),
+        ] {
+            let map = Bitmap::sample(Shape::new(6, 12, 12), density, &mut map_rng);
+            let runs = map.run_index();
+            let geom = full_geom(3, 12, 12);
+            let src = BitmapSource::Gathered { map: &map, geom: tg, runs: Some(&runs) };
+            for cap in [4096usize, 40] {
+                let direct = exact_tile_cost(
+                    &pe,
+                    54,
+                    &geom,
+                    cap,
+                    &src,
+                    &sampled(1.0),
+                    None,
+                    &mut Pcg32::new(5),
+                );
+                for cache in [&full, &plans_only] {
+                    let planned = exact_tile_cost(
+                        &pe,
+                        54,
+                        &geom,
+                        cap,
+                        &src,
+                        &sampled(1.0),
+                        Some(cache),
+                        &mut Pcg32::new(5),
+                    );
+                    assert_eq!(planned, direct, "{tg:?} d={density} cap={cap}");
+                }
+            }
+        }
+        // The dense map exercised the all-ones short circuit; the sparse
+        // one the zero-skip — both counters must have moved (on the
+        // skip-enabled cache only).
+        let s = full.stats();
+        assert!(s.windows_shortcircuited > 0, "dense map must short-circuit");
+        assert!(s.words_skipped > 0, "0.01-density map must skip words");
+        assert!(s.words_gathered > 0);
+        assert_eq!(plans_only.stats().words_skipped, 0);
+        assert_eq!(plans_only.stats().windows_shortcircuited, 0);
+        assert!(plans_only.stats().words_gathered > 0);
     }
 
     #[test]
@@ -1071,8 +1189,9 @@ mod tests {
             18,
             &geom,
             4096,
-            &BitmapSource::Gathered { map: &map, geom: conv },
+            &BitmapSource::Gathered { map: &map, geom: conv, runs: None },
             &sampled(1.0),
+            None,
             &mut Pcg32::new(2),
         );
         // Per output: 2 channels × (valid taps of a 3x3 window at pad 1).

@@ -720,6 +720,60 @@ mod tests {
     }
 
     #[test]
+    fn gather_plans_never_change_a_replayed_result() {
+        // The perf campaign's hard contract: the gather-plan cache (with
+        // zero-skip and the all-ones short circuit) is pure execution
+        // strategy. A replayed exact-backend simulation must produce
+        // bit-identical per-layer results with plans on (default cache),
+        // plans without zero-skip, and no plans at all — sequentially
+        // and under parallel fan-out.
+        use std::sync::Arc;
+        use crate::config::BitmapPattern;
+        use crate::sim::GatherPlanCache;
+        use crate::sparsity::capture_synthetic_trace;
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let model = SparsityModel::synthetic(19);
+        let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+        let bank = Arc::new(crate::sim::ReplayBank::from_trace(&net, &trace).unwrap());
+        let base = SimOptions {
+            batch: 3,
+            backend: crate::sim::ExecBackend::Exact,
+            replay: Some(bank),
+            trace_fingerprint: Some(trace.fingerprint()),
+            ..SimOptions::default()
+        };
+        let variants = [
+            SimOptions { gather_plans: None, ..base.clone() },
+            SimOptions {
+                gather_plans: Some(Arc::new(GatherPlanCache::plans_only())),
+                ..base.clone()
+            },
+            base.clone(), // default cache: plans + zero-skip
+        ];
+        let reference = simulate_network(&net, &cfg, &variants[0], &model, Scheme::InOutWr);
+        for (i, opts) in variants.iter().enumerate() {
+            for jobs in [1usize, 4] {
+                let r = simulate_network_jobs(&net, &cfg, opts, &model, Scheme::InOutWr, jobs);
+                assert_eq!(
+                    r.total_cycles(),
+                    reference.total_cycles(),
+                    "variant {i} jobs {jobs}"
+                );
+                assert_eq!(r.total_energy_j(), reference.total_energy_j());
+                for (a, b) in r.per_layer.iter().zip(&reference.per_layer) {
+                    assert_eq!(a.cycles, b.cycles, "variant {i} {} {}", a.name, a.phase.label());
+                    assert_eq!(a.performed_macs, b.performed_macs, "variant {i} {}", a.name);
+                }
+            }
+        }
+        // The default cache did real planned work on this workload.
+        let cache = base.gather_plans.as_ref().unwrap();
+        assert!(!cache.is_empty(), "replayed convs must have built plans");
+        assert!(cache.stats().words_gathered > 0);
+    }
+
+    #[test]
     fn result_json_roundtrips_bit_exact() {
         let net = zoo::agos_cnn();
         let r = sim(&net, Scheme::InOutWr);

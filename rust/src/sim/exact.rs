@@ -47,8 +47,24 @@ impl OperandPattern {
 
     /// Wrap already-packed words (e.g. a replayed window slice). `words`
     /// must hold at least `ceil(len / 64)` entries.
+    ///
+    /// Debug builds additionally pin the packing contract every other
+    /// constructor upholds: exactly `ceil(len / 64)` words, with every
+    /// bit at or beyond `len` zero. A dirty tail used to slip through
+    /// silently — the range counts mask it off per call, but pattern
+    /// equality, word-level comparisons and any future whole-word
+    /// popcount over `words()` would all miscount.
     pub fn from_words(words: Vec<u64>, len: usize) -> OperandPattern {
         assert!(words.len() >= len.div_ceil(64), "word buffer shorter than len");
+        debug_assert_eq!(
+            words.len(),
+            len.div_ceil(64),
+            "word buffer longer than ceil(len/64)"
+        );
+        debug_assert!(
+            len % 64 == 0 || words[len / 64] >> (len % 64) == 0,
+            "bits beyond len must be masked off"
+        );
         OperandPattern { len, words }
     }
 
@@ -82,9 +98,43 @@ impl OperandPattern {
     }
 }
 
+/// Popcount of four words at once — the unrolled unit of the batched
+/// drain walk. With the `simd` feature on an x86-64 host compiled for
+/// `popcnt`, the counts go through the hardware instruction directly;
+/// everywhere else the scalar `count_ones` path (which LLVM also lowers
+/// to `popcnt` under `-C target-cpu`) is used. Both orders sum the same
+/// four integers, so the result is identical by construction.
+#[inline(always)]
+fn popcount4(a: u64, b: u64, c: u64, d: u64) -> u64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64", target_feature = "popcnt"))]
+    {
+        // SAFETY: gated on `target_feature = "popcnt"` at compile time.
+        unsafe {
+            use core::arch::x86_64::_popcnt64;
+            return (_popcnt64(a as i64)
+                + _popcnt64(b as i64)
+                + _popcnt64(c as i64)
+                + _popcnt64(d as i64)) as u64;
+        }
+    }
+    #[allow(unreachable_code)]
+    {
+        a.count_ones() as u64
+            + b.count_ones() as u64
+            + c.count_ones() as u64
+            + d.count_ones() as u64
+    }
+}
+
 /// Popcount of the bit range `[lo, hi)` of packed LSB-first words — the
 /// masked u64 walk at the heart of the group drain. Bits outside the
 /// range never contribute, so callers need no tail invariant.
+///
+/// The edge words (a shifted head, a masked tail) are handled once,
+/// hoisted out of the interior walk; the interior runs in 4-wide chunks
+/// through [`popcount4`] so big ranges (the `Full` geometry's whole-map
+/// patterns, `count_nz` over replayed windows) issue batched popcounts
+/// instead of a one-word-at-a-time dependency chain.
 #[inline]
 pub fn count_bits_range(words: &[u64], lo: usize, hi: usize) -> u64 {
     debug_assert!(lo < hi && (hi - 1) / 64 < words.len());
@@ -97,7 +147,12 @@ pub fn count_bits_range(words: &[u64], lo: usize, hi: usize) -> u64 {
         return w.count_ones() as u64;
     }
     let mut n = (words[wlo] >> (lo % 64)).count_ones() as u64;
-    for w in &words[wlo + 1..whi] {
+    let mid = &words[wlo + 1..whi];
+    let mut chunks = mid.chunks_exact(4);
+    for q in &mut chunks {
+        n += popcount4(q[0], q[1], q[2], q[3]);
+    }
+    for w in chunks.remainder() {
         n += w.count_ones() as u64;
     }
     let tail = hi - whi * 64; // 1..=64
@@ -410,6 +465,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn from_words_accepts_well_formed_patterns() {
+        // Exact word count with a clean tail round-trips.
+        let p = OperandPattern::from_words(vec![!0u64, 0x7], 67);
+        assert_eq!(p.len(), 67);
+        assert_eq!(p.count_nz(), 67);
+        // A 64-aligned length has no tail to check.
+        let p = OperandPattern::from_words(vec![!0u64; 2], 128);
+        assert_eq!(p.count_nz(), 128);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "bits beyond len must be masked off")]
+    fn from_words_rejects_dirty_tail_bits() {
+        // Bit 3 lies beyond len=3: a malformed pattern must be caught at
+        // construction, not silently tolerated.
+        OperandPattern::from_words(vec![0b1111], 3);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "word buffer longer")]
+    fn from_words_rejects_oversized_buffers() {
+        OperandPattern::from_words(vec![0, 0], 64);
+    }
+
+    #[test]
+    fn chunked_popcount_matches_naive_reference() {
+        // The 4-wide interior chunking must agree with a bit-at-a-time
+        // reference on ranges long enough to exercise full chunks, the
+        // remainder loop, and both edge words.
+        let mut rng = Pcg32::new(21);
+        let nz = random_bitmap(64 * 23 + 17, 0.37, &mut rng);
+        let p = OperandPattern::from_bools(&nz);
+        let naive = |lo: usize, hi: usize| nz[lo..hi].iter().filter(|b| **b).count() as u64;
+        for (lo, hi) in [
+            (0, nz.len()),      // 23 interior words: 5 chunks + remainder
+            (1, nz.len() - 1),  // unaligned edges
+            (63, 64 * 18),      // head shift of 63, aligned tail
+            (64, 64 * 22 + 5),  // aligned head, masked tail
+            (7, 64 * 6),        // exactly one 4-chunk interior
+        ] {
+            assert_eq!(count_bits_range(p.words(), lo, hi), naive(lo, hi), "[{lo},{hi})");
+        }
+        assert_eq!(popcount4(!0, 0, 0xF0F0, 1), 64 + 8 + 1);
     }
 
     #[test]

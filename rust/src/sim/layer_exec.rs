@@ -233,7 +233,11 @@ pub fn simulate_layer_replay(
                     }
                 } else if let Some(rm) = &replay_in {
                     if geometry && task.geom.gathers() {
-                        BitmapSource::Gathered { map: rm.map.as_ref(), geom: task.geom }
+                        BitmapSource::Gathered {
+                            map: rm.map.as_ref(),
+                            geom: task.geom,
+                            runs: Some(rm.runs.as_ref()),
+                        }
                     } else {
                         BitmapSource::Streamed { map: rm.map.as_ref() }
                     }
@@ -262,6 +266,7 @@ pub fn simulate_layer_replay(
                     opts.exact_outputs_per_tile,
                     &in_src,
                     &out_src,
+                    opts.gather_plans.as_deref(),
                     rng,
                 );
                 tile_busy.push(cyc);
@@ -491,7 +496,7 @@ mod tests {
         let mut map_rng = Pcg32::new(11);
         let out_map = Bitmap::sample(crate::nn::Shape::new(32, 16, 16), 0.5, &mut map_rng);
         let in_map = Bitmap::sample(crate::nn::Shape::new(32, 18, 18), 0.5, &mut map_rng);
-        let wrap = |b: &Bitmap| ReplayMap { map: Arc::new(b.clone()), sparsity: b.sparsity() };
+        let wrap = |b: &Bitmap| ReplayMap::new(Arc::new(b.clone()));
         let maps = TaskMaps {
             operand: Some(wrap(&in_map)),
             output: Some(wrap(&out_map)),
@@ -550,7 +555,7 @@ mod tests {
         let mut map_rng = Pcg32::new(5);
         let act = Bitmap::sample(crate::nn::Shape::new(4, 8, 8), 0.5, &mut map_rng);
         let grad = Bitmap::sample(crate::nn::Shape::new(8, 8, 8), 0.6, &mut map_rng);
-        let wrap = |b: &Bitmap| ReplayMap { map: Arc::new(b.clone()), sparsity: b.sparsity() };
+        let wrap = |b: &Bitmap| ReplayMap::new(Arc::new(b.clone()));
         let maps = TaskMaps {
             pair: Some(PairMaps { act: Some(wrap(&act)), grad: Some(wrap(&grad)) }),
             ..TaskMaps::default()
@@ -614,7 +619,7 @@ mod tests {
             }
         }
         let maps = TaskMaps {
-            output: Some(ReplayMap { map: Arc::new(out_map), sparsity: 0.5 }),
+            output: Some(ReplayMap::new(Arc::new(out_map))),
             ..TaskMaps::default()
         };
         let opts = SimOptions::default(); // analytic backend

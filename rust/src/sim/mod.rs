@@ -26,12 +26,14 @@ mod energy;
 mod layer_exec;
 mod engine;
 mod exact;
+mod plan;
 mod replay;
 mod sweep;
 
 pub use adder_tree::{tree_utilization, ReconfigMode};
 pub use backend::{exact_tile_cost, BitmapSource, ExecBackend, TaskGeom, TileGeom};
 pub use exact::{count_bits_range, random_bitmap, ExactOutput, ExactPe, OperandPattern};
+pub use plan::{GatherPlan, GatherPlanCache, PlannedGather, SkipStats};
 pub use replay::{PairMaps, ReplayBank, ReplayMap, StepMaps, TaskMaps};
 pub use blocking::synapse_passes;
 pub use energy::{layer_energy, EnergyBreakdown};

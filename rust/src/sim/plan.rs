@@ -1,0 +1,555 @@
+//! Reusable gather plans for the exact backend's replayed operand
+//! windows — pure execution strategy, bit-identical by construction.
+//!
+//! `Bitmap::gather_window_words` re-derives the same word-index +
+//! shift/mask schedule for every output of every tile of every image:
+//! the schedule depends only on the map's shape, the task geometry and
+//! the output's spatial position — none of which change across images,
+//! steps, channels (channels translate the source by a whole plane) or
+//! schemes. A [`GatherPlan`] runs that derivation **once** per
+//! `(map shape, TaskGeom, output plane)` and records the resulting
+//! segment list; execution is a tight copy loop over precomputed
+//! `(src, dst, n)` segments.
+//!
+//! On top of the plan, the run structure replayed maps carry
+//! (`sparsity::RunIndex`) enables SparseTrain/TensorDash-style operand
+//! skipping in the *simulator itself*: a segment whose source words are
+//! all zero leaves the pre-zeroed scratch untouched, so it is skipped
+//! outright; a padding-free window whose every source word is all-ones
+//! *is* the dense pattern, so the PE walk is served from a per-tile
+//! dense memo instead of being re-gathered and re-counted.
+//!
+//! None of this may change a reported cycle: plans replicate the exact
+//! splitting of the direct gather (`tests in sim::backend` and
+//! `tests/exact_perf.rs` pin equality), skipping only elides writes of
+//! zero bits, and the dense short-circuit only fires when the gathered
+//! pattern provably equals `OperandPattern::dense(len)`. Accordingly the
+//! cache is **not** part of any fingerprint or sweep-cache key
+//! (`SimOptions::fingerprint` ignores it), exactly like `SweepCache`
+//! membership itself.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::nn::Shape;
+use crate::sparsity::{or_bits, Bitmap, RunIndex};
+
+use super::backend::TaskGeom;
+
+/// One precomputed copy segment: `n` bits from channel-plane-relative
+/// source bit `src` into channel-block-relative destination bit `dst`.
+/// Segments are split exactly like the direct gather splits its row
+/// runs (≤64 bits, stepped from the in-map row start), so executing
+/// them reproduces its `extract_bits`/`or_bits` calls verbatim.
+#[derive(Clone, Copy, Debug)]
+struct Seg {
+    src: u32,
+    dst: u32,
+    n: u16,
+}
+
+/// Per-output-position schedule: the window's per-channel bit length,
+/// whether every window bit maps to an in-map source bit (no structural
+/// padding), and the segment range in the shared pool.
+#[derive(Clone, Copy, Debug)]
+struct OutPlan {
+    per_chan: u32,
+    full: bool,
+    seg_lo: u32,
+    seg_hi: u32,
+}
+
+/// Outcome of one planned gather.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannedGather {
+    /// The pattern was assembled into the caller's scratch buffer
+    /// (`len == 0`: a structurally empty window, nothing to simulate).
+    Words { len: usize },
+    /// Every operand bit is provably set: the caller can serve the PE
+    /// result from a dense pattern of this length without gathering.
+    AllOnes { len: usize },
+}
+
+/// Skip-effectiveness counters for one batch of planned gathers. Plain
+/// sums, so aggregation is order-independent — totals are identical at
+/// any `--jobs` level.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SkipStats {
+    /// Source words actually read by executed segments.
+    pub words_gathered: u64,
+    /// Source words elided because their run was all-zero.
+    pub words_skipped: u64,
+    /// Whole windows served from the dense memo (all-ones runs).
+    pub windows_shortcircuited: u64,
+}
+
+impl SkipStats {
+    /// Component-wise difference (for before/after snapshots).
+    pub fn delta_from(&self, before: &SkipStats) -> SkipStats {
+        SkipStats {
+            words_gathered: self.words_gathered - before.words_gathered,
+            words_skipped: self.words_skipped - before.words_skipped,
+            windows_shortcircuited: self.windows_shortcircuited
+                - before.windows_shortcircuited,
+        }
+    }
+}
+
+/// The word-index/shift/mask schedule for one `(map shape, TaskGeom,
+/// u × v output plane)` — every tile, channel, image and step with that
+/// signature shares one plan.
+#[derive(Debug)]
+pub struct GatherPlan {
+    v: usize,
+    dw: bool,
+    channels: usize,
+    /// Bits per channel plane of the source map (`h · w`).
+    plane_bits: usize,
+    outs: Vec<OutPlan>,
+    segs: Vec<Seg>,
+}
+
+impl GatherPlan {
+    /// Build the plan for every spatial output position of a `u × v`
+    /// plane under `tg` against maps of `shape`. Only windowed
+    /// geometries plan; `Full` keeps its one-walk fast path and
+    /// `Streaming`/`Wg` never reach the gathered source.
+    fn build(shape: Shape, tg: TaskGeom, u: usize, v: usize) -> Option<GatherPlan> {
+        let (dw, windows): (bool, Box<dyn Fn(usize, usize) -> Option<(isize, isize, usize, usize)>>) =
+            match tg {
+                TaskGeom::Conv { r, s, stride, pad, dw } => (
+                    dw,
+                    Box::new(move |y, x| {
+                        Some((
+                            (y * stride) as isize - pad as isize,
+                            (x * stride) as isize - pad as isize,
+                            r,
+                            s,
+                        ))
+                    }),
+                ),
+                TaskGeom::ConvT { r, s, stride, pad, dw } => (
+                    dw,
+                    Box::new(move |y, x| {
+                        // Same floor-division tap math as the direct
+                        // gather: the contiguous run of gradient rows
+                        // whose strided window covers (y, x).
+                        let sd = stride.max(1) as isize;
+                        let (yp, xp) = ((y + pad) as isize, (x + pad) as isize);
+                        let u_min = (yp - r as isize).div_euclid(sd) + 1;
+                        let u_max = yp.div_euclid(sd);
+                        let v_min = (xp - s as isize).div_euclid(sd) + 1;
+                        let v_max = xp.div_euclid(sd);
+                        if u_max < u_min || v_max < v_min {
+                            return None; // structurally empty window
+                        }
+                        Some((
+                            u_min,
+                            v_min,
+                            (u_max - u_min + 1) as usize,
+                            (v_max - v_min + 1) as usize,
+                        ))
+                    }),
+                ),
+                TaskGeom::Full | TaskGeom::Streaming | TaskGeom::Wg { .. } => return None,
+            };
+        let mut plan = GatherPlan {
+            v,
+            dw,
+            channels: shape.c,
+            plane_bits: shape.h * shape.w,
+            outs: Vec::with_capacity(u * v),
+            segs: Vec::new(),
+        };
+        for y in 0..u {
+            for x in 0..v {
+                let seg_lo = plan.segs.len() as u32;
+                let (per_chan, full) = match windows(y, x) {
+                    Some((ay, ax, wh, ww)) => {
+                        let in_map = plan.plan_window(shape, ay, ax, wh, ww);
+                        ((wh * ww) as u32, in_map == wh * ww)
+                    }
+                    None => (0, false),
+                };
+                plan.outs.push(OutPlan {
+                    per_chan,
+                    full,
+                    seg_lo,
+                    seg_hi: plan.segs.len() as u32,
+                });
+            }
+        }
+        Some(plan)
+    }
+
+    /// Emit one window's segments — the same control flow as
+    /// `Bitmap::gather_window_words`, with offsets made channel-relative
+    /// (source: bits into one channel plane; destination: bits into one
+    /// channel block of the pattern). Returns the in-map bit count.
+    fn plan_window(&mut self, shape: Shape, ay: isize, ax: isize, wh: usize, ww: usize) -> usize {
+        let (h, w) = (shape.h as isize, shape.w as isize);
+        let mut pos = 0usize;
+        let mut in_map = 0usize;
+        for ky in 0..wh {
+            let y = ay + ky as isize;
+            if y < 0 || y >= h {
+                pos += ww; // whole row out of bounds: structural zeros
+                continue;
+            }
+            let x_lo = ax.max(0);
+            let x_hi = (ax + ww as isize).min(w);
+            if x_lo >= x_hi {
+                pos += ww;
+                continue;
+            }
+            pos += (x_lo - ax) as usize;
+            let mut base = (y as usize) * shape.w + x_lo as usize;
+            let mut left = (x_hi - x_lo) as usize;
+            in_map += left;
+            while left > 0 {
+                let take = left.min(64);
+                self.segs.push(Seg { src: base as u32, dst: pos as u32, n: take as u16 });
+                pos += take;
+                base += take;
+                left -= take;
+            }
+            pos += (ax + ww as isize - x_hi) as usize;
+        }
+        debug_assert_eq!(pos, wh * ww);
+        in_map
+    }
+
+    /// Pattern length at spatial position `(y, x)` (same value the
+    /// direct gather would return).
+    pub fn pattern_len(&self, y: usize, x: usize) -> usize {
+        let op = &self.outs[y * self.v + x];
+        op.per_chan as usize * if self.dw { 1 } else { self.channels }
+    }
+
+    /// Execute the plan for output `(ch, y, x)` against `map`, filling
+    /// `out` with the packed pattern exactly as the direct gather would.
+    /// With `runs`, all-zero segments are skipped (the scratch is
+    /// pre-zeroed, so eliding a zero write changes nothing) and
+    /// padding-free all-ones windows short-circuit to
+    /// [`PlannedGather::AllOnes`].
+    pub fn gather(
+        &self,
+        map: &Bitmap,
+        runs: Option<&RunIndex>,
+        ch: usize,
+        y: usize,
+        x: usize,
+        stats: &mut SkipStats,
+        out: &mut Vec<u64>,
+    ) -> PlannedGather {
+        let op = &self.outs[y * self.v + x];
+        let nch = if self.dw { 1 } else { self.channels };
+        let len = op.per_chan as usize * nch;
+        out.clear();
+        if len == 0 {
+            return PlannedGather::Words { len: 0 };
+        }
+        let segs = &self.segs[op.seg_lo as usize..op.seg_hi as usize];
+        if let Some(runs) = runs {
+            if op.full && self.window_all_ones(runs, ch, nch, segs) {
+                stats.windows_shortcircuited += 1;
+                return PlannedGather::AllOnes { len };
+            }
+        }
+        out.resize(len.div_ceil(64), 0);
+        for ci in 0..nch {
+            let c = if self.dw { ch } else { ci };
+            let src_base = c * self.plane_bits;
+            let dst_base = ci * op.per_chan as usize;
+            for seg in segs {
+                let lo = src_base + seg.src as usize;
+                let n = seg.n as usize;
+                let (wlo, whi) = (lo / 64, (lo + n - 1) / 64 + 1);
+                if let Some(runs) = runs {
+                    if runs.all_zero(wlo, whi) {
+                        stats.words_skipped += (whi - wlo) as u64;
+                        continue;
+                    }
+                }
+                stats.words_gathered += (whi - wlo) as u64;
+                or_bits(out, dst_base + seg.dst as usize, map.extract_bits(lo, n), n);
+            }
+        }
+        PlannedGather::Words { len }
+    }
+
+    /// Fail-fast check that every source word any segment touches (for
+    /// every channel) lies in an all-ones run — in which case the
+    /// gathered pattern of a padding-free window is exactly dense.
+    fn window_all_ones(&self, runs: &RunIndex, ch: usize, nch: usize, segs: &[Seg]) -> bool {
+        for ci in 0..nch {
+            let c = if self.dw { ch } else { ci };
+            let src_base = c * self.plane_bits;
+            for seg in segs {
+                let lo = src_base + seg.src as usize;
+                let whi = (lo + seg.n as usize - 1) / 64 + 1;
+                if !runs.all_ones(lo / 64, whi) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Everything that determines a plan's schedule.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    c: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+    v: usize,
+    tg: TaskGeom,
+}
+
+/// Process-shareable plan cache (threaded through `SimOptions` behind
+/// `Arc`, like `SweepCache`), plus the skip-effectiveness counters the
+/// cosim report surfaces. Plans are keyed by content — two layers with
+/// the same geometry against same-shaped maps share one plan across
+/// images, steps, schemes and worker threads.
+#[derive(Debug, Default)]
+pub struct GatherPlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<GatherPlan>>>,
+    /// When false, plans execute without consulting run indices — the
+    /// bench's isolation knob for `exact_zero_skip_speedup`.
+    zero_skip: bool,
+    words_gathered: AtomicU64,
+    words_skipped: AtomicU64,
+    windows_shortcircuited: AtomicU64,
+}
+
+impl GatherPlanCache {
+    /// Plans + RLE-run zero-skip (the production configuration).
+    pub fn new() -> GatherPlanCache {
+        GatherPlanCache { zero_skip: true, ..GatherPlanCache::default() }
+    }
+
+    /// Plans only, zero-skip disabled — isolates the plan speedup.
+    pub fn plans_only() -> GatherPlanCache {
+        GatherPlanCache::default()
+    }
+
+    pub fn zero_skip(&self) -> bool {
+        self.zero_skip
+    }
+
+    /// The plan for `(shape, tg)` over a `u × v` output plane, building
+    /// it on first request. `None` for geometries that don't plan
+    /// (`Full`'s one-walk fast path, streamed/pair sources).
+    pub fn plan_for(&self, shape: Shape, tg: TaskGeom, u: usize, v: usize) -> Option<Arc<GatherPlan>> {
+        let key = PlanKey { c: shape.c, h: shape.h, w: shape.w, u, v, tg };
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(p) = plans.get(&key) {
+            return Some(p.clone());
+        }
+        let built = Arc::new(GatherPlan::build(shape, tg, u, v)?);
+        plans.insert(key, built.clone());
+        Some(built)
+    }
+
+    /// Distinct plans built so far.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fold one tile's locally-accumulated counters in (three atomic
+    /// adds per tile, not per segment).
+    pub fn absorb(&self, stats: &SkipStats) {
+        self.words_gathered.fetch_add(stats.words_gathered, Ordering::Relaxed);
+        self.words_skipped.fetch_add(stats.words_skipped, Ordering::Relaxed);
+        self.windows_shortcircuited
+            .fetch_add(stats.windows_shortcircuited, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot (sums — identical at any `--jobs` level).
+    pub fn stats(&self) -> SkipStats {
+        SkipStats {
+            words_gathered: self.words_gathered.load(Ordering::Relaxed),
+            words_skipped: self.words_skipped.load(Ordering::Relaxed),
+            windows_shortcircuited: self.windows_shortcircuited.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn conv() -> TaskGeom {
+        TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: false }
+    }
+
+    /// Plan-driven gather == direct gather, bit for bit, across
+    /// geometries, positions and channels (the module's core contract;
+    /// `tests/exact_perf.rs` widens this across patterns).
+    #[test]
+    fn planned_gather_matches_direct_gather() {
+        let shape = Shape::new(5, 11, 13); // ragged rows on purpose
+        let mut rng = Pcg32::new(77);
+        let map = Bitmap::sample(shape, 0.4, &mut rng);
+        let cache = GatherPlanCache::new();
+        let runs = map.run_index();
+        let geoms = [
+            conv(),
+            TaskGeom::Conv { r: 5, s: 5, stride: 2, pad: 2, dw: false },
+            TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: true },
+            TaskGeom::ConvT { r: 3, s: 3, stride: 2, pad: 1, dw: false },
+            TaskGeom::ConvT { r: 1, s: 1, stride: 2, pad: 0, dw: false },
+        ];
+        let (u, v) = (8usize, 9usize);
+        let mut direct = Vec::new();
+        let mut planned = Vec::new();
+        for tg in geoms {
+            let plan = cache.plan_for(shape, tg, u, v).expect("windowed geometry plans");
+            let mut stats = SkipStats::default();
+            for ch in [0usize, 4] {
+                for y in 0..u {
+                    for x in 0..v {
+                        let dlen = super::super::backend::gather_operand_words(
+                            &map, tg, ch, y, x, &mut direct,
+                        );
+                        // Both with and without run skipping.
+                        for runs in [None, Some(&runs)] {
+                            match plan.gather(&map, runs, ch, y, x, &mut stats, &mut planned) {
+                                PlannedGather::Words { len } => {
+                                    assert_eq!(len, dlen, "{tg:?}@({ch},{y},{x})");
+                                    if len > 0 {
+                                        assert_eq!(
+                                            planned, direct,
+                                            "{tg:?}@({ch},{y},{x}) runs={}",
+                                            runs.is_some()
+                                        );
+                                    }
+                                }
+                                PlannedGather::AllOnes { .. } => {
+                                    unreachable!("0.4-density map has no all-ones window")
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            assert_eq!(plan.pattern_len(0, 0), {
+                let mut s = Vec::new();
+                super::super::backend::gather_operand_words(&map, tg, 0, 0, 0, &mut s)
+            });
+        }
+        // One plan per (shape, geom, plane); repeat lookups share it.
+        assert_eq!(cache.len(), geoms.len());
+        let again = cache.plan_for(shape, conv(), u, v).unwrap();
+        assert!(Arc::ptr_eq(&again, &cache.plan_for(shape, conv(), u, v).unwrap()));
+        assert_eq!(cache.len(), geoms.len());
+    }
+
+    #[test]
+    fn zero_skip_elides_dark_words_without_changing_bits() {
+        let shape = Shape::new(4, 16, 16);
+        // Channels 0-1 dark, 2-3 sparse: plenty of zero words.
+        let mut map = Bitmap::zeros(shape);
+        let mut rng = Pcg32::new(3);
+        for c in 2..4 {
+            for y in 0..16 {
+                for x in 0..16 {
+                    if rng.bernoulli(0.2) {
+                        map.set(c, y, x, true);
+                    }
+                }
+            }
+        }
+        let runs = map.run_index();
+        let cache = GatherPlanCache::new();
+        let plan = cache.plan_for(shape, conv(), 16, 16).unwrap();
+        let (mut with, mut without) = (Vec::new(), Vec::new());
+        let mut stats = SkipStats::default();
+        for y in 0..16 {
+            for x in 0..16 {
+                let a = plan.gather(&map, Some(&runs), 0, y, x, &mut stats, &mut with);
+                let b = plan.gather(&map, None, 0, y, x, &mut stats, &mut without);
+                assert_eq!(a, b);
+                assert_eq!(with, without, "skip must be invisible at ({y},{x})");
+            }
+        }
+        cache.absorb(&stats);
+        assert!(cache.stats().words_skipped > 0, "dark channels must be skipped");
+        assert_eq!(cache.stats().windows_shortcircuited, 0);
+    }
+
+    #[test]
+    fn padding_free_all_ones_windows_shortcircuit() {
+        let shape = Shape::new(2, 12, 12);
+        let map = Bitmap::ones(shape);
+        let runs = map.run_index();
+        let cache = GatherPlanCache::new();
+        let plan = cache.plan_for(shape, conv(), 12, 12).unwrap();
+        let mut out = Vec::new();
+        let mut stats = SkipStats::default();
+        // Interior positions have no padding taps: dense short-circuit.
+        let r = plan.gather(&map, Some(&runs), 0, 5, 5, &mut stats, &mut out);
+        assert_eq!(r, PlannedGather::AllOnes { len: 2 * 9 });
+        assert_eq!(stats.windows_shortcircuited, 1);
+        // Edge positions carry structural zero padding — they must NOT
+        // short-circuit (the pattern is not dense) and must still match
+        // the direct gather.
+        let mut direct = Vec::new();
+        let dlen = super::super::backend::gather_operand_words(
+            &map,
+            conv(),
+            0,
+            0,
+            0,
+            &mut direct,
+        );
+        let r = plan.gather(&map, Some(&runs), 0, 0, 0, &mut stats, &mut out);
+        assert_eq!(r, PlannedGather::Words { len: dlen });
+        assert_eq!(out, direct, "padded windows take the gathered path");
+        // Without runs the same interior window gathers normally.
+        let r = plan.gather(&map, None, 0, 5, 5, &mut stats, &mut out);
+        assert_eq!(r, PlannedGather::Words { len: 18 });
+        assert_eq!(out.iter().map(|w| w.count_ones()).sum::<u32>(), 18);
+    }
+
+    #[test]
+    fn unplannable_geometries_return_none() {
+        let cache = GatherPlanCache::plans_only();
+        assert!(!cache.zero_skip());
+        let shape = Shape::new(2, 4, 4);
+        assert!(cache.plan_for(shape, TaskGeom::Full, 1, 1).is_none());
+        assert!(cache.plan_for(shape, TaskGeom::Streaming, 4, 4).is_none());
+        let wg = TaskGeom::Wg { r: 3, s: 3, stride: 1, pad: 1, gu: 4, gv: 4, dw: false };
+        assert!(cache.plan_for(shape, wg, 4, 4).is_none());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn convt_empty_windows_plan_to_zero_length() {
+        // r < stride: odd positions have structurally no taps.
+        let shape = Shape::new(3, 4, 4);
+        let map = Bitmap::ones(shape);
+        let cache = GatherPlanCache::new();
+        let tg = TaskGeom::ConvT { r: 1, s: 1, stride: 2, pad: 0, dw: false };
+        let plan = cache.plan_for(shape, tg, 8, 8).unwrap();
+        let mut out = Vec::new();
+        let mut stats = SkipStats::default();
+        assert_eq!(
+            plan.gather(&map, None, 0, 1, 0, &mut stats, &mut out),
+            PlannedGather::Words { len: 0 }
+        );
+        assert_eq!(plan.pattern_len(1, 0), 0);
+        match plan.gather(&map, None, 0, 2, 2, &mut stats, &mut out) {
+            PlannedGather::Words { len } => assert_eq!(len, 3),
+            other => panic!("expected a 3-tap window, got {other:?}"),
+        }
+    }
+}

@@ -48,22 +48,30 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::nn::{LayerId, LayerKind, Network, Phase, Shape};
-use crate::sparsity::Bitmap;
+use crate::sparsity::{Bitmap, RunIndex};
 use crate::trace::TraceFile;
 
 /// One captured map plus its precomputed zero fraction (the memory and
 /// energy accounting wants the fraction without re-popcounting the map
-/// for every image).
+/// for every image) and word-run structure (`runs`) — the zero/one run
+/// index the exact backend's planned gathers skip through. Both are
+/// computed once per resolved map, here, and shared across every image
+/// and tile that replays it.
 #[derive(Clone, Debug)]
 pub struct ReplayMap {
     pub map: Arc<Bitmap>,
     pub sparsity: f64,
+    pub runs: Arc<RunIndex>,
 }
 
 impl ReplayMap {
-    fn new(map: Arc<Bitmap>) -> ReplayMap {
+    /// Resolve a captured map for replay. The run index is scanned from
+    /// the *reconstructed* words on purpose: a v3 trace's on-disk RLE
+    /// runs describe the delta payload, not the map it decodes to.
+    pub fn new(map: Arc<Bitmap>) -> ReplayMap {
         let sparsity = map.sparsity();
-        ReplayMap { map, sparsity }
+        let runs = Arc::new(map.run_index());
+        ReplayMap { map, sparsity, runs }
     }
 }
 

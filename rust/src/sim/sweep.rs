@@ -414,6 +414,16 @@ mod tests {
         let r = alias.relu("relu1", c);
         alias.softmax("prob", r);
         assert_ne!(a, SweepKey::new(&alias, Scheme::Dense, &cfg, &opts, &model));
+        // The gather-plan cache is execution strategy, not an input:
+        // plans on, off, or a different instance all HIT the same entry
+        // (their results are bit-identical by the engine's contract).
+        let no_plans = SimOptions { gather_plans: None, ..opts.clone() };
+        assert_eq!(a, SweepKey::new(&net, Scheme::Dense, &cfg, &no_plans, &model));
+        let other_cache = SimOptions {
+            gather_plans: Some(Arc::new(crate::sim::GatherPlanCache::plans_only())),
+            ..opts.clone()
+        };
+        assert_eq!(a, SweepKey::new(&net, Scheme::Dense, &cfg, &other_cache, &model));
     }
 
     #[test]

@@ -265,6 +265,17 @@ impl Bitmap {
         &self.words
     }
 
+    /// Word-granular run structure of this map (`sparsity::encode::
+    /// RunIndex`): sorted all-zero and all-ones word ranges, computed in
+    /// one linear scan. Replayed maps carry this alongside their words so
+    /// the exact backend's gather plans can skip dark source ranges and
+    /// short-circuit saturated windows (`sim::plan`). Computed from the
+    /// *reconstructed* words on purpose — a v3 delta payload's on-disk
+    /// runs describe the XOR delta, not the map it decodes to.
+    pub fn run_index(&self) -> super::RunIndex {
+        super::RunIndex::scan(&self.words, self.shape.len())
+    }
+
     /// Hex payload of the packed words (16 chars per word) — the v2
     /// trace-file encoding (`trace`).
     pub fn encode_hex(&self) -> String {
@@ -870,6 +881,27 @@ mod tests {
         assert_eq!(Bitmap::sample_blobs(shape, 0.0, 2, &mut a).count_nz(), 0);
         assert_eq!(Bitmap::sample_blobs(shape, 1.0, 2, &mut a).count_nz(), shape.len());
         assert_eq!(a.next_u32(), c.next_u32(), "degenerate blobs must not draw");
+    }
+
+    #[test]
+    fn run_index_classifies_real_maps() {
+        use crate::util::rng::Pcg32;
+        // A blobbed map at trace-like density: most words are dark.
+        let shape = Shape::new(8, 32, 32); // 128 words exactly
+        let b = Bitmap::sample_blobs(shape, 0.03, 2, &mut Pcg32::new(6));
+        let idx = b.run_index();
+        assert!(idx.zero_words() > 64, "sparse blobs leave most words dark");
+        // Every claimed zero range really is zero, word by word.
+        let n_words = b.words().len();
+        for wi in 0..n_words {
+            assert_eq!(idx.all_zero(wi, wi + 1), b.words()[wi] == 0, "word {wi}");
+        }
+        // Degenerate maps classify entirely, tail masks included.
+        let ones = Bitmap::ones(Shape::new(3, 3, 3)); // 27-bit tail
+        let oi = ones.run_index();
+        assert!(oi.all_ones(0, 1) && oi.one_words() == 1);
+        let zeros = Bitmap::zeros(shape);
+        assert!(zeros.run_index().all_zero(0, n_words));
     }
 
     #[test]

@@ -238,6 +238,89 @@ pub fn rle_decode_words(s: &str, len_bits: usize) -> anyhow::Result<Vec<u64>> {
     Ok(words)
 }
 
+// ---------------------------------------------------------------------------
+// Word-granular run index — zero-skip metadata for replayed bitmaps.
+// ---------------------------------------------------------------------------
+
+/// Sorted, disjoint word ranges of a packed bitmap that are entirely
+/// zero or entirely ones ("ones" in the [`rle_encode_words`] sense:
+/// every *valid* bit set, tail-aware). This is the run structure the v3
+/// trace payloads exploit for compaction, recomputed at word granularity
+/// on the reconstructed map so it is equally valid for v2 payloads,
+/// delta-decoded v3 steps (whose on-disk runs describe the XOR delta,
+/// not the map), and derived footprint/gradient maps.
+///
+/// The exact backend's gather plans query it to skip gathering from
+/// all-zero source ranges and to short-circuit all-ones windows — the
+/// simulator-side analogue of SparseTrain/TensorDash operand skipping.
+/// It is pure execution strategy: consulting it never changes a result.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RunIndex {
+    /// Half-open word ranges `[lo, hi)` that are entirely zero.
+    zero_runs: Vec<(u32, u32)>,
+    /// Half-open word ranges whose every valid bit is set.
+    one_runs: Vec<(u32, u32)>,
+}
+
+impl RunIndex {
+    /// Scan a packed word stream (`len_bits` valid bits) into its run
+    /// structure. One linear pass; maximal runs by construction.
+    pub fn scan(words: &[u64], len_bits: usize) -> RunIndex {
+        debug_assert_eq!(words.len(), len_bits.div_ceil(64), "word count vs bit length");
+        let mut idx = RunIndex::default();
+        let mut i = 0usize;
+        while i < words.len() {
+            let w = words[i];
+            if w == 0 {
+                let lo = i;
+                while i < words.len() && words[i] == 0 {
+                    i += 1;
+                }
+                idx.zero_runs.push((lo as u32, i as u32));
+            } else if w == word_mask(i, len_bits) {
+                let lo = i;
+                while i < words.len() && words[i] == word_mask(i, len_bits) {
+                    i += 1;
+                }
+                idx.one_runs.push((lo as u32, i as u32));
+            } else {
+                i += 1;
+            }
+        }
+        idx
+    }
+
+    /// True iff every word of `[wlo, whi)` is all-zero (empty ranges
+    /// vacuously qualify). Runs are maximal, so a covered range lies
+    /// inside a single run — one `partition_point` per query.
+    pub fn all_zero(&self, wlo: usize, whi: usize) -> bool {
+        Self::covered(&self.zero_runs, wlo, whi)
+    }
+
+    /// True iff every valid bit of words `[wlo, whi)` is set.
+    pub fn all_ones(&self, wlo: usize, whi: usize) -> bool {
+        Self::covered(&self.one_runs, wlo, whi)
+    }
+
+    fn covered(runs: &[(u32, u32)], wlo: usize, whi: usize) -> bool {
+        if whi <= wlo {
+            return true;
+        }
+        let i = runs.partition_point(|&(_, hi)| (hi as usize) <= wlo);
+        i < runs.len() && (runs[i].0 as usize) <= wlo && whi <= (runs[i].1 as usize)
+    }
+
+    /// Total words covered by zero runs (observability/tests).
+    pub fn zero_words(&self) -> usize {
+        self.zero_runs.iter().map(|&(lo, hi)| (hi - lo) as usize).sum()
+    }
+
+    /// Total words covered by ones runs.
+    pub fn one_words(&self) -> usize {
+        self.one_runs.iter().map(|&(lo, hi)| (hi - lo) as usize).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,5 +411,46 @@ mod tests {
         assert!(rle_decode_words("z4 ffffffffffffffff", 300).is_err());
         // The same bits are fine when the shape is word-aligned.
         assert!(rle_decode_words("z4 ffffffffffffffff", 320).is_ok());
+    }
+
+    #[test]
+    fn run_index_scans_and_answers_range_queries() {
+        // 6 words, 350 valid bits (tail word = 30 bits): zz M oo O(tail).
+        let tail = (1u64 << 30) - 1;
+        let words = vec![0, 0, 0xdead_beef, !0, !0, tail];
+        let idx = RunIndex::scan(&words, 350);
+        assert_eq!(idx.zero_words(), 2);
+        assert_eq!(idx.one_words(), 3);
+        assert!(idx.all_zero(0, 2));
+        assert!(idx.all_zero(1, 2));
+        assert!(!idx.all_zero(0, 3), "mixed word breaks the run");
+        assert!(!idx.all_zero(2, 3));
+        assert!(idx.all_ones(3, 6), "tail-masked full word counts as ones");
+        assert!(idx.all_ones(4, 5));
+        assert!(!idx.all_ones(2, 4));
+        assert!(!idx.all_ones(0, 2));
+        // Empty ranges are vacuously both.
+        assert!(idx.all_zero(2, 2) && idx.all_ones(0, 0));
+    }
+
+    #[test]
+    fn run_index_extremes_and_unaligned_tails() {
+        let all_zero = RunIndex::scan(&[0; 4], 256);
+        assert!(all_zero.all_zero(0, 4) && !all_zero.all_ones(0, 1));
+        assert_eq!(all_zero.zero_words(), 4);
+        let ones_tail = (1u64 << 44) - 1;
+        let all_ones = RunIndex::scan(&[!0, !0, ones_tail], 172);
+        assert!(all_ones.all_ones(0, 3) && !all_ones.all_zero(2, 3));
+        // A tail word with a bit missing is mixed, not a ones run.
+        let nearly = RunIndex::scan(&[!0, ones_tail >> 1], 108);
+        assert!(nearly.all_ones(0, 1) && !nearly.all_ones(0, 2));
+        // Agreement with the RLE grammar: zero/ones words classify
+        // identically to the zN/oN tokens the codec would emit.
+        let mixed = vec![0, 0xf00d, !0, 0, 0];
+        let idx = RunIndex::scan(&mixed, 320);
+        assert_eq!(idx.zero_words(), 3);
+        assert_eq!(idx.one_words(), 1);
+        let empty = RunIndex::scan(&[], 0);
+        assert!(empty.all_zero(0, 0) && empty.zero_words() == 0);
     }
 }

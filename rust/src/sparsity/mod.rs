@@ -13,5 +13,7 @@ pub use analyze::{
 };
 pub use bitmap::{Bitmap, ChannelWords};
 pub(crate) use bitmap::or_bits;
-pub use encode::{decode_group, encode_bitmap, encode_tensor, EncodedTensor, OffsetGroup, GROUP};
+pub use encode::{
+    decode_group, encode_bitmap, encode_tensor, EncodedTensor, OffsetGroup, RunIndex, GROUP,
+};
 pub use model::{SparsityModel, TraceSource};

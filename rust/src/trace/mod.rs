@@ -307,6 +307,26 @@ impl TraceFile {
         self.steps.iter().any(|s| s.layers.iter().any(|l| l.has_bitmaps()))
     }
 
+    /// Aggregate run structure over every payload in the file:
+    /// `(all-zero words, all-ones words, total words)` across act and
+    /// grad bitmaps. Scanned from the *reconstructed* maps (a v3 file's
+    /// on-disk runs describe delta payloads, not the maps they decode
+    /// to). The zero fraction bounds what the exact backend's RLE-aware
+    /// zero-skip can elide when this trace replays (`sim::plan`) —
+    /// `agos trace` prints it as zero-skip potential.
+    pub fn payload_run_stats(&self) -> (usize, usize, usize) {
+        let (mut zeros, mut ones, mut total) = (0usize, 0usize, 0usize);
+        for l in self.steps.iter().flat_map(|s| &s.layers) {
+            for b in [&l.act_bitmap, &l.grad_bitmap].into_iter().flatten() {
+                let idx = b.run_index();
+                zeros += idx.zero_words();
+                ones += idx.one_words();
+                total += b.shape.len().div_ceil(64);
+            }
+        }
+        (zeros, ones, total)
+    }
+
     /// Stable content fingerprint over *everything* in the trace —
     /// network, the on-disk format, per-step scalars and bitmap
     /// payloads. Folded into `SimOptions::fingerprint` by the cosim
@@ -573,6 +593,29 @@ mod tests {
         let t = sample();
         let t2 = TraceFile::from_json(&t.to_json()).unwrap();
         assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn payload_run_stats_count_extreme_words() {
+        // Scalar-only traces have no payloads at all.
+        assert_eq!(sample().payload_run_stats(), (0, 0, 0));
+        // One all-zero and one all-ones payload: every word is extreme.
+        let shape = Shape::new(2, 8, 8); // 128 bits = 2 words per map
+        let mut t = sample();
+        t.steps[0].layers[0] =
+            LayerTrace::from_bitmaps("relu1", Bitmap::ones(shape), Bitmap::zeros(shape));
+        let (zeros, ones, total) = t.payload_run_stats();
+        assert_eq!(total, 4);
+        assert_eq!(zeros, 2, "the grad map's words are all zero");
+        assert_eq!(ones, 2, "the act map's words are all ones");
+        // A mixed payload contributes to the total but not necessarily
+        // to either extreme; counts survive a save/load roundtrip (v3
+        // on-disk runs encode deltas, stats come from the decoded maps).
+        let t = sample_payloads();
+        let (z, o, n) = t.payload_run_stats();
+        assert!(n > 0 && z <= n && o <= n);
+        let t2 = TraceFile::from_json(&t.to_json()).unwrap();
+        assert_eq!(t2.payload_run_stats(), (z, o, n));
     }
 
     #[test]

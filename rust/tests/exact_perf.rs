@@ -1,0 +1,231 @@
+//! Exact-backend raw-speed contract (ISSUE 6 acceptance): gather plans,
+//! chunked popcounts and RLE-aware zero-skip are *pure execution
+//! strategy* — every optimized path must be bit-identical to the direct
+//! path it replaces, on every pattern class and geometry, and the
+//! end-to-end replayed cosim report must not change by a byte whether
+//! the optimizations are on or off, at any `--jobs` level.
+
+use std::sync::Arc;
+
+use agos::config::{BitmapPattern, ExecBackend, SimOptions};
+use agos::coordinator::cosim_from_traces;
+use agos::nn::{zoo, Shape};
+use agos::sim::{count_bits_range, GatherPlanCache, PlannedGather, SkipStats, TaskGeom};
+use agos::sparsity::{capture_synthetic_trace, Bitmap, SparsityModel};
+use agos::util::rng::Pcg32;
+
+/// The five pattern classes the optimizations must be transparent on:
+/// the extremes exercise the skip/short-circuit machinery, iid/blobs the
+/// common case, the checkerboard defeats every run-based shortcut.
+fn patterns(shape: Shape) -> Vec<(&'static str, Bitmap)> {
+    let mut rng = Pcg32::new(0xE6);
+    let mut checker = Bitmap::zeros(shape);
+    for c in 0..shape.c {
+        for y in 0..shape.h {
+            for x in 0..shape.w {
+                checker.set(c, y, x, (c + y + x) % 2 == 0);
+            }
+        }
+    }
+    vec![
+        ("all-zero", Bitmap::zeros(shape)),
+        ("all-ones", Bitmap::ones(shape)),
+        ("iid", Bitmap::sample(shape, 0.45, &mut rng)),
+        ("blobs", Bitmap::sample_blobs(shape, 0.12, 2, &mut rng)),
+        ("checkerboard", checker),
+    ]
+}
+
+/// The window anchor `(ay, ax, wh, ww)` a geometry reads for output
+/// `(y, x)` — the same math the direct gather and the plan builder use
+/// (`None`: a structurally empty ConvT window).
+fn window(tg: TaskGeom, y: usize, x: usize) -> Option<(isize, isize, usize, usize)> {
+    match tg {
+        TaskGeom::Conv { r, s, stride, pad, .. } => Some((
+            (y * stride) as isize - pad as isize,
+            (x * stride) as isize - pad as isize,
+            r,
+            s,
+        )),
+        TaskGeom::ConvT { r, s, stride, pad, .. } => {
+            let sd = stride.max(1) as isize;
+            let (yp, xp) = ((y + pad) as isize, (x + pad) as isize);
+            let u_min = (yp - r as isize).div_euclid(sd) + 1;
+            let u_max = yp.div_euclid(sd);
+            let v_min = (xp - s as isize).div_euclid(sd) + 1;
+            let v_max = xp.div_euclid(sd);
+            if u_max < u_min || v_max < v_min {
+                return None;
+            }
+            Some((u_min, v_min, (u_max - u_min + 1) as usize, (v_max - v_min + 1) as usize))
+        }
+        TaskGeom::Full | TaskGeom::Streaming | TaskGeom::Wg { .. } => unreachable!(),
+    }
+}
+
+fn dw(tg: TaskGeom) -> bool {
+    match tg {
+        TaskGeom::Conv { dw, .. } | TaskGeom::ConvT { dw, .. } => dw,
+        _ => false,
+    }
+}
+
+#[test]
+fn planned_gather_equals_direct_gather_on_every_pattern_class() {
+    let shape = Shape::new(3, 9, 10);
+    let (u, v) = (8, 9);
+    let geoms = [
+        TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: false },
+        TaskGeom::Conv { r: 5, s: 5, stride: 2, pad: 2, dw: true },
+        TaskGeom::ConvT { r: 3, s: 3, stride: 2, pad: 1, dw: false },
+        TaskGeom::ConvT { r: 4, s: 4, stride: 2, pad: 0, dw: true },
+    ];
+    let cache = GatherPlanCache::new();
+    for (label, map) in patterns(shape) {
+        let runs = map.run_index();
+        for tg in geoms {
+            let plan = cache.plan_for(shape, tg, u, v).expect("windowed geoms plan");
+            let mut stats = SkipStats::default();
+            let (mut direct, mut planned) = (Vec::new(), Vec::new());
+            for ch in 0..shape.c {
+                for y in 0..u {
+                    for x in 0..v {
+                        let (c0, c1) = if dw(tg) { (ch, ch + 1) } else { (0, shape.c) };
+                        let expect = match window(tg, y, x) {
+                            Some((ay, ax, wh, ww)) => {
+                                Some(map.gather_window_words(c0, c1, ay, ax, wh, ww, &mut direct))
+                            }
+                            None => None,
+                        };
+                        let got =
+                            plan.gather(&map, Some(&runs), ch, y, x, &mut stats, &mut planned);
+                        match (expect, got) {
+                            (None, PlannedGather::Words { len }) => {
+                                assert_eq!(len, 0, "{label} {tg:?} ({ch},{y},{x})");
+                            }
+                            (Some(n), PlannedGather::Words { len }) => {
+                                assert_eq!(len, n, "{label} {tg:?} ({ch},{y},{x})");
+                                assert_eq!(
+                                    planned, direct,
+                                    "{label} {tg:?} ({ch},{y},{x}): planned bits diverge"
+                                );
+                            }
+                            (Some(n), PlannedGather::AllOnes { len }) => {
+                                // The short-circuit may only claim dense
+                                // when the direct gather *is* dense.
+                                assert_eq!(len, n, "{label} {tg:?} ({ch},{y},{x})");
+                                assert_eq!(
+                                    count_bits_range(&direct, 0, n),
+                                    n as u64,
+                                    "{label} {tg:?} ({ch},{y},{x}): short-circuit on non-dense"
+                                );
+                            }
+                            (None, PlannedGather::AllOnes { .. }) => {
+                                panic!("{label} {tg:?}: empty window claimed dense")
+                            }
+                        }
+                    }
+                }
+            }
+            // On the all-ones map the padding-free interior must actually
+            // take the short-circuit (the plan knows which windows are
+            // structurally full).
+            if label == "all-ones" {
+                assert!(stats.windows_shortcircuited > 0, "{tg:?}");
+            }
+            if label == "all-zero" {
+                assert!(stats.words_skipped > 0 && stats.words_gathered == 0, "{tg:?}");
+            }
+        }
+    }
+    // One plan per (geometry, plane) across all five patterns: the cache
+    // key is pattern-free.
+    assert_eq!(cache.len(), geoms.len());
+    // Unwindowed geometries never plan — they keep their dedicated paths.
+    for tg in [
+        TaskGeom::Full,
+        TaskGeom::Streaming,
+        TaskGeom::Wg { r: 3, s: 3, stride: 1, pad: 1, gu: 4, gv: 4, dw: false },
+    ] {
+        assert!(cache.plan_for(shape, tg, u, v).is_none(), "{tg:?}");
+    }
+}
+
+#[test]
+fn chunked_popcount_matches_per_bit_reference() {
+    let mut rng = Pcg32::new(0xBEEF);
+    // Word streams covering the drain's edge cases: the 4-wide interior
+    // chunks, their remainder, single-word ranges and 64-bit tails.
+    let mut streams: Vec<Vec<u64>> = vec![
+        vec![0; 8],
+        vec![u64::MAX; 8],
+        (0..8).map(|i| if i % 2 == 0 { 0xAAAA_AAAA_AAAA_AAAA } else { 0x5555_5555_5555_5555 }).collect(),
+    ];
+    let mut random = Vec::new();
+    for _ in 0..8 {
+        random.push(((rng.next_u32() as u64) << 32) | rng.next_u32() as u64);
+    }
+    streams.push(random);
+    for words in &streams {
+        let bits = words.len() * 64;
+        for lo in [0, 1, 7, 63, 64, 65, 130] {
+            for hi in [lo + 1, lo + 63, lo + 64, lo + 65, lo + 257, bits] {
+                if hi <= lo || hi > bits {
+                    continue;
+                }
+                let reference = (lo..hi)
+                    .filter(|i| (words[i / 64] >> (i % 64)) & 1 == 1)
+                    .count() as u64;
+                assert_eq!(
+                    count_bits_range(words, lo, hi),
+                    reference,
+                    "[{lo}, {hi}) of {} words",
+                    words.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replayed_cosim_is_byte_identical_with_plans_on_or_off_at_any_jobs() {
+    let opts = SimOptions {
+        batch: 2,
+        backend: ExecBackend::Exact,
+        exact_outputs_per_tile: 16,
+        ..SimOptions::default()
+    };
+    let traces = capture_synthetic_trace(
+        &zoo::agos_cnn(),
+        &SparsityModel::synthetic(opts.seed),
+        2,
+        BitmapPattern::Blobs,
+        2,
+    );
+    let cfg = agos::config::AcceleratorConfig::default();
+    let full = Arc::new(GatherPlanCache::new());
+    let variants: Vec<(&str, Option<Arc<GatherPlanCache>>)> = vec![
+        ("plans off", None),
+        ("plans only", Some(Arc::new(GatherPlanCache::plans_only()))),
+        ("plans + zero-skip", Some(full.clone())),
+    ];
+    let mut golden: Option<String> = None;
+    for (label, plans) in variants {
+        let opts = SimOptions { gather_plans: plans, ..opts.clone() };
+        for jobs in [1, 4] {
+            let report = cosim_from_traces(&traces, &cfg, &opts, true, jobs).unwrap();
+            assert!(report.replayed && report.backend == "exact");
+            let bytes = report.to_json().dump();
+            match &golden {
+                Some(g) => assert_eq!(
+                    g, &bytes,
+                    "{label} at jobs {jobs}: optimized report diverged"
+                ),
+                None => golden = Some(bytes),
+            }
+        }
+    }
+    // The transparent runs above really exercised the machinery.
+    let s = full.stats();
+    assert!(s.words_gathered > 0, "{s:?}");
+}

@@ -216,8 +216,9 @@ fn gather_equals_streaming_on_single_channel_1x1_stride1_convs() {
         1,
         &geom,
         4096,
-        &BitmapSource::Gathered { map: &map, geom: conv },
+        &BitmapSource::Gathered { map: &map, geom: conv, runs: None },
         &dense_out,
+        None,
         &mut Pcg32::new(1),
     );
     let streamed = exact_tile_cost(
@@ -227,6 +228,7 @@ fn gather_equals_streaming_on_single_channel_1x1_stride1_convs() {
         4096,
         &BitmapSource::Streamed { map: &map },
         &dense_out,
+        None,
         &mut Pcg32::new(1),
     );
     assert_eq!(gathered, streamed, "1x1/s1/p0 single-channel windows must be bit-identical");
