@@ -13,6 +13,7 @@ use agos::sim::{
     ReplayBank, SkipStats, SweepPlan, SweepRunner, TaskGeom,
 };
 use agos::sparsity::{capture_synthetic_trace, Bitmap, SparsityModel};
+use agos::trace::{LayerTrace, StepTrace, TraceFile, TraceFormat, TraceWriter};
 use agos::util::bench::{black_box, Bench};
 use agos::util::json::Json;
 use agos::util::rng::Pcg32;
@@ -45,6 +46,7 @@ fn main() {
         input_elems: 128.0 * 30.0 * 30.0,
         weight_elems: 128.0 * 1152.0,
         geom: Default::default(),
+        op_chans: 128,
     };
     b.case("simulate_layer_inoutwr", || {
         let mut rng = Pcg32::new(7);
@@ -215,6 +217,48 @@ fn main() {
     b.case("trace_v2_decode_hex_64x56x56", || {
         Bitmap::decode_hex(v3_map.shape, black_box(&v3_hex)).unwrap().count_nz()
     });
+
+    // TraceFile v4 binary container on the same seeded payload (two
+    // correlated steps so the delta chain is exercised): in-memory
+    // container encode/decode next to the v3 JSON-text decode, one
+    // bounded-memory streaming append per iteration, and the two gated
+    // deterministic/ratio rows (`trace_v4_decode_vs_v3`,
+    // `trace_v4_bytes_ratio`).
+    let v4_grad = v3_map.and(&Bitmap::sample(Shape::new(64, 56, 56), 0.5, &mut Pcg32::new(10)));
+    let mk_container = |format: TraceFormat| TraceFile {
+        network: "bench".into(),
+        format,
+        steps: (0..2usize)
+            .map(|step| StepTrace {
+                step,
+                loss: 2.0,
+                layers: vec![LayerTrace::from_bitmaps("relu1", v3_map.clone(), v4_grad.clone())],
+            })
+            .collect(),
+    };
+    let v4_container = mk_container(TraceFormat::V4);
+    let v4_bytes = v4_container.encode_v4().expect("v4 encode");
+    let v3_text = mk_container(TraceFormat::V3).to_json().dump();
+    b.case("trace_v4_encode_container", || {
+        black_box(v4_container.encode_v4().unwrap().len())
+    });
+    b.case("trace_v4_decode_container", || {
+        TraceFile::decode_v4(black_box(&v4_bytes)).unwrap().steps.len()
+    });
+    b.case("trace_v3_decode_container", || {
+        TraceFile::from_json(&Json::parse(black_box(&v3_text)).unwrap()).unwrap().steps.len()
+    });
+    let stream_dir = std::env::temp_dir().join("agos_bench_v4_stream");
+    std::fs::create_dir_all(&stream_dir).expect("temp dir");
+    let stream_path = stream_dir.join("stream.trace.bin");
+    b.case("trace_v4_stream_append_2steps", || {
+        let mut w = TraceWriter::create(&stream_path, &v4_container.network).unwrap();
+        for s in &v4_container.steps {
+            w.append(s).unwrap();
+        }
+        w.finish().unwrap()
+    });
+    std::fs::remove_dir_all(&stream_dir).ok();
     b.finish();
 
     // Persist the sweep trajectory point (sequential vs parallel).
@@ -239,6 +283,10 @@ fn main() {
     let word_walk = find("bitmap_channel_word_walk_64x56x56");
     let v3_decode = find("trace_v3_decode_rle_64x56x56");
     let hex_decode = find("trace_v2_decode_hex_64x56x56");
+    let v4_encode = find("trace_v4_encode_container");
+    let v4_decode = find("trace_v4_decode_container");
+    let v3c_decode = find("trace_v3_decode_container");
+    let v4_stream = find("trace_v4_stream_append_2steps");
     let j = Json::from_pairs(vec![
         ("bench", "sweep_googlenet_4schemes".into()),
         ("network", "googlenet".into()),
@@ -283,6 +331,16 @@ fn main() {
         ("trace_v3_decode_mean_s", v3_decode.mean.into()),
         ("trace_v3_decode_vs_hex", (v3_decode.mean / hex_decode.mean).into()),
         ("trace_v3_rle_bytes_ratio", (v3_rle.len() as f64 / v3_hex.len() as f64).into()),
+        // TraceFile v4 binary container vs the v3 JSON text of the same
+        // two-step capture: whole-container decode wall-clock ratio and
+        // the deterministic payload-size ratio (both gated, lower is
+        // better), plus the raw means for the trajectory.
+        ("trace_v4_encode_mean_s", v4_encode.mean.into()),
+        ("trace_v4_decode_mean_s", v4_decode.mean.into()),
+        ("trace_v3_container_decode_mean_s", v3c_decode.mean.into()),
+        ("trace_v4_stream_append_mean_s", v4_stream.mean.into()),
+        ("trace_v4_decode_vs_v3", (v4_decode.mean / v3c_decode.mean).into()),
+        ("trace_v4_bytes_ratio", (v4_bytes.len() as f64 / v3_text.len() as f64).into()),
     ]);
     j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
     println!(

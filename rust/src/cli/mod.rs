@@ -18,7 +18,7 @@ use crate::config::{
     AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions, TraceFormat,
     TrainOptions,
 };
-use crate::coordinator::{cosim_from_traces, run_training_pipeline};
+use crate::coordinator::{cosim_from_traces_owned, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
 use crate::sim::{simulate_network, SweepPlan, SweepRunner};
@@ -50,7 +50,11 @@ fn app() -> App {
                         "trace-images",
                         "images captured per traced step, each its own trace step (default 1)",
                     ),
-                    opt("trace-format", "trace payload encoding: v2|v3 (default v3 delta/RLE)"),
+                    opt(
+                        "trace-format",
+                        "trace payload encoding: v2|v3|v4 (default v3 delta/RLE; v4 streams \
+a binary <out>.trace.bin sidecar with bounded memory)",
+                    ),
                     opt("seed", "dataset seed (default 7)"),
                     opt("artifacts", "artifacts directory (default artifacts)"),
                     opt("out", "write loss curve + traces JSON here"),
@@ -66,7 +70,10 @@ fn app() -> App {
                         "trace-images",
                         "images captured per traced step, each its own trace step (default 1)",
                     ),
-                    opt("trace-format", "trace payload encoding: v2|v3 (default v3 delta/RLE)"),
+                    opt(
+                        "trace-format",
+                        "trace payload encoding: v2|v3|v4 binary (default v3 delta/RLE)",
+                    ),
                     opt("seed", "sparsity model seed"),
                     opt("pattern", "iid|blobs bitmap structure (default iid)"),
                     opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
@@ -282,7 +289,7 @@ fn ctx_from(args: &Args) -> anyhow::Result<ReportCtx> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<i32> {
-    let opts = TrainOptions {
+    let mut opts = TrainOptions {
         steps: args.opt_usize("steps", 300)?,
         trace_every: args.opt_usize("trace-every", 50)?,
         trace_images: args.opt_usize("trace-images", 1)?,
@@ -291,16 +298,31 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
         artifacts_dir: PathBuf::from(args.opt_or("artifacts", "artifacts")),
         ..TrainOptions::default()
     };
+    // v4 captures stream into a binary sidecar next to --out as steps
+    // happen (bounded memory — the whole point of the container); the
+    // JSON report then references the sidecar instead of embedding a
+    // trace it never held in memory.
+    let sidecar = match (args.opt("out"), opts.trace_format) {
+        (Some(out), TraceFormat::V4) => {
+            let p = PathBuf::from(format!("{out}.trace.bin"));
+            opts.stream_path = Some(p.clone());
+            Some(p)
+        }
+        _ => None,
+    };
     let log = run_training_pipeline(&opts)?;
     println!("trained {} steps at {:.2} steps/s", opts.steps, log.steps_per_sec);
     for (step, loss) in &log.losses {
         println!("  step {step:>5}  loss {loss:.4}");
     }
-    println!(
-        "traces: {} steps, identity holds: {}",
-        log.traces.steps.len(),
-        log.traces.identity_holds()
-    );
+    match (&sidecar, log.streamed_steps) {
+        (Some(p), n) => println!("traces: {n} steps streamed to {}", p.display()),
+        (None, _) => println!(
+            "traces: {} steps, identity holds: {}",
+            log.traces.steps.len(),
+            log.traces.identity_holds()
+        ),
+    }
     if let Some(out) = args.opt("out") {
         let path = Path::new(out);
         let mut j = Json::obj();
@@ -314,7 +336,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
             ),
         );
         j.set("steps_per_sec", log.steps_per_sec.into());
-        j.set("traces", log.traces.to_json());
+        match &sidecar {
+            Some(p) => {
+                j.set("traces_file", p.to_string_lossy().to_string().into());
+                j.set("traces_streamed", log.streamed_steps.into());
+            }
+            None => j.set("traces", log.traces.to_json()),
+        }
         j.write_file(path)?;
         println!("wrote {}", path.display());
     }
@@ -578,7 +606,10 @@ fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
     let mut opts = SimOptions { batch: args.opt_usize("batch", 16)?, ..SimOptions::default() };
     apply_backend_opts(&mut opts, args)?;
     let jobs = args.opt_usize("jobs", 0)?;
-    let report = cosim_from_traces(&traces, &AcceleratorConfig::default(), &opts, replay, jobs)?;
+    // By-value entry: the freshly-loaded trace moves its bitmaps straight
+    // into the replay bank instead of being cloned map-by-map.
+    let report =
+        cosim_from_traces_owned(traces, &AcceleratorConfig::default(), &opts, replay, jobs)?;
     println!(
         "co-simulation of '{}' [{} backend{}] (mean measured sparsity {:.2})",
         report.network,
@@ -968,7 +999,8 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         let v2 = dir.join("v2.json");
         let v3 = dir.join("v3.json");
-        for (path, fmt) in [(&v2, "v2"), (&v3, "v3")] {
+        let v4 = dir.join("v4.trace.bin");
+        for (path, fmt) in [(&v2, "v2"), (&v3, "v3"), (&v4, "v4")] {
             let path_s = path.to_string_lossy().to_string();
             assert_eq!(
                 run(&sv(&[
@@ -990,25 +1022,36 @@ mod tests {
         }
         let t2 = TraceFile::load(&v2).unwrap();
         let t3 = TraceFile::load(&v3).unwrap();
+        let t4 = TraceFile::load(&v4).unwrap();
         assert_eq!(t2.format, TraceFormat::V2);
         assert_eq!(t3.format, TraceFormat::V3);
+        assert_eq!(t4.format, TraceFormat::V4);
         assert_eq!(t2.steps, t3.steps, "same content under both encodings");
+        assert_eq!(t3.steps, t4.steps, "the binary container carries identical content");
         assert_eq!(t3.steps.len(), 2, "one StepTrace per captured image");
         assert!(
             std::fs::metadata(&v3).unwrap().len() < std::fs::metadata(&v2).unwrap().len(),
             "v3 files are smaller"
         );
-        // The v3 residual capture replays through cosim.
-        let v3_s = v3.to_string_lossy().to_string();
-        assert_eq!(
-            run(&sv(&[
-                "cosim", "--traces", &v3_s, "--batch", "2", "--backend", "exact",
-                "--exact-cap", "8", "--replay",
-            ]))
-            .unwrap(),
-            0
+        assert!(
+            std::fs::metadata(&v4).unwrap().len() <= std::fs::metadata(&v3).unwrap().len(),
+            "v4 files are never larger than v3"
         );
+        // Both the v3 JSON and the v4 binary residual captures replay
+        // through the same cosim entry point.
+        for path in [&v3, &v4] {
+            let path_s = path.to_string_lossy().to_string();
+            assert_eq!(
+                run(&sv(&[
+                    "cosim", "--traces", &path_s, "--batch", "2", "--backend", "exact",
+                    "--exact-cap", "8", "--replay",
+                ]))
+                .unwrap(),
+                0
+            );
+        }
         // Bad format names are rejected at the CLI boundary.
+        let v3_s = v3.to_string_lossy().to_string();
         assert!(run(&sv(&["trace", "--trace-format", "v9", "--out", &v3_s])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

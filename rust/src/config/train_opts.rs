@@ -22,8 +22,14 @@ pub struct TrainOptions {
     /// what makes batch-wide capture practical.
     pub trace_images: usize,
     /// On-disk trace payload encoding (`--trace-format`): v3 delta/RLE
-    /// by default, v2 raw hex for older tooling.
+    /// by default, v2 raw hex for older tooling, v4 for the binary
+    /// streaming container (long captures with bounded memory).
     pub trace_format: TraceFormat,
+    /// Stream captured steps into a v4 container at this path as they
+    /// happen, instead of accumulating them in `TrainLog::traces` —
+    /// the bounded-memory capture mode. Requires `trace_format` v4
+    /// (the other containers can only be written whole).
+    pub stream_path: Option<std::path::PathBuf>,
     /// Directory containing AOT artifacts.
     pub artifacts_dir: std::path::PathBuf,
     /// Log loss every N steps.
@@ -40,6 +46,7 @@ impl Default for TrainOptions {
             trace_every: 50,
             trace_images: 1,
             trace_format: TraceFormat::default(),
+            stream_path: None,
             artifacts_dir: std::path::PathBuf::from("artifacts"),
             log_every: 10,
         }

@@ -89,6 +89,37 @@ pub fn cosim_from_traces(
     replay: bool,
     jobs: usize,
 ) -> anyhow::Result<CosimReport> {
+    let (net, model, mean_sparsity, fingerprint) = cosim_setup(traces, opts)?;
+    let bank = replay
+        .then(|| ReplayBank::from_trace(&net, traces).map(Arc::new))
+        .transpose()?;
+    cosim_core(net, model, mean_sparsity, fingerprint, bank, cfg, opts, jobs)
+}
+
+/// [`cosim_from_traces`], *consuming* the trace: with `replay`, the
+/// captured bitmaps move straight into the replay bank instead of being
+/// cloned ([`ReplayBank::from_trace_owned`]) — the decode-into-bank path
+/// a caller that just loaded the file (the CLI) should take, so a v4
+/// binary load never holds two copies of the payload set.
+pub fn cosim_from_traces_owned(
+    traces: TraceFile,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    replay: bool,
+    jobs: usize,
+) -> anyhow::Result<CosimReport> {
+    let (net, model, mean_sparsity, fingerprint) = cosim_setup(&traces, opts)?;
+    let bank = replay
+        .then(|| ReplayBank::from_trace_owned(&net, traces).map(Arc::new))
+        .transpose()?;
+    cosim_core(net, model, mean_sparsity, fingerprint, bank, cfg, opts, jobs)
+}
+
+/// Validation + model derivation shared by both entry points.
+fn cosim_setup(
+    traces: &TraceFile,
+    opts: &SimOptions,
+) -> anyhow::Result<(crate::nn::Network, SparsityModel, f64, u64)> {
     anyhow::ensure!(!traces.steps.is_empty(), "trace file has no steps");
     anyhow::ensure!(
         traces.identity_holds(),
@@ -102,14 +133,25 @@ pub fn cosim_from_traces(
         measured.values().sum::<f64>() / measured.len() as f64
     };
     let model = SparsityModel::measured(opts.seed, measured);
+    Ok((net, model, mean_sparsity, traces.fingerprint()))
+}
 
+#[allow(clippy::too_many_arguments)]
+fn cosim_core(
+    net: crate::nn::Network,
+    model: SparsityModel,
+    mean_sparsity: f64,
+    fingerprint: u64,
+    bank: Option<Arc<ReplayBank>>,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    jobs: usize,
+) -> anyhow::Result<CosimReport> {
     // Fold the trace's *content* into the cache identity: different
     // trace files must never alias, even at identical per-layer means.
     let mut opts = opts.clone();
-    opts.trace_fingerprint = Some(traces.fingerprint());
-    if replay {
-        opts.replay = Some(Arc::new(ReplayBank::from_trace(&net, traces)?));
-    }
+    opts.trace_fingerprint = Some(fingerprint);
+    opts.replay = bank;
 
     // All four schemes as one parallel sweep (results identical to the
     // sequential loop this replaced — see sim::sweep's determinism
@@ -263,6 +305,11 @@ mod tests {
             let err = (at - et).abs() / et;
             assert!(err < 0.35, "analytic-replay {at:.0} vs exact-replay {et:.0}");
         }
+        // The consuming entry point (decode-into-bank, no payload clones)
+        // is row-identical to the borrowing one.
+        let owned = cosim_from_traces_owned(traces.clone(), &cfg, &opts, true, 0).unwrap();
+        assert_eq!(report.rows, owned.rows, "owned bank must match borrowed bank");
+        assert_eq!(report.to_json().dump(), owned.to_json().dump());
         // A payload-free trace cannot replay on either backend.
         assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &opts, true, 0).is_err());
         assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &analytic, true, 0).is_err());

@@ -11,6 +11,6 @@ mod pipeline;
 mod driver;
 
 pub use dataset::SyntheticDataset;
-pub use driver::{cosim_from_traces, CosimReport};
+pub use driver::{cosim_from_traces, cosim_from_traces_owned, CosimReport};
 pub use pipeline::run_training_pipeline;
 pub use trainer::{TrainLog, Trainer};

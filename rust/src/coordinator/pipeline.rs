@@ -50,8 +50,15 @@ pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
     // --- analyst: sparsity extraction off the hot path --------------------
     let (trace_tx, trace_rx) = mpsc::channel::<(usize, f64, Vec<HostTensor>)>();
     let trace_images = opts.trace_images.clamp(1, batch.max(1));
-    let analyst = thread::spawn(move || -> Vec<StepTrace> {
+    // The streaming sink (v4 bounded-memory capture) lives on the
+    // analyst thread: steps are appended the moment they're extracted
+    // and dropped, so neither the hot loop nor the analyst accumulates
+    // the capture. Send order is step order, which is exactly the file
+    // order the delta chain needs.
+    let mut sink = super::trainer::open_stream_sink(opts, "agos_cnn")?;
+    let analyst = thread::spawn(move || -> Result<(Vec<StepTrace>, usize)> {
         let mut out = Vec::new();
+        let mut streamed = 0usize;
         while let Ok((step, loss, tensors)) = trace_rx.recv() {
             let relu_count = tensors.len() / 2;
             // Batch-wide identity per layer, once; see `Trainer::traced_step`.
@@ -80,10 +87,20 @@ pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
                         .expect("trace tensors are f32"),
                     );
                 }
-                out.push(StepTrace { step, loss, layers });
+                let trace = StepTrace { step, loss, layers };
+                match &mut sink {
+                    Some(w) => {
+                        w.append(&trace)?;
+                        streamed += 1;
+                    }
+                    None => out.push(trace),
+                }
             }
         }
-        out
+        if let Some(w) = sink {
+            w.finish()?;
+        }
+        Ok((out, streamed))
     });
 
     // --- main loop: PJRT execution ----------------------------------------
@@ -120,7 +137,12 @@ pub fn run_training_pipeline(opts: &TrainOptions) -> Result<TrainLog> {
     drop(batch_rx);
     drop(trace_tx);
     producer.join().ok();
-    log.traces.steps = analyst.join().unwrap_or_default();
+    let (steps, streamed) = match analyst.join() {
+        Ok(r) => r?,
+        Err(_) => anyhow::bail!("trace analyst thread panicked"),
+    };
+    log.traces.steps = steps;
+    log.streamed_steps = streamed;
     log.traces.steps.sort_by_key(|s| s.step);
     Ok(log)
 }

@@ -6,7 +6,7 @@ use anyhow::{Context, Result};
 
 use crate::config::TrainOptions;
 use crate::runtime::{HostTensor, Runtime};
-use crate::trace::{LayerTrace, StepTrace, TraceFile};
+use crate::trace::{LayerTrace, StepTrace, TraceFile, TraceFormat, TraceWriter};
 
 use super::dataset::SyntheticDataset;
 
@@ -16,6 +16,29 @@ pub struct TrainLog {
     pub losses: Vec<(usize, f64)>,
     pub traces: TraceFile,
     pub steps_per_sec: f64,
+    /// Steps appended to a streaming v4 sink (`TrainOptions::
+    /// stream_path`) instead of `traces.steps` — in that mode the log
+    /// holds no step payloads at all, which is the point: resident
+    /// memory stays bounded by one step no matter how long the capture.
+    pub streamed_steps: usize,
+}
+
+/// Open the streaming sink configured in `opts`, if any. Shared by the
+/// blocking trainer and the threaded pipeline so both enforce the same
+/// contract: streaming is a v4-container capability (the JSON
+/// containers can only be written whole).
+pub(crate) fn open_stream_sink(opts: &TrainOptions, network: &str) -> Result<Option<TraceWriter>> {
+    match &opts.stream_path {
+        Some(path) => {
+            anyhow::ensure!(
+                opts.trace_format == TraceFormat::V4,
+                "streaming trace capture requires --trace-format v4 (got {})",
+                opts.trace_format.label()
+            );
+            Ok(Some(TraceWriter::create(path, network)?))
+        }
+        None => Ok(None),
+    }
 }
 
 /// Element-wise §3.2 identity over the *whole batch*: every gradient
@@ -150,16 +173,21 @@ impl Trainer {
     /// `opts.trace_every` steps. The trace file is stamped with the
     /// configured on-disk format (`--trace-format`, v3 delta/RLE by
     /// default), so `log.traces.save()` writes exactly what the CLI
-    /// asked for. Post-Add footprints ride the same path: any act-only
-    /// tensor pair the artifact exposes for an Add layer would land as
-    /// a `LayerTrace::from_act` entry (the trained CNN is Add-free, so
-    /// the synthetic capture is where that today materializes).
+    /// asked for. With `opts.stream_path` set (v4 only), every captured
+    /// step is appended to the on-disk container the moment it exists
+    /// and dropped — the run's resident trace memory is one step, not
+    /// the whole capture. Post-Add footprints ride the same path: any
+    /// act-only tensor pair the artifact exposes for an Add layer would
+    /// land as a `LayerTrace::from_act` entry (the trained CNN is
+    /// Add-free, so the synthetic capture is where that today
+    /// materializes).
     pub fn run(&mut self) -> Result<TrainLog> {
         let mut log = TrainLog {
             traces: TraceFile::new("agos_cnn"),
             ..TrainLog::default()
         };
         log.traces.format = self.opts.trace_format;
+        let mut sink = open_stream_sink(&self.opts, &log.traces.network)?;
         let t0 = Instant::now();
         for step in 0..self.opts.steps {
             if self.opts.trace_every > 0 && step % self.opts.trace_every == 0 {
@@ -168,7 +196,13 @@ impl Trainer {
                         trace.layers.iter().all(|l| l.identity_ok),
                         "sparsity identity violated at step {step}"
                     );
-                    log.traces.steps.push(trace);
+                    match &mut sink {
+                        Some(w) => {
+                            w.append(&trace)?;
+                            log.streamed_steps += 1;
+                        }
+                        None => log.traces.steps.push(trace),
+                    }
                 }
             }
             let loss = self.step()?;
@@ -177,6 +211,9 @@ impl Trainer {
                 crate::info!("step {step:>5}  loss {loss:.4}");
                 log.losses.push((step, loss));
             }
+        }
+        if let Some(w) = sink {
+            w.finish()?;
         }
         log.steps_per_sec = self.opts.steps as f64 / t0.elapsed().as_secs_f64();
         Ok(log)

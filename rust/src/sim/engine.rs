@@ -250,6 +250,7 @@ pub fn build_task(
                 input_elems: in_shape.len() as f64,
                 weight_elems,
                 geom,
+                op_chans: in_shape.c,
             }
         }
         Phase::Backward => {
@@ -284,6 +285,7 @@ pub fn build_task(
                 input_elems: out.len() as f64, // incoming gradient map
                 weight_elems,
                 geom,
+                op_chans: out.c, // BP gathers from the gradient map
             }
         }
         Phase::WeightGrad => {
@@ -335,6 +337,7 @@ pub fn build_task(
                 input_elems: in_shape.len() as f64 + out.len() as f64,
                 weight_elems: 0.0, // no weight streaming in WG
                 geom,
+                op_chans: in_shape.c, // unused: Wg pairs, it never gathers
             }
         }
     };

@@ -7,7 +7,7 @@
 //! co-simulation path. Replayed components draw no RNG state and skip
 //! the per-tile jitter (real maps carry their own spatial variation).
 
-use crate::config::{AcceleratorConfig, GatherMode, Scheme, SimOptions};
+use crate::config::{AcceleratorConfig, BitmapPattern, GatherMode, Scheme, SimOptions};
 use crate::nn::Shape;
 use crate::sparsity::Bitmap;
 use crate::util::rng::Pcg32;
@@ -42,6 +42,12 @@ pub struct LayerTask {
     /// How outputs map onto captured operand bitmaps when this task
     /// replays (`sim::backend::TaskGeom`); `Streaming` when unknown.
     pub geom: TaskGeom,
+    /// Channel extent of the operand map `geom` gathers from (the
+    /// input-activation channels in FP, the gradient-map channels in
+    /// BP). Used to synthesize a task-wide operand map on the *sampled*
+    /// exact path, so sampled runs take the same planned-gather route as
+    /// replayed ones.
+    pub op_chans: usize,
 }
 
 impl LayerTask {
@@ -136,6 +142,53 @@ fn tile_window_density(
     map.window_nz(y0, y1, x0, x1) as f64 / area as f64
 }
 
+/// Shape and geometry of the *synthetic* operand map a sampled exact
+/// task gathers from: the smallest map on which every output's window
+/// (as `geom` re-maps it) lies fully in bounds, so the gathered window
+/// density equals the sampled map density in expectation — exactly the
+/// contract the per-output `BitmapSource::Sampled` draw had.
+///
+/// * `Conv` — output `(y, x)` anchors at `(y·stride − pad, x·stride −
+///   pad)`; dropping the padding (`pad: 0`) and sizing the map to the
+///   last window `((u−1)·stride + r, …)` keeps every tap real.
+/// * `ConvT` — the tap range starts at `(pad − r)·div_euclid(stride) + 1`
+///   for output 0, which can be negative; shifting the geometry's pad by
+///   `halo` whole strides translates every window in bounds while
+///   preserving which positions are structurally empty (`r < stride`).
+/// * `Full` — every output reads the whole `crs`-bit map.
+fn sampled_gather_geom(
+    geom: TaskGeom,
+    op_chans: usize,
+    u: usize,
+    v: usize,
+    crs: usize,
+) -> (Shape, TaskGeom) {
+    match geom {
+        TaskGeom::Conv { r, s, stride, pad: _, dw } => (
+            Shape::new(op_chans, (u.max(1) - 1) * stride + r, (v.max(1) - 1) * stride + s),
+            TaskGeom::Conv { r, s, stride, pad: 0, dw },
+        ),
+        TaskGeom::ConvT { r, s, stride, pad, dw } => {
+            let sd = stride.max(1) as isize;
+            // First tap of output 0 along a kernel-k axis; the halo
+            // shifts the more negative of the two axes to zero.
+            let lo = |k: usize| (pad as isize - k as isize).div_euclid(sd) + 1;
+            let halo = (-lo(r).min(lo(s))).max(0) as usize;
+            let extent = |n: usize| {
+                ((n.max(1) - 1 + pad) as isize).div_euclid(sd) as usize + halo + 1
+            };
+            (
+                Shape::new(op_chans, extent(u), extent(v)),
+                TaskGeom::ConvT { r, s, stride, pad: pad + halo * stride, dw },
+            )
+        }
+        TaskGeom::Full => (Shape::new(1, 1, crs), TaskGeom::Full),
+        TaskGeom::Streaming | TaskGeom::Wg { .. } => {
+            unreachable!("sampled gathers need a window geometry")
+        }
+    }
+}
+
 /// [`simulate_layer`] with optional replay maps for this task
 /// (`sim::replay` resolves them per image; `engine::simulate_image`
 /// passes them down). On the exact backend, replayed tasks slice/gather
@@ -187,6 +240,38 @@ pub fn simulate_layer_replay(
         || replay_in.is_some()
         || replay_out.is_some())
     .then(|| tile_windows(task.u, task.v, cfg.tx, cfg.ty));
+
+    // Sampled operands under geometry gathering synthesize ONE task-wide
+    // operand map (a single jitter draw, then one `Shape`-true sample)
+    // and gather every tile's windows out of it — the *planned* route
+    // replayed tasks take (`sim::plan`), with its zero-skip and all-ones
+    // short circuits, instead of re-sampling `crs` fresh bits per output.
+    // The synthetic map is sized so every window is in bounds
+    // ([`sampled_gather_geom`]), so expected window density is unchanged.
+    // `--gather streaming` keeps the historical per-output sampling.
+    let sampled_gather = (exact_pe.is_some()
+        && geometry
+        && task.geom.gathers()
+        && s_in > 0.0
+        && replay_in.is_none()
+        && replay_pair.is_none())
+    .then(|| {
+        let density = 1.0 - jitter(s_in, opts.tile_sparsity_cv, rng);
+        let (shape, geom) =
+            sampled_gather_geom(task.geom, task.op_chans, task.u, task.v, crs_exact);
+        let map = if density >= 1.0 {
+            Bitmap::ones(shape)
+        } else {
+            match opts.pattern {
+                BitmapPattern::Iid => Bitmap::sample(shape, density, rng),
+                BitmapPattern::Blobs => {
+                    Bitmap::sample_blobs(shape, density, opts.blob_radius, rng)
+                }
+            }
+        };
+        let runs = map.run_index();
+        (map, geom, runs)
+    });
 
     let mut tile_busy = Vec::with_capacity(spatial.len());
     let mut performed = 0.0f64;
@@ -241,6 +326,8 @@ pub fn simulate_layer_replay(
                     } else {
                         BitmapSource::Streamed { map: rm.map.as_ref() }
                     }
+                } else if let Some((map, geom, runs)) = &sampled_gather {
+                    BitmapSource::Gathered { map, geom: *geom, runs: Some(runs) }
                 } else {
                     BitmapSource::Sampled {
                         density: 1.0 - jitter(s_in, opts.tile_sparsity_cv, rng),
@@ -355,6 +442,7 @@ mod tests {
             input_elems: 128.0 * 30.0 * 30.0,
             weight_elems: 128.0 * 1152.0,
             geom: TaskGeom::Streaming,
+            op_chans: 128,
         }
     }
 
@@ -455,6 +543,7 @@ mod tests {
             input_elems: 32.0 * 18.0 * 18.0,
             weight_elems: 32.0 * 288.0,
             geom: TaskGeom::Streaming,
+            op_chans: 32,
         };
         let run = |scheme, seed| {
             let mut rng = Pcg32::new(seed);
@@ -470,6 +559,111 @@ mod tests {
         assert!((dc.performed_macs - dc.dense_macs).abs() / dc.dense_macs < 1e-9);
         assert!(dc.cycles > inp.cycles, "DC {} !> IN {}", dc.cycles, inp.cycles);
         assert!(inp.cycles > both.cycles, "IN {} !> IN+OUT {}", inp.cycles, both.cycles);
+    }
+
+    #[test]
+    fn synthetic_sampled_maps_cover_every_window_in_bounds() {
+        // The synthetic (shape, geom) pair must put every output window
+        // fully inside the map with exactly the tap count the geometry
+        // names — no clipping, so gathered window density equals the
+        // sampled map density in expectation. ConvT additionally keeps
+        // its structurally-empty positions (r < stride) empty.
+        use crate::sim::backend::gather_operand_words;
+        let mut scratch = Vec::new();
+        #[rustfmt::skip]
+        let cases = [
+            (TaskGeom::Conv { r: 3, s: 3, stride: 2, pad: 1, dw: false }, 6usize, 16usize, 16usize, 54usize),
+            (TaskGeom::Conv { r: 5, s: 5, stride: 1, pad: 2, dw: false }, 3, 8, 8, 75),
+            (TaskGeom::ConvT { r: 3, s: 3, stride: 2, pad: 1, dw: false }, 4, 16, 16, 9),
+            (TaskGeom::ConvT { r: 1, s: 1, stride: 2, pad: 0, dw: false }, 2, 8, 8, 1),
+            (TaskGeom::Full, 1, 4, 4, 100),
+        ];
+        for (tg, chans, u, v, crs) in cases {
+            let (shape, syn) = sampled_gather_geom(tg, chans, u, v, crs);
+            let map = Bitmap::ones(shape);
+            for y in 0..u {
+                for x in 0..v {
+                    // Expected tap count from the *original* geometry,
+                    // ignoring map bounds (the whole point: the synthetic
+                    // map must not clip any tap the geometry names).
+                    let expect = match tg {
+                        TaskGeom::Conv { r, s, .. } => chans * r * s,
+                        TaskGeom::ConvT { r, s, stride, pad, .. } => {
+                            // count of integral taps per axis
+                            let axis = |p: usize, k: usize| {
+                                (0..k)
+                                    .filter(|&i| {
+                                        (p as isize + pad as isize - i as isize)
+                                            .rem_euclid(stride as isize)
+                                            == 0
+                                    })
+                                    .count()
+                            };
+                            chans * axis(y, r) * axis(x, s)
+                        }
+                        TaskGeom::Full => crs,
+                        _ => unreachable!(),
+                    };
+                    let len = gather_operand_words(&map, syn, 0, y, x, &mut scratch);
+                    assert_eq!(len, expect, "{tg:?} at ({y},{x})");
+                    // In bounds: every tap of an all-ones map is present.
+                    let nz = (0..len)
+                        .filter(|j| (scratch[j / 64] >> (j % 64)) & 1 == 1)
+                        .count();
+                    assert_eq!(nz, len, "{tg:?} at ({y},{x}) clipped {} taps", len - nz);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_exact_path_gathers_from_a_shared_map() {
+        // Under geometry gathering, a sampled exact conv synthesizes one
+        // task-wide operand map and serves every tile from it through
+        // the planned-gather route — deterministic per seed, density-
+        // true, plan-invariant, and distinct from the legacy streaming
+        // per-output sampling.
+        let cfg = AcceleratorConfig::default();
+        let t = LayerTask {
+            name: "sampled".into(),
+            m: 16,
+            u: 16,
+            v: 16,
+            crs: 72.0, // 8ch 3x3
+            in_sparsity: Some(0.5),
+            out_sparsity: None,
+            input_elems: 8.0 * 18.0 * 18.0,
+            weight_elems: 16.0 * 72.0,
+            geom: TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 1, dw: false },
+            op_chans: 8,
+        };
+        let run = |opts: &SimOptions, seed| {
+            let mut rng = Pcg32::new(seed);
+            simulate_layer(&t, &cfg, opts, Scheme::In, &mut rng)
+        };
+        let geo = SimOptions {
+            backend: ExecBackend::Exact,
+            exact_outputs_per_tile: 16,
+            ..SimOptions::default()
+        };
+        let a = run(&geo, 7);
+        let b = run(&geo, 7);
+        assert_eq!(a.cycles, b.cycles, "sampled gather must be stream-deterministic");
+        assert_eq!(a.performed_macs, b.performed_macs);
+        assert_ne!(a.cycles, run(&geo, 8).cycles, "different seeds sample different maps");
+        // Windows are fully in bounds, so the MAC fraction tracks the
+        // (single-jitter-draw) sampled density around 1 − s_in.
+        let frac = a.performed_macs / a.dense_macs;
+        assert!((0.25..0.75).contains(&frac), "sampled-gather MAC fraction {frac}");
+        // The plan cache stays pure execution strategy on this path too.
+        let no_plans = SimOptions { gather_plans: None, ..geo.clone() };
+        let c = run(&no_plans, 7);
+        assert_eq!(a.cycles, c.cycles, "plans must not change a sampled-gather cycle");
+        assert_eq!(a.performed_macs, c.performed_macs);
+        // `--gather streaming` keeps the historical per-output sampling.
+        let streaming = SimOptions { gather: GatherMode::Streaming, ..geo.clone() };
+        let s = run(&streaming, 7);
+        assert_ne!(a.cycles, s.cycles, "geometry mode reroutes the sampled stream");
     }
 
     #[test]
@@ -492,6 +686,7 @@ mod tests {
             // 32ch 18x18 -> 16x16 via 3x3 stride-1 pad-0: the gather
             // geometry the replayed operand map is exercised through.
             geom: TaskGeom::Conv { r: 3, s: 3, stride: 1, pad: 0, dw: false },
+            op_chans: 32,
         };
         let mut map_rng = Pcg32::new(11);
         let out_map = Bitmap::sample(crate::nn::Shape::new(32, 16, 16), 0.5, &mut map_rng);
@@ -551,6 +746,7 @@ mod tests {
             input_elems: 4.0 * 64.0 + 8.0 * 64.0,
             weight_elems: 0.0,
             geom: TaskGeom::Wg { r: 3, s: 3, stride: 1, pad: 1, gu: 8, gv: 8, dw: false },
+            op_chans: 4,
         };
         let mut map_rng = Pcg32::new(5);
         let act = Bitmap::sample(crate::nn::Shape::new(4, 8, 8), 0.5, &mut map_rng);
@@ -607,6 +803,7 @@ mod tests {
             input_elems: 4.0 * 256.0,
             weight_elems: 4.0 * 256.0,
             geom: TaskGeom::Streaming,
+            op_chans: 4,
         };
         // Left half dense, right half empty — strong spatial imbalance a
         // global mean would erase.
@@ -658,6 +855,7 @@ mod tests {
             input_elems: 512.0 * 9.0 * 9.0,
             weight_elems: 512.0 * 4608.0,
             geom: TaskGeom::Streaming,
+            op_chans: 512,
         };
         let r = simulate_layer(&t, &cfg, &opts, Scheme::Dense, &mut rng);
         let idle = r.tile_busy.iter().filter(|c| **c == 0.0).count();

@@ -183,7 +183,7 @@ fn pooled_footprint(src: &Bitmap, out: Shape, k: usize, stride: usize, pad: usiz
 fn derive_footprint(
     net: &Network,
     id: LayerId,
-    acts: &HashMap<&str, Arc<Bitmap>>,
+    acts: &HashMap<String, Arc<Bitmap>>,
     memo: &mut HashMap<LayerId, Option<Arc<Bitmap>>>,
 ) -> Option<Arc<Bitmap>> {
     if let Some(hit) = memo.get(&id) {
@@ -253,7 +253,7 @@ fn derive_grad(
     net: &Network,
     consumers: &[Vec<LayerId>],
     id: LayerId,
-    grads: &HashMap<&str, Arc<Bitmap>>,
+    grads: &HashMap<String, Arc<Bitmap>>,
 ) -> Option<Arc<Bitmap>> {
     let cs = &consumers[id];
     if cs.len() != 1 {
@@ -275,6 +275,61 @@ pub struct ReplayBank {
     network: String,
 }
 
+/// Validate one traced layer's payload shapes against the network.
+fn check_traced_shapes(
+    net: &Network,
+    name: &str,
+    act: Option<&Bitmap>,
+    grad: Option<&Bitmap>,
+) -> anyhow::Result<()> {
+    let traced_layer = net
+        .by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("traced layer '{name}' not in '{}'", net.name))?;
+    for (what, bm) in [("act", act), ("grad", grad)] {
+        if let Some(b) = bm {
+            anyhow::ensure!(
+                b.shape == traced_layer.out,
+                "{what} bitmap of '{name}' is {} but the layer produces {}",
+                b.shape,
+                traced_layer.out
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Resolve one step's captured act/grad maps against the graph: the
+/// footprint/gradient derivations above, fanned over every compute
+/// layer. Shared by the borrowing and owning bank constructors.
+fn resolve_step(
+    net: &Network,
+    consumers: &[Vec<LayerId>],
+    acts: &HashMap<String, Arc<Bitmap>>,
+    grads: &HashMap<String, Arc<Bitmap>>,
+) -> StepMaps {
+    let mut memo: HashMap<LayerId, Option<Arc<Bitmap>>> = HashMap::new();
+    let mut by_layer = HashMap::new();
+    for layer in net.compute_layers() {
+        // Producer footprint: the captured map (ReLU or post-Add),
+        // or its exact OR-propagation through pooling/concat.
+        let act = derive_footprint(net, layer.inputs[0], acts, &mut memo).map(ReplayMap::new);
+        // Gradient at this layer's output: a consuming ReLU's
+        // masked map, resolved through residual Adds.
+        let grad = derive_grad(net, consumers, layer.id, grads).map(ReplayMap::new);
+        let pair = (act.is_some() || grad.is_some())
+            .then(|| PairMaps { act: act.clone(), grad: grad.clone() });
+        let lm = LayerMaps {
+            fp: TaskMaps { operand: act.clone(), ..TaskMaps::default() },
+            bp: TaskMaps { operand: grad, output: act, pair: None },
+            wg: TaskMaps { pair, ..TaskMaps::default() },
+        };
+        if !lm.fp.is_empty() || !lm.bp.is_empty() || !lm.wg.is_empty() {
+            by_layer.insert(layer.name.clone(), lm);
+        }
+    }
+    StepMaps { by_layer }
+}
+
 impl ReplayBank {
     /// Resolve a trace's bitmap payloads against the network's graph.
     /// Errors when the trace carries no payloads at all, or when a
@@ -290,70 +345,31 @@ impl ReplayBank {
         let consumers = net.consumer_map();
         let mut steps = Vec::new();
         for s in &trace.steps {
-            // traced layer name -> (act map, grad map) for this step —
-            // ReLU act+grad pairs, plus act-only post-Add footprints.
-            let mut traced: HashMap<&str, (Option<Arc<Bitmap>>, Option<Arc<Bitmap>>)> =
-                HashMap::new();
+            // traced layer name -> act/grad map for this step — ReLU
+            // act+grad pairs, plus act-only post-Add footprints.
+            let mut acts: HashMap<String, Arc<Bitmap>> = HashMap::new();
+            let mut grads: HashMap<String, Arc<Bitmap>> = HashMap::new();
             for lt in &s.layers {
                 if !lt.has_bitmaps() {
                     continue;
                 }
-                let traced_layer = net.by_name(&lt.name).ok_or_else(|| {
-                    anyhow::anyhow!("traced layer '{}' not in '{}'", lt.name, net.name)
-                })?;
-                for (what, bm) in [("act", &lt.act_bitmap), ("grad", &lt.grad_bitmap)] {
-                    if let Some(b) = bm {
-                        anyhow::ensure!(
-                            b.shape == traced_layer.out,
-                            "{what} bitmap of '{}' is {} but the layer produces {}",
-                            lt.name,
-                            b.shape,
-                            traced_layer.out
-                        );
-                    }
+                check_traced_shapes(
+                    net,
+                    &lt.name,
+                    lt.act_bitmap.as_ref(),
+                    lt.grad_bitmap.as_ref(),
+                )?;
+                if let Some(b) = &lt.act_bitmap {
+                    acts.insert(lt.name.clone(), Arc::new(b.clone()));
                 }
-                traced.insert(
-                    lt.name.as_str(),
-                    (
-                        lt.act_bitmap.clone().map(Arc::new),
-                        lt.grad_bitmap.clone().map(Arc::new),
-                    ),
-                );
+                if let Some(b) = &lt.grad_bitmap {
+                    grads.insert(lt.name.clone(), Arc::new(b.clone()));
+                }
             }
-            if traced.is_empty() {
+            if acts.is_empty() && grads.is_empty() {
                 continue; // scalar-only step: nothing to replay
             }
-            let acts: HashMap<&str, Arc<Bitmap>> = traced
-                .iter()
-                .filter_map(|(name, (a, _))| a.clone().map(|a| (*name, a)))
-                .collect();
-            let grads: HashMap<&str, Arc<Bitmap>> = traced
-                .iter()
-                .filter_map(|(name, (_, g))| g.clone().map(|g| (*name, g)))
-                .collect();
-            let mut memo: HashMap<LayerId, Option<Arc<Bitmap>>> = HashMap::new();
-            let mut by_layer = HashMap::new();
-            for layer in net.compute_layers() {
-                // Producer footprint: the captured map (ReLU or post-Add),
-                // or its exact OR-propagation through pooling/concat.
-                let act = derive_footprint(net, layer.inputs[0], &acts, &mut memo)
-                    .map(ReplayMap::new);
-                // Gradient at this layer's output: a consuming ReLU's
-                // masked map, resolved through residual Adds.
-                let grad =
-                    derive_grad(net, &consumers, layer.id, &grads).map(ReplayMap::new);
-                let pair = (act.is_some() || grad.is_some())
-                    .then(|| PairMaps { act: act.clone(), grad: grad.clone() });
-                let lm = LayerMaps {
-                    fp: TaskMaps { operand: act.clone(), ..TaskMaps::default() },
-                    bp: TaskMaps { operand: grad, output: act, pair: None },
-                    wg: TaskMaps { pair, ..TaskMaps::default() },
-                };
-                if !lm.fp.is_empty() || !lm.bp.is_empty() || !lm.wg.is_empty() {
-                    by_layer.insert(layer.name.clone(), lm);
-                }
-            }
-            steps.push(StepMaps { by_layer });
+            steps.push(resolve_step(net, &consumers, &acts, &grads));
         }
         anyhow::ensure!(!steps.is_empty(), "no replayable step resolved against '{}'", net.name);
         Ok(ReplayBank {
@@ -361,6 +377,52 @@ impl ReplayBank {
             fingerprint: trace.fingerprint(),
             network: net.name.clone(),
         })
+    }
+
+    /// [`ReplayBank::from_trace`], but *consuming* the trace: every
+    /// captured bitmap moves into its bank `Arc` instead of being
+    /// cloned — the decode-into-bank path for callers that own their
+    /// freshly-loaded trace (`agos cosim` does), where a v4 load
+    /// becomes file bytes → words → bank with no payload copied twice.
+    pub fn from_trace_owned(net: &Network, mut trace: TraceFile) -> anyhow::Result<ReplayBank> {
+        anyhow::ensure!(
+            trace.has_bitmaps(),
+            "trace file for '{}' carries no bitmap payloads (v1 or scalar-only v2); \
+             capture one with `agos trace` or a payload-capturing `agos train`",
+            trace.network
+        );
+        // The fingerprint covers the payloads, so take it before they
+        // move out.
+        let fingerprint = trace.fingerprint();
+        let consumers = net.consumer_map();
+        let mut steps = Vec::new();
+        for s in std::mem::take(&mut trace.steps) {
+            let mut acts: HashMap<String, Arc<Bitmap>> = HashMap::new();
+            let mut grads: HashMap<String, Arc<Bitmap>> = HashMap::new();
+            for lt in s.layers {
+                if !lt.has_bitmaps() {
+                    continue;
+                }
+                check_traced_shapes(
+                    net,
+                    &lt.name,
+                    lt.act_bitmap.as_ref(),
+                    lt.grad_bitmap.as_ref(),
+                )?;
+                if let Some(b) = lt.act_bitmap {
+                    acts.insert(lt.name.clone(), Arc::new(b));
+                }
+                if let Some(b) = lt.grad_bitmap {
+                    grads.insert(lt.name, Arc::new(b));
+                }
+            }
+            if acts.is_empty() && grads.is_empty() {
+                continue; // scalar-only step: nothing to replay
+            }
+            steps.push(resolve_step(net, &consumers, &acts, &grads));
+        }
+        anyhow::ensure!(!steps.is_empty(), "no replayable step resolved against '{}'", net.name);
+        Ok(ReplayBank { steps, fingerprint, network: net.name.clone() })
     }
 
     /// The step image `i` replays (round-robin over captured steps).

@@ -45,8 +45,13 @@ use super::engine::{simulate_network_jobs, NetworkSimResult};
 /// grew the gather mode. rev 5: trace fingerprints fold the on-disk
 /// format (v2/v3), post-Add footprints and Add-pass-through gradient
 /// maps changed replayed residual-network results, and the WG strided
-/// row gather was word-rewritten.)
-pub const SIM_REVISION: u64 = 5;
+/// row gather was word-rewritten. rev 6: sampled exact-backend tasks
+/// under geometry gathering synthesize one task-wide operand map and
+/// gather planned windows from it instead of drawing per-output
+/// patterns — every sampled exact result's draw sequence changed — and
+/// the v4 binary trace container folds a new format tag into trace
+/// fingerprints.)
+pub const SIM_REVISION: u64 = 6;
 
 /// Cache identity of one simulation: everything that can change the
 /// result — the network (name *and* structure), the scheme, and the

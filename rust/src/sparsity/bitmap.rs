@@ -324,6 +324,46 @@ impl Bitmap {
         super::encode::rle_encode_words(&self.words, self.shape.len())
     }
 
+    /// Binary run-length encoding of the packed words — the TraceFile
+    /// **v4** payload (`trace::v4`), appended to `out`. Same run
+    /// semantics as [`Bitmap::encode_rle`], packed bytes instead of
+    /// text (`sparsity::encode::rle_encode_words_bin`).
+    pub fn encode_rle_bin(&self, out: &mut Vec<u8>) {
+        super::encode::rle_encode_words_bin(&self.words, self.shape.len(), out)
+    }
+
+    /// Parse an `encode_rle_bin` payload back under `shape` — the v4
+    /// reader's decode-into-words path: runs expand straight into the
+    /// bitmap's `Vec<u64>`, no intermediate strings.
+    pub fn decode_rle_bin(shape: Shape, bytes: &[u8]) -> anyhow::Result<Bitmap> {
+        use anyhow::Context;
+        let words = super::encode::rle_decode_words_bin(bytes, shape.len())
+            .with_context(|| format!("binary RLE bitmap payload for shape {shape}"))?;
+        Ok(Bitmap { shape, words })
+    }
+
+    /// Adopt an already-packed word buffer under `shape` — the v4
+    /// reader's zero-copy raw path (`enc = raw` sections deserialize to
+    /// a `Vec<u64>` that becomes the bitmap's storage directly).
+    /// Validates the constructor invariant: exact word count and no
+    /// bits set beyond `shape.len()` in the tail word.
+    pub fn from_words(shape: Shape, words: Vec<u64>) -> anyhow::Result<Bitmap> {
+        let n_words = shape.len().div_ceil(64);
+        anyhow::ensure!(
+            words.len() == n_words,
+            "bitmap payload is {} words, shape {shape} needs {n_words}",
+            words.len()
+        );
+        let tail = shape.len() % 64;
+        if tail > 0 {
+            anyhow::ensure!(
+                words[n_words - 1] & !((1u64 << tail) - 1) == 0,
+                "bitmap payload has bits set beyond shape {shape}"
+            );
+        }
+        Ok(Bitmap { shape, words })
+    }
+
     /// Parse an `encode_rle` payload back under `shape`. Strict like
     /// `decode_hex`: wrong word totals, malformed tokens and bits beyond
     /// `shape.len()` are errors, never silently-loaded data.

@@ -239,6 +239,123 @@ pub fn rle_decode_words(s: &str, len_bits: usize) -> anyhow::Result<Vec<u64>> {
 }
 
 // ---------------------------------------------------------------------------
+// Binary word-level RLE — the TraceFile v4 payload codec.
+// ---------------------------------------------------------------------------
+
+/// Binary run-length encoding of a packed LSB-first word stream — the
+/// TraceFile **v4** payload codec. Same run semantics as the v3 text
+/// grammar ([`rle_encode_words`]), but tokens are packed bytes instead
+/// of ASCII, and literal words are raw little-endian `u64`s instead of
+/// hex — so the decoder writes straight into a `Vec<u64>` with no string
+/// scanning. Token layout, appended to `out`:
+///
+/// * `0x00` + `u32` LE count — that many consecutive all-zero words;
+/// * `0x01` + `u32` LE count — that many all-ones words ("ones" = every
+///   *valid* bit of the word position, tail-aware via the same
+///   [`word_mask`] the text grammar uses);
+/// * `0x02` + `u32` LE count + count × 8 LE bytes — literal words.
+///
+/// Unlike the text grammar, consecutive literal words coalesce into one
+/// token (5 bytes of framing amortized over the run), so a mid-density
+/// payload costs `~8·n + 5` bytes vs v3's `~17·n` hex characters.
+pub fn rle_encode_words_bin(words: &[u64], len_bits: usize, out: &mut Vec<u8>) {
+    debug_assert_eq!(words.len(), len_bits.div_ceil(64), "word count vs bit length");
+    let mut i = 0usize;
+    while i < words.len() {
+        let w = words[i];
+        if w == 0 {
+            let mut n = 1;
+            while i + n < words.len() && words[i + n] == 0 {
+                n += 1;
+            }
+            out.push(0);
+            out.extend_from_slice(&(n as u32).to_le_bytes());
+            i += n;
+        } else if w == word_mask(i, len_bits) {
+            let mut n = 1;
+            while i + n < words.len() && words[i + n] == word_mask(i + n, len_bits) {
+                n += 1;
+            }
+            out.push(1);
+            out.extend_from_slice(&(n as u32).to_le_bytes());
+            i += n;
+        } else {
+            let mut n = 1;
+            while i + n < words.len()
+                && words[i + n] != 0
+                && words[i + n] != word_mask(i + n, len_bits)
+            {
+                n += 1;
+            }
+            out.push(2);
+            out.extend_from_slice(&(n as u32).to_le_bytes());
+            for w in &words[i..i + n] {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            i += n;
+        }
+    }
+}
+
+/// Decode an [`rle_encode_words_bin`] payload back into packed words.
+/// Strict like the text decoder: truncated tokens, unknown tags, runs
+/// that overrun or stop short of the expected word count, and bits set
+/// beyond `len_bits` are all hard errors.
+pub fn rle_decode_words_bin(bytes: &[u8], len_bits: usize) -> anyhow::Result<Vec<u64>> {
+    let n_words = len_bits.div_ceil(64);
+    let mut words: Vec<u64> = Vec::with_capacity(n_words);
+    let mut p = 0usize;
+    while p < bytes.len() {
+        anyhow::ensure!(
+            words.len() < n_words,
+            "binary RLE payload continues past its {n_words}-word shape"
+        );
+        anyhow::ensure!(p + 5 <= bytes.len(), "binary RLE token truncated");
+        let tag = bytes[p];
+        let n = u32::from_le_bytes(bytes[p + 1..p + 5].try_into().unwrap()) as usize;
+        p += 5;
+        anyhow::ensure!(n >= 1, "empty run in binary RLE payload");
+        anyhow::ensure!(
+            words.len() + n <= n_words,
+            "binary RLE run of {n} overruns the {n_words}-word shape"
+        );
+        match tag {
+            0 => words.resize(words.len() + n, 0),
+            1 => {
+                for _ in 0..n {
+                    words.push(word_mask(words.len(), len_bits));
+                }
+            }
+            2 => {
+                anyhow::ensure!(
+                    p + n * 8 <= bytes.len(),
+                    "binary RLE literal run of {n} words truncated"
+                );
+                for k in 0..n {
+                    words.push(u64::from_le_bytes(
+                        bytes[p + k * 8..p + k * 8 + 8].try_into().unwrap(),
+                    ));
+                }
+                p += n * 8;
+            }
+            other => anyhow::bail!("unknown binary RLE tag {other}"),
+        }
+    }
+    anyhow::ensure!(
+        words.len() == n_words,
+        "binary RLE payload covers {} of {n_words} words",
+        words.len()
+    );
+    if n_words > 0 {
+        anyhow::ensure!(
+            words[n_words - 1] & !word_mask(n_words - 1, len_bits) == 0,
+            "binary RLE payload has bits set beyond the {len_bits}-bit shape"
+        );
+    }
+    Ok(words)
+}
+
+// ---------------------------------------------------------------------------
 // Word-granular run index — zero-skip metadata for replayed bitmaps.
 // ---------------------------------------------------------------------------
 
@@ -411,6 +528,89 @@ mod tests {
         assert!(rle_decode_words("z4 ffffffffffffffff", 300).is_err());
         // The same bits are fine when the shape is word-aligned.
         assert!(rle_decode_words("z4 ffffffffffffffff", 320).is_ok());
+    }
+
+    #[test]
+    fn binary_rle_mirrors_the_text_grammar_runs() {
+        // Same stream as the text-grammar pin: z2 deadbeef o2 (300 bits).
+        let tail = (1u64 << 44) - 1;
+        let words = vec![0, 0, 0xdead_beef, !0, tail];
+        let mut enc = Vec::new();
+        rle_encode_words_bin(&words, 300, &mut enc);
+        // zero-run(2) + literal-run(1, 8 bytes) + ones-run(2).
+        assert_eq!(
+            enc,
+            [
+                &[0u8, 2, 0, 0, 0][..],
+                &[2u8, 1, 0, 0, 0][..],
+                &0xdead_beefu64.to_le_bytes()[..],
+                &[1u8, 2, 0, 0, 0][..],
+            ]
+            .concat()
+        );
+        assert_eq!(rle_decode_words_bin(&enc, 300).unwrap(), words);
+        // Degenerate streams are single 5-byte tokens.
+        let mut z = Vec::new();
+        rle_encode_words_bin(&[0, 0, 0, 0, 0], 300, &mut z);
+        assert_eq!(z, vec![0, 5, 0, 0, 0]);
+        let mut o = Vec::new();
+        rle_encode_words_bin(&[!0, !0, !0, !0, tail], 300, &mut o);
+        assert_eq!(o, vec![1, 5, 0, 0, 0]);
+        assert_eq!(rle_decode_words_bin(&o, 300).unwrap(), vec![!0, !0, !0, !0, tail]);
+        // Adjacent literal words coalesce into one token.
+        let mut lits = Vec::new();
+        rle_encode_words_bin(&[3, 5, 7], 192, &mut lits);
+        assert_eq!(lits.len(), 5 + 3 * 8);
+        assert_eq!(rle_decode_words_bin(&lits, 192).unwrap(), vec![3, 5, 7]);
+        let empty: Vec<u64> = Vec::new();
+        let mut e = Vec::new();
+        rle_encode_words_bin(&empty, 0, &mut e);
+        assert!(e.is_empty());
+        assert_eq!(rle_decode_words_bin(&e, 0).unwrap(), empty);
+    }
+
+    #[test]
+    fn binary_rle_rejects_malformed_payloads() {
+        let ok = |bytes: &[u8], bits| rle_decode_words_bin(bytes, bits);
+        // Wrong totals: short, overlong, tokens past the shape.
+        assert!(ok(&[0, 1, 0, 0, 0], 300).is_err(), "covers 1 of 5 words");
+        assert!(ok(&[0, 6, 0, 0, 0], 300).is_err(), "run overruns the shape");
+        assert!(
+            ok(&[0, 5, 0, 0, 0, 0, 1, 0, 0, 0], 300).is_err(),
+            "tokens past the shape"
+        );
+        // Malformed tokens.
+        assert!(ok(&[0, 0, 0, 0, 0, 0, 5, 0, 0, 0], 300).is_err(), "empty run");
+        assert!(ok(&[0], 300).is_err(), "truncated token header");
+        assert!(ok(&[3, 5, 0, 0, 0], 300).is_err(), "unknown tag");
+        assert!(ok(&[2, 1, 0, 0, 0, 0xEF], 64).is_err(), "truncated literal");
+        // Bits beyond the shape in the tail word.
+        let mut full = vec![0u8, 4, 0, 0, 0, 2, 1, 0, 0, 0];
+        full.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(ok(&full, 300).is_err(), "tail bits beyond the shape");
+        assert!(ok(&full, 320).is_ok(), "same bytes fine when word-aligned");
+    }
+
+    #[test]
+    fn binary_rle_roundtrips_adversarial_patterns() {
+        // Checkerboard (no runs at all), alternating runs, lone bits at
+        // word boundaries — every stream must reproduce exactly.
+        let cases: Vec<(Vec<u64>, usize)> = vec![
+            (vec![0xAAAA_AAAA_AAAA_AAAA; 6], 384),
+            (vec![0x5555_5555_5555_5555; 3], 192),
+            (vec![0, !0, 0, !0, 0, (1u64 << 20) - 1], 340),
+            (vec![1, 1 << 63, 0, !0], 256),
+            (vec![(1u64 << 10) - 1], 10),
+        ];
+        for (words, bits) in cases {
+            let mut enc = Vec::new();
+            rle_encode_words_bin(&words, bits, &mut enc);
+            assert_eq!(
+                rle_decode_words_bin(&enc, bits).unwrap(),
+                words,
+                "{bits}-bit stream"
+            );
+        }
     }
 
     #[test]

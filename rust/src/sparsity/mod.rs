@@ -14,6 +14,7 @@ pub use analyze::{
 pub use bitmap::{Bitmap, ChannelWords};
 pub(crate) use bitmap::or_bits;
 pub use encode::{
-    decode_group, encode_bitmap, encode_tensor, EncodedTensor, OffsetGroup, RunIndex, GROUP,
+    decode_group, encode_bitmap, encode_tensor, rle_decode_words_bin, rle_encode_words_bin,
+    EncodedTensor, OffsetGroup, RunIndex, GROUP,
 };
 pub use model::{SparsityModel, TraceSource};

@@ -2,7 +2,7 @@
 //! through the AOT artifacts, persisted as JSON for the co-simulation
 //! driver and the figures.
 //!
-//! Three on-disk revisions:
+//! Four on-disk revisions:
 //!
 //! * **v1** — scalar per-layer measurements only (name, activation /
 //!   gradient zero fractions, identity flag). Files written before the
@@ -23,9 +23,16 @@
 //!   the first revision that records **post-Add footprints** (act-only
 //!   entries for residual Add layers) so the replay bank no longer stops
 //!   deriving footprints at Add nodes.
+//! * **v4** — the same payload content in a *binary streaming container*
+//!   (`trace::v4`): magic header, per-step length-framed records, and
+//!   delta/RLE/raw-word payload sections in packed bytes instead of
+//!   JSON text. Capture appends step by step with bounded memory
+//!   ([`TraceWriter`]) and the reader decodes runs straight into
+//!   `Bitmap` word buffers — no hex strings anywhere.
 //!
-//! All three revisions load; [`TraceFile::format`] selects which of
-//! v2/v3 `save` writes (v3 is the default for new captures).
+//! All four revisions load through [`TraceFile::load`], which sniffs
+//! the v4 magic vs JSON; [`TraceFile::format`] selects which of
+//! v2/v3/v4 `save` writes (v3 is the default for new captures).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -37,11 +44,14 @@ use crate::sparsity::Bitmap;
 use crate::util::fnv::Fnv1a;
 use crate::util::json::Json;
 
+mod v4;
+pub use v4::TraceWriter;
+
 /// Current trace-file schema revision.
-pub const TRACE_VERSION: u64 = 3;
+pub const TRACE_VERSION: u64 = 4;
 
 /// Which on-disk payload encoding a [`TraceFile`] saves as. Decoding is
-/// format-agnostic (every revision loads); this only steers `to_json`.
+/// format-agnostic (every revision loads); this only steers `save`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum TraceFormat {
     /// `"version": 2` — raw hex word payloads.
@@ -49,23 +59,29 @@ pub enum TraceFormat {
     /// `"version": 3` — delta/RLE word payloads (the default).
     #[default]
     V3,
+    /// Binary streaming container (`trace::v4`): magic header, per-step
+    /// length-framed records, packed delta/RLE/raw-word payloads.
+    V4,
 }
 
 impl TraceFormat {
-    pub const ALL: [TraceFormat; 2] = [TraceFormat::V2, TraceFormat::V3];
+    pub const ALL: [TraceFormat; 3] = [TraceFormat::V2, TraceFormat::V3, TraceFormat::V4];
 
     pub fn label(&self) -> &'static str {
         match self {
             TraceFormat::V2 => "v2",
             TraceFormat::V3 => "v3",
+            TraceFormat::V4 => "v4",
         }
     }
 
-    /// The `version` key this format writes.
+    /// The schema revision this format writes (the JSON `version` key
+    /// for v2/v3, the container version byte for v4).
     pub fn version(&self) -> u64 {
         match self {
             TraceFormat::V2 => 2,
             TraceFormat::V3 => 3,
+            TraceFormat::V4 => 4,
         }
     }
 
@@ -81,7 +97,8 @@ impl TraceFormat {
         match s.to_ascii_lowercase().as_str() {
             "v2" | "2" | "hex" => Ok(TraceFormat::V2),
             "v3" | "3" | "rle" => Ok(TraceFormat::V3),
-            other => anyhow::bail!("unknown trace format '{other}' (v2|v3)"),
+            "v4" | "4" | "bin" => Ok(TraceFormat::V4),
+            other => anyhow::bail!("unknown trace format '{other}' (v2|v3|v4)"),
         }
     }
 }
@@ -362,6 +379,11 @@ impl TraceFile {
         h.finish()
     }
 
+    /// JSON form of the trace. For [`TraceFormat::V4`] this is a
+    /// *downgrade*: JSON cannot carry the binary container, so payloads
+    /// are emitted v3-style under `"version": 3` (used when a v4 trace
+    /// is embedded into a JSON report; `save` itself writes the real
+    /// binary form). A reload of that JSON therefore reads back as v3.
     pub fn to_json(&self) -> Json {
         // Previous-map table for the v3 delta chain, keyed (layer, slot)
         // and updated in file order — the decoder walks the same chain.
@@ -376,7 +398,9 @@ impl TraceFile {
         ) -> Json {
             let j = match format {
                 TraceFormat::V2 => bitmap_to_json_hex(b),
-                TraceFormat::V3 => bitmap_to_json_rle(b, prev.get(&(name, slot)).copied()),
+                TraceFormat::V3 | TraceFormat::V4 => {
+                    bitmap_to_json_rle(b, prev.get(&(name, slot)).copied())
+                }
             };
             prev.insert((name, slot), b);
             j
@@ -426,7 +450,7 @@ impl TraceFile {
             })
             .collect();
         Json::from_pairs(vec![
-            ("version", self.format.version().into()),
+            ("version", self.format.version().min(3).into()),
             ("network", self.network.as_str().into()),
             ("steps", Json::Arr(steps)),
         ])
@@ -457,9 +481,12 @@ impl TraceFile {
             Json::Null => 1,
             v => v.as_u64().context("trace.version")?,
         };
+        // JSON traces top out at v3 — revision 4 is the binary
+        // container, which never reaches the JSON parser (`load` sniffs
+        // its magic first).
         anyhow::ensure!(
-            (1..=TRACE_VERSION).contains(&version),
-            "unsupported trace version {version} (this build reads 1..={TRACE_VERSION})"
+            (1..=3).contains(&version),
+            "unsupported trace version {version} (JSON traces are v1..=v3; v4 is binary)"
         );
         let format = if version >= 3 { TraceFormat::V3 } else { TraceFormat::V2 };
         let network = j.get("network").as_str().context("trace.network")?.to_string();
@@ -535,18 +562,66 @@ impl TraceFile {
         Ok((TraceFile { network, steps, format }, warnings))
     }
 
+    /// Persist in [`TraceFile::format`]: the binary v4 container, or
+    /// pretty JSON for v2/v3.
     pub fn save(&self, path: &Path) -> Result<()> {
-        self.to_json().write_file(path)
+        match self.format {
+            TraceFormat::V4 => {
+                if let Some(dir) = path.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(path, v4::encode(self)?)
+                    .with_context(|| format!("writing {}", path.display()))
+            }
+            TraceFormat::V2 | TraceFormat::V3 => self.to_json().write_file(path),
+        }
     }
 
+    /// In-memory binary v4 encode — the exact bytes `save` writes when
+    /// [`TraceFile::format`] is [`TraceFormat::V4`]. Exposed so benches
+    /// and size accounting can measure the container without file I/O.
+    pub fn encode_v4(&self) -> Result<Vec<u8>> {
+        v4::encode(self)
+    }
+
+    /// Strict in-memory decode of a binary v4 container (the inverse of
+    /// [`TraceFile::encode_v4`]).
+    pub fn decode_v4(bytes: &[u8]) -> Result<TraceFile> {
+        let (t, warnings) = v4::decode(bytes, false)?;
+        debug_assert!(warnings.is_empty(), "strict decode collects no warnings");
+        Ok(t)
+    }
+
+    /// Load any revision through one entry point: the file's first
+    /// bytes are sniffed for the v4 magic, everything else parses as
+    /// JSON (v1–v3).
     pub fn load(path: &Path) -> Result<TraceFile> {
-        TraceFile::from_json(&Json::parse_file(path)?)
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() >= v4::MAGIC.len() && bytes[..v4::MAGIC.len()] == v4::MAGIC {
+            let (t, warnings) = v4::decode(&bytes, false)?;
+            debug_assert!(warnings.is_empty(), "strict decode collects no warnings");
+            return Ok(t);
+        }
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| anyhow::anyhow!("{}: neither v4 binary nor JSON: {e}", path.display()))?;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        TraceFile::from_json(&j)
     }
 
     /// [`TraceFile::load`] with the lenient payload policy of
-    /// [`TraceFile::from_json_lenient`].
+    /// [`TraceFile::from_json_lenient`] — which for v4 streams means
+    /// keeping every complete step record of a truncated capture.
     pub fn load_lenient(path: &Path) -> Result<(TraceFile, Vec<String>)> {
-        TraceFile::from_json_lenient(&Json::parse_file(path)?)
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() >= v4::MAGIC.len() && bytes[..v4::MAGIC.len()] == v4::MAGIC {
+            return v4::decode(&bytes, true);
+        }
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| anyhow::anyhow!("{}: neither v4 binary nor JSON: {e}", path.display()))?;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        TraceFile::from_json_lenient(&j)
     }
 }
 
@@ -624,7 +699,7 @@ mod tests {
         assert!(t.has_bitmaps());
         assert!(t.identity_holds(), "containment-built grad must satisfy identity");
         let j = t.to_json();
-        assert_eq!(j.get("version").as_u64(), Some(TRACE_VERSION));
+        assert_eq!(j.get("version").as_u64(), Some(3), "default format writes v3 JSON");
         let t2 = TraceFile::from_json(&j).unwrap();
         assert_eq!(t, t2);
         let l = &t2.steps[0].layers[0];
@@ -791,6 +866,19 @@ mod tests {
         let t = sample_payloads();
         t.save(&path).unwrap();
         assert_eq!(TraceFile::load(&path).unwrap(), t);
+        // The same entry point round-trips the v4 binary container —
+        // `load` sniffs the magic instead of parsing JSON.
+        let v4 = TraceFile { format: TraceFormat::V4, ..t.clone() };
+        let bin_path = dir.join("t.trace.bin");
+        v4.save(&bin_path).unwrap();
+        let bytes = std::fs::read(&bin_path).unwrap();
+        assert_eq!(&bytes[..8], b"AGOSTRC\0");
+        assert_eq!(TraceFile::load(&bin_path).unwrap(), v4);
+        let (lenient, warnings) = TraceFile::load_lenient(&bin_path).unwrap();
+        assert_eq!(lenient, v4);
+        assert!(warnings.is_empty());
+        // A JSON embed of a v4 trace downgrades to v3 payloads.
+        assert_eq!(v4.to_json().get("version").as_u64(), Some(3));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -841,6 +929,7 @@ mod tests {
         }
         assert_eq!(TraceFormat::parse("V3").unwrap(), TraceFormat::V3);
         assert_eq!(TraceFormat::parse("2").unwrap(), TraceFormat::V2);
+        assert_eq!(TraceFormat::parse("bin").unwrap(), TraceFormat::V4);
         assert!(TraceFormat::parse("v9").is_err());
         assert_eq!(TraceFormat::default(), TraceFormat::V3);
     }
@@ -866,6 +955,9 @@ mod tests {
         assert_eq!(a.fingerprint(), b.fingerprint());
         // Same content, different on-disk format: keys must separate.
         let v2 = TraceFile { format: TraceFormat::V2, ..a.clone() };
+        let v4 = TraceFile { format: TraceFormat::V4, ..a.clone() };
         assert_ne!(a.fingerprint(), v2.fingerprint());
+        assert_ne!(a.fingerprint(), v4.fingerprint());
+        assert_ne!(v2.fingerprint(), v4.fingerprint());
     }
 }

@@ -1,0 +1,545 @@
+//! TraceFile **v4**: the binary streaming trace container.
+//!
+//! On-disk layout (every integer little-endian):
+//!
+//! ```text
+//! header    := magic "AGOSTRC\0" (8 bytes) · version u8 (= 4)
+//!            · name_len u16 · network name (UTF-8)
+//! step*     := body_len u32 · body            (repeated until EOF)
+//! body      := step u64 · loss f64 · layer_count u16 · layer*
+//! layer     := name_len u16 · name (UTF-8)
+//!            · act_sparsity f64 · grad_sparsity f64 · flags u8
+//!            · [act payload] · [grad payload]      (as flagged)
+//! flags     := bit0 identity_ok · bit1 footprint
+//!            · bit2 act payload present · bit3 grad payload present
+//! payload   := c u32 · h u32 · w u32 · enc u8 · data_len u32 · data
+//! enc       := 0 raw LE u64 words · 1 binary RLE
+//!            · 2 binary RLE of XOR vs previous step's same-slot map
+//! ```
+//!
+//! The container is framed per *step*: a writer appends one step record
+//! at a time ([`TraceWriter`]) keeping only the previous step's decoded
+//! maps (the delta bases) resident, and a truncated file cleanly
+//! recovers every step whose record is complete (the lenient load
+//! path). The payload data is the same delta/RLE scheme as v3, but in
+//! the packed byte grammar of `sparsity::encode::rle_encode_words_bin`
+//! — and where runs don't pay (mid-density maps), raw LE words that the
+//! reader adopts as a `Bitmap`'s storage without any re-encoding
+//! ([`Bitmap::from_words`]). No hex, no string scanning anywhere.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::nn::Shape;
+use crate::sparsity::Bitmap;
+
+use super::{LayerTrace, SlotKey, StepTrace, TraceFile, TraceFormat};
+
+/// First 8 bytes of every v4 container — what `TraceFile::load` sniffs
+/// to pick the binary decoder over the JSON parser.
+pub(crate) const MAGIC: [u8; 8] = *b"AGOSTRC\0";
+
+/// The container-format byte written after the magic. Distinct from the
+/// JSON `version` key lineage only in storage; semantically this *is*
+/// trace revision 4.
+const CONTAINER_VERSION: u8 = 4;
+
+const FLAG_IDENTITY: u8 = 1 << 0;
+const FLAG_FOOTPRINT: u8 = 1 << 1;
+const FLAG_ACT: u8 = 1 << 2;
+const FLAG_GRAD: u8 = 1 << 3;
+
+const ENC_RAW: u8 = 0;
+const ENC_RLE: u8 = 1;
+const ENC_DELTA: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: usize, what: &str) -> Result<()> {
+    let v = u16::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} exceeds u16"))?;
+    out.extend_from_slice(&v.to_le_bytes());
+    Ok(())
+}
+
+fn put_u32(out: &mut Vec<u8>, v: usize, what: &str) -> Result<()> {
+    let v = u32::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} exceeds u32"))?;
+    out.extend_from_slice(&v.to_le_bytes());
+    Ok(())
+}
+
+/// The v4 file header.
+pub(crate) fn encode_header(network: &str) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(11 + network.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(CONTAINER_VERSION);
+    put_u16(&mut out, network.len(), "network name length")?;
+    out.extend_from_slice(network.as_bytes());
+    Ok(out)
+}
+
+/// One bitmap payload section. Picks the cheapest of binary RLE, the
+/// binary RLE of the XOR against `prev` (the previous step's same-slot
+/// map — only when *strictly* smaller, so ties stay delta-chain-free),
+/// and raw LE words (again only when strictly smaller): the same
+/// smallest-wins policy as the v3 JSON encoder, with raw words playing
+/// hex's role as the mid-density floor.
+fn encode_payload(b: &Bitmap, prev: Option<&Bitmap>, out: &mut Vec<u8>) -> Result<()> {
+    put_u32(out, b.shape.c, "payload shape.c")?;
+    put_u32(out, b.shape.h, "payload shape.h")?;
+    put_u32(out, b.shape.w, "payload shape.w")?;
+    let mut rle = Vec::new();
+    b.encode_rle_bin(&mut rle);
+    let (mut enc, mut data) = (ENC_RLE, rle);
+    if let Some(p) = prev {
+        if p.shape == b.shape {
+            let mut delta = Vec::new();
+            b.xor(p).encode_rle_bin(&mut delta);
+            if delta.len() < data.len() {
+                (enc, data) = (ENC_DELTA, delta);
+            }
+        }
+    }
+    if b.words().len() * 8 < data.len() {
+        data.clear();
+        for w in b.words() {
+            data.extend_from_slice(&w.to_le_bytes());
+        }
+        enc = ENC_RAW;
+    }
+    out.push(enc);
+    put_u32(out, data.len(), "payload data length")?;
+    out.extend_from_slice(&data);
+    Ok(())
+}
+
+/// One step record (length-prefixed body), updating the delta-base
+/// table to this step's maps. The table holds *owned* clones: the
+/// streaming writer drops each `StepTrace` after appending it, so the
+/// bases can't borrow from it — this per-payload clone is exactly the
+/// "previous step stays resident" part of the bounded-memory contract.
+pub(crate) fn encode_step(
+    step: &StepTrace,
+    prev: &mut HashMap<SlotKey, Bitmap>,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&(step.step as u64).to_le_bytes());
+    body.extend_from_slice(&step.loss.to_le_bytes());
+    put_u16(&mut body, step.layers.len(), "layer count")?;
+    for l in &step.layers {
+        put_u16(&mut body, l.name.len(), "layer name length")?;
+        body.extend_from_slice(l.name.as_bytes());
+        body.extend_from_slice(&l.act_sparsity.to_le_bytes());
+        body.extend_from_slice(&l.grad_sparsity.to_le_bytes());
+        let mut flags = 0u8;
+        flags |= if l.identity_ok { FLAG_IDENTITY } else { 0 };
+        flags |= if l.footprint { FLAG_FOOTPRINT } else { 0 };
+        flags |= if l.act_bitmap.is_some() { FLAG_ACT } else { 0 };
+        flags |= if l.grad_bitmap.is_some() { FLAG_GRAD } else { 0 };
+        body.push(flags);
+        for (slot, b) in
+            [("act_bitmap", &l.act_bitmap), ("grad_bitmap", &l.grad_bitmap)]
+        {
+            if let Some(b) = b {
+                let key = (l.name.clone(), slot);
+                encode_payload(b, prev.get(&key), &mut body)?;
+                prev.insert(key, b.clone());
+            }
+        }
+    }
+    put_u32(out, body.len(), "step body length")?;
+    out.extend_from_slice(&body);
+    Ok(())
+}
+
+/// Whole-file encode — what `TraceFile::save` writes for
+/// [`TraceFormat::V4`]. The streaming writer produces byte-identical
+/// output for the same steps in the same order.
+pub(crate) fn encode(t: &TraceFile) -> Result<Vec<u8>> {
+    let mut out = encode_header(&t.network)?;
+    let mut prev: HashMap<SlotKey, Bitmap> = HashMap::new();
+    for s in &t.steps {
+        encode_step(s, &mut prev, &mut out)?;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Streaming writer
+// ---------------------------------------------------------------------------
+
+/// Incremental v4 writer: open once, [`TraceWriter::append`] one step at
+/// a time, [`TraceWriter::finish`]. Memory stays bounded by *one* step's
+/// maps (the delta-base table) no matter how many steps the run
+/// captures — the whole point of the v4 container for long `agos train`
+/// runs, where the v3 path had to hold every step's `StepTrace` in a
+/// `TraceFile` until the end just to serialize it.
+pub struct TraceWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    prev: HashMap<SlotKey, Bitmap>,
+    steps: usize,
+}
+
+impl TraceWriter {
+    /// Create/truncate `path` and write the v4 header.
+    pub fn create(path: &Path, network: &str) -> Result<TraceWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut out = std::io::BufWriter::new(file);
+        out.write_all(&encode_header(network)?)?;
+        Ok(TraceWriter { out, prev: HashMap::new(), steps: 0 })
+    }
+
+    /// Append one step record. Steps must arrive in capture order — the
+    /// delta chain is positional, exactly like the v3 JSON layout.
+    pub fn append(&mut self, step: &StepTrace) -> Result<()> {
+        let mut buf = Vec::new();
+        encode_step(step, &mut self.prev, &mut buf)?;
+        self.out.write_all(&buf)?;
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Flush and close; returns how many steps were written. Because
+    /// every record is self-framed, a crash *before* finish still
+    /// leaves a file the lenient loader recovers prefix-complete.
+    pub fn finish(mut self) -> Result<usize> {
+        self.out.flush()?;
+        Ok(self.steps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over the raw file bytes.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Reader<'a> {
+        Reader { bytes, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "{what}: needs {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn str(&mut self, what: &str) -> Result<&'a str> {
+        let n = self.u16(what)? as usize;
+        std::str::from_utf8(self.take(n, what)?).with_context(|| format!("{what}: not UTF-8"))
+    }
+}
+
+/// Decode one payload section into a `Bitmap`. Raw sections become the
+/// bitmap's word storage directly (one `Vec<u64>` allocation, no
+/// per-word re-parse); RLE/delta runs expand straight into words.
+fn decode_payload(r: &mut Reader, what: &str, prev: Option<&Bitmap>) -> Result<Bitmap> {
+    let c = r.u32(what)? as usize;
+    let h = r.u32(what)? as usize;
+    let w = r.u32(what)? as usize;
+    let shape = Shape::new(c, h, w);
+    let enc = r.u8(what)?;
+    let len = r.u32(what)? as usize;
+    let data = r.take(len, what)?;
+    match enc {
+        ENC_RAW => {
+            let n_words = shape.len().div_ceil(64);
+            anyhow::ensure!(
+                len == n_words * 8,
+                "{what}: raw section is {len} bytes, shape {shape} needs {}",
+                n_words * 8
+            );
+            let words = data
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Bitmap::from_words(shape, words).context(what.to_string())
+        }
+        ENC_RLE => Bitmap::decode_rle_bin(shape, data).context(what.to_string()),
+        ENC_DELTA => {
+            let prev = prev
+                .with_context(|| format!("{what}: delta payload without a previous step's map"))?;
+            anyhow::ensure!(
+                prev.shape == shape,
+                "{what}: delta shape {shape} vs previous step's {}",
+                prev.shape
+            );
+            Ok(Bitmap::decode_rle_bin(shape, data).context(what.to_string())?.xor(prev))
+        }
+        other => anyhow::bail!("{what}: unknown payload encoding {other}"),
+    }
+}
+
+/// Decode one step body (the bytes inside the length frame).
+fn decode_step(body: &[u8], si: usize, prev: &mut HashMap<SlotKey, Bitmap>) -> Result<StepTrace> {
+    let r = &mut Reader::new(body);
+    let step = r.u64("step")? as usize;
+    let loss = r.f64("loss")?;
+    let n_layers = r.u16("layer count")? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let name = r.str("layer name")?.to_string();
+        let act_sparsity = r.f64("act_sparsity")?;
+        let grad_sparsity = r.f64("grad_sparsity")?;
+        let flags = r.u8("flags")?;
+        let mut slot = |slot: &'static str, present: bool| -> Result<Option<Bitmap>> {
+            if !present {
+                return Ok(None);
+            }
+            let what = format!("step {si} layer '{name}' {slot}");
+            let key = (name.clone(), slot);
+            let b = decode_payload(r, &what, prev.get(&key))?;
+            prev.insert(key, b.clone());
+            Ok(Some(b))
+        };
+        let act_bitmap = slot("act_bitmap", flags & FLAG_ACT != 0)?;
+        let grad_bitmap = slot("grad_bitmap", flags & FLAG_GRAD != 0)?;
+        layers.push(LayerTrace {
+            name,
+            act_sparsity,
+            grad_sparsity,
+            identity_ok: flags & FLAG_IDENTITY != 0,
+            act_bitmap,
+            grad_bitmap,
+            footprint: flags & FLAG_FOOTPRINT != 0,
+        });
+    }
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "step {si} record has {} trailing bytes",
+        r.remaining()
+    );
+    Ok(StepTrace { step, loss, layers })
+}
+
+/// Decode a whole v4 byte stream. Strict mode (`lenient = false`) makes
+/// the first malformed record a hard error carrying its step index and
+/// layer/slot context. Lenient mode keeps every *complete* step decoded
+/// so far and stops at the first truncated or corrupt record with a
+/// warning — the crash-recovery path for a capture that died mid-write.
+/// It stops entirely (rather than skipping the bad record) because the
+/// delta chain makes everything after an undecodable record unsound. A
+/// damaged *header* is a hard error in both modes: there is no trace to
+/// salvage without the network identity.
+pub(crate) fn decode(bytes: &[u8], lenient: bool) -> Result<(TraceFile, Vec<String>)> {
+    let r = &mut Reader::new(bytes);
+    anyhow::ensure!(r.take(8, "magic")? == MAGIC, "not a v4 trace: bad magic");
+    let version = r.u8("container version")?;
+    anyhow::ensure!(
+        version == CONTAINER_VERSION,
+        "unsupported binary trace container version {version} (this build reads {CONTAINER_VERSION})"
+    );
+    let network = r.str("network name")?.to_string();
+    let mut warnings = Vec::new();
+    let mut prev: HashMap<SlotKey, Bitmap> = HashMap::new();
+    let mut steps = Vec::new();
+    while r.remaining() > 0 {
+        let si = steps.len();
+        let step = (|| -> Result<StepTrace> {
+            let len = r.u32("step frame")? as usize;
+            let body = r.take(len, "step body")?;
+            decode_step(body, si, &mut prev)
+        })();
+        match step {
+            Ok(s) => steps.push(s),
+            Err(e) if lenient => {
+                warnings.push(format!(
+                    "{e:#} — keeping the {si} complete steps before it"
+                ));
+                break;
+            }
+            Err(e) => {
+                return Err(e.context(format!("step record {si}")));
+            }
+        }
+    }
+    Ok((TraceFile { network, steps, format: TraceFormat::V4 }, warnings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn payload_trace() -> TraceFile {
+        let shape = Shape::new(4, 6, 6);
+        let mut rng = Pcg32::new(3);
+        let act = Bitmap::sample(shape, 0.6, &mut rng);
+        let grad = act.and(&Bitmap::sample(shape, 0.8, &mut rng));
+        let mut act2 = act.clone();
+        act2.set(0, 0, 0, !act2.get(0, 0, 0));
+        TraceFile {
+            network: "agos_cnn".into(),
+            steps: vec![
+                StepTrace {
+                    step: 0,
+                    loss: 2.0,
+                    layers: vec![LayerTrace::from_bitmaps("relu1", act, grad.clone())],
+                },
+                StepTrace {
+                    step: 1,
+                    loss: 1.9,
+                    layers: vec![LayerTrace::from_bitmaps("relu1", act2, grad)],
+                },
+            ],
+            format: TraceFormat::V4,
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_exact() {
+        let t = payload_trace();
+        let bytes = encode(&t).unwrap();
+        assert_eq!(bytes[..8], MAGIC);
+        let (t2, warnings) = decode(&bytes, false).unwrap();
+        assert!(warnings.is_empty());
+        assert_eq!(t, t2);
+        // Scalar-only and footprint entries survive too.
+        let mut t = t;
+        t.steps[0].layers.push(LayerTrace::scalar("relu9", 0.25, 0.5, false));
+        t.steps[0]
+            .layers
+            .push(LayerTrace::from_act("b1_add", Bitmap::ones(Shape::new(1, 2, 40))));
+        let (t2, _) = decode(&encode(&t).unwrap(), false).unwrap();
+        assert_eq!(t, t2);
+        assert!(t2.steps[0].layers[2].footprint);
+        assert!(!t2.steps[0].layers[1].identity_ok);
+    }
+
+    #[test]
+    fn streaming_writer_matches_whole_file_encode() {
+        let t = payload_trace();
+        let dir = std::env::temp_dir().join("agos_trace_v4_stream_test");
+        let path = dir.join("t.trace.bin");
+        let mut w = TraceWriter::create(&path, &t.network).unwrap();
+        for s in &t.steps {
+            w.append(s).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 2);
+        let streamed = std::fs::read(&path).unwrap();
+        assert_eq!(streamed, encode(&t).unwrap(), "streamed bytes == one-shot bytes");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn correlated_steps_choose_delta_and_chain_back() {
+        // payload_trace's step-1 act differs from step 0 by one bit and
+        // its grad repeats exactly: both must pick the delta encoding
+        // (tiny XOR runs) and still decode bit-exactly.
+        let t = payload_trace();
+        let bytes = encode(&t).unwrap();
+        let one_step = TraceFile { steps: vec![t.steps[0].clone()], ..t.clone() };
+        let step1_only = TraceFile { steps: vec![t.steps[1].clone()], ..t.clone() };
+        let chained = bytes.len() - encode(&one_step).unwrap().len();
+        let unchained =
+            encode(&step1_only).unwrap().len() - encode_header(&t.network).unwrap().len();
+        assert!(
+            chained < unchained,
+            "delta-chained step 1 ({chained} B) must beat its standalone encoding ({unchained} B)"
+        );
+        assert_eq!(decode(&bytes, false).unwrap().0, t);
+    }
+
+    #[test]
+    fn truncation_errors_strictly_and_recovers_leniently() {
+        let t = payload_trace();
+        let bytes = encode(&t).unwrap();
+        let one_step_len = encode(&TraceFile { steps: vec![t.steps[0].clone()], ..t.clone() })
+            .unwrap()
+            .len();
+        // Cut mid-way through step 1's record.
+        let cut = &bytes[..one_step_len + 10];
+        let err = decode(cut, false).unwrap_err();
+        assert!(format!("{err:#}").contains("step record 1"), "{err:#}");
+        let (rec, warnings) = decode(cut, true).unwrap();
+        assert_eq!(rec.steps, t.steps[..1], "the complete step survives");
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("1 complete steps"), "{warnings:?}");
+        // Cutting inside the *header* is unrecoverable in both modes.
+        assert!(decode(&bytes[..9], true).is_err());
+        // A corrupt frame length overrunning EOF is a truncation too.
+        let mut bad = bytes.clone();
+        let frame_at = encode_header(&t.network).unwrap().len();
+        bad[frame_at] = 0xFF;
+        bad[frame_at + 1] = 0xFF;
+        assert!(decode(&bad, false).is_err());
+        let (rec, warnings) = decode(&bad, true).unwrap();
+        assert!(rec.steps.is_empty() && warnings.len() == 1);
+    }
+
+    #[test]
+    fn unknown_container_version_is_rejected() {
+        let t = payload_trace();
+        let mut bytes = encode(&t).unwrap();
+        bytes[8] = 9;
+        let err = decode(&bytes, true).unwrap_err();
+        assert!(format!("{err:#}").contains("version 9"), "{err:#}");
+        bytes[0] = b'X';
+        assert!(decode(&bytes, false).is_err(), "bad magic is a hard error");
+    }
+
+    #[test]
+    fn mid_density_payloads_fall_back_to_raw_words() {
+        // A near-50% iid map has almost no zero/full words: binary RLE
+        // degenerates to literal runs (8n + framing), so the encoder
+        // must pick raw words (8n exactly) — the v4 analog of v3's hex
+        // floor, and the section the reader adopts with zero re-coding.
+        let shape = Shape::new(2, 16, 16);
+        let b = Bitmap::sample(shape, 0.5, &mut Pcg32::new(7));
+        let mut out = Vec::new();
+        encode_payload(&b, None, &mut out).unwrap();
+        assert_eq!(out[12], ENC_RAW, "enc byte");
+        let n_words = shape.len().div_ceil(64);
+        assert_eq!(out.len(), 12 + 1 + 4 + n_words * 8);
+        let (b2, rest) = {
+            let r = &mut Reader::new(&out);
+            let b2 = decode_payload(r, "p", None).unwrap();
+            (b2, r.remaining())
+        };
+        assert_eq!(b2, b);
+        assert_eq!(rest, 0);
+    }
+}

@@ -26,6 +26,7 @@ fn arb_task(g: &mut Gen) -> LayerTask {
         input_elems: (m * u * v) as f64,
         weight_elems: m as f64 * crs,
         geom: Default::default(),
+        op_chans: g.usize_in(1, 64),
     }
 }
 

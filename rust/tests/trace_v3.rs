@@ -196,6 +196,8 @@ fn v3_replay_equals_v2_replay_cosim_golden() {
         loaded.push(TraceFile::load(&path).unwrap());
     }
     assert_eq!(loaded[0].steps, loaded[1].steps, "decoded content identical");
+    assert_eq!(loaded[1].steps, loaded[2].steps, "v4 binary decodes the same content");
+    assert_eq!(loaded[2].format, TraceFormat::V4);
     let cfg = AcceleratorConfig::default();
     for backend in [ExecBackend::Exact, ExecBackend::Analytic] {
         let opts = SimOptions {
@@ -206,8 +208,10 @@ fn v3_replay_equals_v2_replay_cosim_golden() {
         };
         let r2 = cosim_from_traces(&loaded[0], &cfg, &opts, true, 0).unwrap();
         let r3 = cosim_from_traces(&loaded[1], &cfg, &opts, true, 0).unwrap();
+        let r4 = cosim_from_traces(&loaded[2], &cfg, &opts, true, 0).unwrap();
         assert_eq!(r2.rows, r3.rows, "{backend:?}: v2 and v3 replay must agree bit-for-bit");
-        assert!(r2.replayed && r3.replayed);
+        assert_eq!(r3.rows, r4.rows, "{backend:?}: v4 replay must agree bit-for-bit");
+        assert!(r2.replayed && r3.replayed && r4.replayed);
     }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,247 @@
+//! Trace container v4 conformance suite (ISSUE 7 acceptance):
+//!
+//! * **Fixture golden**: the committed `tests/data/trace_v4.bin` (a
+//!   hand-assembled container exercising raw, RLE and delta payloads)
+//!   decodes to pinned content and re-encodes byte-identically — the
+//!   on-disk grammar cannot drift silently.
+//! * **Codec**: the binary word-level RLE round-trips bit-identically
+//!   property-style (all-zero, all-ones, iid, blobbed, checkerboard),
+//!   and whole containers round-trip through `save`/`load` including
+//!   multi-step delta chains.
+//! * **Streaming**: `TraceWriter` appending one step at a time produces
+//!   the same bytes as the whole-file encode — the bounded-memory
+//!   capture path writes the identical container.
+//! * **Size**: a v4 container is never larger than the v3 JSON of the
+//!   same capture (binary tokens vs text grammar).
+//! * **Robustness**: a stream truncated mid-step errors strictly with
+//!   the step record named, and recovers every complete step (with a
+//!   warning) on the lenient path `agos cosim` uses.
+//!
+//! The v4 == v3 replay-cosim golden on both backends lives in
+//! `trace_v3.rs` (`v3_replay_equals_v2_replay_cosim_golden` loops every
+//! `TraceFormat`), so encoding equivalence is pinned in one place.
+
+use std::path::{Path, PathBuf};
+
+use agos::nn::Shape;
+use agos::sparsity::{rle_decode_words_bin, rle_encode_words_bin, Bitmap};
+use agos::trace::{LayerTrace, StepTrace, TraceFile, TraceFormat, TraceWriter};
+use agos::util::rng::Pcg32;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+/// The content `tests/data/trace_v4.bin` was hand-assembled to carry.
+fn fixture_content() -> TraceFile {
+    let shape = Shape::new(1, 1, 64);
+    let act = Bitmap::from_words(shape, vec![0xDEAD_BEEF]).unwrap();
+    TraceFile {
+        network: "agos_cnn".into(),
+        format: TraceFormat::V4,
+        steps: vec![
+            StepTrace {
+                step: 0,
+                loss: 2.5,
+                layers: vec![LayerTrace::from_bitmaps(
+                    "relu1",
+                    act.clone(),
+                    Bitmap::zeros(shape),
+                )],
+            },
+            StepTrace {
+                step: 1,
+                loss: 1.25,
+                layers: vec![LayerTrace::from_bitmaps("relu1", act, Bitmap::ones(shape))],
+            },
+        ],
+    }
+}
+
+#[test]
+fn fixture_golden_decodes_and_reencodes_byte_identically() {
+    let path = fixture("trace_v4.bin");
+    let t = TraceFile::load(&path).unwrap();
+    assert_eq!(t.format, TraceFormat::V4);
+    assert_eq!(t, fixture_content(), "pinned decode of the committed container");
+    // Scalars derived from the payloads, as `from_bitmaps` guarantees.
+    assert!((t.steps[0].layers[0].act_sparsity - 0.625).abs() < 1e-12);
+    assert!((t.steps[0].layers[0].grad_sparsity - 1.0).abs() < 1e-12);
+    assert!(t.steps[0].layers[0].identity_ok, "zero grad is contained in anything");
+    assert!(!t.steps[1].layers[0].identity_ok, "all-ones grad violates the identity");
+    // Re-encoding reproduces the fixture bytes exactly: raw for the
+    // mid-density word, RLE for the runs, delta for the repeated act map.
+    let dir = std::env::temp_dir().join("agos_trace_v4_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("resaved.trace.bin");
+    t.save(&out).unwrap();
+    assert_eq!(
+        std::fs::read(&out).unwrap(),
+        std::fs::read(&path).unwrap(),
+        "re-encode must be byte-identical to the committed fixture"
+    );
+    // The lenient path agrees on an undamaged file.
+    let (lenient, warnings) = TraceFile::load_lenient(&path).unwrap();
+    assert!(warnings.is_empty(), "{warnings:?}");
+    assert_eq!(lenient, t);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_stream_errors_strictly_and_recovers_complete_steps_leniently() {
+    let bytes = std::fs::read(fixture("trace_v4.bin")).unwrap();
+    let dir = std::env::temp_dir().join("agos_trace_v4_trunc");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cut.trace.bin");
+    // Cut mid-way through step record 1 (the fixture's second step).
+    std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+    let err = format!("{:#}", TraceFile::load(&path).unwrap_err());
+    assert!(err.contains("step record 1"), "{err}");
+    let (t, warnings) = TraceFile::load_lenient(&path).unwrap();
+    assert_eq!(t.steps.len(), 1, "every complete step survives");
+    assert_eq!(t.steps[0], fixture_content().steps[0]);
+    assert_eq!(warnings.len(), 1, "{warnings:?}");
+    assert!(warnings[0].contains("1 complete steps"), "{warnings:?}");
+    // A damaged header is a hard error in both modes.
+    std::fs::write(&path, &bytes[..12]).unwrap();
+    assert!(TraceFile::load(&path).is_err());
+    assert!(TraceFile::load_lenient(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Pattern corpus for codec property tests: degenerate, stochastic and
+/// the RLE-adversarial alternating checkerboard.
+fn pattern_corpus(shape: Shape, rng: &mut Pcg32) -> Vec<Bitmap> {
+    let mut checker = Bitmap::zeros(shape);
+    for c in 0..shape.c {
+        for y in 0..shape.h {
+            for x in 0..shape.w {
+                if (c + y + x) % 2 == 0 {
+                    checker.set(c, y, x, true);
+                }
+            }
+        }
+    }
+    vec![
+        Bitmap::zeros(shape),
+        Bitmap::ones(shape),
+        Bitmap::sample(shape, 0.03, rng),
+        Bitmap::sample(shape, 0.5, rng),
+        Bitmap::sample_blobs(shape, 0.05, 4, rng),
+        checker,
+    ]
+}
+
+#[test]
+fn binary_rle_codec_roundtrips_property_style() {
+    let mut rng = Pcg32::new(0xB14A);
+    for shape in [Shape::new(16, 32, 32), Shape::new(3, 7, 9), Shape::new(1, 1, 1)] {
+        for b in pattern_corpus(shape, &mut rng) {
+            let mut enc = Vec::new();
+            rle_encode_words_bin(b.words(), shape.len(), &mut enc);
+            let words = rle_decode_words_bin(&enc, shape.len()).unwrap();
+            assert_eq!(words, b.words(), "shape {shape}");
+            // The Bitmap-level wrappers agree.
+            let mut enc2 = Vec::new();
+            b.encode_rle_bin(&mut enc2);
+            assert_eq!(enc, enc2);
+            assert_eq!(Bitmap::decode_rle_bin(shape, &enc2).unwrap(), b);
+        }
+    }
+}
+
+#[test]
+fn containers_roundtrip_through_save_and_load_with_delta_chains() {
+    let dir = std::env::temp_dir().join("agos_trace_v4_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shape = Shape::new(8, 16, 16);
+    let mut rng = Pcg32::new(0x44);
+    // Three steps whose maps drift slightly — the correlated capture the
+    // delta encoding exists for — plus every corpus pattern as its own
+    // step so degenerate payloads ride the same chain.
+    let mut steps = Vec::new();
+    let mut act = Bitmap::sample_blobs(shape, 0.06, 3, &mut rng);
+    for step in 0..3usize {
+        let keep = Bitmap::sample(shape, 0.5, &mut rng);
+        let grad = act.and(&keep);
+        steps.push(StepTrace {
+            step,
+            loss: 2.0 - step as f64 * 0.25,
+            layers: vec![LayerTrace::from_bitmaps("relu1", act.clone(), grad)],
+        });
+        let flip = Bitmap::sample(shape, 0.01, &mut rng);
+        act = act.xor(&flip);
+    }
+    for (i, b) in pattern_corpus(shape, &mut rng).into_iter().enumerate() {
+        let grad = Bitmap::zeros(shape);
+        steps.push(StepTrace {
+            step: 3 + i,
+            loss: 1.0,
+            layers: vec![LayerTrace::from_bitmaps("relu1", b, grad)],
+        });
+    }
+    let t = TraceFile {
+        network: "agos_cnn".into(),
+        format: TraceFormat::V4,
+        steps,
+    };
+    let path = dir.join("chain.trace.bin");
+    t.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(&bytes[..8], b"AGOSTRC\0", "v4 containers lead with the magic");
+    assert_eq!(TraceFile::load(&path).unwrap(), t, "bit-exact container round-trip");
+    // The streaming writer produces the identical container.
+    let stream_path = dir.join("streamed.trace.bin");
+    let mut w = TraceWriter::create(&stream_path, &t.network).unwrap();
+    for s in &t.steps {
+        w.append(s).unwrap();
+    }
+    assert_eq!(w.finish().unwrap(), t.steps.len());
+    assert_eq!(
+        std::fs::read(&stream_path).unwrap(),
+        bytes,
+        "streamed == whole-file encode"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v4_container_is_never_larger_than_v3_json() {
+    let dir = std::env::temp_dir().join("agos_trace_v4_size");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shape = Shape::new(32, 32, 32);
+    let mut rng = Pcg32::new(0x51);
+    for density in [0.02, 0.3, 0.7] {
+        let act = Bitmap::sample_blobs(shape, density, 4, &mut rng);
+        let keep = Bitmap::sample(shape, 0.5, &mut rng);
+        let grad = act.and(&keep);
+        let mk = |format: TraceFormat| TraceFile {
+            network: "size_bench".into(),
+            format,
+            steps: vec![
+                StepTrace {
+                    step: 0,
+                    loss: 2.0,
+                    layers: vec![LayerTrace::from_bitmaps("relu1", act.clone(), grad.clone())],
+                },
+                StepTrace {
+                    step: 1,
+                    loss: 1.9,
+                    layers: vec![LayerTrace::from_bitmaps("relu1", act.clone(), grad.clone())],
+                },
+            ],
+        };
+        let p3 = dir.join("t.v3.json");
+        let p4 = dir.join("t.v4.bin");
+        mk(TraceFormat::V3).save(&p3).unwrap();
+        mk(TraceFormat::V4).save(&p4).unwrap();
+        let (s3, s4) = (
+            std::fs::metadata(&p3).unwrap().len(),
+            std::fs::metadata(&p4).unwrap().len(),
+        );
+        assert!(s4 <= s3, "density {density}: v4 {s4} bytes > v3 {s3} bytes");
+        // And the two decode to the same content.
+        assert_eq!(TraceFile::load(&p4).unwrap().steps, TraceFile::load(&p3).unwrap().steps);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
