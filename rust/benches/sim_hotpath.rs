@@ -259,6 +259,63 @@ fn main() {
         w.finish().unwrap()
     });
     std::fs::remove_dir_all(&stream_dir).ok();
+
+    // `agos serve` warm path vs the cold one-shot (ISSUE 8). Cold: every
+    // request re-loads the trace container, rebuilds the replay bank and
+    // re-derives gather plans — the one-shot CLI's work minus process
+    // start, so the ratio below is a *floor* on the real-world win.
+    // Warm: the same request round-trips a resident server's Unix socket
+    // and is answered from the in-memory sweep cache. The mean ratio is
+    // the gated `serve_warm_vs_cold_speedup` row.
+    #[cfg(unix)]
+    {
+        use agos::coordinator::cosim_from_traces_owned;
+        use agos::serve::{Client, ServeOptions, Server};
+
+        let dir = std::env::temp_dir().join("agos_bench_serve");
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let trace_path = dir.join("bench.trace.bin");
+        trace.save(&trace_path).expect("trace save");
+
+        b.case("serve_cold_cosim_request", || {
+            // Fresh options per request: a cold process starts with an
+            // empty gather-plan cache too.
+            let cold_opts = SimOptions {
+                batch: 1,
+                backend: ExecBackend::Exact,
+                exact_outputs_per_tile: 8,
+                ..SimOptions::default()
+            };
+            let traces = TraceFile::load(&trace_path).unwrap();
+            cosim_from_traces_owned(traces, &cfg, &cold_opts, true, 1)
+                .unwrap()
+                .to_json()
+                .dump()
+                .len()
+        });
+
+        let server = Server::bind(ServeOptions {
+            socket: dir.join("bench.sock"),
+            jobs: 1,
+            workers: 2,
+            cache_path: None,
+        })
+        .expect("bind bench server");
+        let socket = server.socket().to_path_buf();
+        let handle = std::thread::spawn(move || server.run());
+        let mut client = Client::connect_retry(&socket, std::time::Duration::from_secs(10))
+            .expect("connect to bench server");
+        let req = Json::parse(&format!(
+            r#"{{"cmd":"cosim","traces":"{}","replay":true,"backend":"exact","batch":1,"exact_cap":8}}"#,
+            trace_path.to_str().expect("utf-8 temp path")
+        ))
+        .unwrap();
+        client.request(&req).expect("warm-up request");
+        b.case("serve_warm_cosim_request", || client.request(&req).unwrap().dump().len());
+        client.request(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap()).expect("shutdown");
+        handle.join().expect("serve thread").expect("serve loop");
+        std::fs::remove_dir_all(&dir).ok();
+    }
     b.finish();
 
     // Persist the sweep trajectory point (sequential vs parallel).
@@ -287,7 +344,7 @@ fn main() {
     let v4_decode = find("trace_v4_decode_container");
     let v3c_decode = find("trace_v3_decode_container");
     let v4_stream = find("trace_v4_stream_append_2steps");
-    let j = Json::from_pairs(vec![
+    let mut pairs: Vec<(&str, Json)> = vec![
         ("bench", "sweep_googlenet_4schemes".into()),
         ("network", "googlenet".into()),
         ("schemes", 4u64.into()),
@@ -341,7 +398,20 @@ fn main() {
         ("trace_v4_stream_append_mean_s", v4_stream.mean.into()),
         ("trace_v4_decode_vs_v3", (v4_decode.mean / v3c_decode.mean).into()),
         ("trace_v4_bytes_ratio", (v4_bytes.len() as f64 / v3_text.len() as f64).into()),
-    ]);
+    ];
+    // `agos serve` warm path vs the cold one-shot: the resident-state
+    // win the `serve_warm_vs_cold_speedup` gate tracks (higher is
+    // better — warm answers skip trace decode, bank build and the
+    // simulation itself).
+    #[cfg(unix)]
+    {
+        let serve_cold = find("serve_cold_cosim_request");
+        let serve_warm = find("serve_warm_cosim_request");
+        pairs.push(("serve_cold_mean_s", serve_cold.mean.into()));
+        pairs.push(("serve_warm_mean_s", serve_warm.mean.into()));
+        pairs.push(("serve_warm_vs_cold_speedup", (serve_cold.mean / serve_warm.mean).into()));
+    }
+    let j = Json::from_pairs(pairs);
     j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
     println!(
         "wrote BENCH_sweep.json ({} jobs: {:.2}x vs sequential)",

@@ -21,7 +21,7 @@ use crate::config::{
 use crate::coordinator::{cosim_from_traces_owned, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
-use crate::sim::{simulate_network, SweepPlan, SweepRunner};
+use crate::sim::{simulate_network, sweep_report_json, SweepPlan, SweepRunner};
 use crate::sparsity::{analyze_network, capture_synthetic_trace_images, SparsityModel};
 use crate::trace::TraceFile;
 use crate::util::cli::{App, Args, Command, OptSpec};
@@ -174,6 +174,29 @@ diagnostics only, never written to --out)",
                 ],
             },
             Command {
+                name: "serve",
+                about: "run the resident sweep/replay service on a Unix socket",
+                opts: vec![
+                    opt("socket", "Unix socket path (default results/agos.sock)"),
+                    opt("jobs", "sweep worker threads per request (default: all cores)"),
+                    opt("workers", "concurrent request handlers (default 4)"),
+                    opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
+                ],
+            },
+            Command {
+                name: "request",
+                about: "send one JSON request to a running `agos serve`",
+                opts: vec![
+                    opt("socket", "Unix socket path (default results/agos.sock)"),
+                    opt("json", "inline request document, e.g. '{\"cmd\":\"ping\"}'"),
+                    opt("file", "read the request document from this file"),
+                    opt("out", "write the response's result here (same bytes as the cold --out)"),
+                    opt("timeout", "seconds to wait for the server socket (default 10)"),
+                    flag("ping", "shorthand for '{\"cmd\":\"ping\"}'"),
+                    flag("shutdown", "shorthand for '{\"cmd\":\"shutdown\"}'"),
+                ],
+            },
+            Command {
                 name: "bench-check",
                 about: "gate bench output against the committed perf baseline",
                 opts: vec![
@@ -211,6 +234,8 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
         "table" => cmd_figure(args), // same dispatch: ids disambiguate
         "sparsity" => cmd_sparsity(args),
         "cosim" => cmd_cosim(args),
+        "serve" => cmd_serve(args),
+        "request" => cmd_request(args),
         "bench-check" => cmd_bench_check(args),
         "info" => cmd_info(args),
         other => anyhow::bail!("unhandled command {other}"),
@@ -451,17 +476,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
-    let nets: Vec<Network> = match args.opt_or("networks", "all") {
-        "all" => zoo::all_networks(),
-        list => list
-            .split(',')
-            .map(|n| zoo::by_name(n.trim()))
-            .collect::<anyhow::Result<Vec<_>>>()?,
-    };
-    let schemes: Vec<Scheme> = match args.opt_or("schemes", "all") {
-        "all" => Scheme::ALL.to_vec(),
-        list => list.split(',').map(Scheme::parse).collect::<anyhow::Result<Vec<_>>>()?,
-    };
+    let nets: Vec<Network> = zoo::by_list(args.opt_or("networks", "all"))?;
+    let schemes: Vec<Scheme> = Scheme::parse_list(args.opt_or("schemes", "all"))?;
     let cfg = match args.opt("config") {
         Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
         None => AcceleratorConfig::default(),
@@ -479,7 +495,6 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
     let results = runner.run(&plan, &model);
     let elapsed = t0.elapsed().as_secs_f64();
 
-    let mut combos = Json::Arr(Vec::new());
     for (ni, net) in nets.iter().enumerate() {
         println!("network {} (batch {}):", net.name, opts.batch);
         let dense = schemes
@@ -503,13 +518,6 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
                     r.total_energy_j()
                 ),
             }
-            combos.push(Json::from_pairs(vec![
-                ("network", net.name.as_str().into()),
-                ("scheme", scheme.label().into()),
-                ("total_cycles", r.total_cycles().into()),
-                ("bp_cycles", r.phase(Phase::Backward).cycles.into()),
-                ("energy_j", r.total_energy_j().into()),
-            ]));
         }
     }
     println!(
@@ -522,16 +530,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
     );
     save_sweep_cache(&runner, &cache_path);
     if let Some(out) = args.opt("out") {
+        // The report is a pure function of the request — no jobs or
+        // elapsed fields — so a served `sweep` response can be diffed
+        // against it byte-for-byte. Timings stay on stdout above.
         let path = Path::new(out);
-        let j = Json::from_pairs(vec![
-            ("batch", opts.batch.into()),
-            ("seed", opts.seed.into()),
-            ("backend", opts.backend.label().into()),
-            ("jobs", runner.jobs.into()),
-            ("elapsed_s", elapsed.into()),
-            ("combos", combos),
-        ]);
-        j.write_file(path)?;
+        sweep_report_json(&nets, &schemes, &results, &opts).write_file(path)?;
         println!("wrote {}", path.display());
     }
     Ok(0)
@@ -651,6 +654,75 @@ fn cmd_cosim(args: &Args) -> anyhow::Result<i32> {
         println!("wrote {}", path.display());
     }
     Ok(0)
+}
+
+/// Default Unix socket the service listens on.
+#[cfg(unix)]
+const SERVE_SOCKET_PATH: &str = "results/agos.sock";
+
+/// `agos serve`: run the resident service until a `shutdown` request.
+#[cfg(unix)]
+fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+    use crate::serve::{ServeOptions, Server};
+    let opts = ServeOptions {
+        socket: PathBuf::from(args.opt_or("socket", SERVE_SOCKET_PATH)),
+        jobs: args.opt_usize("jobs", 0)?,
+        workers: args.opt_usize("workers", 4)?,
+        cache_path: sweep_cache_path(args),
+    };
+    let server = Server::bind(opts)?;
+    println!(
+        "agos serve: listening on {} ({} handlers x {} sweep threads, sim rev {})",
+        server.socket().display(),
+        server.workers(),
+        server.state().jobs(),
+        crate::sim::SIM_REVISION,
+    );
+    server.run()?;
+    println!("agos serve: shut down");
+    Ok(0)
+}
+
+#[cfg(not(unix))]
+fn cmd_serve(_args: &Args) -> anyhow::Result<i32> {
+    anyhow::bail!("agos serve needs Unix domain sockets (unavailable on this platform)")
+}
+
+/// `agos request`: one-shot client for a running `agos serve`. Writes
+/// the response's `result` document — with `--out`, byte-identical to
+/// the file the equivalent cold CLI invocation would have written.
+#[cfg(unix)]
+fn cmd_request(args: &Args) -> anyhow::Result<i32> {
+    use crate::serve::Client;
+    let req = if args.flag("shutdown") {
+        Json::from_pairs(vec![("cmd", "shutdown".into())])
+    } else if args.flag("ping") {
+        Json::from_pairs(vec![("cmd", "ping".into())])
+    } else if let Some(text) = args.opt("json") {
+        Json::parse(text)?
+    } else if let Some(file) = args.opt("file") {
+        Json::parse_file(Path::new(file))?
+    } else {
+        anyhow::bail!("give a request: --json, --file, --ping or --shutdown");
+    };
+    let socket = PathBuf::from(args.opt_or("socket", SERVE_SOCKET_PATH));
+    let timeout = std::time::Duration::from_secs(args.opt_u64("timeout", 10)?);
+    let mut client = Client::connect_retry(&socket, timeout)?;
+    let result = client.request(&req)?;
+    match args.opt("out") {
+        Some(out) => {
+            let path = Path::new(out);
+            result.write_file(path)?;
+            println!("wrote {}", path.display());
+        }
+        None => print!("{}", result.pretty()),
+    }
+    Ok(0)
+}
+
+#[cfg(not(unix))]
+fn cmd_request(_args: &Args) -> anyhow::Result<i32> {
+    anyhow::bail!("agos request needs Unix domain sockets (unavailable on this platform)")
 }
 
 /// Gate `BENCH_sweep.json` against the committed `BENCH_baseline.json`:
@@ -1054,6 +1126,43 @@ mod tests {
         let v3_s = v3.to_string_lossy().to_string();
         assert!(run(&sv(&["trace", "--trace-format", "v9", "--out", &v3_s])).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_out_report_is_identical_across_jobs_levels() {
+        // The served-vs-cold byte-identity contract starts here: the
+        // sweep report must be a pure function of the request, so the
+        // same grid at --jobs 1 and --jobs 4 writes identical bytes
+        // (no elapsed/thread-count fields in the file).
+        let dir = std::env::temp_dir().join("agos_cli_sweep_out_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let out = |jobs: &str| dir.join(format!("sweep-j{jobs}.json"));
+        for jobs in ["1", "4"] {
+            let out_s = out(jobs).to_string_lossy().to_string();
+            assert_eq!(
+                run(&sv(&[
+                    "sweep", "--networks", "agos_cnn", "--schemes", "dc,in+out+wr", "--batch",
+                    "1", "--jobs", jobs, "--cache", "none", "--out", &out_s,
+                ]))
+                .unwrap(),
+                0
+            );
+        }
+        let a = std::fs::read(out("1")).unwrap();
+        let b = std::fs::read(out("4")).unwrap();
+        assert_eq!(a, b, "sweep --out must not depend on --jobs");
+        let text = String::from_utf8(a).unwrap();
+        assert!(text.contains("\"combos\""), "report carries the combo rows");
+        assert!(!text.contains("elapsed"), "timings belong on stdout, not in the report");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn request_without_a_document_is_an_error() {
+        assert!(run(&sv(&["request", "--socket", "/nonexistent/agos.sock"])).is_err());
+        // A malformed inline document fails before any connection attempt.
+        assert!(run(&sv(&["request", "--json", "{not json", "--timeout", "0"])).is_err());
     }
 
     #[test]

@@ -55,6 +55,17 @@ impl Scheme {
             other => anyhow::bail!("unknown scheme '{other}' (DC|IN|IN+OUT|IN+OUT+WR)"),
         }
     }
+
+    /// Parse a comma-separated scheme list; the literal `"all"` selects
+    /// all four in [`Scheme::ALL`] order. Shared by the CLI's
+    /// `--schemes` and the served `sweep` request so both spell the same
+    /// grids identically.
+    pub fn parse_list(spec: &str) -> anyhow::Result<Vec<Scheme>> {
+        if spec == "all" {
+            return Ok(Scheme::ALL.to_vec());
+        }
+        spec.split(',').map(|s| Scheme::parse(s.trim())).collect()
+    }
 }
 
 /// Spatial structure of *sampled* bitmaps on the exact backend — iid

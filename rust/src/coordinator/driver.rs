@@ -16,6 +16,12 @@
 //! options (and with it the sweep-cache key) *whether or not* replay is
 //! on, so two different trace files for the same network can never share
 //! a cache entry.
+//!
+//! The driver is split into a prepare step ([`PreparedCosim`]: decode +
+//! validate once, immutable thereafter) and a pure request→result core
+//! ([`cosim_prepared`]). The one-shot entry points compose the two; the
+//! resident `agos serve` prepares once per trace file and serves the
+//! core many times over shared banks — byte-identical by construction.
 
 use std::sync::Arc;
 
@@ -89,11 +95,8 @@ pub fn cosim_from_traces(
     replay: bool,
     jobs: usize,
 ) -> anyhow::Result<CosimReport> {
-    let (net, model, mean_sparsity, fingerprint) = cosim_setup(traces, opts)?;
-    let bank = replay
-        .then(|| ReplayBank::from_trace(&net, traces).map(Arc::new))
-        .transpose()?;
-    cosim_core(net, model, mean_sparsity, fingerprint, bank, cfg, opts, jobs)
+    let prep = PreparedCosim::new(traces, replay)?;
+    cosim_prepared(&prep, cfg, opts, replay, &SweepRunner::new(jobs))
 }
 
 /// [`cosim_from_traces`], *consuming* the trace: with `replay`, the
@@ -108,56 +111,123 @@ pub fn cosim_from_traces_owned(
     replay: bool,
     jobs: usize,
 ) -> anyhow::Result<CosimReport> {
-    let (net, model, mean_sparsity, fingerprint) = cosim_setup(&traces, opts)?;
-    let bank = replay
-        .then(|| ReplayBank::from_trace_owned(&net, traces).map(Arc::new))
-        .transpose()?;
-    cosim_core(net, model, mean_sparsity, fingerprint, bank, cfg, opts, jobs)
+    let prep = PreparedCosim::new_owned(traces, replay)?;
+    cosim_prepared(&prep, cfg, opts, replay, &SweepRunner::new(jobs))
 }
 
-/// Validation + model derivation shared by both entry points.
-fn cosim_setup(
-    traces: &TraceFile,
-    opts: &SimOptions,
-) -> anyhow::Result<(crate::nn::Network, SparsityModel, f64, u64)> {
-    anyhow::ensure!(!traces.steps.is_empty(), "trace file has no steps");
-    anyhow::ensure!(
-        traces.identity_holds(),
-        "sparsity identity violated in traces — cannot exploit output sparsity"
-    );
-    let net = zoo::by_name(&traces.network)?;
-    let measured = traces.mean_act_sparsity();
-    let mean_sparsity = if measured.is_empty() {
-        0.0
-    } else {
-        measured.values().sum::<f64>() / measured.len() as f64
-    };
-    let model = SparsityModel::measured(opts.seed, measured);
-    Ok((net, model, mean_sparsity, traces.fingerprint()))
-}
-
-#[allow(clippy::too_many_arguments)]
-fn cosim_core(
+/// The decoded, validated, simulation-ready form of one trace file —
+/// the unit `agos serve` keeps resident, keyed by trace fingerprint:
+/// the resolved network, the measured per-layer sparsity means a
+/// request's model is derived from, and (optionally) the decoded replay
+/// bank behind an `Arc` so any number of concurrent requests share one
+/// copy. Everything here is immutable once built; preparing once and
+/// calling [`cosim_prepared`] many times is exactly equivalent to the
+/// one-shot entry points.
+#[derive(Clone, Debug)]
+pub struct PreparedCosim {
     net: crate::nn::Network,
-    model: SparsityModel,
+    measured: std::collections::BTreeMap<String, f64>,
     mean_sparsity: f64,
     fingerprint: u64,
     bank: Option<Arc<ReplayBank>>,
+}
+
+impl PreparedCosim {
+    /// Validate and prepare, borrowing the trace (payloads are cloned
+    /// into the bank when `with_bank`). Requires a payload-bearing trace
+    /// when `with_bank`.
+    pub fn new(traces: &TraceFile, with_bank: bool) -> anyhow::Result<PreparedCosim> {
+        let mut prep = PreparedCosim::validate(traces)?;
+        if with_bank {
+            prep.bank = Some(Arc::new(ReplayBank::from_trace(&prep.net, traces)?));
+        }
+        Ok(prep)
+    }
+
+    /// Validate and prepare, consuming the trace: payloads move straight
+    /// into the bank ([`ReplayBank::from_trace_owned`]), so a fresh v4
+    /// binary load never holds two copies of the payload set.
+    pub fn new_owned(traces: TraceFile, with_bank: bool) -> anyhow::Result<PreparedCosim> {
+        let mut prep = PreparedCosim::validate(&traces)?;
+        if with_bank {
+            prep.bank = Some(Arc::new(ReplayBank::from_trace_owned(&prep.net, traces)?));
+        }
+        Ok(prep)
+    }
+
+    /// Trace validation + derived scalars shared by both constructors.
+    fn validate(traces: &TraceFile) -> anyhow::Result<PreparedCosim> {
+        anyhow::ensure!(!traces.steps.is_empty(), "trace file has no steps");
+        anyhow::ensure!(
+            traces.identity_holds(),
+            "sparsity identity violated in traces — cannot exploit output sparsity"
+        );
+        let net = zoo::by_name(&traces.network)?;
+        let measured = traces.mean_act_sparsity();
+        let mean_sparsity = if measured.is_empty() {
+            0.0
+        } else {
+            measured.values().sum::<f64>() / measured.len() as f64
+        };
+        Ok(PreparedCosim {
+            net,
+            measured,
+            mean_sparsity,
+            fingerprint: traces.fingerprint(),
+            bank: None,
+        })
+    }
+
+    pub fn network(&self) -> &str {
+        &self.net.name
+    }
+
+    /// The trace's content fingerprint — the resident-bank key.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Whether a replay bank was decoded (payload-bearing trace).
+    pub fn has_bank(&self) -> bool {
+        self.bank.is_some()
+    }
+
+    /// The shared replay bank, when one was decoded.
+    pub fn bank(&self) -> Option<&Arc<ReplayBank>> {
+        self.bank.as_ref()
+    }
+}
+
+/// The pure request→result core shared verbatim by the CLI one-shot
+/// path and the `agos serve` loop: co-simulate one prepared trace under
+/// one set of options on a caller-supplied runner (whose cache may be
+/// private or resident/shared — results are identical either way, per
+/// the sweep cache's key contract).
+pub fn cosim_prepared(
+    prep: &PreparedCosim,
     cfg: &AcceleratorConfig,
     opts: &SimOptions,
-    jobs: usize,
+    replay: bool,
+    runner: &SweepRunner,
 ) -> anyhow::Result<CosimReport> {
+    let bank = match (replay, &prep.bank) {
+        (false, _) => None,
+        (true, Some(bank)) => Some(bank.clone()),
+        (true, None) => anyhow::bail!("trace was prepared without a replay bank"),
+    };
+    // The model is derived per request: it folds the *request's* seed
+    // over the trace's measured means.
+    let model = SparsityModel::measured(opts.seed, prep.measured.clone());
     // Fold the trace's *content* into the cache identity: different
     // trace files must never alias, even at identical per-layer means.
     let mut opts = opts.clone();
-    opts.trace_fingerprint = Some(fingerprint);
+    opts.trace_fingerprint = Some(prep.fingerprint);
     opts.replay = bank;
 
     // All four schemes as one parallel sweep (results identical to the
     // sequential loop this replaced — see sim::sweep's determinism
     // contract).
-    let runner = SweepRunner::new(jobs);
-    let plan = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, cfg, &opts);
+    let plan = SweepPlan::grid(std::slice::from_ref(&prep.net), &Scheme::ALL, cfg, &opts);
     // Snapshot the plan cache's lifetime counters around the sweep so the
     // report carries only *this run's* delta (the cache is shared and
     // long-lived by design).
@@ -187,13 +257,13 @@ fn cosim_core(
         rows.push((scheme.label().to_string(), total, bp, r.total_energy_j()));
     }
     Ok(CosimReport {
-        network: net.name,
+        network: prep.net.name.clone(),
         backend: opts.backend.label().to_string(),
         replayed: opts.replay.is_some(),
         rows,
         total_speedup: dense_total / wr_total,
         bp_speedup: dense_bp / wr_bp,
-        mean_sparsity,
+        mean_sparsity: prep.mean_sparsity,
         skip,
     })
 }
@@ -313,6 +383,51 @@ mod tests {
         // A payload-free trace cannot replay on either backend.
         assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &opts, true, 0).is_err());
         assert!(cosim_from_traces(&fake_traces(0.5), &cfg, &analytic, true, 0).is_err());
+    }
+
+    #[test]
+    fn prepared_cosim_matches_one_shot_and_shares_a_cache() {
+        use crate::nn::zoo;
+        use crate::sim::SweepCache;
+        use crate::sparsity::capture_synthetic_trace;
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions {
+            batch: 2,
+            backend: ExecBackend::Exact,
+            exact_outputs_per_tile: 16,
+            ..SimOptions::default()
+        };
+        let traces = capture_synthetic_trace(
+            &zoo::agos_cnn(),
+            &SparsityModel::synthetic(opts.seed),
+            2,
+            crate::config::BitmapPattern::Iid,
+            2,
+        );
+        let one_shot = cosim_from_traces(&traces, &cfg, &opts, true, 1).unwrap();
+        let prep = PreparedCosim::new(&traces, true).unwrap();
+        assert!(prep.has_bank());
+        assert_eq!(prep.network(), "agos_cnn");
+        assert_eq!(prep.fingerprint(), traces.fingerprint());
+        // The same prepared state served twice over one shared cache —
+        // the serve loop in miniature: both responses byte-identical to
+        // the cold one-shot run.
+        let cache = Arc::new(SweepCache::new());
+        let r1 =
+            cosim_prepared(&prep, &cfg, &opts, true, &SweepRunner::with_cache(2, cache.clone()))
+                .unwrap();
+        let r2 =
+            cosim_prepared(&prep, &cfg, &opts, true, &SweepRunner::with_cache(2, cache.clone()))
+                .unwrap();
+        assert_eq!(one_shot.to_json().dump(), r1.to_json().dump());
+        assert_eq!(r1.to_json().dump(), r2.to_json().dump());
+        // The second serving was pure cache: nothing re-simulated.
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.hits(), 4);
+        // Replay against a bank-less preparation is a loud error.
+        let no_bank = PreparedCosim::new(&traces, false).unwrap();
+        assert!(!no_bank.has_bank());
+        assert!(cosim_prepared(&no_bank, &cfg, &opts, true, &SweepRunner::new(1)).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@ mod pipeline;
 mod driver;
 
 pub use dataset::SyntheticDataset;
-pub use driver::{cosim_from_traces, cosim_from_traces_owned, CosimReport};
+pub use driver::{
+    cosim_from_traces, cosim_from_traces_owned, cosim_prepared, CosimReport, PreparedCosim,
+};
 pub use pipeline::run_training_pipeline;
 pub use trainer::{TrainLog, Trainer};

@@ -28,4 +28,5 @@ pub mod trace;
 pub mod runtime;
 pub mod coordinator;
 pub mod report;
+pub mod serve;
 pub mod cli;

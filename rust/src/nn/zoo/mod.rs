@@ -46,6 +46,16 @@ pub fn by_name(name: &str) -> anyhow::Result<Network> {
     }
 }
 
+/// Parse a comma-separated network list; the literal `"all"` selects
+/// [`all_networks`]. Shared by the CLI's `--networks` and the served
+/// `sweep` request so both spell the same grids identically.
+pub fn by_list(spec: &str) -> anyhow::Result<Vec<Network>> {
+    if spec == "all" {
+        return Ok(all_networks());
+    }
+    spec.split(',').map(|n| by_name(n.trim())).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

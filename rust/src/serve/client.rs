@@ -1,0 +1,79 @@
+//! Client side of the serve protocol: connect, frame a request, unwrap
+//! the response envelope. `agos request` is a thin CLI shell over this;
+//! tests and the bench harness drive it in-process.
+
+use std::io::ErrorKind;
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::protocol::{read_frame, write_frame};
+
+/// One connection to a running `agos serve`. Requests and responses
+/// alternate on the stream; dropping the client ends the session.
+pub struct Client {
+    stream: UnixStream,
+}
+
+impl Client {
+    pub fn connect(socket: &Path) -> anyhow::Result<Client> {
+        let stream = UnixStream::connect(socket)
+            .map_err(|e| anyhow::anyhow!("connect {}: {e}", socket.display()))?;
+        Ok(Client { stream })
+    }
+
+    /// Connect, retrying while the socket does not exist or refuses —
+    /// the window where `agos serve &` is still binding. Scripts can
+    /// background the server and fire a request immediately.
+    pub fn connect_retry(socket: &Path, timeout: Duration) -> anyhow::Result<Client> {
+        let start = Instant::now();
+        loop {
+            match UnixStream::connect(socket) {
+                Ok(stream) => return Ok(Client { stream }),
+                Err(e) if retryable(&e) && start.elapsed() < timeout => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    anyhow::bail!(
+                        "connect {} (waited {:.1}s): {e}",
+                        socket.display(),
+                        start.elapsed().as_secs_f64()
+                    )
+                }
+            }
+        }
+    }
+
+    /// One request/response exchange; returns the raw response envelope.
+    pub fn roundtrip(&mut self, req: &Json) -> anyhow::Result<Json> {
+        write_frame(&mut self.stream, req)?;
+        read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection mid-request"))
+    }
+
+    /// One exchange, unwrapped: the `result` document on success, the
+    /// server's error message as this call's error otherwise.
+    pub fn request(&mut self, req: &Json) -> anyhow::Result<Json> {
+        let resp = self.roundtrip(req)?;
+        match resp.get("ok").as_bool() {
+            Some(true) => Ok(resp.get("result").clone()),
+            Some(false) => {
+                anyhow::bail!(
+                    "server error: {}",
+                    resp.get("error").as_str().unwrap_or("(no message)")
+                )
+            }
+            None => anyhow::bail!("malformed response envelope: {}", resp.dump()),
+        }
+    }
+}
+
+/// Errors that mean "not up yet" rather than "never will be".
+fn retryable(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::NotFound | ErrorKind::ConnectionRefused | ErrorKind::ConnectionReset
+    )
+}

@@ -1,0 +1,147 @@
+//! In-flight request deduplication: identical concurrent requests join
+//! one computation instead of racing.
+//!
+//! The sweep cache already guarantees a *later* identical request is
+//! answered without re-simulating; this layer closes the remaining
+//! window where two identical requests arrive while neither has
+//! finished. The first caller under a key becomes the leader and
+//! computes; every concurrent caller with the same key blocks on a
+//! condvar and receives a clone of the leader's result. Slots are
+//! removed on completion — longer-term memory belongs to the caches,
+//! not this map.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight computation: the leader fills `done`, joiners wait.
+struct Slot<T> {
+    done: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+/// Keyed single-flight executor. `T` is cloned once per joiner; wrap
+/// expensive results in `Arc` (or use a `Result<_, String>`) as needed.
+#[derive(Default)]
+pub struct Dedup<T> {
+    inflight: Mutex<HashMap<String, Arc<Slot<T>>>>,
+    led: AtomicUsize,
+    joined: AtomicUsize,
+}
+
+impl<T: Clone> Dedup<T> {
+    pub fn new() -> Dedup<T> {
+        Dedup {
+            inflight: Mutex::new(HashMap::new()),
+            led: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+        }
+    }
+
+    /// Computations led (one per distinct in-flight key).
+    pub fn led(&self) -> usize {
+        self.led.load(Ordering::Relaxed)
+    }
+
+    /// Requests that joined an in-flight computation instead of
+    /// recomputing.
+    pub fn joined(&self) -> usize {
+        self.joined.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` under `key`, single-flight. A panicking `f` poisons the
+    /// slot's joiners (they propagate the poison), so compute closures
+    /// should return errors as values — the server wraps every handler
+    /// in `Result<Json, String>`.
+    pub fn run(&self, key: &str, f: impl FnOnce() -> T) -> T {
+        let (slot, leader) = {
+            let mut map = self.inflight.lock().unwrap();
+            match map.get(key) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    let slot = Arc::new(Slot { done: Mutex::new(None), cv: Condvar::new() });
+                    map.insert(key.to_string(), slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if leader {
+            self.led.fetch_add(1, Ordering::Relaxed);
+            let value = f();
+            *slot.done.lock().unwrap() = Some(value.clone());
+            slot.cv.notify_all();
+            self.inflight.lock().unwrap().remove(key);
+            value
+        } else {
+            self.joined.fetch_add(1, Ordering::Relaxed);
+            let mut done = slot.done.lock().unwrap();
+            while done.is_none() {
+                done = slot.cv.wait(done).unwrap();
+            }
+            done.clone().expect("leader filled the slot before notifying")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn concurrent_identical_keys_share_one_computation() {
+        let dedup = Arc::new(Dedup::<u64>::new());
+        let computed = Arc::new(AtomicUsize::new(0));
+        // The leader blocks inside f until we release it, guaranteeing
+        // the second request arrives while the first is in flight.
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let leader = {
+            let dedup = dedup.clone();
+            let computed = computed.clone();
+            thread::spawn(move || {
+                dedup.run("k", || {
+                    computed.fetch_add(1, Ordering::SeqCst);
+                    release_rx.recv().unwrap();
+                    42
+                })
+            })
+        };
+        // Wait until the leader is actually inside f.
+        while computed.load(Ordering::SeqCst) == 0 {
+            thread::yield_now();
+        }
+        let joiner = {
+            let dedup = dedup.clone();
+            let computed = computed.clone();
+            thread::spawn(move || {
+                dedup.run("k", || {
+                    computed.fetch_add(1, Ordering::SeqCst);
+                    7
+                })
+            })
+        };
+        // Wait until the joiner has registered, then release the leader.
+        while dedup.joined() == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        release_tx.send(()).unwrap();
+        assert_eq!(leader.join().unwrap(), 42);
+        assert_eq!(joiner.join().unwrap(), 42, "joiner receives the leader's result");
+        assert_eq!(computed.load(Ordering::SeqCst), 1, "one computation for two requests");
+        assert_eq!(dedup.led(), 1);
+        assert_eq!(dedup.joined(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_and_later_requests_compute_independently() {
+        let dedup = Dedup::<u64>::new();
+        assert_eq!(dedup.run("a", || 1), 1);
+        assert_eq!(dedup.run("b", || 2), 2);
+        // Same key again after completion: the slot is gone, f runs.
+        assert_eq!(dedup.run("a", || 3), 3);
+        assert_eq!(dedup.led(), 3);
+        assert_eq!(dedup.joined(), 0);
+    }
+}

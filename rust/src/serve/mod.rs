@@ -1,0 +1,48 @@
+//! `agos serve` — the resident sweep/replay service.
+//!
+//! Every one-shot CLI invocation re-pays process start, trace decode,
+//! sweep-cache deserialization and gather-plan warm-up before the first
+//! simulated cycle; on warm replayed runs that setup dominates
+//! wall-time. The service keeps all of it resident behind `Arc`s —
+//! decoded [`crate::coordinator::PreparedCosim`]s (replay banks) keyed
+//! by trace fingerprint, the [`crate::sim::SweepCache`] backed by the
+//! existing disk spill, and the shared [`crate::sim::GatherPlanCache`]
+//! — and serves `sweep`/`cosim`/`figure`/`table` requests from a worker
+//! pool over a Unix socket.
+//!
+//! Three contracts, all test-pinned:
+//!
+//! * **Byte identity** — a served response's `result` document is
+//!   byte-identical to the file the equivalent cold CLI invocation
+//!   writes with `--out`, at any `--jobs` level. Everything served goes
+//!   through the same pure request→result core as the CLI
+//!   ([`crate::coordinator::cosim_prepared`],
+//!   [`crate::sim::sweep_report_json`]), and no report carries timing
+//!   or thread-count fields.
+//! * **Cache-key stability** — resident sharing changes *where* results
+//!   live, never *what* keys them: the sweep-cache key scheme is
+//!   untouched and `SIM_REVISION` stays at 6. See DESIGN.md "Resident
+//!   service and shared banks".
+//! * **In-flight dedup** — identical concurrent requests join one
+//!   computation ([`Dedup`]) instead of racing; later identical
+//!   requests are answered by the resident sweep cache.
+//!
+//! Wire format ([`protocol`]): u32-LE length-framed JSON documents —
+//! the v4 trace container's framing idiom with a JSON body. The
+//! server/client halves need Unix domain sockets and are compiled on
+//! Unix only; the framing and dedup layers are platform-neutral.
+
+pub mod protocol;
+
+mod dedup;
+pub use dedup::Dedup;
+
+#[cfg(unix)]
+mod server;
+#[cfg(unix)]
+pub use server::{ServeOptions, ServeState, Server};
+
+#[cfg(unix)]
+mod client;
+#[cfg(unix)]
+pub use client::Client;

@@ -1,0 +1,136 @@
+//! Length-framed JSON over a byte stream — the wire format of
+//! `agos serve`.
+//!
+//! One frame is a u32-LE byte length followed by that many bytes of one
+//! UTF-8 JSON document (the v4 trace container's framing idiom, with a
+//! JSON body instead of a binary step record). Requests and responses
+//! alternate on one connection; a client closing between frames is a
+//! clean end of session, not an error.
+//!
+//! Responses are enveloped so transport success and request failure
+//! stay distinguishable: `{"ok": true, "result": …}` or
+//! `{"ok": false, "error": "…"}`.
+
+use std::io::{Read, Write};
+
+use crate::util::json::Json;
+
+/// Upper bound on one frame's body (64 MiB). A corrupt or hostile
+/// length prefix must bound the allocation it can trigger.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Write one frame. Flushes, so a lone request/response is never stuck
+/// in a buffering writer.
+pub fn write_frame(w: &mut impl Write, doc: &Json) -> anyhow::Result<()> {
+    let body = doc.dump().into_bytes();
+    anyhow::ensure!(body.len() <= MAX_FRAME, "frame body {} exceeds {MAX_FRAME} bytes", body.len());
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary (the
+/// peer ended the session). EOF *inside* a frame is an error.
+pub fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len)? {
+        return Ok(None);
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(n <= MAX_FRAME, "frame length {n} exceeds {MAX_FRAME} bytes");
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body)?;
+    let text = std::str::from_utf8(&body)
+        .map_err(|e| anyhow::anyhow!("frame body is not UTF-8: {e}"))?;
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("frame body is not JSON: {e}"))?;
+    Ok(Some(doc))
+}
+
+/// Like `read_exact`, but distinguishes clean EOF before the first byte
+/// (`Ok(false)`) from EOF mid-buffer (error).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> anyhow::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..])? {
+            0 if got == 0 => return Ok(false),
+            0 => anyhow::bail!("connection closed mid-frame ({got} of {} bytes)", buf.len()),
+            n => got += n,
+        }
+    }
+    Ok(true)
+}
+
+/// Success envelope around a `result` document.
+pub fn ok_response(result: Json) -> Json {
+    Json::from_pairs(vec![("ok", true.into()), ("result", result)])
+}
+
+/// Failure envelope around an error message.
+pub fn err_response(message: &str) -> Json {
+    Json::from_pairs(vec![("ok", false.into()), ("error", message.into())])
+}
+
+/// Canonical dedup key of a request: the compact dump of the *parsed*
+/// document. Objects serialize in sorted key order, so two requests
+/// differing only in field order or whitespace share a key — and join
+/// one in-flight computation.
+pub fn canonical_key(req: &Json) -> String {
+    req.dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_and_eof_is_clean_between_frames() {
+        let a = Json::from_pairs(vec![("cmd", "ping".into())]);
+        let b = Json::from_pairs(vec![("cmd", "cosim".into()), ("batch", 2u64.into())]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap().dump(), a.dump());
+        assert_eq!(read_frame(&mut r).unwrap().unwrap().dump(), b.dump());
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF between frames");
+    }
+
+    #[test]
+    fn truncation_and_hostile_lengths_are_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::from_pairs(vec![("cmd", "ping".into())])).unwrap();
+        // EOF inside the body.
+        let mut r = Cursor::new(buf[..buf.len() - 1].to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // EOF inside the length prefix.
+        let mut r = Cursor::new(vec![1u8, 0]);
+        assert!(read_frame(&mut r).is_err());
+        // A length prefix past MAX_FRAME must not allocate.
+        let mut r = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // A body that is not JSON.
+        let mut r = Cursor::new([4u32.to_le_bytes().to_vec(), b"!!!!".to_vec()].concat());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn canonical_key_ignores_field_order_and_whitespace() {
+        let a = Json::parse(r#"{"cmd": "cosim", "batch": 2}"#).unwrap();
+        let b = Json::parse(r#"{ "batch":2,"cmd":"cosim" }"#).unwrap();
+        assert_eq!(canonical_key(&a), canonical_key(&b));
+        let c = Json::parse(r#"{"cmd": "cosim", "batch": 3}"#).unwrap();
+        assert_ne!(canonical_key(&a), canonical_key(&c));
+    }
+
+    #[test]
+    fn envelopes_tag_success_and_failure() {
+        let ok = ok_response(Json::from_pairs(vec![("x", 1u64.into())]));
+        assert_eq!(ok.get("ok").as_bool(), Some(true));
+        assert_eq!(ok.get("result").get("x").as_u64(), Some(1));
+        let err = err_response("boom");
+        assert_eq!(err.get("ok").as_bool(), Some(false));
+        assert_eq!(err.get("error").as_str(), Some("boom"));
+    }
+}

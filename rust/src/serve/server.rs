@@ -1,0 +1,471 @@
+//! The resident service behind `agos serve`: a Unix-socket accept loop,
+//! a fixed pool of connection handlers, and the shared warm state every
+//! request reads through `Arc`s.
+//!
+//! Request documents (all fields beyond `cmd` optional unless noted):
+//!
+//! * `{"cmd": "ping"}` — resident-state counters.
+//! * `{"cmd": "shutdown"}` — stop accepting, spill the sweep cache,
+//!   exit the serve loop after responding.
+//! * `{"cmd": "sweep", "networks": …, "schemes": …, "batch": …,
+//!   "seed": …, "backend": …, "exact_cap": …, "pattern": …,
+//!   "blob_radius": …, "gather": …}` — the `agos sweep` grid; the
+//!   result document is byte-identical to `agos sweep --out`.
+//! * `{"cmd": "cosim", "traces": <path> (required), "replay": bool,
+//!   …backend fields…}` — the `agos cosim` report; byte-identical to
+//!   `agos cosim --out`. The decoded trace (and its replay bank) stays
+//!   resident keyed by content fingerprint.
+//! * `{"cmd": "figure", "id": …}` / `{"cmd": "table", "id": …}` — the
+//!   named report generators; result `{"figures": [...]}` with each
+//!   figure exactly as `Figure::save` writes it.
+//!
+//! Warm-state lifetime: banks and gather plans live until the process
+//! exits; the sweep cache is loaded from the configured spill at bind
+//! time and merge-on-saved at shutdown (`SweepCache::save_file`), so a
+//! server and stray one-shot CLIs can interleave without losing
+//! entries. Requests whose trace file changed on disk (size or mtime)
+//! re-decode and re-key automatically — a stale bank is unreachable
+//! because the fingerprint is part of every cache key.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use crate::config::{
+    AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions,
+};
+use crate::coordinator::{cosim_prepared, PreparedCosim};
+use crate::nn::zoo;
+use crate::report::{generate, ReportCtx};
+use crate::sim::{sweep_report_json, GatherPlanCache, SweepCache, SweepPlan, SweepRunner};
+use crate::sparsity::SparsityModel;
+use crate::trace::TraceFile;
+use crate::util::json::Json;
+
+use super::dedup::Dedup;
+use super::protocol::{canonical_key, err_response, ok_response, read_frame, write_frame};
+
+/// How `Server::bind` configures the service.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Unix socket path to listen on.
+    pub socket: PathBuf,
+    /// Sweep worker threads per request (0 = all cores).
+    pub jobs: usize,
+    /// Concurrent connection handlers (0 = default 4).
+    pub workers: usize,
+    /// Sweep-cache spill to load at bind and merge-save at shutdown.
+    pub cache_path: Option<PathBuf>,
+}
+
+/// The warm state every request shares. All mutation is behind interior
+/// locks; the expensive members (`PreparedCosim` banks, cached sweep
+/// results, gather plans) are immutable once built and shared by `Arc`.
+pub struct ServeState {
+    cfg: AcceleratorConfig,
+    jobs: usize,
+    socket: PathBuf,
+    cache: Arc<SweepCache>,
+    plans: Arc<GatherPlanCache>,
+    /// Resident prepared traces, keyed by content fingerprint.
+    banks: Mutex<HashMap<u64, Arc<PreparedCosim>>>,
+    /// path → (len, mtime, fingerprint): skips re-decoding a trace file
+    /// that has not changed since it was last prepared.
+    trace_index: Mutex<HashMap<PathBuf, (u64, SystemTime, u64)>>,
+    dedup: Dedup<Result<Json, String>>,
+    requests: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl ServeState {
+    fn new(socket: PathBuf, jobs: usize) -> ServeState {
+        ServeState {
+            cfg: AcceleratorConfig::default(),
+            // Resolve 0 = all cores once, like SweepRunner::new does.
+            jobs: SweepRunner::new(jobs).jobs,
+            socket,
+            cache: Arc::new(SweepCache::new()),
+            plans: Arc::new(GatherPlanCache::new()),
+            banks: Mutex::new(HashMap::new()),
+            trace_index: Mutex::new(HashMap::new()),
+            dedup: Dedup::new(),
+            requests: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Resolved sweep thread budget per request.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// The resident sweep cache (shared with every request's runner).
+    pub fn sweep_cache(&self) -> &Arc<SweepCache> {
+        &self.cache
+    }
+
+    /// A runner wired to the resident cache — every served simulation
+    /// goes through one of these.
+    fn runner(&self) -> SweepRunner {
+        SweepRunner::with_cache(self.jobs, self.cache.clone())
+    }
+
+    /// Sim options for a request document: `SimOptions::default()` with
+    /// the same fields the CLI's flags override, so a served request and
+    /// the equivalent cold invocation build identical option sets.
+    fn opts_from(&self, req: &Json) -> anyhow::Result<SimOptions> {
+        let mut opts =
+            SimOptions { batch: req_usize(req, "batch", 16)?, ..SimOptions::default() };
+        opts.seed = req_u64(req, "seed", opts.seed)?;
+        if let Some(b) = req_str(req, "backend")? {
+            opts.backend = ExecBackend::parse(b)?;
+        }
+        opts.exact_outputs_per_tile = req_usize(req, "exact_cap", opts.exact_outputs_per_tile)?;
+        if let Some(p) = req_str(req, "pattern")? {
+            opts.pattern = BitmapPattern::parse(p)?;
+        }
+        opts.blob_radius = req_usize(req, "blob_radius", opts.blob_radius)?;
+        if let Some(g) = req_str(req, "gather")? {
+            opts.gather = GatherMode::parse(g)?;
+        }
+        // The resident plan cache replaces the default fresh one —
+        // execution strategy, not an input: never keyed, never serialized.
+        opts.gather_plans = Some(self.plans.clone());
+        Ok(opts)
+    }
+
+    /// The prepared (decoded + validated) form of a trace file, served
+    /// from the resident banks when the file is unchanged on disk.
+    fn prepared_for(&self, path: &Path) -> anyhow::Result<Arc<PreparedCosim>> {
+        let meta = std::fs::metadata(path)
+            .map_err(|e| anyhow::anyhow!("traces file {}: {e}", path.display()))?;
+        let stamp = (meta.len(), meta.modified()?);
+        if let Some((len, mtime, fp)) = self.trace_index.lock().unwrap().get(path) {
+            if (*len, *mtime) == stamp {
+                if let Some(prep) = self.banks.lock().unwrap().get(fp) {
+                    return Ok(prep.clone());
+                }
+            }
+        }
+        let (traces, warnings) = TraceFile::load_lenient(path)?;
+        for w in &warnings {
+            eprintln!("serve: trace warning ({}): {w}", path.display());
+        }
+        // Decode the bank whenever payloads exist — a later request for
+        // the same trace may want replay even if this one does not.
+        let with_bank = traces.has_bitmaps();
+        let prep = Arc::new(PreparedCosim::new_owned(traces, with_bank)?);
+        let fp = prep.fingerprint();
+        self.trace_index.lock().unwrap().insert(path.to_path_buf(), (stamp.0, stamp.1, fp));
+        self.banks.lock().unwrap().insert(fp, prep.clone());
+        Ok(prep)
+    }
+
+    fn handle_ping(&self) -> Json {
+        let banks = self.banks.lock().unwrap();
+        let resident: Vec<Json> = {
+            let mut rows: Vec<(&u64, &Arc<PreparedCosim>)> = banks.iter().collect();
+            rows.sort_by_key(|(fp, _)| **fp);
+            rows.into_iter()
+                .map(|(fp, p)| {
+                    Json::from_pairs(vec![
+                        ("fingerprint", format!("{fp:016x}").into()),
+                        ("network", p.network().into()),
+                        ("replay_words", p.bank().map_or(0, |b| b.resident_words()).into()),
+                    ])
+                })
+                .collect()
+        };
+        Json::from_pairs(vec![
+            ("service", "agos".into()),
+            ("sim_rev", crate::sim::SIM_REVISION.into()),
+            ("jobs", self.jobs.into()),
+            ("requests", self.requests.load(Ordering::Relaxed).into()),
+            ("dedup_led", self.dedup.led().into()),
+            ("dedup_joined", self.dedup.joined().into()),
+            (
+                "sweep_cache",
+                Json::from_pairs(vec![
+                    ("entries", self.cache.len().into()),
+                    ("hits", self.cache.hits().into()),
+                    ("misses", self.cache.misses().into()),
+                ]),
+            ),
+            ("gather_plans", self.plans.len().into()),
+            ("banks", Json::Arr(resident)),
+        ])
+    }
+
+    fn handle_sweep(&self, req: &Json) -> anyhow::Result<Json> {
+        let nets = zoo::by_list(req_str(req, "networks")?.unwrap_or("all"))?;
+        let schemes = Scheme::parse_list(req_str(req, "schemes")?.unwrap_or("all"))?;
+        let opts = self.opts_from(req)?;
+        let model = SparsityModel::synthetic(opts.seed);
+        let plan = SweepPlan::grid(&nets, &schemes, &self.cfg, &opts);
+        let results = self.runner().run(&plan, &model);
+        Ok(sweep_report_json(&nets, &schemes, &results, &opts))
+    }
+
+    fn handle_cosim(&self, req: &Json) -> anyhow::Result<Json> {
+        let path = req_str(req, "traces")?
+            .ok_or_else(|| anyhow::anyhow!("cosim request needs a 'traces' path"))?;
+        let replay = req_bool(req, "replay", false)?;
+        let opts = self.opts_from(req)?;
+        let prep = self.prepared_for(Path::new(path))?;
+        if replay && !prep.has_bank() {
+            anyhow::bail!(
+                "trace file for '{}' carries no bitmap payloads to replay",
+                prep.network()
+            );
+        }
+        let report = cosim_prepared(&prep, &self.cfg, &opts, replay, &self.runner())?;
+        Ok(report.to_json())
+    }
+
+    fn handle_figure(&self, req: &Json) -> anyhow::Result<Json> {
+        let id = req_str(req, "id")?
+            .ok_or_else(|| anyhow::anyhow!("figure/table request needs an 'id'"))?;
+        let opts = self.opts_from(req)?;
+        let model = SparsityModel::synthetic(opts.seed);
+        let ctx = ReportCtx {
+            cfg: self.cfg.clone(),
+            opts,
+            model,
+            sweep: self.runner(),
+        };
+        let figures: Vec<Json> = generate(id, &ctx)?.iter().map(|f| f.to_json()).collect();
+        Ok(Json::from_pairs(vec![("figures", Json::Arr(figures))]))
+    }
+
+    /// Dispatch one request document to its handler. Compute commands
+    /// run single-flight under the request's canonical key.
+    fn handle(&self, req: &Json) -> Result<Json, String> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let cmd = req.get("cmd").as_str().unwrap_or("").to_string();
+        match cmd.as_str() {
+            // Control commands answer immediately — they must not queue
+            // behind (or join) a long computation.
+            "ping" => Ok(self.handle_ping()),
+            "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                // Wake the accept loop so it observes the flag.
+                let _ = UnixStream::connect(&self.socket);
+                Ok(Json::from_pairs(vec![("shutting_down", true.into())]))
+            }
+            "sweep" | "cosim" | "figure" | "table" => {
+                let key = canonical_key(req);
+                self.dedup.run(&key, || {
+                    let out = match cmd.as_str() {
+                        "sweep" => self.handle_sweep(req),
+                        "cosim" => self.handle_cosim(req),
+                        _ => self.handle_figure(req),
+                    };
+                    out.map_err(|e| format!("{e:#}"))
+                })
+            }
+            "" => Err("request document needs a string 'cmd' field".to_string()),
+            other => Err(format!(
+                "unknown cmd '{other}' (ping|shutdown|sweep|cosim|figure|table)"
+            )),
+        }
+    }
+}
+
+/// Typed request-field accessors: absent fields take the default, but a
+/// present field of the wrong type is a loud error, never a silent
+/// fallback to something the caller did not ask for.
+fn req_usize(req: &Json, key: &str, default: usize) -> anyhow::Result<usize> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("request field '{key}' must be an unsigned integer")),
+    }
+}
+
+fn req_u64(req: &Json, key: &str, default: u64) -> anyhow::Result<u64> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("request field '{key}' must be an unsigned integer")),
+    }
+}
+
+fn req_bool(req: &Json, key: &str, default: bool) -> anyhow::Result<bool> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("request field '{key}' must be a boolean")),
+    }
+}
+
+fn req_str<'a>(req: &'a Json, key: &str) -> anyhow::Result<Option<&'a str>> {
+    match req.get(key) {
+        Json::Null => Ok(None),
+        v => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("request field '{key}' must be a string")),
+    }
+}
+
+/// One connection's session: frames in, enveloped frames out, until the
+/// client closes or a fatal transport error.
+fn handle_conn(state: &ServeState, stream: UnixStream) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => {
+            eprintln!("serve: connection clone failed: {e}");
+            return;
+        }
+    };
+    let mut writer = stream;
+    loop {
+        let req = match read_frame(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean end of session
+            Err(e) => {
+                let _ = write_frame(&mut writer, &err_response(&format!("bad frame: {e:#}")));
+                return;
+            }
+        };
+        let shutting_down = req.get("cmd").as_str() == Some("shutdown");
+        let frame = match state.handle(&req) {
+            Ok(result) => ok_response(result),
+            Err(message) => err_response(&message),
+        };
+        if write_frame(&mut writer, &frame).is_err() || shutting_down {
+            return;
+        }
+    }
+}
+
+/// A bound, not-yet-running service. `bind` completes socket setup, so
+/// a caller (or a shell script backgrounding `agos serve`) can connect
+/// the moment it returns; `run` serves until a `shutdown` request.
+pub struct Server {
+    listener: UnixListener,
+    state: Arc<ServeState>,
+    workers: usize,
+    cache_path: Option<PathBuf>,
+}
+
+impl Server {
+    /// Bind the socket and load the sweep-cache spill. A stale socket
+    /// file (no listener behind it) is removed; a *live* one — another
+    /// server accepting connections — is a refusal, not a takeover.
+    pub fn bind(opts: ServeOptions) -> anyhow::Result<Server> {
+        if opts.socket.exists() {
+            anyhow::ensure!(
+                UnixStream::connect(&opts.socket).is_err(),
+                "{} already has a live server (shut it down first, or pick another --socket)",
+                opts.socket.display()
+            );
+            std::fs::remove_file(&opts.socket)?;
+        }
+        if let Some(dir) = opts.socket.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let listener = UnixListener::bind(&opts.socket)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", opts.socket.display()))?;
+        let state = Arc::new(ServeState::new(opts.socket.clone(), opts.jobs));
+        if let Some(path) = &opts.cache_path {
+            match state.cache.load_file(path) {
+                Ok(n) if n > 0 => {
+                    println!("serve: loaded {n} sweep results from {}", path.display())
+                }
+                Ok(_) => {}
+                Err(e) => eprintln!("serve: ignoring sweep cache {}: {e}", path.display()),
+            }
+        }
+        Ok(Server {
+            listener,
+            state,
+            workers: if opts.workers == 0 { 4 } else { opts.workers },
+            cache_path: opts.cache_path,
+        })
+    }
+
+    pub fn socket(&self) -> &Path {
+        &self.state.socket
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The shared warm state (counters, caches) — visible for tests and
+    /// in-process embedding (the bench harness runs a server this way).
+    pub fn state(&self) -> Arc<ServeState> {
+        self.state.clone()
+    }
+
+    /// Serve until a `shutdown` request: accepted connections feed a
+    /// fixed worker pool over a channel; each worker owns one connection
+    /// at a time. On exit the socket file is removed and the sweep cache
+    /// merge-saved to its spill.
+    pub fn run(self) -> anyhow::Result<()> {
+        let (tx, rx) = mpsc::channel::<UnixStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers {
+                let rx = rx.clone();
+                let state = &self.state;
+                scope.spawn(move || loop {
+                    // Hold the receiver lock only while waiting: exactly
+                    // one idle worker blocks in recv; the rest queue on
+                    // the mutex. Handling happens after the guard drops.
+                    let conn = { rx.lock().unwrap().recv() };
+                    match conn {
+                        Ok(conn) => handle_conn(state, conn),
+                        Err(_) => return, // channel closed: shutting down
+                    }
+                });
+            }
+            loop {
+                let conn = match self.listener.accept() {
+                    Ok((conn, _)) => conn,
+                    Err(e) => {
+                        if self.state.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        eprintln!("serve: accept failed: {e}");
+                        continue;
+                    }
+                };
+                // The shutdown handler connects once after setting the
+                // flag, so a blocked accept always wakes to observe it.
+                if self.state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                if tx.send(conn).is_err() {
+                    break;
+                }
+            }
+            drop(tx); // workers drain queued connections, then exit
+        });
+        std::fs::remove_file(&self.state.socket).ok();
+        if let Some(path) = &self.cache_path {
+            if self.state.cache.misses() > 0 {
+                match self.state.cache.save_file(path) {
+                    Ok(()) => println!(
+                        "serve: {} sweep results spilled to {}",
+                        self.state.cache.len(),
+                        path.display()
+                    ),
+                    Err(e) => eprintln!("serve: failed to spill {}: {e}", path.display()),
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -44,6 +44,8 @@ pub use engine::{
 pub use layer_exec::{simulate_layer, simulate_layer_replay, LayerSimResult, LayerTask};
 pub use memory::{layer_traffic, MemoryModel};
 pub use pe::{expected_lane_max, expected_max_std_normal, PeModel};
-pub use sweep::{SweepCache, SweepCombo, SweepKey, SweepPlan, SweepRunner, SIM_REVISION};
+pub use sweep::{
+    sweep_report_json, SweepCache, SweepCombo, SweepKey, SweepPlan, SweepRunner, SIM_REVISION,
+};
 pub use tile::{tile_outputs, tile_windows, TileState};
 pub use wdu::{redistribute, WduOutcome};

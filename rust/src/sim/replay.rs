@@ -44,7 +44,7 @@
 //! rests on is untouched, because the mapping depends on the image index
 //! only.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::nn::{LayerId, LayerKind, Network, Phase, Shape};
@@ -138,6 +138,32 @@ impl StepMaps {
             Phase::WeightGrad => &lm.wg,
         };
         (!tm.is_empty()).then_some(tm)
+    }
+
+    /// Bitmap words resident in this step's resolved maps, counting each
+    /// shared map once (the fp/bp/wg slots alias the same `Arc`s by
+    /// construction).
+    fn resident_words(&self) -> usize {
+        let mut seen: HashSet<*const Bitmap> = HashSet::new();
+        let mut words = 0usize;
+        let mut tally = |m: Option<&ReplayMap>| {
+            if let Some(m) = m {
+                if seen.insert(Arc::as_ptr(&m.map)) {
+                    words += m.map.words().len();
+                }
+            }
+        };
+        for lm in self.by_layer.values() {
+            for tm in [&lm.fp, &lm.bp, &lm.wg] {
+                tally(tm.operand.as_ref());
+                tally(tm.output.as_ref());
+                if let Some(pair) = &tm.pair {
+                    tally(pair.act.as_ref());
+                    tally(pair.grad.as_ref());
+                }
+            }
+        }
+        words
     }
 }
 
@@ -443,6 +469,15 @@ impl ReplayBank {
     /// runs (or replays of a different trace) in the sweep cache.
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
+    }
+
+    /// Resident payload footprint across every step, in 64-bit words —
+    /// what one shared bank actually pins in memory. `agos serve`'s
+    /// `ping` reports this per resident bank; it is also the cost a
+    /// second concurrent request *avoids* by sharing the `Arc` instead
+    /// of re-decoding the trace.
+    pub fn resident_words(&self) -> usize {
+        self.steps.iter().map(StepMaps::resident_words).sum()
     }
 }
 

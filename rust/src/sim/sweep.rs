@@ -26,7 +26,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
-use crate::nn::Network;
+use crate::nn::{Network, Phase};
 use crate::sparsity::SparsityModel;
 use crate::util::json::Json;
 use crate::util::pool::run_indexed;
@@ -271,36 +271,77 @@ impl SweepCache {
     /// Persist the cache atomically (write-then-rename), so a concurrent
     /// reader never sees a half-written file. The temp name is
     /// per-process so two concurrent writers cannot clobber each other's
-    /// in-flight file (last rename wins with a complete spill).
+    /// in-flight file.
+    ///
+    /// The spill is **merge-on-save**: the file is re-read first and its
+    /// entries unioned under ours (ours win on key collision — a cached
+    /// result for a key is bit-identical wherever it was computed, so
+    /// "winning" only matters for freshness of the bytes written). With
+    /// plain last-rename-wins, two concurrent *processes* — say a
+    /// resident `agos serve` and a stray one-shot CLI — would interleave
+    /// load → simulate → save and silently drop whichever entries the
+    /// other computed after their load. A stale or corrupt existing file
+    /// is ignored (overwritten), matching `load_file`'s tolerance for a
+    /// missing one. The in-memory cache is not mutated.
     pub fn save_file(&self, path: &Path) -> anyhow::Result<()> {
+        let merged = SweepCache::new();
+        if path.exists() {
+            if let Ok(j) = Json::parse_file(path) {
+                let _ = merged.merge_json(&j);
+            }
+        }
+        for (k, v) in self.map.lock().unwrap().iter() {
+            merged.insert(k.clone(), v.clone());
+        }
         let tmp = path.with_extension(format!("json.tmp.{}", std::process::id()));
-        self.to_json().write_file(&tmp)?;
+        merged.to_json().write_file(&tmp)?;
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 }
 
-/// Worker-pool sweep executor with a shared [`SweepCache`].
+/// Worker-pool sweep executor over a shared [`SweepCache`].
+///
+/// The cache sits behind an `Arc` so any number of runners — one per
+/// served request in `agos serve`, or the single runner of a one-shot
+/// CLI invocation — can share one resident result store. The runner
+/// itself owns no per-run mutable state beyond its thread budget;
+/// everything it reads during a sweep (`ReplayBank`, `GatherPlanCache`,
+/// the model) is immutable or internally synchronized.
 #[derive(Debug)]
 pub struct SweepRunner {
     /// Worker threads used per `run` call (resolved; never 0).
     pub jobs: usize,
-    cache: SweepCache,
+    cache: Arc<SweepCache>,
 }
 
 impl SweepRunner {
-    /// `jobs == 0` selects the host's available parallelism.
+    /// Runner over a fresh private cache. `jobs == 0` selects the
+    /// host's available parallelism.
     pub fn new(jobs: usize) -> SweepRunner {
+        SweepRunner::with_cache(jobs, Arc::new(SweepCache::new()))
+    }
+
+    /// Runner over an existing shared cache (the `agos serve` path:
+    /// every request's runner points at the same resident cache).
+    /// `jobs == 0` selects the host's available parallelism.
+    pub fn with_cache(jobs: usize, cache: Arc<SweepCache>) -> SweepRunner {
         let jobs = if jobs == 0 {
             thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             jobs
         };
-        SweepRunner { jobs, cache: SweepCache::new() }
+        SweepRunner { jobs, cache }
     }
 
     pub fn cache(&self) -> &SweepCache {
         &self.cache
+    }
+
+    /// The shared cache handle itself (for spilling after the runner is
+    /// handed off, or for wiring another runner to the same store).
+    pub fn cache_arc(&self) -> Arc<SweepCache> {
+        self.cache.clone()
     }
 
     /// Cached single simulation at an explicit configuration. A miss
@@ -369,6 +410,42 @@ impl SweepRunner {
             .map(|k| self.cache.peek(k).expect("every plan combo was simulated or cached"))
             .collect()
     }
+}
+
+/// The sweep's report document — what `agos sweep --out` writes and what
+/// a served `sweep` request returns: the options that define the grid
+/// plus one row per (network, scheme) combo in grid order.
+///
+/// Deliberately carries **no** wall-clock or thread-count fields: the
+/// determinism contract promises a served response byte-identical to a
+/// cold CLI run at any `--jobs` level, so everything in this document
+/// must be a pure function of the request. Timings belong on stdout.
+pub fn sweep_report_json(
+    networks: &[Network],
+    schemes: &[Scheme],
+    results: &[Arc<NetworkSimResult>],
+    opts: &SimOptions,
+) -> Json {
+    assert_eq!(networks.len() * schemes.len(), results.len(), "results must be grid-shaped");
+    let mut combos = Vec::new();
+    for (ni, net) in networks.iter().enumerate() {
+        for (si, scheme) in schemes.iter().enumerate() {
+            let r = &results[ni * schemes.len() + si];
+            combos.push(Json::from_pairs(vec![
+                ("network", net.name.as_str().into()),
+                ("scheme", scheme.label().into()),
+                ("total_cycles", r.total_cycles().into()),
+                ("bp_cycles", r.phase(Phase::Backward).cycles.into()),
+                ("energy_j", r.total_energy_j().into()),
+            ]));
+        }
+    }
+    Json::from_pairs(vec![
+        ("batch", opts.batch.into()),
+        ("seed", opts.seed.into()),
+        ("backend", opts.backend.label().into()),
+        ("combos", Json::Arr(combos)),
+    ])
 }
 
 #[cfg(test)]
@@ -524,6 +601,43 @@ mod tests {
         let plan2 = SweepPlan::grid(&[zoo::agos_cnn()], &[Scheme::Dense], &cfg, &other);
         third.run(&plan2, &model2);
         assert_eq!(third.cache().misses(), 1);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_file_merges_with_entries_already_on_disk() {
+        let dir = std::env::temp_dir().join("agos_sweep_cache_merge_test");
+        let path = dir.join("sweep-cache.json");
+        std::fs::remove_file(&path).ok();
+
+        let cfg = AcceleratorConfig::default();
+        let opts = small_opts();
+        let model = SparsityModel::synthetic(opts.seed);
+
+        // Two runners that never saw each other's work: each simulates a
+        // disjoint combo and saves to the same spill, second save last.
+        // Before merge-on-save, the second save clobbered the first.
+        let a = SweepRunner::new(1);
+        a.run(&SweepPlan::grid(&[zoo::agos_cnn()], &[Scheme::Dense], &cfg, &opts), &model);
+        a.cache().save_file(&path).unwrap();
+
+        let b = SweepRunner::new(1);
+        b.run(&SweepPlan::grid(&[zoo::agos_cnn()], &[Scheme::InOutWr], &cfg, &opts), &model);
+        assert_eq!(b.cache().len(), 1, "runner b never loaded the spill");
+        b.cache().save_file(&path).unwrap();
+
+        // The union survives: a fresh load serves both combos.
+        let fresh = SweepRunner::new(1);
+        assert_eq!(fresh.cache().load_file(&path).unwrap(), 2);
+        let plan =
+            SweepPlan::grid(&[zoo::agos_cnn()], &[Scheme::Dense, Scheme::InOutWr], &cfg, &opts);
+        fresh.run(&plan, &model);
+        assert_eq!(fresh.cache().misses(), 0, "merge-on-save must keep both runners' entries");
+        assert_eq!(fresh.cache().hits(), 2);
+
+        // Saving the in-memory cache never mutates it.
+        assert_eq!(b.cache().len(), 1);
 
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -14,18 +14,32 @@
 //!            · bit2 act payload present · bit3 grad payload present
 //! payload   := c u32 · h u32 · w u32 · enc u8 · data_len u32 · data
 //! enc       := 0 raw LE u64 words · 1 binary RLE
-//!            · 2 binary RLE of XOR vs previous step's same-slot map
+//!            · 2 binary RLE of XOR vs most recent same-slot map
+//!            · 3 binary RLE of XOR vs the same image position in the
+//!              previous step *group*
 //! ```
 //!
-//! The container is framed per *step*: a writer appends one step record
-//! at a time ([`TraceWriter`]) keeping only the previous step's decoded
-//! maps (the delta bases) resident, and a truncated file cleanly
-//! recovers every step whose record is complete (the lenient load
-//! path). The payload data is the same delta/RLE scheme as v3, but in
-//! the packed byte grammar of `sparsity::encode::rle_encode_words_bin`
-//! — and where runs don't pay (mid-density maps), raw LE words that the
-//! reader adopts as a `Bitmap`'s storage without any re-encoding
-//! ([`Bitmap::from_words`]). No hex, no string scanning anywhere.
+//! The container is framed per *step record*: a writer appends one
+//! record at a time ([`TraceWriter`]) keeping only the delta bases
+//! resident, and a truncated file cleanly recovers every step whose
+//! record is complete (the lenient load path). The payload data is the
+//! same delta/RLE scheme as v3, but in the packed byte grammar of
+//! `sparsity::encode::rle_encode_words_bin` — and where runs don't pay
+//! (mid-density maps), raw LE words that the reader adopts as a
+//! `Bitmap`'s storage without any re-encoding ([`Bitmap::from_words`]).
+//! No hex, no string scanning anywhere.
+//!
+//! **Step groups.** Multi-image captures are step-major: the records of
+//! one training step follow each other, all carrying the same `step`
+//! value, one record per image. A maximal run of consecutive records
+//! sharing a `step` value is a *group*. The tag-2 base (most recent
+//! same-slot map — in a group, the previous *image*) tracks cross-image
+//! correlation; the tag-3 base (same image position, previous group)
+//! tracks each image's own step-to-step evolution, which for real
+//! activations is usually the far stronger signal. The encoder tries
+//! both and keeps the strictly smallest — ties keep the lower tag, so a
+//! single-image trace (where both bases are the same map) encodes
+//! byte-identically to an encoder that never heard of groups.
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -55,6 +69,69 @@ const FLAG_GRAD: u8 = 1 << 3;
 const ENC_RAW: u8 = 0;
 const ENC_RLE: u8 = 1;
 const ENC_DELTA: u8 = 2;
+const ENC_DELTA_IMG: u8 = 3;
+
+// ---------------------------------------------------------------------------
+// Delta-base bookkeeping
+// ---------------------------------------------------------------------------
+
+/// The delta bases both codec directions maintain, record by record.
+/// Encoder and decoder share this type so their base tables can never
+/// drift: whatever map the encoder XORed against is, by construction,
+/// the map the decoder XORs back.
+///
+/// Memory stays bounded regardless of trace length: `prev` holds one
+/// map per slot, and the two group tables together hold at most two
+/// step groups' worth of maps.
+pub(crate) struct ChainState {
+    /// Most recent map per slot, across all records — the tag-2 base.
+    prev: HashMap<SlotKey, Bitmap>,
+    /// The previous step group's maps by (slot, image index) — the
+    /// tag-3 base.
+    prev_group: HashMap<(SlotKey, usize), Bitmap>,
+    /// The group being accumulated (becomes `prev_group` on rotation).
+    cur_group: HashMap<(SlotKey, usize), Bitmap>,
+    /// `step` value of the group in `cur_group`.
+    cur_step: Option<usize>,
+    /// Image index of the record currently being coded.
+    img: usize,
+}
+
+impl ChainState {
+    pub(crate) fn new() -> ChainState {
+        ChainState {
+            prev: HashMap::new(),
+            prev_group: HashMap::new(),
+            cur_group: HashMap::new(),
+            cur_step: None,
+            img: 0,
+        }
+    }
+
+    /// Enter the next record: a repeated `step` value advances the image
+    /// index within the current group; a new value rotates the group
+    /// tables and starts a fresh group at image 0.
+    fn enter_record(&mut self, step: usize) {
+        if self.cur_step == Some(step) {
+            self.img += 1;
+        } else {
+            self.prev_group = std::mem::take(&mut self.cur_group);
+            self.cur_step = Some(step);
+            self.img = 0;
+        }
+    }
+
+    /// The (tag-2, tag-3) bases for a slot of the current record.
+    fn bases(&self, key: &SlotKey) -> (Option<&Bitmap>, Option<&Bitmap>) {
+        (self.prev.get(key), self.prev_group.get(&(key.clone(), self.img)))
+    }
+
+    /// Register a just-coded map as a future base.
+    fn record(&mut self, key: SlotKey, b: Bitmap) {
+        self.cur_group.insert((key.clone(), self.img), b.clone());
+        self.prev.insert(key, b);
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Encoding
@@ -83,24 +160,32 @@ pub(crate) fn encode_header(network: &str) -> Result<Vec<u8>> {
 }
 
 /// One bitmap payload section. Picks the cheapest of binary RLE, the
-/// binary RLE of the XOR against `prev` (the previous step's same-slot
-/// map — only when *strictly* smaller, so ties stay delta-chain-free),
-/// and raw LE words (again only when strictly smaller): the same
-/// smallest-wins policy as the v3 JSON encoder, with raw words playing
-/// hex's role as the mid-density floor.
-fn encode_payload(b: &Bitmap, prev: Option<&Bitmap>, out: &mut Vec<u8>) -> Result<()> {
+/// binary RLE of the XOR against either delta base (`prev` = most
+/// recent same-slot map, tag 2; `prev_img` = same image position in the
+/// previous step group, tag 3), and raw LE words. Every upgrade needs a
+/// *strictly* smaller candidate, so ties keep the lower tag and stay
+/// delta-chain-free: the same smallest-wins policy as the v3 JSON
+/// encoder, with raw words playing hex's role as the mid-density floor.
+fn encode_payload(
+    b: &Bitmap,
+    prev: Option<&Bitmap>,
+    prev_img: Option<&Bitmap>,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     put_u32(out, b.shape.c, "payload shape.c")?;
     put_u32(out, b.shape.h, "payload shape.h")?;
     put_u32(out, b.shape.w, "payload shape.w")?;
     let mut rle = Vec::new();
     b.encode_rle_bin(&mut rle);
     let (mut enc, mut data) = (ENC_RLE, rle);
-    if let Some(p) = prev {
-        if p.shape == b.shape {
-            let mut delta = Vec::new();
-            b.xor(p).encode_rle_bin(&mut delta);
-            if delta.len() < data.len() {
-                (enc, data) = (ENC_DELTA, delta);
+    for (tag, base) in [(ENC_DELTA, prev), (ENC_DELTA_IMG, prev_img)] {
+        if let Some(p) = base {
+            if p.shape == b.shape {
+                let mut delta = Vec::new();
+                b.xor(p).encode_rle_bin(&mut delta);
+                if delta.len() < data.len() {
+                    (enc, data) = (tag, delta);
+                }
             }
         }
     }
@@ -118,15 +203,16 @@ fn encode_payload(b: &Bitmap, prev: Option<&Bitmap>, out: &mut Vec<u8>) -> Resul
 }
 
 /// One step record (length-prefixed body), updating the delta-base
-/// table to this step's maps. The table holds *owned* clones: the
+/// tables to this record's maps. The tables hold *owned* clones: the
 /// streaming writer drops each `StepTrace` after appending it, so the
 /// bases can't borrow from it — this per-payload clone is exactly the
-/// "previous step stays resident" part of the bounded-memory contract.
+/// "recent maps stay resident" part of the bounded-memory contract.
 pub(crate) fn encode_step(
     step: &StepTrace,
-    prev: &mut HashMap<SlotKey, Bitmap>,
+    chain: &mut ChainState,
     out: &mut Vec<u8>,
 ) -> Result<()> {
+    chain.enter_record(step.step);
     let mut body = Vec::new();
     body.extend_from_slice(&(step.step as u64).to_le_bytes());
     body.extend_from_slice(&step.loss.to_le_bytes());
@@ -147,8 +233,9 @@ pub(crate) fn encode_step(
         {
             if let Some(b) = b {
                 let key = (l.name.clone(), slot);
-                encode_payload(b, prev.get(&key), &mut body)?;
-                prev.insert(key, b.clone());
+                let (prev, prev_img) = chain.bases(&key);
+                encode_payload(b, prev, prev_img, &mut body)?;
+                chain.record(key, b.clone());
             }
         }
     }
@@ -162,9 +249,9 @@ pub(crate) fn encode_step(
 /// output for the same steps in the same order.
 pub(crate) fn encode(t: &TraceFile) -> Result<Vec<u8>> {
     let mut out = encode_header(&t.network)?;
-    let mut prev: HashMap<SlotKey, Bitmap> = HashMap::new();
+    let mut chain = ChainState::new();
     for s in &t.steps {
-        encode_step(s, &mut prev, &mut out)?;
+        encode_step(s, &mut chain, &mut out)?;
     }
     Ok(out)
 }
@@ -174,14 +261,14 @@ pub(crate) fn encode(t: &TraceFile) -> Result<Vec<u8>> {
 // ---------------------------------------------------------------------------
 
 /// Incremental v4 writer: open once, [`TraceWriter::append`] one step at
-/// a time, [`TraceWriter::finish`]. Memory stays bounded by *one* step's
-/// maps (the delta-base table) no matter how many steps the run
-/// captures — the whole point of the v4 container for long `agos train`
-/// runs, where the v3 path had to hold every step's `StepTrace` in a
-/// `TraceFile` until the end just to serialize it.
+/// a time, [`TraceWriter::finish`]. Memory stays bounded by the delta
+/// bases — about two step groups' worth of maps — no matter how many
+/// steps the run captures: the whole point of the v4 container for long
+/// `agos train` runs, where the v3 path had to hold every step's
+/// `StepTrace` in a `TraceFile` until the end just to serialize it.
 pub struct TraceWriter {
     out: std::io::BufWriter<std::fs::File>,
-    prev: HashMap<SlotKey, Bitmap>,
+    chain: ChainState,
     steps: usize,
 }
 
@@ -195,14 +282,14 @@ impl TraceWriter {
             .with_context(|| format!("creating {}", path.display()))?;
         let mut out = std::io::BufWriter::new(file);
         out.write_all(&encode_header(network)?)?;
-        Ok(TraceWriter { out, prev: HashMap::new(), steps: 0 })
+        Ok(TraceWriter { out, chain: ChainState::new(), steps: 0 })
     }
 
     /// Append one step record. Steps must arrive in capture order — the
     /// delta chain is positional, exactly like the v3 JSON layout.
     pub fn append(&mut self, step: &StepTrace) -> Result<()> {
         let mut buf = Vec::new();
-        encode_step(step, &mut self.prev, &mut buf)?;
+        encode_step(step, &mut self.chain, &mut buf)?;
         self.out.write_all(&buf)?;
         self.steps += 1;
         Ok(())
@@ -276,7 +363,12 @@ impl<'a> Reader<'a> {
 /// Decode one payload section into a `Bitmap`. Raw sections become the
 /// bitmap's word storage directly (one `Vec<u64>` allocation, no
 /// per-word re-parse); RLE/delta runs expand straight into words.
-fn decode_payload(r: &mut Reader, what: &str, prev: Option<&Bitmap>) -> Result<Bitmap> {
+fn decode_payload(
+    r: &mut Reader,
+    what: &str,
+    prev: Option<&Bitmap>,
+    prev_img: Option<&Bitmap>,
+) -> Result<Bitmap> {
     let c = r.u32(what)? as usize;
     let h = r.u32(what)? as usize;
     let w = r.u32(what)? as usize;
@@ -299,24 +391,31 @@ fn decode_payload(r: &mut Reader, what: &str, prev: Option<&Bitmap>) -> Result<B
             Bitmap::from_words(shape, words).context(what.to_string())
         }
         ENC_RLE => Bitmap::decode_rle_bin(shape, data).context(what.to_string()),
-        ENC_DELTA => {
-            let prev = prev
-                .with_context(|| format!("{what}: delta payload without a previous step's map"))?;
+        ENC_DELTA | ENC_DELTA_IMG => {
+            let base = if enc == ENC_DELTA { prev } else { prev_img };
+            let role = if enc == ENC_DELTA {
+                "a previous same-slot map"
+            } else {
+                "a same-position map in the previous step group"
+            };
+            let base =
+                base.with_context(|| format!("{what}: delta payload without {role}"))?;
             anyhow::ensure!(
-                prev.shape == shape,
-                "{what}: delta shape {shape} vs previous step's {}",
-                prev.shape
+                base.shape == shape,
+                "{what}: delta shape {shape} vs base's {}",
+                base.shape
             );
-            Ok(Bitmap::decode_rle_bin(shape, data).context(what.to_string())?.xor(prev))
+            Ok(Bitmap::decode_rle_bin(shape, data).context(what.to_string())?.xor(base))
         }
         other => anyhow::bail!("{what}: unknown payload encoding {other}"),
     }
 }
 
 /// Decode one step body (the bytes inside the length frame).
-fn decode_step(body: &[u8], si: usize, prev: &mut HashMap<SlotKey, Bitmap>) -> Result<StepTrace> {
+fn decode_step(body: &[u8], si: usize, chain: &mut ChainState) -> Result<StepTrace> {
     let r = &mut Reader::new(body);
     let step = r.u64("step")? as usize;
+    chain.enter_record(step);
     let loss = r.f64("loss")?;
     let n_layers = r.u16("layer count")? as usize;
     let mut layers = Vec::with_capacity(n_layers);
@@ -331,8 +430,11 @@ fn decode_step(body: &[u8], si: usize, prev: &mut HashMap<SlotKey, Bitmap>) -> R
             }
             let what = format!("step {si} layer '{name}' {slot}");
             let key = (name.clone(), slot);
-            let b = decode_payload(r, &what, prev.get(&key))?;
-            prev.insert(key, b.clone());
+            let b = {
+                let (prev, prev_img) = chain.bases(&key);
+                decode_payload(r, &what, prev, prev_img)?
+            };
+            chain.record(key, b.clone());
             Ok(Some(b))
         };
         let act_bitmap = slot("act_bitmap", flags & FLAG_ACT != 0)?;
@@ -374,14 +476,14 @@ pub(crate) fn decode(bytes: &[u8], lenient: bool) -> Result<(TraceFile, Vec<Stri
     );
     let network = r.str("network name")?.to_string();
     let mut warnings = Vec::new();
-    let mut prev: HashMap<SlotKey, Bitmap> = HashMap::new();
+    let mut chain = ChainState::new();
     let mut steps = Vec::new();
     while r.remaining() > 0 {
         let si = steps.len();
         let step = (|| -> Result<StepTrace> {
             let len = r.u32("step frame")? as usize;
             let body = r.take(len, "step body")?;
-            decode_step(body, si, &mut prev)
+            decode_step(body, si, &mut chain)
         })();
         match step {
             Ok(s) => steps.push(s),
@@ -530,16 +632,93 @@ mod tests {
         let shape = Shape::new(2, 16, 16);
         let b = Bitmap::sample(shape, 0.5, &mut Pcg32::new(7));
         let mut out = Vec::new();
-        encode_payload(&b, None, &mut out).unwrap();
+        encode_payload(&b, None, None, &mut out).unwrap();
         assert_eq!(out[12], ENC_RAW, "enc byte");
         let n_words = shape.len().div_ceil(64);
         assert_eq!(out.len(), 12 + 1 + 4 + n_words * 8);
         let (b2, rest) = {
             let r = &mut Reader::new(&out);
-            let b2 = decode_payload(r, "p", None).unwrap();
+            let b2 = decode_payload(r, "p", None, None).unwrap();
             (b2, r.remaining())
         };
         assert_eq!(b2, b);
         assert_eq!(rest, 0);
+    }
+
+    #[test]
+    fn payload_picks_the_image_base_only_when_strictly_smaller() {
+        let shape = Shape::new(2, 16, 16);
+        let mut rng = Pcg32::new(13);
+        let prev = Bitmap::sample(shape, 0.5, &mut rng);
+        let cur = Bitmap::sample(shape, 0.5, &mut rng);
+        let img_base = {
+            let mut b = cur.clone();
+            b.set(0, 0, 0, !b.get(0, 0, 0));
+            b
+        };
+        // The slot chain is uncorrelated, the image base one bit away:
+        // only the image delta beats RLE/raw, so tag 3 must be chosen
+        // and must decode back through the same base.
+        let mut out = Vec::new();
+        encode_payload(&cur, Some(&prev), Some(&img_base), &mut out).unwrap();
+        assert_eq!(out[12], ENC_DELTA_IMG, "enc byte");
+        let r = &mut Reader::new(&out);
+        assert_eq!(decode_payload(r, "p", Some(&prev), Some(&img_base)).unwrap(), cur);
+        assert_eq!(r.remaining(), 0);
+        // Identical bases tie on delta size: the lower tag (2) must
+        // win, keeping single-image traces byte-identical to the
+        // pre-group encoder.
+        let mut out = Vec::new();
+        encode_payload(&cur, Some(&img_base), Some(&img_base), &mut out).unwrap();
+        assert_eq!(out[12], ENC_DELTA, "ties keep the lower tag");
+    }
+
+    #[test]
+    fn image_aligned_delta_beats_the_slot_chain_for_grouped_captures() {
+        // Two images per step: each image's map evolves by one bit per
+        // step, but the images are independent samples. The tag-2 base
+        // (most recent same-slot = the *other* image) is uncorrelated;
+        // the tag-3 base (same image, previous group) is one bit away.
+        let shape = Shape::new(4, 8, 8);
+        let mut rng = Pcg32::new(11);
+        let a0 = Bitmap::sample(shape, 0.5, &mut rng);
+        let b0 = Bitmap::sample(shape, 0.5, &mut rng);
+        let mut a1 = a0.clone();
+        a1.set(0, 0, 0, !a1.get(0, 0, 0));
+        let mut b1 = b0.clone();
+        b1.set(0, 0, 1, !b1.get(0, 0, 1));
+        let rec = |step: usize, loss: f64, b: &Bitmap| StepTrace {
+            step,
+            loss,
+            layers: vec![LayerTrace::from_act("relu1", b.clone())],
+        };
+        let grouped = TraceFile {
+            network: "agos_cnn".into(),
+            steps: vec![rec(0, 2.0, &a0), rec(0, 2.0, &b0), rec(1, 1.9, &a1), rec(1, 1.9, &b1)],
+            format: TraceFormat::V4,
+        };
+        // The same maps under distinct step values form no groups, so
+        // only the (uncorrelated) slot chain is available.
+        let ungrouped = TraceFile {
+            steps: grouped
+                .steps
+                .iter()
+                .enumerate()
+                .map(|(i, s)| StepTrace { step: i, ..s.clone() })
+                .collect(),
+            ..grouped.clone()
+        };
+        let gb = encode(&grouped).unwrap();
+        let ub = encode(&ungrouped).unwrap();
+        assert!(
+            gb.len() < ub.len(),
+            "image-aligned deltas must shrink the grouped capture ({} vs {} bytes)",
+            gb.len(),
+            ub.len()
+        );
+        let (t2, warnings) = decode(&gb, false).unwrap();
+        assert!(warnings.is_empty());
+        assert_eq!(t2, grouped, "grouped roundtrip is bit-exact");
+        assert_eq!(decode(&ub, false).unwrap().0, ungrouped);
     }
 }

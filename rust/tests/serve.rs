@@ -1,0 +1,177 @@
+//! `agos serve` end-to-end (ISSUE 8 acceptance): a real server on a real
+//! Unix socket, driven through the client library.
+//!
+//! * **Byte identity**: a served `cosim` / `sweep` result is
+//!   byte-identical to the file the cold CLI writes with `--out` for the
+//!   same request — the determinism contract extended to the service.
+//! * **One computation**: duplicate requests — concurrent (in-flight
+//!   dedup) or sequential (resident sweep cache) — never re-simulate:
+//!   the resident cache's miss counter stays at one grid's worth.
+//! * **Lifecycle**: a live socket refuses a second server, a stale
+//!   socket file is reclaimed, and `shutdown` stops the serve loop and
+//!   removes the socket.
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use agos::config::BitmapPattern;
+use agos::nn::zoo;
+use agos::serve::{Client, ServeOptions, Server};
+use agos::sparsity::{capture_synthetic_trace, SparsityModel};
+use agos::util::json::Json;
+
+fn sv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// A per-test scratch dir (pid-qualified so parallel `cargo test`
+/// processes never collide on the socket path).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("agos_serve_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start(socket: &PathBuf) -> (Server, ServeOptions) {
+    let opts = ServeOptions {
+        socket: socket.clone(),
+        jobs: 1,
+        workers: 4,
+        cache_path: None,
+    };
+    (Server::bind(opts.clone()).unwrap(), opts)
+}
+
+#[test]
+fn served_results_match_cold_cli_byte_for_byte_and_share_work() {
+    let dir = scratch("e2e");
+    let traces = dir.join("traces.trace.bin");
+    capture_synthetic_trace(
+        &zoo::agos_cnn(),
+        &SparsityModel::synthetic(0xA605),
+        2,
+        BitmapPattern::Blobs,
+        2,
+    )
+    .save(&traces)
+    .unwrap();
+
+    // Cold baselines, written by the ordinary CLI in this process.
+    let cold_cosim = dir.join("cold-cosim.json");
+    let cold_sweep = dir.join("cold-sweep.json");
+    let tr = traces.to_str().unwrap();
+    assert_eq!(
+        agos::cli::run(&sv(&[
+            "cosim", "--traces", tr, "--replay", "--backend", "exact", "--batch", "2",
+            "--exact-cap", "16", "--jobs", "2", "--out", cold_cosim.to_str().unwrap(),
+        ]))
+        .unwrap(),
+        0
+    );
+    assert_eq!(
+        agos::cli::run(&sv(&[
+            "sweep", "--networks", "agos_cnn", "--schemes", "dc,in+out+wr", "--batch", "1",
+            "--jobs", "2", "--cache", "none", "--out", cold_sweep.to_str().unwrap(),
+        ]))
+        .unwrap(),
+        0
+    );
+    let cold_cosim = std::fs::read_to_string(&cold_cosim).unwrap();
+    let cold_sweep = std::fs::read_to_string(&cold_sweep).unwrap();
+
+    let socket = dir.join("agos.sock");
+    let (server, _) = start(&socket);
+    let state = server.state();
+    let handle = std::thread::spawn(move || server.run());
+
+    let req = Json::parse(&format!(
+        r#"{{"cmd":"cosim","traces":"{tr}","replay":true,"backend":"exact","batch":2,"exact_cap":16}}"#
+    ))
+    .unwrap();
+
+    // First contact: a concurrent duplicate pair, each on its own
+    // connection. Whether they overlap (in-flight dedup) or not (sweep
+    // cache), both must get the cold CLI's exact bytes.
+    let (a, b) = {
+        let spawn_one = |req: Json, socket: PathBuf| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect_retry(&socket, Duration::from_secs(10)).unwrap();
+                c.request(&req).unwrap()
+            })
+        };
+        let ta = spawn_one(req.clone(), socket.clone());
+        let tb = spawn_one(req.clone(), socket.clone());
+        (ta.join().unwrap(), tb.join().unwrap())
+    };
+    assert_eq!(a.pretty(), cold_cosim, "served cosim == cold `--out` bytes");
+    assert_eq!(b.pretty(), cold_cosim, "both duplicates get identical bytes");
+
+    // One four-scheme grid was simulated, total, for both requests.
+    assert_eq!(state.sweep_cache().misses(), 4, "duplicates must share one computation");
+
+    let mut client = Client::connect(&socket).unwrap();
+
+    // Sequential repeat: resident warm state answers without simulating.
+    assert_eq!(client.request(&req).unwrap().pretty(), cold_cosim);
+    assert_eq!(state.sweep_cache().misses(), 4, "warm repeat must not re-simulate");
+
+    // Served sweep, same byte-identity contract.
+    let sweep_req = Json::parse(
+        r#"{"cmd":"sweep","networks":"agos_cnn","schemes":"dc,in+out+wr","batch":1}"#,
+    )
+    .unwrap();
+    assert_eq!(client.request(&sweep_req).unwrap().pretty(), cold_sweep);
+
+    // Ping reports the resident state; the trace bank is warm.
+    let ping = client.request(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+    assert_eq!(ping.get("sim_rev").as_u64(), Some(6));
+    let banks = match ping.get("banks") {
+        Json::Arr(rows) => rows.clone(),
+        other => panic!("banks must be an array, got {}", other.dump()),
+    };
+    assert_eq!(banks.len(), 1, "one trace file stays resident");
+    assert_eq!(banks[0].get("network").as_str(), Some("agos_cnn"));
+    assert!(banks[0].get("replay_words").as_u64().unwrap() > 0);
+
+    // A bad request errors in-band and the session survives it.
+    let err = client.request(&Json::parse(r#"{"cmd":"nonsense"}"#).unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown cmd"), "{err:#}");
+    assert_eq!(client.request(&req).unwrap().pretty(), cold_cosim);
+
+    // While the server lives, its socket refuses a second bind.
+    let second = Server::bind(ServeOptions {
+        socket: socket.clone(),
+        jobs: 1,
+        workers: 1,
+        cache_path: None,
+    });
+    let msg = format!("{:#}", second.err().expect("live socket must refuse a second server"));
+    assert!(msg.contains("live server"), "{msg}");
+
+    let bye = client.request(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap()).unwrap();
+    assert_eq!(bye.get("shutting_down").as_bool(), Some(true));
+    handle.join().unwrap().unwrap();
+    assert!(!socket.exists(), "shutdown must remove the socket file");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_socket_file_is_reclaimed_on_bind() {
+    let dir = scratch("stale");
+    let socket = dir.join("stale.sock");
+    // A leftover path nothing listens on — the crashed-server case.
+    std::fs::write(&socket, b"").unwrap();
+    let (server, _) = start(&socket);
+    let state = server.state();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect_retry(&socket, Duration::from_secs(10)).unwrap();
+    let ping = client.request(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+    assert_eq!(ping.get("service").as_str(), Some("agos"));
+    assert_eq!(ping.get("jobs").as_u64(), Some(state.jobs() as u64));
+    client.request(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap()).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -5,17 +5,21 @@
 //! * **Cache**: the same combo requested twice simulates exactly once.
 //! * **Determinism**: results are independent of the `--jobs` level and
 //!   of batch iteration order (per-image derived RNG streams).
+//! * **Shared banks** (ISSUE 8): concurrent runners over one
+//!   `Arc<ReplayBank>`, one `Arc<GatherPlanCache>` and one shared
+//!   `Arc<SweepCache>` — the resident-service topology — produce
+//!   bit-identical results to a sequential run with private state.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use agos::config::{AcceleratorConfig, Scheme, SimOptions};
+use agos::config::{AcceleratorConfig, BitmapPattern, ExecBackend, Scheme, SimOptions};
 use agos::nn::zoo;
 use agos::sim::{
-    build_image_tasks, image_stream, simulate_image, simulate_network, NetworkSimResult,
-    SweepPlan, SweepRunner,
+    build_image_tasks, image_stream, simulate_image, simulate_network, GatherPlanCache,
+    NetworkSimResult, ReplayBank, SweepCache, SweepPlan, SweepRunner,
 };
-use agos::sparsity::SparsityModel;
+use agos::sparsity::{capture_synthetic_trace, SparsityModel};
 
 fn assert_identical(a: &NetworkSimResult, b: &NetworkSimResult) {
     assert_eq!(a.network, b.network);
@@ -89,6 +93,69 @@ fn results_are_independent_of_jobs_level() {
     assert_eq!(serial.len(), threaded.len());
     for (a, b) in serial.iter().zip(&threaded) {
         assert_identical(a, b);
+    }
+}
+
+#[test]
+fn concurrent_sweeps_over_shared_banks_match_sequential() {
+    // The `agos serve` topology: every warm structure — replay bank,
+    // gather-plan cache, sweep cache — is one shared immutable instance
+    // behind an Arc, and two requests sweep through it at once.
+    let cfg = AcceleratorConfig::default();
+    let net = zoo::agos_cnn();
+    let model = SparsityModel::synthetic(0xA605);
+    let trace = capture_synthetic_trace(&net, &model, 2, BitmapPattern::Blobs, 2);
+    let bank = Arc::new(ReplayBank::from_trace(&net, &trace).unwrap());
+    let plans = Arc::new(GatherPlanCache::new());
+    let opts = SimOptions {
+        batch: 2,
+        backend: ExecBackend::Exact,
+        exact_outputs_per_tile: 8,
+        trace_fingerprint: Some(trace.fingerprint()),
+        replay: Some(bank.clone()),
+        gather_plans: Some(plans.clone()),
+        ..SimOptions::default()
+    };
+    let full = SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL, &cfg, &opts);
+
+    // Baseline: a sequential runner with private everything.
+    let sequential = SweepRunner::new(1).run(&full, &model);
+
+    // Two concurrent runners split the grid between them (disjoint keys,
+    // so the miss count below is deterministic) and race through the
+    // shared bank and plan cache at jobs=2 each.
+    let cache = Arc::new(SweepCache::new());
+    let halves = [
+        SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL[..2], &cfg, &opts),
+        SweepPlan::grid(std::slice::from_ref(&net), &Scheme::ALL[2..], &cfg, &opts),
+    ];
+    let (a, b) = std::thread::scope(|scope| {
+        let mut handles = halves.iter().map(|plan| {
+            let cache = cache.clone();
+            let model = &model;
+            scope.spawn(move || SweepRunner::with_cache(2, cache).run(plan, model))
+        });
+        let (ta, tb) = (handles.next().unwrap(), handles.next().unwrap());
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+    assert_eq!(cache.misses(), 4, "each combo simulated by exactly one runner");
+    assert_eq!(cache.hits(), 0);
+
+    let concurrent: Vec<_> = a.iter().chain(&b).collect();
+    assert_eq!(sequential.len(), concurrent.len());
+    for (s, c) in sequential.iter().zip(&concurrent) {
+        assert_identical(s, c);
+        // JSON form too: what a served response is built from.
+        assert_eq!(s.to_json().dump(), c.to_json().dump(), "{}", s.scheme.label());
+    }
+
+    // A third runner over the same cache re-requests the full grid and
+    // simulates nothing — the resident-service warm path.
+    let warm = SweepRunner::with_cache(2, cache.clone()).run(&full, &model);
+    assert_eq!(cache.misses(), 4, "warm re-request must not re-simulate");
+    assert_eq!(cache.hits(), 4);
+    for (s, w) in sequential.iter().zip(&warm) {
+        assert_identical(s, w);
     }
 }
 

@@ -7,7 +7,8 @@
 //! * **Codec**: the binary word-level RLE round-trips bit-identically
 //!   property-style (all-zero, all-ones, iid, blobbed, checkerboard),
 //!   and whole containers round-trip through `save`/`load` including
-//!   multi-step delta chains.
+//!   multi-step delta chains and multi-image step groups (where the
+//!   image-aligned tag-3 delta base must both round-trip and pay).
 //! * **Streaming**: `TraceWriter` appending one step at a time produces
 //!   the same bytes as the whole-file encode — the bounded-memory
 //!   capture path writes the identical container.
@@ -202,6 +203,72 @@ fn containers_roundtrip_through_save_and_load_with_delta_chains() {
         bytes,
         "streamed == whole-file encode"
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_image_groups_roundtrip_and_compress_with_image_aligned_deltas() {
+    let dir = std::env::temp_dir().join("agos_trace_v4_groups");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shape = Shape::new(8, 16, 16);
+    let mut rng = Pcg32::new(0x66);
+    // Four images drifting independently over three steps, captured
+    // step-major: the records of one step share its step value — the
+    // group shape `agos train --trace-images` writes.
+    let mut imgs: Vec<Bitmap> =
+        (0..4).map(|_| Bitmap::sample_blobs(shape, 0.06, 3, &mut rng)).collect();
+    let mut steps = Vec::new();
+    for step in 0..3usize {
+        for act in &imgs {
+            let grad = act.and(&Bitmap::sample(shape, 0.5, &mut rng));
+            steps.push(StepTrace {
+                step,
+                loss: 2.0 - step as f64 * 0.25,
+                layers: vec![LayerTrace::from_bitmaps("relu1", act.clone(), grad)],
+            });
+        }
+        for act in &mut imgs {
+            let flip = Bitmap::sample(shape, 0.01, &mut rng);
+            *act = act.xor(&flip);
+        }
+    }
+    let t = TraceFile { network: "agos_cnn".into(), format: TraceFormat::V4, steps };
+    let path = dir.join("groups.trace.bin");
+    t.save(&path).unwrap();
+    assert_eq!(TraceFile::load(&path).unwrap(), t, "bit-exact group round-trip");
+    // The streaming writer produces the identical container — its
+    // group-rotation bookkeeping must match the whole-file encoder's.
+    let stream_path = dir.join("groups-streamed.trace.bin");
+    let mut w = TraceWriter::create(&stream_path, &t.network).unwrap();
+    for s in &t.steps {
+        w.append(s).unwrap();
+    }
+    assert_eq!(w.finish().unwrap(), t.steps.len());
+    assert_eq!(std::fs::read(&stream_path).unwrap(), std::fs::read(&path).unwrap());
+    // Relabeling the records with distinct step values destroys the
+    // groups: each map's only delta base becomes the (uncorrelated)
+    // neighboring image. The image-aligned base must pay for itself.
+    let flat = TraceFile {
+        steps: t
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StepTrace { step: i, ..s.clone() })
+            .collect(),
+        ..t.clone()
+    };
+    let flat_path = dir.join("flat.trace.bin");
+    flat.save(&flat_path).unwrap();
+    let (grouped, ungrouped) = (
+        std::fs::metadata(&path).unwrap().len(),
+        std::fs::metadata(&flat_path).unwrap().len(),
+    );
+    assert!(
+        grouped < ungrouped,
+        "grouped capture ({grouped} bytes) must encode smaller than its ungrouped \
+relabeling ({ungrouped} bytes)"
+    );
+    assert_eq!(TraceFile::load(&flat_path).unwrap(), flat);
     std::fs::remove_dir_all(&dir).ok();
 }
 
