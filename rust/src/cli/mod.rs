@@ -21,6 +21,9 @@ use crate::config::{
 use crate::coordinator::{cosim_from_traces_owned, run_training_pipeline};
 use crate::nn::{zoo, Network, Phase};
 use crate::report::{generate, ReportCtx};
+use crate::scenario::{
+    adversarial_trace, scenario_report_json, trajectory_figure, AdversarialPattern, ScenarioFile,
+};
 use crate::sim::{simulate_network, sweep_report_json, SweepPlan, SweepRunner};
 use crate::sparsity::{analyze_network, capture_synthetic_trace_images, SparsityModel};
 use crate::trace::TraceFile;
@@ -78,6 +81,11 @@ a binary <out>.trace.bin sidecar with bounded memory)",
                     opt("pattern", "iid|blobs bitmap structure (default iid)"),
                     opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                     opt("out", "trace JSON path (default results/traces.json)"),
+                    opt(
+                        "scenario",
+                        "scenario JSON file: capture one trace per expanded point into --out \
+(a directory; the file owns --network/--seed — see docs/SCENARIOS.md)",
+                    ),
                 ],
             },
             Command {
@@ -101,6 +109,11 @@ a binary <out>.trace.bin sidecar with bounded memory)",
                 opts: vec![
                     opt("networks", "comma-separated names or 'all' (default all)"),
                     opt("schemes", "comma-separated schemes or 'all' (default all)"),
+                    opt(
+                        "scenario",
+                        "scenario JSON file: expand a generated family x sparsity phases through \
+the cached runner (the file owns --networks/--schemes/--seed — see docs/SCENARIOS.md)",
+                    ),
                     opt("batch", "batch size (default 16)"),
                     opt("seed", "sparsity model seed"),
                     opt("jobs", "worker threads (default: all cores)"),
@@ -381,6 +394,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<i32> {
 /// (`agos trace … && agos cosim --replay --backend exact …`). With
 /// artifacts built, `agos train --out` captures *real* payloads instead.
 fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
+    if let Some(path) = args.opt("scenario") {
+        return cmd_trace_scenario(args, path);
+    }
     let net = zoo::by_name(args.opt_or("network", "agos_cnn"))?;
     let steps = args.opt_usize("steps", 4)?;
     let images = args.opt_usize("trace-images", 1)?;
@@ -476,6 +492,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
+    if let Some(path) = args.opt("scenario") {
+        return cmd_sweep_scenario(args, path);
+    }
     let nets: Vec<Network> = zoo::by_list(args.opt_or("networks", "all"))?;
     let schemes: Vec<Scheme> = Scheme::parse_list(args.opt_or("schemes", "all"))?;
     let cfg = match args.opt("config") {
@@ -537,6 +556,119 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
         sweep_report_json(&nets, &schemes, &results, &opts).write_file(path)?;
         println!("wrote {}", path.display());
     }
+    Ok(0)
+}
+
+/// Reject flags whose axis the scenario file owns — a scenario is
+/// self-contained (same file ⇒ same results, whoever runs it), so the
+/// CLI must not be able to silently bend its expansion.
+fn reject_scenario_owned(args: &Args, owned: &[&str]) -> anyhow::Result<()> {
+    for name in owned {
+        anyhow::ensure!(
+            args.opt(name).is_none(),
+            "--scenario owns --{name}: the file is self-contained, edit it instead"
+        );
+    }
+    Ok(())
+}
+
+/// `agos sweep --scenario <file>`: expand the file into its (network ×
+/// phase × scheme) plan, run it through the cached runner, print the
+/// per-phase speedup trajectory, and write the scenario report at
+/// `--out` (a pure function of the file + request knobs — byte-identical
+/// at any `--jobs` level and to a served scenario `sweep` request).
+fn cmd_sweep_scenario(args: &Args, path: &str) -> anyhow::Result<i32> {
+    reject_scenario_owned(args, &["networks", "schemes", "seed"])?;
+    let scenario = ScenarioFile::load(Path::new(path))?;
+    let cfg = match args.opt("config") {
+        Some(path) => AcceleratorConfig::from_json(&Json::parse_file(Path::new(path))?)?,
+        None => AcceleratorConfig::default(),
+    };
+    let mut opts = SimOptions { batch: args.opt_usize("batch", 16)?, ..SimOptions::default() };
+    apply_backend_opts(&mut opts, args)?;
+    let ex = scenario.expand(&cfg, &opts)?;
+    let runner = SweepRunner::new(args.opt_usize("jobs", 0)?);
+    let cache_path = sweep_cache_path(args);
+    load_sweep_cache(&runner, &cache_path);
+
+    let t0 = std::time::Instant::now();
+    let results = ex.run(&runner);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    print!("{}", trajectory_figure(&ex, &results).render());
+    println!();
+    println!(
+        "scenario '{}' [{:016x}]: {} points x {} schemes = {} combos \
+({} simulated, {} cache hits) on {} threads [{}] in {elapsed:.2}s",
+        ex.name,
+        ex.fingerprint,
+        ex.points.len(),
+        ex.schemes.len(),
+        ex.plan.len(),
+        runner.cache().misses(),
+        runner.cache().hits(),
+        runner.jobs,
+        ex.opts.backend.label(),
+    );
+    save_sweep_cache(&runner, &cache_path);
+    if let Some(out) = args.opt("out") {
+        // Same contract as the plain sweep report: no jobs/elapsed
+        // fields in the file, timings stay on stdout above.
+        let path = Path::new(out);
+        scenario_report_json(&ex, &results).write_file(path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
+/// `agos trace --scenario <file>`: one trace file per expanded point,
+/// written into `--out` as a directory (`<network>_<phase>.json`, or
+/// `.trace.bin` under `--trace-format v4`). Synthetic points capture
+/// with the phase's scaled model; adversarial points write their
+/// pattern's exact map.
+fn cmd_trace_scenario(args: &Args, path: &str) -> anyhow::Result<i32> {
+    reject_scenario_owned(args, &["network", "seed"])?;
+    let scenario = ScenarioFile::load(Path::new(path))?;
+    let steps = args.opt_usize("steps", 4)?;
+    let images = args.opt_usize("trace-images", 1)?;
+    let format = TraceFormat::parse(args.opt_or("trace-format", "v3"))?;
+    let pattern = BitmapPattern::parse(args.opt_or("pattern", "iid"))?;
+    let blob_radius = args.opt_usize("blob-radius", 2)?;
+    let dir = PathBuf::from(args.opt_or("out", "results/scenario-traces"));
+    let points = scenario.points()?;
+    for p in &points {
+        let mut trace = match &p.replay {
+            // The point's phase *is* the pattern label for adversarial
+            // points — regenerate the exact map rather than unpacking
+            // the replay bank.
+            Some(_) => adversarial_trace(&p.network, AdversarialPattern::parse(&p.phase)?),
+            None => capture_synthetic_trace_images(
+                &p.network,
+                &p.model,
+                steps,
+                images,
+                pattern,
+                blob_radius,
+            ),
+        };
+        trace.format = format;
+        let ext = if format == TraceFormat::V4 { "trace.bin" } else { "json" };
+        let file = dir.join(format!("{}.{ext}", p.label.replace('@', "_")));
+        trace.save(&file)?;
+        println!(
+            "  {:<28} {} steps, fingerprint {:016x} -> {}",
+            p.label,
+            trace.steps.len(),
+            trace.fingerprint(),
+            file.display()
+        );
+    }
+    println!(
+        "scenario '{}': {} trace files in {}",
+        scenario.name,
+        points.len(),
+        dir.display()
+    );
     Ok(0)
 }
 
@@ -1200,6 +1332,107 @@ mod tests {
             0,
             "corrupt payloads must degrade, not die"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A small, fast scenario: one zoo network, two phases, two schemes.
+    const TEST_SCENARIO: &str = r#"{
+        "version": 1, "name": "cli_test", "seed": 11,
+        "generators": [{"kind": "zoo", "networks": "agos_cnn"}],
+        "schedule": {"phases": [
+            {"name": "early", "scale": 0.6}, {"name": "late", "scale": 1.3}]},
+        "schemes": "dc,in+out+wr"
+    }"#;
+
+    #[test]
+    fn scenario_sweep_out_is_identical_across_jobs_levels() {
+        // The scenario report is a pure function of the file + request
+        // knobs: the same file at --jobs 1 and --jobs 4 writes
+        // byte-identical bytes (the CI smoke diffs exactly this).
+        let dir = std::env::temp_dir().join("agos_cli_scenario_sweep_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let scn = dir.join("scenario.json");
+        std::fs::write(&scn, TEST_SCENARIO).unwrap();
+        let scn_s = scn.to_string_lossy().to_string();
+        let out = |jobs: &str| dir.join(format!("scn-j{jobs}.json"));
+        for jobs in ["1", "4"] {
+            let out_s = out(jobs).to_string_lossy().to_string();
+            assert_eq!(
+                run(&sv(&[
+                    "sweep", "--scenario", &scn_s, "--batch", "1", "--jobs", jobs, "--cache",
+                    "none", "--out", &out_s,
+                ]))
+                .unwrap(),
+                0
+            );
+        }
+        let a = std::fs::read(out("1")).unwrap();
+        let b = std::fs::read(out("4")).unwrap();
+        assert_eq!(a, b, "scenario --out must not depend on --jobs");
+        let text = String::from_utf8(a).unwrap();
+        assert!(text.contains("\"trajectory\""), "report carries the trajectory figure");
+        assert!(text.contains("\"early\"") && text.contains("\"late\""), "both phases ran");
+        assert!(!text.contains("elapsed"), "timings belong on stdout, not in the report");
+
+        // The file owns the axes the flags would bend.
+        for owned in [["--networks", "agos_cnn"], ["--schemes", "dc"], ["--seed", "7"]] {
+            assert!(
+                run(&sv(&["sweep", "--scenario", &scn_s, owned[0], owned[1]])).is_err(),
+                "{} must conflict with --scenario",
+                owned[0]
+            );
+        }
+        // A missing or malformed scenario file is a loud error.
+        assert!(run(&sv(&["sweep", "--scenario", "/nonexistent/s.json"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scenario_trace_writes_one_file_per_point() {
+        use crate::trace::TraceFile;
+        let dir = std::env::temp_dir().join("agos_cli_scenario_trace_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let scn = dir.join("scenario.json");
+        // One synthetic point (zoo, default single-phase schedule) plus
+        // three adversarial pattern points.
+        std::fs::write(
+            &scn,
+            r#"{"version": 1, "seed": 11, "generators": [
+                {"kind": "zoo", "networks": "agos_cnn"},
+                {"kind": "adversarial", "network": "agos_cnn"}]}"#,
+        )
+        .unwrap();
+        let scn_s = scn.to_string_lossy().to_string();
+        let out_dir = dir.join("traces");
+        let out_s = out_dir.to_string_lossy().to_string();
+        assert_eq!(
+            run(&sv(&[
+                "trace", "--scenario", &scn_s, "--steps", "1", "--out", &out_s,
+            ]))
+            .unwrap(),
+            0
+        );
+        let expected = [
+            "agos_cnn_base.json",
+            "agos_cnn_all_dense.json",
+            "agos_cnn_checkerboard.json",
+            "agos_cnn_channel_collapsed.json",
+        ];
+        for name in expected {
+            let t = TraceFile::load(&out_dir.join(name))
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(t.has_bitmaps(), "{name} must carry payloads");
+            assert!(t.identity_holds(), "{name}");
+        }
+        assert_eq!(
+            std::fs::read_dir(&out_dir).unwrap().count(),
+            expected.len(),
+            "exactly one file per expanded point"
+        );
+        // --network conflicts with --scenario here too.
+        assert!(run(&sv(&["trace", "--scenario", &scn_s, "--network", "vgg16"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -177,6 +177,13 @@ pub struct SimOptions {
     /// analytic backend. A live handle, not serialized; its trace
     /// fingerprint is folded into `fingerprint()`.
     pub replay: Option<Arc<ReplayBank>>,
+    /// Content fingerprint of the scenario file a combo was expanded
+    /// from (`scenario::ScenarioFile::fingerprint`), if any — folded
+    /// into `fingerprint()` exactly like `trace_fingerprint`, so
+    /// scenario-expanded combos can never alias a hand-written grid (or
+    /// a different scenario) in the sweep cache even when every other
+    /// knob coincides.
+    pub scenario_fingerprint: Option<u64>,
     /// Shared gather-plan cache for the exact backend's replayed
     /// windowed gathers (`sim::plan`): precomputed segment schedules
     /// plus RLE-run zero-skip, shared across images, steps, schemes and
@@ -201,6 +208,7 @@ impl Default for SimOptions {
             trace_fingerprint: None,
             gather: GatherMode::Geometry,
             replay: None,
+            scenario_fingerprint: None,
             gather_plans: Some(Arc::new(GatherPlanCache::new())),
         }
     }
@@ -238,6 +246,10 @@ impl SimOptions {
             None => h.put(0),
             Some(bank) => h.put(1).put(bank.fingerprint()).put(self.gather.tag()),
         };
+        match self.scenario_fingerprint {
+            None => h.put(0),
+            Some(fp) => h.put(1).put(fp),
+        };
         h.finish()
     }
 
@@ -261,6 +273,9 @@ impl SimOptions {
         }
         if let Some(bank) = &self.replay {
             j.set("replay_trace_fingerprint", format!("{:016x}", bank.fingerprint()).into());
+        }
+        if let Some(fp) = self.scenario_fingerprint {
+            j.set("scenario_fingerprint", format!("{fp:016x}").into());
         }
         j
     }
@@ -301,7 +316,7 @@ impl SimOptions {
                 // Provenance stamps written by to_json; a parsed options
                 // object cannot resurrect the live bank, so they are
                 // accepted and dropped rather than silently keyed on.
-                "trace_fingerprint" | "replay_trace_fingerprint" => {}
+                "trace_fingerprint" | "replay_trace_fingerprint" | "scenario_fingerprint" => {}
                 other => anyhow::bail!("unknown sim option '{other}'"),
             }
         }
@@ -344,6 +359,8 @@ mod tests {
             SimOptions { pattern: BitmapPattern::Blobs, ..base.clone() },
             SimOptions { trace_fingerprint: Some(0), ..base.clone() },
             SimOptions { trace_fingerprint: Some(7), ..base.clone() },
+            SimOptions { scenario_fingerprint: Some(0), ..base.clone() },
+            SimOptions { scenario_fingerprint: Some(7), ..base.clone() },
         ];
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(v.fingerprint(), base.fingerprint(), "variant {i}");
@@ -358,6 +375,16 @@ mod tests {
         assert_ne!(
             SimOptions { trace_fingerprint: Some(1), ..base.clone() }.fingerprint(),
             SimOptions { trace_fingerprint: Some(2), ..base.clone() }.fingerprint()
+        );
+        // Ditto scenario fingerprints — and the two provenance folds are
+        // positionally distinct (a trace fp can't impersonate a scenario fp).
+        assert_ne!(
+            SimOptions { scenario_fingerprint: Some(1), ..base.clone() }.fingerprint(),
+            SimOptions { scenario_fingerprint: Some(2), ..base.clone() }.fingerprint()
+        );
+        assert_ne!(
+            SimOptions { trace_fingerprint: Some(5), ..base.clone() }.fingerprint(),
+            SimOptions { scenario_fingerprint: Some(5), ..base.clone() }.fingerprint()
         );
     }
 
@@ -426,6 +453,7 @@ mod tests {
             blob_radius: 5,
             gather: GatherMode::Streaming,
             trace_fingerprint: Some(0xABCD),
+            scenario_fingerprint: Some(0x5CE0),
             ..SimOptions::default()
         };
         let o2 = SimOptions::from_json(&o.to_json()).unwrap();
@@ -437,6 +465,7 @@ mod tests {
         assert_eq!(o2.gather, GatherMode::Streaming);
         // Provenance stamps are not resurrected into live state.
         assert_eq!(o2.trace_fingerprint, None);
+        assert_eq!(o2.scenario_fingerprint, None);
         assert!(o2.replay.is_none());
     }
 }

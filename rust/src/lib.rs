@@ -23,6 +23,7 @@ pub mod config;
 pub mod nn;
 pub mod sparsity;
 pub mod sim;
+pub mod scenario;
 pub mod baselines;
 pub mod trace;
 pub mod runtime;

@@ -24,6 +24,20 @@ pub use vgg16::vgg16;
 
 use super::Network;
 
+/// Canonical (non-alias) names [`by_name`] accepts — the five paper
+/// networks in reporting order plus the two in-house ones. Error
+/// messages and docs quote this list so it stays the single source of
+/// truth for what a zoo reference may spell.
+pub const VALID_NAMES: [&str; 7] = [
+    "vgg16",
+    "resnet18",
+    "googlenet",
+    "densenet121",
+    "mobilenet",
+    "agos_cnn",
+    "agos_resnet",
+];
+
 /// All five evaluated networks, in the paper's reporting order.
 pub fn all_networks() -> Vec<Network> {
     vec![vgg16(), resnet18(), googlenet(), densenet121(), mobilenet_v1()]
@@ -39,21 +53,32 @@ pub fn by_name(name: &str) -> anyhow::Result<Network> {
         "mobilenet" | "mobilenetv1" | "mobilenet-v1" | "mobilenet_v1" => Ok(mobilenet_v1()),
         "agos_cnn" | "agos-cnn" | "agos" => Ok(agos_cnn()),
         "agos_resnet" | "agos-resnet" => Ok(agos_resnet()),
-        other => anyhow::bail!(
-            "unknown network '{other}' \
-             (vgg16|resnet18|googlenet|densenet121|mobilenet|agos_cnn|agos_resnet)"
-        ),
+        other => anyhow::bail!("unknown network '{other}' (valid: {})", VALID_NAMES.join(", ")),
     }
 }
 
 /// Parse a comma-separated network list; the literal `"all"` selects
-/// [`all_networks`]. Shared by the CLI's `--networks` and the served
-/// `sweep` request so both spell the same grids identically.
+/// [`all_networks`]. Shared by the CLI's `--networks`, the served
+/// `sweep` request and scenario `zoo`/`adversarial` generators so all
+/// spell the same grids identically. An unknown entry is rejected with
+/// the offending name, the list it appeared in, and every valid name —
+/// scenario files reference zoo entries by name, so the error must
+/// carry enough context to fix the file without reading the source.
 pub fn by_list(spec: &str) -> anyhow::Result<Vec<Network>> {
-    if spec == "all" {
+    if spec.trim() == "all" {
         return Ok(all_networks());
     }
-    spec.split(',').map(|n| by_name(n.trim())).collect()
+    spec.split(',')
+        .map(|n| {
+            let n = n.trim();
+            by_name(n).map_err(|_| {
+                anyhow::anyhow!(
+                    "unknown network '{n}' in list '{spec}' (valid: {}, or 'all')",
+                    VALID_NAMES.join(", ")
+                )
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -75,6 +100,26 @@ mod tests {
         }
         assert!(by_name("AGOS_CNN").is_ok(), "case-insensitive");
         assert!(by_name("alexnet").is_err());
+    }
+
+    #[test]
+    fn by_list_rejects_unknown_names_with_full_context() {
+        let err = by_list("vgg16,alexnet").unwrap_err().to_string();
+        assert!(err.contains("'alexnet'"), "offending entry named: {err}");
+        assert!(err.contains("'vgg16,alexnet'"), "full list quoted: {err}");
+        for valid in VALID_NAMES {
+            assert!(err.contains(valid), "'{valid}' missing from error: {err}");
+        }
+        assert!(err.contains("'all'"), "the 'all' shorthand is advertised: {err}");
+    }
+
+    #[test]
+    fn by_list_parses_lists_and_all() {
+        assert_eq!(by_list("vgg16, resnet18").unwrap().len(), 2);
+        assert_eq!(by_list(" all ").unwrap().len(), all_networks().len());
+        for name in VALID_NAMES {
+            assert!(by_list(name).is_ok(), "{name}");
+        }
     }
 
     #[test]

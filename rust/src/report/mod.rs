@@ -2,12 +2,19 @@
 //! per-experiment index in DESIGN.md §4), each returning a [`Figure`]
 //! that renders as an aligned text table and serializes to JSON under
 //! `results/`.
+//!
+//! Scenario sweeps emit one additional, non-paper artifact through the
+//! same container: the per-phase speedup trajectory
+//! ([`scenario_trajectory`], id `trajectory`), parameterized by a
+//! scenario file rather than a fixed figure id — which is why it hangs
+//! off `agos sweep --scenario` instead of `generate`.
 
 mod ablations;
 mod figure;
 mod figures;
 mod tables;
 
+pub use crate::scenario::trajectory_figure as scenario_trajectory;
 pub use figure::Figure;
 pub use figures::{
     fig11a_vgg, fig11b_googlenet, fig12a_densenet, fig12b_mobilenet, fig13_resnet,

@@ -1,0 +1,183 @@
+//! Deterministic adversarial sparsity patterns — property-test fodder
+//! for both backends.
+//!
+//! Sampled bitmaps exercise the statistical middle of the simulator;
+//! these patterns pin its edges: `all_dense` (no sparsity to exploit —
+//! sparse schemes must degrade gracefully toward DC), `checkerboard`
+//! (maximal spatial interleaving at exactly half density — the worst
+//! case for run-length zero-skip, whose runs all have length one), and
+//! `channel_collapsed` (whole channels dead, the other half fully dense
+//! — maximal lane imbalance for the WDU to chew on).
+//!
+//! A pattern enters a simulation the way real captures do: as a
+//! [`TraceFile`] replayed through `sim::ReplayBank`, so both backends
+//! execute it with **zero RNG draws**. The gradient map is set equal to
+//! the activation map, making footprint(grad) ⊆ footprint(act) hold by
+//! construction; residual graphs additionally get post-Add footprints
+//! via the same OR-propagation synthetic capture uses.
+
+use std::collections::HashMap;
+
+use crate::nn::{LayerId, LayerKind, Network, Shape};
+use crate::sparsity::{synth_footprint, Bitmap};
+use crate::trace::{LayerTrace, StepTrace, TraceFile};
+
+/// The adversarial patterns a scenario's `adversarial` generator may
+/// name (JSON spellings are the [`label`](AdversarialPattern::label)s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AdversarialPattern {
+    /// Every element non-zero: sparsity machinery armed, nothing to skip.
+    AllDense,
+    /// `(c + y + x) % 2 == 0`: exactly half density, runs of length one.
+    Checkerboard,
+    /// Even channels fully dense, odd channels entirely zero.
+    ChannelCollapsed,
+}
+
+impl AdversarialPattern {
+    pub const ALL: [AdversarialPattern; 3] = [
+        AdversarialPattern::AllDense,
+        AdversarialPattern::Checkerboard,
+        AdversarialPattern::ChannelCollapsed,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdversarialPattern::AllDense => "all_dense",
+            AdversarialPattern::Checkerboard => "checkerboard",
+            AdversarialPattern::ChannelCollapsed => "channel_collapsed",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<AdversarialPattern> {
+        match s.to_ascii_lowercase().as_str() {
+            "all_dense" | "dense" => Ok(AdversarialPattern::AllDense),
+            "checkerboard" | "checker" => Ok(AdversarialPattern::Checkerboard),
+            "channel_collapsed" | "channel" => Ok(AdversarialPattern::ChannelCollapsed),
+            other => anyhow::bail!(
+                "unknown adversarial pattern '{other}' \
+                 (all_dense|checkerboard|channel_collapsed)"
+            ),
+        }
+    }
+}
+
+/// The pattern's bitmap at one feature-map shape. Pure function of
+/// (pattern, shape) — no RNG anywhere.
+pub fn pattern_bitmap(pattern: AdversarialPattern, shape: Shape) -> Bitmap {
+    match pattern {
+        AdversarialPattern::AllDense => Bitmap::ones(shape),
+        AdversarialPattern::Checkerboard | AdversarialPattern::ChannelCollapsed => {
+            let mut b = Bitmap::zeros(shape);
+            for c in 0..shape.c {
+                for y in 0..shape.h {
+                    for x in 0..shape.w {
+                        let nz = match pattern {
+                            AdversarialPattern::Checkerboard => (c + y + x) % 2 == 0,
+                            _ => c % 2 == 0,
+                        };
+                        if nz {
+                            b.set(c, y, x, true);
+                        }
+                    }
+                }
+            }
+            b
+        }
+    }
+}
+
+/// A single-step trace that replays `pattern` at every ReLU of `net`
+/// (grad ≡ act), with post-Add footprints on residual graphs — the
+/// in-memory equivalent of an `agos trace` capture, ready for
+/// `ReplayBank::from_trace`.
+pub fn adversarial_trace(net: &Network, pattern: AdversarialPattern) -> TraceFile {
+    let has_adds = net.layers().iter().any(|l| matches!(l.kind, LayerKind::Add));
+    let mut layers = Vec::new();
+    let mut relu_acts: HashMap<LayerId, Bitmap> = HashMap::new();
+    for l in net.layers() {
+        if !l.kind.is_relu() {
+            continue;
+        }
+        let act = pattern_bitmap(pattern, l.out);
+        if has_adds {
+            relu_acts.insert(l.id, act.clone());
+        }
+        layers.push(LayerTrace::from_bitmaps(&l.name, act.clone(), act));
+    }
+    if has_adds {
+        for l in net.layers() {
+            if matches!(l.kind, LayerKind::Add) {
+                layers.push(LayerTrace::from_act(&l.name, synth_footprint(net, l.id, &relu_acts)));
+            }
+        }
+    }
+    let mut trace = TraceFile::new(&net.name);
+    trace.steps.push(StepTrace { step: 0, loss: 0.0, layers });
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    #[test]
+    fn patterns_have_their_defining_densities() {
+        let shape = Shape::new(4, 6, 6);
+        let dense = pattern_bitmap(AdversarialPattern::AllDense, shape);
+        assert_eq!(dense.count_nz(), shape.len());
+        let checker = pattern_bitmap(AdversarialPattern::Checkerboard, shape);
+        assert_eq!(checker.count_nz(), shape.len() / 2);
+        let chan = pattern_bitmap(AdversarialPattern::ChannelCollapsed, shape);
+        assert_eq!(chan.count_nz(), shape.len() / 2);
+        // Channel structure: c=0 dense, c=1 empty.
+        assert!(chan.get(0, 3, 3) && !chan.get(1, 3, 3));
+        // Checkerboard structure: horizontal neighbors always differ.
+        assert_ne!(checker.get(0, 0, 0), checker.get(0, 0, 1));
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_identity_holds() {
+        let net = zoo::agos_cnn();
+        for p in AdversarialPattern::ALL {
+            let a = adversarial_trace(&net, p);
+            let b = adversarial_trace(&net, p);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "{}", p.label());
+            assert!(a.identity_holds(), "{}", p.label());
+            assert!(a.has_bitmaps(), "{}", p.label());
+        }
+        // Different patterns never share a trace fingerprint.
+        let fps: std::collections::HashSet<u64> = AdversarialPattern::ALL
+            .iter()
+            .map(|&p| adversarial_trace(&net, p).fingerprint())
+            .collect();
+        assert_eq!(fps.len(), AdversarialPattern::ALL.len());
+    }
+
+    #[test]
+    fn residual_graphs_get_post_add_footprints() {
+        let net = zoo::agos_resnet();
+        let trace = adversarial_trace(&net, AdversarialPattern::Checkerboard);
+        let adds = net
+            .layers()
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Add))
+            .count();
+        assert!(adds > 0, "agos_resnet must have Add layers");
+        let footprints =
+            trace.steps[0].layers.iter().filter(|l| l.footprint).count();
+        assert_eq!(footprints, adds);
+        // And the bank accepts the trace (replay wiring is exercised
+        // end-to-end in tests/scenario.rs).
+        crate::sim::ReplayBank::from_trace(&net, &trace).unwrap();
+    }
+
+    #[test]
+    fn pattern_parse_roundtrip() {
+        for p in AdversarialPattern::ALL {
+            assert_eq!(AdversarialPattern::parse(p.label()).unwrap(), p);
+        }
+        assert!(AdversarialPattern::parse("plaid").is_err());
+    }
+}

@@ -1,0 +1,478 @@
+//! The generator variants a scenario file's `generators` array may
+//! name, and the programmatic network construction behind them.
+//!
+//! Every variant expands **deterministically**: the same generator
+//! object under the same scenario seed always yields the same list of
+//! `nn::Network` graphs, in the same order, with the same structural
+//! fingerprints. Generated graphs go through `Network::validate()`
+//! before they leave this module, so a scenario file can never hand the
+//! simulator a malformed graph.
+
+use crate::nn::{zoo, Network};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::adversarial::AdversarialPattern;
+
+/// One entry of a scenario file's `generators` array, tagged by its
+/// JSON `kind` field (the Frog `ScenarioGenerator` idiom: a declarative,
+/// serializable enum that expands into seeded families).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioGenerator {
+    /// `kind: "zoo"` — hand-written zoo entries by the same
+    /// comma-separated spec `--networks` takes (`nn::zoo::by_list`).
+    Zoo { networks: String },
+    /// `kind: "conv_ladder"` — plain conv–ReLU ladders swept over the
+    /// cross product `depths × widths × kernels × strides`, each ending
+    /// in GAP → FC → softmax. The first conv carries the stride; the
+    /// rest are stride-1 at `pad = k/2` so depth never collapses the
+    /// spatial extent.
+    ConvLadder {
+        depths: Vec<usize>,
+        widths: Vec<usize>,
+        kernels: Vec<usize>,
+        strides: Vec<usize>,
+        input: (usize, usize, usize),
+        classes: usize,
+    },
+    /// `kind: "residual_tower"` — stem conv + `blocks` two-conv blocks
+    /// swept over `blocks × widths`; each block independently carries a
+    /// skip `Add` with probability `residual_density`, drawn from an RNG
+    /// seeded by (scenario seed, tower name) so the draw is stable under
+    /// reordering of the generator list.
+    ResidualTower {
+        blocks: Vec<usize>,
+        widths: Vec<usize>,
+        residual_density: f64,
+        input: (usize, usize, usize),
+        classes: usize,
+    },
+    /// `kind: "adversarial"` — one zoo network replayed under
+    /// deterministic worst/degenerate-case bitmaps
+    /// (`scenario::adversarial`) instead of sampled ones.
+    Adversarial { network: String, patterns: Vec<AdversarialPattern> },
+}
+
+const LADDER_KEYS: [&str; 7] =
+    ["kind", "depths", "widths", "kernels", "strides", "input", "classes"];
+const TOWER_KEYS: [&str; 6] =
+    ["kind", "blocks", "widths", "residual_density", "input", "classes"];
+
+impl ScenarioGenerator {
+    /// Parse one `generators` array entry. Unknown keys are errors (a
+    /// typo'd field must not silently fall back to its default).
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioGenerator> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("generator must be an object"))?;
+        let kind = j.req("kind")?.as_str().ok_or_else(|| anyhow::anyhow!("kind: string"))?;
+        let check_keys = |allowed: &[&str]| -> anyhow::Result<()> {
+            for k in obj.keys() {
+                anyhow::ensure!(
+                    allowed.contains(&k.as_str()),
+                    "unknown key '{k}' in '{kind}' generator (allowed: {})",
+                    allowed.join(", ")
+                );
+            }
+            Ok(())
+        };
+        match kind {
+            "zoo" => {
+                check_keys(&["kind", "networks"])?;
+                let networks = req_str(j, "networks")?;
+                // Fail at parse time, not expansion time: surface bad
+                // zoo references with by_list's full-context error.
+                zoo::by_list(&networks)?;
+                Ok(ScenarioGenerator::Zoo { networks })
+            }
+            "conv_ladder" => {
+                check_keys(&LADDER_KEYS)?;
+                let g = ScenarioGenerator::ConvLadder {
+                    depths: usize_list(j.req("depths")?, "depths")?,
+                    widths: usize_list(j.req("widths")?, "widths")?,
+                    kernels: opt_usize_list(j, "kernels", &[3])?,
+                    strides: opt_usize_list(j, "strides", &[1])?,
+                    input: shape3(j, "input", (3, 32, 32))?,
+                    classes: opt_usize(j, "classes", 10)?,
+                };
+                g.validate()?;
+                Ok(g)
+            }
+            "residual_tower" => {
+                check_keys(&TOWER_KEYS)?;
+                let density = match j.get("residual_density") {
+                    Json::Null => 1.0,
+                    v => v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("residual_density: number"))?,
+                };
+                let g = ScenarioGenerator::ResidualTower {
+                    blocks: usize_list(j.req("blocks")?, "blocks")?,
+                    widths: usize_list(j.req("widths")?, "widths")?,
+                    residual_density: density,
+                    input: shape3(j, "input", (3, 32, 32))?,
+                    classes: opt_usize(j, "classes", 10)?,
+                };
+                g.validate()?;
+                Ok(g)
+            }
+            "adversarial" => {
+                check_keys(&["kind", "network", "patterns"])?;
+                let network = req_str(j, "network")?;
+                zoo::by_name(&network)?;
+                let patterns = match j.get("patterns") {
+                    Json::Null => AdversarialPattern::ALL.to_vec(),
+                    v => {
+                        let arr = v
+                            .as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("patterns: array of strings"))?;
+                        anyhow::ensure!(!arr.is_empty(), "patterns must not be empty");
+                        arr.iter()
+                            .map(|p| {
+                                let s = p
+                                    .as_str()
+                                    .ok_or_else(|| anyhow::anyhow!("patterns: array of strings"))?;
+                                AdversarialPattern::parse(s)
+                            })
+                            .collect::<anyhow::Result<Vec<_>>>()?
+                    }
+                };
+                Ok(ScenarioGenerator::Adversarial { network, patterns })
+            }
+            other => anyhow::bail!(
+                "unknown generator kind '{other}' (zoo|conv_ladder|residual_tower|adversarial)"
+            ),
+        }
+    }
+
+    /// Canonical serialized form: every field is emitted, defaults
+    /// included, so the scenario fingerprint (an FNV over this dump)
+    /// never depends on which spelling the author chose.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ScenarioGenerator::Zoo { networks } => Json::from_pairs(vec![
+                ("kind", "zoo".into()),
+                ("networks", networks.as_str().into()),
+            ]),
+            ScenarioGenerator::ConvLadder { depths, widths, kernels, strides, input, classes } => {
+                Json::from_pairs(vec![
+                    ("kind", "conv_ladder".into()),
+                    ("depths", json_list(depths)),
+                    ("widths", json_list(widths)),
+                    ("kernels", json_list(kernels)),
+                    ("strides", json_list(strides)),
+                    ("input", json_shape(*input)),
+                    ("classes", (*classes).into()),
+                ])
+            }
+            ScenarioGenerator::ResidualTower { blocks, widths, residual_density, input, classes } => {
+                Json::from_pairs(vec![
+                    ("kind", "residual_tower".into()),
+                    ("blocks", json_list(blocks)),
+                    ("widths", json_list(widths)),
+                    ("residual_density", (*residual_density).into()),
+                    ("input", json_shape(*input)),
+                    ("classes", (*classes).into()),
+                ])
+            }
+            ScenarioGenerator::Adversarial { network, patterns } => Json::from_pairs(vec![
+                ("kind", "adversarial".into()),
+                ("network", network.as_str().into()),
+                (
+                    "patterns",
+                    Json::Arr(patterns.iter().map(|p| p.label().into()).collect()),
+                ),
+            ]),
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            ScenarioGenerator::ConvLadder { depths, kernels, strides, input, classes, .. } => {
+                anyhow::ensure!(depths.iter().all(|&d| d >= 1), "depths must be >= 1");
+                anyhow::ensure!(
+                    kernels.iter().all(|&k| k % 2 == 1),
+                    "kernels must be odd (pad = k/2 keeps stride-1 shapes exact)"
+                );
+                anyhow::ensure!(strides.iter().all(|&s| s >= 1), "strides must be >= 1");
+                let (c, h, w) = *input;
+                anyhow::ensure!(c >= 1 && h >= 1 && w >= 1, "input dims must be >= 1");
+                anyhow::ensure!(*classes >= 1, "classes must be >= 1");
+                Ok(())
+            }
+            ScenarioGenerator::ResidualTower { blocks, residual_density, input, classes, .. } => {
+                anyhow::ensure!(blocks.iter().all(|&b| b >= 1), "blocks must be >= 1");
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(residual_density),
+                    "residual_density must be in [0, 1]"
+                );
+                let (c, h, w) = *input;
+                anyhow::ensure!(c >= 1 && h >= 1 && w >= 1, "input dims must be >= 1");
+                anyhow::ensure!(*classes >= 1, "classes must be >= 1");
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Expand this generator into concrete networks. `seed` is the
+    /// scenario file's seed (only `residual_tower` draws from it).
+    /// Adversarial generators expand here to their base network; the
+    /// per-pattern replay banks are built during `ScenarioFile`
+    /// expansion, where the pattern axis is crossed in.
+    pub fn networks(&self, seed: u64) -> anyhow::Result<Vec<Network>> {
+        let nets = match self {
+            ScenarioGenerator::Zoo { networks } => zoo::by_list(networks)?,
+            ScenarioGenerator::ConvLadder { depths, widths, kernels, strides, input, classes } => {
+                let mut out = Vec::new();
+                for &d in depths {
+                    for &w in widths {
+                        for &k in kernels {
+                            for &s in strides {
+                                out.push(conv_ladder(d, w, k, s, *input, *classes)?);
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            ScenarioGenerator::ResidualTower { blocks, widths, residual_density, input, classes } => {
+                let mut out = Vec::new();
+                for &b in blocks {
+                    for &w in widths {
+                        out.push(residual_tower(b, w, *residual_density, *input, *classes, seed)?);
+                    }
+                }
+                out
+            }
+            ScenarioGenerator::Adversarial { network, .. } => vec![zoo::by_name(network)?],
+        };
+        for net in &nets {
+            net.validate().map_err(|e| anyhow::anyhow!("generated '{}': {e}", net.name))?;
+        }
+        Ok(nets)
+    }
+}
+
+/// `ladder_d{depth}_w{width}_k{k}_s{stride}`: conv–ReLU × depth, the
+/// stride on the first conv only, then GAP → FC → softmax.
+fn conv_ladder(
+    depth: usize,
+    width: usize,
+    k: usize,
+    stride: usize,
+    (c, h, w): (usize, usize, usize),
+    classes: usize,
+) -> anyhow::Result<Network> {
+    let name = format!("ladder_d{depth}_w{width}_k{k}_s{stride}");
+    anyhow::ensure!(
+        h + 2 * (k / 2) >= k && w + 2 * (k / 2) >= k,
+        "{name}: {k}×{k} window larger than padded {h}×{w} input"
+    );
+    let mut n = Network::new(&name);
+    let mut cur = n.input(c, h, w);
+    for i in 0..depth {
+        let s = if i == 0 { stride } else { 1 };
+        let conv = n.conv(&format!("conv{}", i + 1), cur, width, k, s, k / 2);
+        cur = n.relu(&format!("relu{}", i + 1), conv);
+    }
+    let g = n.gap("gap", cur);
+    let f = n.fc("fc", g, classes);
+    n.softmax("prob", f);
+    Ok(n)
+}
+
+/// `tower_b{blocks}_w{width}_r{pct}`: stem conv–ReLU, then `blocks`
+/// two-conv blocks where each block's skip `Add` is an independent
+/// Bernoulli(`residual_density`) draw from an RNG seeded by the tower's
+/// *name* and the scenario seed — stable under generator reordering,
+/// and a draw is consumed per block whether or not the skip lands, so
+/// block `i`'s fate never depends on block `i-1`'s.
+fn residual_tower(
+    blocks: usize,
+    width: usize,
+    residual_density: f64,
+    (c, h, w): (usize, usize, usize),
+    classes: usize,
+    seed: u64,
+) -> anyhow::Result<Network> {
+    let pct = (residual_density * 100.0).round() as u64;
+    let name = format!("tower_b{blocks}_w{width}_r{pct}");
+    let mut n = Network::new(&name);
+    let x = n.input(c, h, w);
+    let stem = n.conv("stem", x, width, 3, 1, 1);
+    let mut cur = n.relu("stem_relu", stem);
+    let mut rng = Pcg32::new(seed ^ hash_str(&name));
+    for b in 0..blocks {
+        let c1 = n.conv(&format!("b{b}_conv1"), cur, width, 3, 1, 1);
+        let r1 = n.relu(&format!("b{b}_relu1"), c1);
+        let c2 = n.conv(&format!("b{b}_conv2"), r1, width, 3, 1, 1);
+        let skip = rng.bernoulli(residual_density);
+        cur = if skip {
+            let a = n.add(&format!("b{b}_add"), c2, cur);
+            n.relu(&format!("b{b}_relu2"), a)
+        } else {
+            n.relu(&format!("b{b}_relu2"), c2)
+        };
+    }
+    let g = n.gap("gap", cur);
+    let f = n.fc("fc", g, classes);
+    n.softmax("prob", f);
+    Ok(n)
+}
+
+fn hash_str(s: &str) -> u64 {
+    let mut h = crate::util::fnv::Fnv1a::new();
+    h.put_bytes(s.as_bytes());
+    h.finish()
+}
+
+fn req_str(j: &Json, key: &str) -> anyhow::Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("{key}: string"))?
+        .to_string())
+}
+
+fn usize_list(j: &Json, what: &str) -> anyhow::Result<Vec<usize>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("{what}: array of integers"))?;
+    anyhow::ensure!(!arr.is_empty(), "{what} must not be empty");
+    arr.iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("{what}: array of integers")))
+        .collect()
+}
+
+fn opt_usize_list(j: &Json, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+    match j.get(key) {
+        Json::Null => Ok(default.to_vec()),
+        v => usize_list(v, key),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> anyhow::Result<usize> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => v.as_usize().ok_or_else(|| anyhow::anyhow!("{key}: integer")),
+    }
+}
+
+/// `input` is a `[c, h, w]` triple (same notation as trace shapes).
+fn shape3(
+    j: &Json,
+    key: &str,
+    default: (usize, usize, usize),
+) -> anyhow::Result<(usize, usize, usize)> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => {
+            let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("{key}: [c, h, w]"))?;
+            anyhow::ensure!(arr.len() == 3, "{key}: [c, h, w]");
+            let d = |i: usize| {
+                arr[i].as_usize().ok_or_else(|| anyhow::anyhow!("{key}[{i}]: integer"))
+            };
+            Ok((d(0)?, d(1)?, d(2)?))
+        }
+    }
+}
+
+fn json_list(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| x.into()).collect())
+}
+
+fn json_shape((c, h, w): (usize, usize, usize)) -> Json {
+    Json::Arr(vec![c.into(), h.into(), w.into()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_family_is_the_cross_product_and_validates() {
+        let g = ScenarioGenerator::ConvLadder {
+            depths: vec![2, 4],
+            widths: vec![8, 16],
+            kernels: vec![3, 5],
+            strides: vec![1, 2],
+            input: (3, 32, 32),
+            classes: 10,
+        };
+        let nets = g.networks(7).unwrap();
+        assert_eq!(nets.len(), 16);
+        let names: std::collections::HashSet<_> = nets.iter().map(|n| n.name.clone()).collect();
+        assert_eq!(names.len(), 16, "every family member is distinctly named");
+        assert!(names.contains("ladder_d4_w16_k5_s2"));
+        // The stride only hits the first conv: a d4 s2 ladder still has
+        // a 16×16 map after conv1 and keeps it to the end.
+        let d4 = nets.iter().find(|n| n.name == "ladder_d4_w16_k5_s2").unwrap();
+        let last_relu = d4.by_name("relu4").unwrap();
+        assert_eq!((last_relu.out.h, last_relu.out.w), (16, 16));
+    }
+
+    #[test]
+    fn tower_density_draws_are_seed_stable() {
+        let g = ScenarioGenerator::ResidualTower {
+            blocks: vec![4],
+            widths: vec![8],
+            residual_density: 0.5,
+            input: (3, 16, 16),
+            classes: 10,
+        };
+        let a = g.networks(7).unwrap();
+        let b = g.networks(7).unwrap();
+        assert_eq!(a[0].fingerprint(), b[0].fingerprint(), "same seed, same structure");
+        // Extremes: r=1.0 puts an Add in every block, r=0.0 in none.
+        let all = ScenarioGenerator::ResidualTower {
+            blocks: vec![3],
+            widths: vec![8],
+            residual_density: 1.0,
+            input: (3, 16, 16),
+            classes: 10,
+        };
+        let none = ScenarioGenerator::ResidualTower {
+            blocks: vec![3],
+            widths: vec![8],
+            residual_density: 0.0,
+            input: (3, 16, 16),
+            classes: 10,
+        };
+        let count_adds = |n: &Network| {
+            n.layers()
+                .iter()
+                .filter(|l| matches!(l.kind, crate::nn::LayerKind::Add))
+                .count()
+        };
+        assert_eq!(count_adds(&all.networks(1).unwrap()[0]), 3);
+        assert_eq!(count_adds(&none.networks(1).unwrap()[0]), 0);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_bad_kinds_and_bad_zoo_names() {
+        let bad_kind = Json::parse(r#"{"kind": "teleport"}"#).unwrap();
+        assert!(ScenarioGenerator::from_json(&bad_kind).is_err());
+        let typo = Json::parse(r#"{"kind": "conv_ladder", "depths": [2], "widths": [8], "strids": [1]}"#)
+            .unwrap();
+        let err = ScenarioGenerator::from_json(&typo).unwrap_err().to_string();
+        assert!(err.contains("strids"), "{err}");
+        let bad_net = Json::parse(r#"{"kind": "zoo", "networks": "alexnet"}"#).unwrap();
+        let err = ScenarioGenerator::from_json(&bad_net).unwrap_err().to_string();
+        assert!(err.contains("alexnet") && err.contains("vgg16"), "{err}");
+        let even_k =
+            Json::parse(r#"{"kind": "conv_ladder", "depths": [2], "widths": [8], "kernels": [4]}"#)
+                .unwrap();
+        assert!(ScenarioGenerator::from_json(&even_k).is_err(), "even kernels rejected");
+    }
+
+    #[test]
+    fn defaults_are_canonicalized_into_to_json() {
+        let minimal =
+            Json::parse(r#"{"kind": "conv_ladder", "depths": [2], "widths": [8]}"#).unwrap();
+        let g = ScenarioGenerator::from_json(&minimal).unwrap();
+        let dump = g.to_json().dump();
+        for field in ["kernels", "strides", "input", "classes"] {
+            assert!(dump.contains(field), "{field} missing from canonical form: {dump}");
+        }
+        // Round trip through the canonical form is the identity.
+        let g2 = ScenarioGenerator::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g.to_json().dump(), g2.to_json().dump());
+    }
+}

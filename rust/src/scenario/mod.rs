@@ -1,0 +1,648 @@
+//! Declarative scenario files: one JSON document that expands — fully
+//! seeded and deterministically — into a family of (network ×
+//! sparsity-phase × scheme) sweep combos for the cached `SweepRunner`.
+//!
+//! The paper's speedups are *trajectories*: activation/gradient
+//! sparsity grows over a training run, so a single-density sweep
+//! understates late-epoch gains and overstates early ones. A scenario
+//! file names the workload family once —
+//!
+//! * **generators** ([`ScenarioGenerator`]): hand-written zoo entries,
+//!   programmatically swept conv ladders and residual towers, and
+//!   adversarial replay patterns ([`AdversarialPattern`]);
+//! * a **schedule** ([`SparsitySchedule`]): named phases (early/mid/
+//!   late) whose `scale` multiplies the calibrated model's ReLU
+//!   fractions, modeling sparsity growth across epochs;
+//! * **schemes**: the same `--schemes` spec the CLI takes
+//!
+//! — and `agos sweep --scenario <file>` fans the whole expansion
+//! through the cached parallel runner. Determinism contract:
+//!
+//! * Expansion is a pure function of the file: same bytes ⇒ same plan,
+//!   same combo order, same labels, at any `--jobs` level.
+//! * The file's `seed` overrides the CLI `--seed` (a scenario is
+//!   self-contained; results must not depend on who runs it).
+//! * [`ScenarioFile::fingerprint`] — an FNV over the *canonical*
+//!   serialized form, defaults expanded — is stamped into every combo's
+//!   `SimOptions::scenario_fingerprint`, so scenario results can never
+//!   alias a hand-written grid (or another scenario) in the sweep
+//!   cache. Phases additionally separate through the scaled model's
+//!   fingerprint, adversarial points through their trace fingerprint.
+//!
+//! Schema reference: `rust/docs/SCENARIOS.md`. Runnable examples:
+//! `rust/examples/scenarios/`.
+
+mod adversarial;
+mod generators;
+
+pub use adversarial::{adversarial_trace, pattern_bitmap, AdversarialPattern};
+pub use generators::ScenarioGenerator;
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::{Network, Phase};
+use crate::report::Figure;
+use crate::sim::{NetworkSimResult, ReplayBank, SweepPlan, SweepRunner};
+use crate::sparsity::SparsityModel;
+use crate::util::json::Json;
+
+/// One phase of a sparsity schedule: a display name and the multiplier
+/// applied to the calibrated model's ReLU fractions
+/// (`SparsityModel::sparsity_scale`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulePhase {
+    pub name: String,
+    pub scale: f64,
+}
+
+/// A sparsity trajectory across a simulated training run, as an ordered
+/// list of phases. Scales below 1 model early epochs (denser maps),
+/// above 1 late epochs (sparser maps, clamped at 0.95 per layer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsitySchedule {
+    pub phases: Vec<SchedulePhase>,
+}
+
+impl Default for SparsitySchedule {
+    /// The schedule a file without one gets: a single identity phase,
+    /// reducing the scenario to today's single-point sweeps.
+    fn default() -> SparsitySchedule {
+        SparsitySchedule {
+            phases: vec![SchedulePhase { name: "base".to_string(), scale: 1.0 }],
+        }
+    }
+}
+
+impl SparsitySchedule {
+    /// An evenly spaced ramp of `points` phases named `ramp0..rampN`,
+    /// from `from` to `to` inclusive (`points == 1` yields just `from`).
+    pub fn ramp(from: f64, to: f64, points: usize) -> SparsitySchedule {
+        let n = points.max(1);
+        let phases = (0..n)
+            .map(|i| {
+                let t = if n == 1 { 0.0 } else { i as f64 / (n - 1) as f64 };
+                SchedulePhase { name: format!("ramp{i}"), scale: from + t * (to - from) }
+            })
+            .collect();
+        SparsitySchedule { phases }
+    }
+
+    /// Parse either spelling — an explicit `phases` array or a `ramp`
+    /// object — rejecting both-at-once and unknown keys.
+    pub fn from_json(j: &Json) -> anyhow::Result<SparsitySchedule> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("schedule must be an object"))?;
+        for k in obj.keys() {
+            anyhow::ensure!(
+                k == "phases" || k == "ramp",
+                "unknown key '{k}' in schedule (allowed: phases, ramp)"
+            );
+        }
+        let schedule = match (j.get("phases"), j.get("ramp")) {
+            (Json::Null, Json::Null) => anyhow::bail!("schedule needs 'phases' or 'ramp'"),
+            (p, Json::Null) => {
+                let arr =
+                    p.as_arr().ok_or_else(|| anyhow::anyhow!("phases: array of objects"))?;
+                anyhow::ensure!(!arr.is_empty(), "phases must not be empty");
+                let phases = arr
+                    .iter()
+                    .map(|e| {
+                        if let Some(o) = e.as_obj() {
+                            for k in o.keys() {
+                                anyhow::ensure!(
+                                    k == "name" || k == "scale",
+                                    "unknown key '{k}' in phase (allowed: name, scale)"
+                                );
+                            }
+                        }
+                        let name = e
+                            .req("name")?
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("phase name: string"))?
+                            .to_string();
+                        let scale = e
+                            .req("scale")?
+                            .as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("phase scale: number"))?;
+                        Ok(SchedulePhase { name, scale })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                SparsitySchedule { phases }
+            }
+            (Json::Null, r) => {
+                if let Some(o) = r.as_obj() {
+                    for k in o.keys() {
+                        anyhow::ensure!(
+                            matches!(k.as_str(), "from" | "to" | "points"),
+                            "unknown key '{k}' in ramp (allowed: from, to, points)"
+                        );
+                    }
+                }
+                let from = r.req("from")?.as_f64().ok_or_else(|| anyhow::anyhow!("from: number"))?;
+                let to = r.req("to")?.as_f64().ok_or_else(|| anyhow::anyhow!("to: number"))?;
+                let points =
+                    r.req("points")?.as_usize().ok_or_else(|| anyhow::anyhow!("points: integer"))?;
+                anyhow::ensure!(points >= 1, "ramp points must be >= 1");
+                SparsitySchedule::ramp(from, to, points)
+            }
+            _ => anyhow::bail!("schedule takes 'phases' or 'ramp', not both"),
+        };
+        schedule.validate()?;
+        Ok(schedule)
+    }
+
+    /// Canonical form: always the expanded `phases` array (a `ramp` and
+    /// its equivalent phase list fingerprint identically — they expand
+    /// to the same plan).
+    pub fn to_json(&self) -> Json {
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| {
+                Json::from_pairs(vec![
+                    ("name", p.name.as_str().into()),
+                    ("scale", p.scale.into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![("phases", Json::Arr(phases))])
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.phases.is_empty(), "schedule must have at least one phase");
+        let mut names = HashSet::new();
+        for p in &self.phases {
+            anyhow::ensure!(!p.name.is_empty(), "phase names must be non-empty");
+            anyhow::ensure!(names.insert(p.name.clone()), "duplicate phase name '{}'", p.name);
+            anyhow::ensure!(
+                p.scale.is_finite() && p.scale > 0.0,
+                "phase '{}': scale must be finite and > 0",
+                p.name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A parsed scenario file. See the module docs for the expansion and
+/// determinism contract, `docs/SCENARIOS.md` for the schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioFile {
+    /// Schema version; only 1 exists.
+    pub version: u64,
+    /// Display name (report/figure titles). Default `"scenario"`.
+    pub name: String,
+    /// The one seed everything derives from: model draws, tower
+    /// skip-placement, and the exact backend's sampling streams
+    /// (it overrides `SimOptions::seed` at expansion). Default 0xA605.
+    pub seed: u64,
+    pub generators: Vec<ScenarioGenerator>,
+    pub schedule: SparsitySchedule,
+    /// Scheme spec in `--schemes` syntax (`Scheme::parse_list`).
+    pub schemes: String,
+}
+
+impl ScenarioFile {
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioFile> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("scenario must be an object"))?;
+        for k in obj.keys() {
+            anyhow::ensure!(
+                matches!(k.as_str(), "version" | "name" | "seed" | "generators" | "schedule" | "schemes"),
+                "unknown key '{k}' in scenario \
+                 (allowed: version, name, seed, generators, schedule, schemes)"
+            );
+        }
+        let version =
+            j.req("version")?.as_u64().ok_or_else(|| anyhow::anyhow!("version: integer"))?;
+        anyhow::ensure!(version == 1, "unsupported scenario version {version} (only 1 exists)");
+        let name = match j.get("name") {
+            Json::Null => "scenario".to_string(),
+            v => v.as_str().ok_or_else(|| anyhow::anyhow!("name: string"))?.to_string(),
+        };
+        let seed = match j.get("seed") {
+            Json::Null => 0xA605,
+            v => v.as_u64().ok_or_else(|| anyhow::anyhow!("seed: integer"))?,
+        };
+        let gens = j
+            .req("generators")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("generators: array"))?;
+        anyhow::ensure!(!gens.is_empty(), "generators must not be empty");
+        let generators = gens
+            .iter()
+            .map(ScenarioGenerator::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let schedule = match j.get("schedule") {
+            Json::Null => SparsitySchedule::default(),
+            v => SparsitySchedule::from_json(v)?,
+        };
+        let schemes = match j.get("schemes") {
+            Json::Null => "all".to_string(),
+            v => v.as_str().ok_or_else(|| anyhow::anyhow!("schemes: string"))?.to_string(),
+        };
+        Scheme::parse_list(&schemes)?;
+        Ok(ScenarioFile { version, name, seed, generators, schedule, schemes })
+    }
+
+    /// Canonical serialized form (defaults expanded, ramps unrolled);
+    /// the domain of [`ScenarioFile::fingerprint`].
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("version", self.version.into()),
+            ("name", self.name.as_str().into()),
+            ("seed", self.seed.into()),
+            ("generators", Json::Arr(self.generators.iter().map(|g| g.to_json()).collect())),
+            ("schedule", self.schedule.to_json()),
+            ("schemes", self.schemes.as_str().into()),
+        ])
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ScenarioFile> {
+        ScenarioFile::from_json(&Json::parse_file(path)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Content fingerprint: FNV-1a over the canonical dump. Two files
+    /// that expand identically (e.g. a `ramp` vs its unrolled `phases`)
+    /// share it; any field that changes the expansion changes it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.put_bytes(self.to_json().dump().as_bytes());
+        h.finish()
+    }
+
+    /// Expand generators × schedule into labeled points. Adversarial
+    /// generators cross with their *patterns* instead of the schedule
+    /// (a fixed worst-case map has no epoch axis); each such point
+    /// carries a ready replay bank. Labels (`network@phase`) must be
+    /// unique — a file that expands two combos to the same label is
+    /// rejected rather than silently folded by the cache.
+    pub fn points(&self) -> anyhow::Result<Vec<ScenarioPoint>> {
+        let mut points = Vec::new();
+        let mut labels: HashSet<String> = HashSet::new();
+        let mut push = |points: &mut Vec<ScenarioPoint>, p: ScenarioPoint| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                labels.insert(p.label.clone()),
+                "duplicate scenario point '{}' (same network and phase expanded twice)",
+                p.label
+            );
+            points.push(p);
+            Ok(())
+        };
+        for g in &self.generators {
+            if let ScenarioGenerator::Adversarial { patterns, .. } = g {
+                let net = &g.networks(self.seed)?[0];
+                for &pattern in patterns {
+                    let trace = adversarial_trace(net, pattern);
+                    let trace_fp = trace.fingerprint();
+                    let bank = Arc::new(ReplayBank::from_trace(net, &trace)?);
+                    push(
+                        &mut points,
+                        ScenarioPoint {
+                            label: format!("{}@{}", net.name, pattern.label()),
+                            phase: pattern.label().to_string(),
+                            network: net.clone(),
+                            model: SparsityModel::synthetic(self.seed),
+                            replay: Some((bank, trace_fp)),
+                        },
+                    )?;
+                }
+            } else {
+                for net in g.networks(self.seed)? {
+                    for phase in &self.schedule.phases {
+                        push(
+                            &mut points,
+                            ScenarioPoint {
+                                label: format!("{}@{}", net.name, phase.name),
+                                phase: phase.name.clone(),
+                                network: net.clone(),
+                                model: SparsityModel::synthetic(self.seed)
+                                    .with_scale(phase.scale),
+                                replay: None,
+                            },
+                        )?;
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(!points.is_empty(), "scenario expanded to zero points");
+        Ok(points)
+    }
+
+    /// Full expansion to an executable plan. `base` contributes the
+    /// request-level knobs a scenario deliberately does not own (batch,
+    /// backend, exact cap, gather plans); the file's seed and
+    /// fingerprint override/stamp the rest. Combo order is point-major:
+    /// combo `i` is `points[i / schemes.len()]` under
+    /// `schemes[i % schemes.len()]`.
+    pub fn expand(
+        &self,
+        cfg: &AcceleratorConfig,
+        base: &SimOptions,
+    ) -> anyhow::Result<ExpandedScenario> {
+        let schemes = Scheme::parse_list(&self.schemes)?;
+        let fingerprint = self.fingerprint();
+        let mut opts = base.clone();
+        opts.seed = self.seed;
+        opts.scenario_fingerprint = Some(fingerprint);
+        // Replay is per-point here; a stray request-level bank (wrong
+        // network entirely) must not leak into generated combos.
+        opts.replay = None;
+        opts.trace_fingerprint = None;
+        let points = self.points()?;
+        let mut plan = SweepPlan::new();
+        for p in &points {
+            let mut popts = opts.clone();
+            if let Some((bank, trace_fp)) = &p.replay {
+                popts.replay = Some(bank.clone());
+                popts.trace_fingerprint = Some(*trace_fp);
+            }
+            for &scheme in &schemes {
+                plan.push_with_model(p.network.clone(), scheme, cfg, &popts, p.model.clone());
+            }
+        }
+        Ok(ExpandedScenario { name: self.name.clone(), fingerprint, points, schemes, plan, opts })
+    }
+}
+
+/// One (network, phase) cell of the expansion, before the scheme axis.
+#[derive(Clone, Debug)]
+pub struct ScenarioPoint {
+    /// `network@phase` — the trajectory figure's row label.
+    pub label: String,
+    pub phase: String,
+    pub network: Network,
+    /// The phase's scaled model (identity-scaled for adversarial points,
+    /// whose sparsity comes from the replayed pattern instead).
+    pub model: SparsityModel,
+    /// Adversarial points: the pattern's replay bank and its trace
+    /// fingerprint, armed on every scheme combo of this point.
+    pub replay: Option<(Arc<ReplayBank>, u64)>,
+}
+
+/// A scenario ready to run: the labeled points, the parsed schemes, the
+/// point-major [`SweepPlan`], and the stamped base options (provenance
+/// for the report header).
+#[derive(Clone, Debug)]
+pub struct ExpandedScenario {
+    pub name: String,
+    pub fingerprint: u64,
+    pub points: Vec<ScenarioPoint>,
+    pub schemes: Vec<Scheme>,
+    pub plan: SweepPlan,
+    pub opts: SimOptions,
+}
+
+impl ExpandedScenario {
+    /// Execute through the runner's cache. The plan-wide fallback model
+    /// is never consulted (every combo carries its phase's override),
+    /// so this is a pure function of the expansion — bit-identical at
+    /// any `jobs` level by the runner's contract.
+    pub fn run(&self, runner: &SweepRunner) -> Vec<Arc<NetworkSimResult>> {
+        runner.run(&self.plan, &SparsityModel::synthetic(self.opts.seed))
+    }
+
+    /// Results for one point in scheme order.
+    fn point_results<'a>(
+        &self,
+        pi: usize,
+        results: &'a [Arc<NetworkSimResult>],
+    ) -> &'a [Arc<NetworkSimResult>] {
+        let ns = self.schemes.len();
+        &results[pi * ns..(pi + 1) * ns]
+    }
+}
+
+/// The trajectory figure: one row per (network, phase) point. With DC
+/// in the schemes (the usual case) the columns are each sparse scheme's
+/// speedup over DC *within that phase* — reading down a network's rows
+/// is the paper's speedup-over-training trajectory. Without DC there is
+/// no ratio to form, so the columns fall back to raw total cycles.
+pub fn trajectory_figure(ex: &ExpandedScenario, results: &[Arc<NetworkSimResult>]) -> Figure {
+    assert_eq!(
+        ex.points.len() * ex.schemes.len(),
+        results.len(),
+        "results must match the expansion"
+    );
+    let dense_at = ex.schemes.iter().position(|s| *s == Scheme::Dense);
+    let ratio_cols: Vec<&'static str> = ex
+        .schemes
+        .iter()
+        .filter(|s| **s != Scheme::Dense)
+        .map(|s| s.label())
+        .collect();
+    let use_ratios = dense_at.is_some() && !ratio_cols.is_empty();
+    let (title, cols) = if use_ratios {
+        (format!("{}: speedup vs DC per phase", ex.name), ratio_cols)
+    } else {
+        (
+            format!("{}: total cycles per phase", ex.name),
+            ex.schemes.iter().map(|s| s.label()).collect(),
+        )
+    };
+    let mut fig = Figure::new("trajectory", &title, &cols);
+    for (pi, point) in ex.points.iter().enumerate() {
+        let prs = ex.point_results(pi, results);
+        let row: Vec<f64> = if use_ratios {
+            let dc = prs[dense_at.unwrap()].total_cycles() as f64;
+            ex.schemes
+                .iter()
+                .zip(prs)
+                .filter(|(s, _)| **s != Scheme::Dense)
+                .map(|(_, r)| dc / r.total_cycles() as f64)
+                .collect()
+        } else {
+            prs.iter().map(|r| r.total_cycles() as f64).collect()
+        };
+        fig.row(&point.label, row);
+    }
+    fig
+}
+
+/// The scenario report — what `agos sweep --scenario --out` writes and
+/// what a served scenario `sweep` request returns: provenance header,
+/// one row per (point, scheme) combo in plan order, and the trajectory
+/// figure. Like `sweep_report_json` it carries **no** wall-clock or
+/// thread-count fields: a pure function of the file and the request
+/// knobs, byte-identical at any `--jobs` level and across serve/CLI.
+pub fn scenario_report_json(ex: &ExpandedScenario, results: &[Arc<NetworkSimResult>]) -> Json {
+    assert_eq!(
+        ex.points.len() * ex.schemes.len(),
+        results.len(),
+        "results must match the expansion"
+    );
+    let mut combos = Vec::new();
+    for (pi, point) in ex.points.iter().enumerate() {
+        for (si, scheme) in ex.schemes.iter().enumerate() {
+            let r = &results[pi * ex.schemes.len() + si];
+            combos.push(Json::from_pairs(vec![
+                ("network", point.network.name.as_str().into()),
+                ("phase", point.phase.as_str().into()),
+                ("scheme", scheme.label().into()),
+                ("total_cycles", r.total_cycles().into()),
+                ("bp_cycles", r.phase(Phase::Backward).cycles.into()),
+                ("energy_j", r.total_energy_j().into()),
+            ]));
+        }
+    }
+    Json::from_pairs(vec![
+        ("scenario", ex.name.as_str().into()),
+        ("fingerprint", format!("{:016x}", ex.fingerprint).into()),
+        ("seed", ex.opts.seed.into()),
+        ("batch", ex.opts.batch.into()),
+        ("backend", ex.opts.backend.label().into()),
+        ("combos", Json::Arr(combos)),
+        ("trajectory", trajectory_figure(ex, results).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(extra: &str) -> String {
+        format!(
+            r#"{{"version": 1, "generators": [{{"kind": "zoo", "networks": "agos_cnn"}}]{extra}}}"#
+        )
+    }
+
+    fn parse(text: &str) -> anyhow::Result<ScenarioFile> {
+        ScenarioFile::from_json(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn defaults_fill_in_and_roundtrip_canonically() {
+        let f = parse(&minimal("")).unwrap();
+        assert_eq!(f.name, "scenario");
+        assert_eq!(f.seed, 0xA605);
+        assert_eq!(f.schemes, "all");
+        assert_eq!(f.schedule.phases.len(), 1);
+        assert_eq!(f.schedule.phases[0].scale, 1.0);
+        let again = ScenarioFile::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, again);
+        assert_eq!(f.fingerprint(), again.fingerprint());
+    }
+
+    #[test]
+    fn ramp_expands_evenly_and_fingerprints_like_its_phase_list() {
+        let r = SparsitySchedule::ramp(0.5, 1.5, 3);
+        assert_eq!(r.phases.len(), 3);
+        assert!((r.phases[1].scale - 1.0).abs() < 1e-12);
+        assert_eq!(r.phases[2].name, "ramp2");
+        assert_eq!(SparsitySchedule::ramp(0.7, 2.0, 1).phases[0].scale, 0.7);
+
+        let via_ramp = parse(&minimal(
+            r#", "schedule": {"ramp": {"from": 0.5, "to": 1.5, "points": 3}}"#,
+        ))
+        .unwrap();
+        let via_phases = parse(&minimal(
+            r#", "schedule": {"phases": [
+                {"name": "ramp0", "scale": 0.5},
+                {"name": "ramp1", "scale": 1.0},
+                {"name": "ramp2", "scale": 1.5}]}"#,
+        ))
+        .unwrap();
+        assert_eq!(via_ramp.fingerprint(), via_phases.fingerprint());
+    }
+
+    #[test]
+    fn strict_parsing_rejects_bad_files() {
+        assert!(parse(r#"{"version": 2, "generators": []}"#).is_err(), "bad version");
+        assert!(parse(&minimal(r#", "sched": {}"#)).is_err(), "unknown key");
+        assert!(parse(r#"{"version": 1, "generators": []}"#).is_err(), "empty generators");
+        assert!(
+            parse(&minimal(r#", "schedule": {"phases": [], "ramp": {}}"#)).is_err(),
+            "phases and ramp together"
+        );
+        assert!(
+            parse(&minimal(r#", "schedule": {"phases": [{"name": "a", "scale": 0.0}]}"#)).is_err(),
+            "zero scale"
+        );
+        assert!(
+            parse(&minimal(
+                r#", "schedule": {"phases": [
+                    {"name": "a", "scale": 1.0}, {"name": "a", "scale": 2.0}]}"#
+            ))
+            .is_err(),
+            "duplicate phase names"
+        );
+        assert!(parse(&minimal(r#", "schemes": "dc,teleport""#)).is_err(), "bad scheme");
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let base = parse(&minimal("")).unwrap();
+        for extra in [
+            r#", "name": "other""#,
+            r#", "seed": 9"#,
+            r#", "schemes": "dc,in""#,
+            r#", "schedule": {"phases": [{"name": "late", "scale": 1.4}]}"#,
+        ] {
+            let v = parse(&minimal(extra)).unwrap();
+            assert_ne!(base.fingerprint(), v.fingerprint(), "{extra}");
+        }
+        let other_gen = parse(
+            r#"{"version": 1, "generators": [{"kind": "zoo", "networks": "agos_resnet"}]}"#,
+        )
+        .unwrap();
+        assert_ne!(base.fingerprint(), other_gen.fingerprint());
+    }
+
+    #[test]
+    fn expansion_crosses_phases_and_rejects_duplicate_labels() {
+        let f = parse(&minimal(
+            r#", "schedule": {"phases": [
+                {"name": "early", "scale": 0.5}, {"name": "late", "scale": 1.4}]},
+               "schemes": "dc,in+out""#,
+        ))
+        .unwrap();
+        let points = f.points().unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].label, "agos_cnn@early");
+        assert_eq!(points[1].label, "agos_cnn@late");
+        assert_eq!(points[0].model.sparsity_scale, 0.5);
+
+        let ex = f.expand(&AcceleratorConfig::default(), &SimOptions::default()).unwrap();
+        assert_eq!(ex.plan.len(), 4, "2 points × 2 schemes");
+        assert_eq!(ex.opts.scenario_fingerprint, Some(f.fingerprint()));
+        assert_eq!(ex.opts.seed, f.seed);
+        assert!(ex.plan.combos.iter().all(|c| c.model.is_some()));
+        assert!(ex
+            .plan
+            .combos
+            .iter()
+            .all(|c| c.opts.scenario_fingerprint == Some(f.fingerprint())));
+
+        // The same network listed twice expands to colliding labels.
+        let dup = parse(
+            r#"{"version": 1, "generators": [
+                {"kind": "zoo", "networks": "agos_cnn"},
+                {"kind": "zoo", "networks": "agos_cnn"}]}"#,
+        )
+        .unwrap();
+        let err = dup.points().unwrap_err().to_string();
+        assert!(err.contains("agos_cnn@base"), "{err}");
+    }
+
+    #[test]
+    fn adversarial_points_skip_the_schedule_and_carry_banks() {
+        let f = parse(
+            r#"{"version": 1,
+                "generators": [{"kind": "adversarial", "network": "agos_cnn"}],
+                "schedule": {"phases": [
+                    {"name": "early", "scale": 0.5}, {"name": "late", "scale": 1.4}]}}"#,
+        )
+        .unwrap();
+        let points = f.points().unwrap();
+        assert_eq!(points.len(), AdversarialPattern::ALL.len(), "patterns, not phases");
+        for p in &points {
+            let (_, fp) = p.replay.as_ref().expect("adversarial points carry banks");
+            assert_ne!(*fp, 0);
+            assert_eq!(p.model.sparsity_scale, 1.0);
+        }
+        let ex = f.expand(&AcceleratorConfig::default(), &SimOptions::default()).unwrap();
+        assert!(ex.plan.combos.iter().all(|c| c.opts.replay.is_some()));
+    }
+}

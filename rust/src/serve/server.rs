@@ -10,7 +10,10 @@
 //! * `{"cmd": "sweep", "networks": …, "schemes": …, "batch": …,
 //!   "seed": …, "backend": …, "exact_cap": …, "pattern": …,
 //!   "blob_radius": …, "gather": …}` — the `agos sweep` grid; the
-//!   result document is byte-identical to `agos sweep --out`.
+//!   result document is byte-identical to `agos sweep --out`. With a
+//!   `"scenario": <path>` field the request expands that scenario file
+//!   instead (which then owns `networks`/`schemes`/`seed`), returning
+//!   the `agos sweep --scenario --out` report byte-for-byte.
 //! * `{"cmd": "cosim", "traces": <path> (required), "replay": bool,
 //!   …backend fields…}` — the `agos cosim` report; byte-identical to
 //!   `agos cosim --out`. The decoded trace (and its replay bank) stays
@@ -42,6 +45,7 @@ use crate::config::{
 use crate::coordinator::{cosim_prepared, PreparedCosim};
 use crate::nn::zoo;
 use crate::report::{generate, ReportCtx};
+use crate::scenario::{scenario_report_json, ScenarioFile};
 use crate::sim::{sweep_report_json, GatherPlanCache, SweepCache, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
 use crate::trace::TraceFile;
@@ -202,6 +206,21 @@ impl ServeState {
     }
 
     fn handle_sweep(&self, req: &Json) -> anyhow::Result<Json> {
+        if let Some(path) = req_str(req, "scenario")? {
+            // Mirrors `agos sweep --scenario`: the file owns the axes
+            // these fields would bend, and the report is the same pure
+            // function of (file, request knobs) the CLI writes.
+            for owned in ["networks", "schemes", "seed"] {
+                anyhow::ensure!(
+                    matches!(req.get(owned), Json::Null),
+                    "a scenario sweep owns '{owned}': the file is self-contained, edit it instead"
+                );
+            }
+            let scenario = ScenarioFile::load(Path::new(path))?;
+            let ex = scenario.expand(&self.cfg, &self.opts_from(req)?)?;
+            let results = ex.run(&self.runner());
+            return Ok(scenario_report_json(&ex, &results));
+        }
         let nets = zoo::by_list(req_str(req, "networks")?.unwrap_or("all"))?;
         let schemes = Scheme::parse_list(req_str(req, "schemes")?.unwrap_or("all"))?;
         let opts = self.opts_from(req)?;

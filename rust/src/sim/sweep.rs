@@ -50,8 +50,11 @@ use super::engine::{simulate_network_jobs, NetworkSimResult};
 /// gather planned windows from it instead of drawing per-output
 /// patterns — every sampled exact result's draw sequence changed — and
 /// the v4 binary trace container folds a new format tag into trace
-/// fingerprints.)
-pub const SIM_REVISION: u64 = 6;
+/// fingerprints. rev 7: the options identity grew a presence-tagged
+/// scenario fingerprint — every `SimOptions::fingerprint()` value moved,
+/// so spills minted at rev ≤ 6 would never match and are rejected
+/// outright.)
+pub const SIM_REVISION: u64 = 7;
 
 /// Cache identity of one simulation: everything that can change the
 /// result — the network (name *and* structure), the scheme, and the
@@ -90,10 +93,18 @@ pub struct SweepCombo {
     pub scheme: Scheme,
     pub cfg: AcceleratorConfig,
     pub opts: SimOptions,
+    /// Per-combo sparsity-model override. `None` (every pre-scenario
+    /// caller) falls back to the plan-wide model handed to
+    /// [`SweepRunner::run`]; scenario plans set it so one plan can carry
+    /// many schedule phases — each phase a differently-scaled model —
+    /// through a single cached run. The override participates in the
+    /// cache key exactly as the plan-wide model would.
+    pub model: Option<SparsityModel>,
 }
 
 impl SweepCombo {
     fn key(&self, model: &SparsityModel) -> SweepKey {
+        let model = self.model.as_ref().unwrap_or(model);
         SweepKey::new(&self.network, self.scheme, &self.cfg, &self.opts, model)
     }
 }
@@ -134,7 +145,32 @@ impl SweepPlan {
         cfg: &AcceleratorConfig,
         opts: &SimOptions,
     ) {
-        self.combos.push(SweepCombo { network, scheme, cfg: cfg.clone(), opts: opts.clone() });
+        self.combos.push(SweepCombo {
+            network,
+            scheme,
+            cfg: cfg.clone(),
+            opts: opts.clone(),
+            model: None,
+        });
+    }
+
+    /// [`SweepPlan::push`] with a per-combo sparsity-model override (see
+    /// [`SweepCombo::model`]) — how scenario schedule phases enter a plan.
+    pub fn push_with_model(
+        &mut self,
+        network: Network,
+        scheme: Scheme,
+        cfg: &AcceleratorConfig,
+        opts: &SimOptions,
+        model: SparsityModel,
+    ) {
+        self.combos.push(SweepCombo {
+            network,
+            scheme,
+            cfg: cfg.clone(),
+            opts: opts.clone(),
+            model: Some(model),
+        });
     }
 
     pub fn len(&self) -> usize {
@@ -399,7 +435,8 @@ impl SweepRunner {
             let inner_jobs = self.jobs.div_ceil(leaders.len());
             let results = run_indexed(leaders.len(), self.jobs, |w| {
                 let c = &plan.combos[leaders[w]];
-                simulate_network_jobs(&c.network, &c.cfg, &c.opts, model, c.scheme, inner_jobs)
+                let m = c.model.as_ref().unwrap_or(model);
+                simulate_network_jobs(&c.network, &c.cfg, &c.opts, m, c.scheme, inner_jobs)
             });
             for (w, r) in results.into_iter().enumerate() {
                 self.cache.insert(keys[leaders[w]].clone(), Arc::new(r));
@@ -528,6 +565,39 @@ mod tests {
         assert_eq!(runner.cache().misses(), 1);
         assert_eq!(runner.cache().hits(), 3);
         assert!(Arc::ptr_eq(&again[0], &out[0]));
+    }
+
+    #[test]
+    fn per_combo_model_override_keys_and_executes_like_the_plan_model() {
+        let cfg = AcceleratorConfig::default();
+        let opts = small_opts();
+        let base = SparsityModel::synthetic(opts.seed);
+        let scaled = base.clone().with_scale(0.5);
+
+        // Reference: the scaled model as the *plan-wide* model.
+        let reference = SweepRunner::new(1);
+        let mut ref_plan = SweepPlan::new();
+        ref_plan.push(zoo::agos_cnn(), Scheme::InOut, &cfg, &opts);
+        let want = reference.run(&ref_plan, &scaled);
+
+        // Same model as a *per-combo override*, run under the base model:
+        // identical result, and the cache key is the override's.
+        let runner = SweepRunner::new(2);
+        let mut plan = SweepPlan::new();
+        plan.push(zoo::agos_cnn(), Scheme::InOut, &cfg, &opts);
+        plan.push_with_model(zoo::agos_cnn(), Scheme::InOut, &cfg, &opts, scaled.clone());
+        let out = runner.run(&plan, &base);
+        assert_eq!(runner.cache().misses(), 2, "base and override must not share a key");
+        assert_eq!(out[1].total_cycles(), want[0].total_cycles());
+        assert_eq!(out[1].total_energy_j(), want[0].total_energy_j());
+        assert_ne!(out[0].total_cycles(), out[1].total_cycles());
+
+        // An override equal to the plan model dedups against plain combos.
+        let mut dup = SweepPlan::new();
+        dup.push(zoo::agos_cnn(), Scheme::InOut, &cfg, &opts);
+        dup.push_with_model(zoo::agos_cnn(), Scheme::InOut, &cfg, &opts, base.clone());
+        let two = runner.run(&dup, &base);
+        assert!(Arc::ptr_eq(&two[0], &two[1]));
     }
 
     #[test]

@@ -183,7 +183,7 @@ pub fn analyze_network(net: &Network, fwd: &[f64]) -> Vec<LayerOpportunity> {
 /// non-zero at generic positions — contributes a dense map. Real
 /// capture writes the actual value bitmap instead; the dense arms here
 /// mirror what those values generically are.
-fn synth_footprint(
+pub(crate) fn synth_footprint(
     net: &Network,
     id: crate::nn::LayerId,
     relu_acts: &std::collections::HashMap<crate::nn::LayerId, Bitmap>,

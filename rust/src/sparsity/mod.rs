@@ -11,6 +11,7 @@ pub use analyze::{
     analyze_network, capture_synthetic_trace, capture_synthetic_trace_images, gradient_sparsity,
     LayerOpportunity, SparsityKind,
 };
+pub(crate) use analyze::synth_footprint;
 pub use bitmap::{Bitmap, ChannelWords};
 pub(crate) use bitmap::or_bits;
 pub use encode::{

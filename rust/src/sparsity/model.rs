@@ -46,6 +46,13 @@ pub struct SparsityModel {
     pub maxpool_attenuation: f64,
     /// Residual attenuation through AvgPool.
     pub avgpool_attenuation: f64,
+    /// Multiplier on every assigned ReLU sparsity fraction (clamped to
+    /// ≤ 0.95 after scaling). Scenario schedules (`scenario::SparsitySchedule`)
+    /// model early/mid/late-epoch regimes by scaling one calibrated model
+    /// instead of re-deriving bands per phase; the band *draw* happens
+    /// before scaling, so every phase perturbs the same underlying sample.
+    /// 1.0 is the identity and keeps pre-scenario fingerprints unchanged.
+    pub sparsity_scale: f64,
 }
 
 impl SparsityModel {
@@ -54,6 +61,7 @@ impl SparsityModel {
             source: TraceSource::Synthetic { seed },
             maxpool_attenuation: 0.6,
             avgpool_attenuation: 0.1,
+            sparsity_scale: 1.0,
         }
     }
 
@@ -62,7 +70,15 @@ impl SparsityModel {
             source: TraceSource::Measured { seed, by_name },
             maxpool_attenuation: 0.6,
             avgpool_attenuation: 0.1,
+            sparsity_scale: 1.0,
         }
+    }
+
+    /// The same model with its ReLU fractions scaled by `scale` — how a
+    /// schedule phase derives its per-phase model.
+    pub fn with_scale(mut self, scale: f64) -> SparsityModel {
+        self.sparsity_scale = scale;
+        self
     }
 
     /// Stable 64-bit fingerprint over everything that changes the
@@ -83,6 +99,13 @@ impl SparsityModel {
             }
         }
         h.put_f64(self.maxpool_attenuation).put_f64(self.avgpool_attenuation);
+        // Folded only when it actually changes the assignment (≠ 1.0), so
+        // every fingerprint minted before the scale existed — including
+        // sweep-cache disk spills — remains valid (same precedent as
+        // `SimOptions`' conditional blob_radius fold).
+        if self.sparsity_scale != 1.0 {
+            h.put(3).put_f64(self.sparsity_scale);
+        }
         h.finish()
     }
 
@@ -126,12 +149,16 @@ impl SparsityModel {
         for l in net.layers() {
             fwd[l.id] = match l.kind {
                 LayerKind::ReLU => {
-                    if let Some(m) = measured.and_then(|m| m.get(&l.name)) {
+                    let raw = if let Some(m) = measured.and_then(|m| m.get(&l.name)) {
                         *m
                     } else {
                         let (lo, hi) = Self::relu_band(&net.name, Self::is_after_add(net, l.id));
                         rng.range_f64(lo, hi)
-                    }
+                    };
+                    // Scale *after* drawing: the RNG stream is identical at
+                    // every scale, so phases of one schedule differ only by
+                    // the multiplier, never by divergent draw sequences.
+                    (raw * self.sparsity_scale).clamp(0.0, 0.95)
                 }
                 LayerKind::MaxPool { .. } => {
                     fwd[l.inputs[0]] * self.maxpool_attenuation
@@ -284,6 +311,40 @@ mod tests {
         let max = vals.iter().cloned().fold(f64::MIN, f64::max);
         assert!(max > min, "no variation across batch");
         assert!(max - min < 0.5, "variation implausibly large");
+    }
+
+    #[test]
+    fn sparsity_scale_multiplies_relu_draws_without_moving_the_stream() {
+        let net = zoo::vgg16();
+        let base = SparsityModel::synthetic(7);
+        let early = base.clone().with_scale(0.5);
+        let a = base.assign(&net);
+        let b = early.assign(&net);
+        for l in net.layers() {
+            if l.kind.is_relu() {
+                // Same draw, halved — the stream did not diverge.
+                assert!((b[l.id] - a[l.id] * 0.5).abs() < 1e-12, "{}", l.name);
+            }
+        }
+        // Scaling saturates at 0.95 rather than exceeding a plausible map.
+        let dense = base.clone().with_scale(10.0).assign(&net);
+        for l in net.layers() {
+            if l.kind.is_relu() {
+                assert!((dense[l.id] - 0.95).abs() < 1e-12, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_scale_folds_into_fingerprint_only_when_active() {
+        let base = SparsityModel::synthetic(7);
+        // Identity scale leaves the pre-scenario fingerprint untouched —
+        // disk spills minted before the field existed still match.
+        assert_eq!(base.fingerprint(), base.clone().with_scale(1.0).fingerprint());
+        let early = base.clone().with_scale(0.5);
+        let late = base.clone().with_scale(1.4);
+        assert_ne!(base.fingerprint(), early.fingerprint());
+        assert_ne!(early.fingerprint(), late.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Scenario expansion end to end: the committed example files parse and
+//! run, expansion is bit-identical across `--jobs` levels, adversarial
+//! patterns exercise both backends, and scenario fingerprints keep
+//! sweep-cache keys disjoint from hand-written grids.
+
+use std::path::Path;
+
+use agos::config::{AcceleratorConfig, ExecBackend, Scheme, SimOptions};
+use agos::nn::zoo;
+use agos::scenario::{scenario_report_json, ScenarioFile};
+use agos::sim::{SweepKey, SweepPlan, SweepRunner};
+use agos::sparsity::SparsityModel;
+use agos::util::json::Json;
+
+fn example(name: &str) -> ScenarioFile {
+    ScenarioFile::load(Path::new(&format!("examples/scenarios/{name}.json")))
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+#[test]
+fn committed_examples_parse_expand_and_roundtrip() {
+    // Every file referenced from the docs and CI must parse under the
+    // strict parser, expand to a non-empty plan, and canonicalize to a
+    // stable fingerprint.
+    for name in ["trajectory_small", "generated_families", "adversarial_suite"] {
+        let scn = example(name);
+        let points = scn.points().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!points.is_empty(), "{name} expands to points");
+        let again = ScenarioFile::from_json(&scn.to_json()).unwrap();
+        assert_eq!(scn, again, "{name}: canonical roundtrip is the identity");
+        assert_eq!(scn.fingerprint(), again.fingerprint(), "{name}");
+    }
+}
+
+#[test]
+fn trajectory_small_is_bit_identical_across_jobs_levels() {
+    // The expansion golden: the CI smoke diffs `agos sweep --scenario`
+    // outputs at --jobs 1 vs 4; this is the same contract in-process.
+    let scn = example("trajectory_small");
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 1, ..SimOptions::default() };
+    let ex = scn.expand(&cfg, &opts).unwrap();
+    assert_eq!(ex.points.len(), 6, "2 networks x 3 phases");
+    assert_eq!(ex.schemes.len(), 3);
+    assert_eq!(ex.plan.len(), 18);
+    assert_eq!(ex.opts.seed, 2109, "the file's seed wins");
+    assert_eq!(ex.points[0].label, "agos_cnn@early");
+    assert_eq!(ex.points[5].label, "ladder_d2_w8_k3_s1@late");
+
+    let r1 = ex.run(&SweepRunner::new(1));
+    let r4 = ex.run(&SweepRunner::new(4));
+    let a = scenario_report_json(&ex, &r1).dump();
+    let b = scenario_report_json(&ex, &r4).dump();
+    assert_eq!(a, b, "jobs must not change the scenario report");
+    assert!(a.contains("\"trajectory\""));
+
+    // The point of the trajectory: speedup over DC grows with the
+    // phase's sparsity scale (0.55 -> 1.0 -> 1.35 for agos_cnn).
+    let speedup = |pi: usize| {
+        let dc = r1[pi * 3].total_cycles();
+        dc / r1[pi * 3 + 2].total_cycles()
+    };
+    assert!(speedup(1) >= speedup(0), "mid >= early");
+    assert!(speedup(2) >= speedup(1), "late >= mid");
+    assert!(speedup(2) > speedup(0), "late beats early outright");
+}
+
+#[test]
+fn adversarial_patterns_run_both_backends_and_are_distinct() {
+    let scn = ScenarioFile::from_json(
+        &Json::parse(
+            r#"{"version": 1, "seed": 5,
+                "generators": [{"kind": "adversarial", "network": "agos_cnn"}],
+                "schemes": "dc,in+out+wr"}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let cfg = AcceleratorConfig::default();
+    for backend in [ExecBackend::Analytic, ExecBackend::Exact] {
+        let mut opts = SimOptions { batch: 1, ..SimOptions::default() };
+        opts.backend = backend;
+        opts.exact_outputs_per_tile = 8;
+        let ex = scn.expand(&cfg, &opts).unwrap();
+        assert_eq!(ex.points.len(), 3, "one point per pattern");
+        let results = ex.run(&SweepRunner::new(2));
+        let again = ex.run(&SweepRunner::new(1));
+        assert_eq!(
+            scenario_report_json(&ex, &results).dump(),
+            scenario_report_json(&ex, &again).dump(),
+            "{backend:?}: replayed patterns are deterministic"
+        );
+        // Point order follows AdversarialPattern::ALL: all_dense,
+        // checkerboard, channel_collapsed. Under the sparse scheme the
+        // half-empty patterns must beat the dense one, and the pattern
+        // *structure* (not just density) must reach the result.
+        let sparse = |pi: usize| results[pi * 2 + 1].total_cycles();
+        assert!(
+            sparse(0) > sparse(1),
+            "{backend:?}: checkerboard (half density) must outrun all_dense"
+        );
+        assert!(
+            sparse(0) > sparse(2),
+            "{backend:?}: channel_collapsed must outrun all_dense"
+        );
+    }
+}
+
+#[test]
+fn scenario_fingerprints_separate_cache_keys() {
+    let cfg = AcceleratorConfig::default();
+    let opts = SimOptions { batch: 1, ..SimOptions::default() };
+    let model = SparsityModel::synthetic(opts.seed);
+    let net = zoo::by_name("agos_cnn").unwrap();
+
+    // Key level: the stamp (and its value) folds into the fingerprint.
+    let key = |o: &SimOptions| SweepKey::new(&net, Scheme::Dense, &cfg, o, &model);
+    let mut stamped = opts.clone();
+    stamped.scenario_fingerprint = Some(0xFEED);
+    let mut other = opts.clone();
+    other.scenario_fingerprint = Some(0xBEEF);
+    assert_ne!(key(&opts).fingerprint, key(&stamped).fingerprint);
+    assert_ne!(key(&stamped).fingerprint, key(&other).fingerprint);
+
+    // Runner level: a scenario whose grid nominally overlaps a plain
+    // sweep (same network, schemes, seed, batch, identity scale) never
+    // poaches its cache entries — and re-running the scenario hits.
+    let scn = ScenarioFile::from_json(
+        &Json::parse(
+            r#"{"version": 1,
+                "generators": [{"kind": "zoo", "networks": "agos_cnn"}],
+                "schemes": "dc,in+out+wr"}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(scn.seed, opts.seed, "default seeds line up for the overlap");
+    let runner = SweepRunner::new(2);
+    let schemes = [Scheme::Dense, Scheme::InOutWr];
+    let plan = SweepPlan::grid(&[net.clone()], &schemes, &cfg, &opts);
+    runner.run(&plan, &model);
+    assert_eq!(runner.cache().misses(), 2);
+
+    let ex = scn.expand(&cfg, &opts).unwrap();
+    let results = ex.run(&runner);
+    assert_eq!(results.len(), 2);
+    assert_eq!(
+        runner.cache().misses(),
+        4,
+        "scenario combos must not alias the plain grid's cache entries"
+    );
+    ex.run(&runner);
+    assert_eq!(runner.cache().misses(), 4, "re-running the scenario is pure cache hits");
+    assert!(runner.cache().hits() >= 2);
+}
