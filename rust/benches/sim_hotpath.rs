@@ -316,6 +316,24 @@ fn main() {
         handle.join().expect("serve thread").expect("serve loop");
         std::fs::remove_dir_all(&dir).ok();
     }
+
+    // Platform table (ISSUE 10): cold builds Table 2 against an empty
+    // sweep cache — simulating both benchmark networks under every
+    // scheme the rows consume — while warm rebuilds it against a primed
+    // cache, leaving only density extraction and formatting. The ratio
+    // is the gated `table2_warm_vs_cold_speedup` row.
+    {
+        use agos::report::{table2_platforms, ReportCtx};
+        b.case("table2_platforms_cold", || {
+            let ctx = ReportCtx::with_batch(1);
+            table2_platforms(&ctx).to_json().dump().len()
+        });
+        let warm_ctx = ReportCtx::with_batch(1);
+        table2_platforms(&warm_ctx);
+        b.case("table2_platforms_warm", || {
+            table2_platforms(&warm_ctx).to_json().dump().len()
+        });
+    }
     b.finish();
 
     // Persist the sweep trajectory point (sequential vs parallel).
@@ -411,6 +429,14 @@ fn main() {
         pairs.push(("serve_warm_mean_s", serve_warm.mean.into()));
         pairs.push(("serve_warm_vs_cold_speedup", (serve_cold.mean / serve_warm.mean).into()));
     }
+    // Platform-table warm-vs-cold: the shared sweep cache is what keeps
+    // repeated Table 2 builds (and the `platforms` figure that reuses the
+    // same combos) cheap inside one report context.
+    let t2_cold = find("table2_platforms_cold");
+    let t2_warm = find("table2_platforms_warm");
+    pairs.push(("table2_cold_mean_s", t2_cold.mean.into()));
+    pairs.push(("table2_warm_mean_s", t2_warm.mean.into()));
+    pairs.push(("table2_warm_vs_cold_speedup", (t2_cold.mean / t2_warm.mean).into()));
     let j = Json::from_pairs(pairs);
     j.write_file(std::path::Path::new("BENCH_sweep.json")).expect("write BENCH_sweep.json");
     println!(

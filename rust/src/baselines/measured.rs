@@ -1,0 +1,220 @@
+//! Measured-sparsity platform models: skip mechanisms of related
+//! accelerators driven by the per-layer, per-phase densities our sweep
+//! engine measures, instead of hand-set utilization constants.
+//!
+//! Each mechanism describes what its hardware can *actually* exploit
+//! from a sparsity map:
+//!
+//! * **SparseTrain** (arXiv 2007.13595) — a dataflow that skips zero
+//!   activations in FP/WG and prunes ReLU-masked gradients in BP, so FP
+//!   and WG run at the measured input density and BP at the joint
+//!   input×output density.
+//! * **TensorDash** (arXiv 2009.00748) — a 4:1 sparse operand
+//!   multiplexer in front of each MAC: one operand side's zeros can be
+//!   skipped, but never more than four slots collapse into one cycle,
+//!   so the effective density is the measured input density floored at
+//!   1/4.
+//! * **SparseNN** (arXiv 1711.01263) — an input+output sparsity engine:
+//!   effective density is the joint input×output density our `IN+OUT`
+//!   scheme measures.
+//!
+//! The densities come from [`DensitySummary`] extractions of cached
+//! [`SweepRunner`] results, so the same (network, config, options)
+//! combo is simulated at most once per context — and a `--replay` run
+//! feeds the mechanisms *real trace bitmaps* through the identical
+//! path, because the replay bank is armed on the options the summaries
+//! are simulated under.
+
+use std::collections::BTreeMap;
+
+use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::nn::{Network, Phase};
+use crate::sim::{DensitySummary, EnergyBreakdown, SweepRunner};
+use crate::sparsity::SparsityModel;
+
+/// A related accelerator's sparsity-skip mechanism, evaluated against
+/// measured density maps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SkipMechanism {
+    /// Dataflow sparsity: FP/WG skip zero activations, BP prunes
+    /// ReLU-masked gradients.
+    SparseTrain,
+    /// 4:1 sparse operand multiplexing — input-side zeros, ≤4× per group.
+    TensorDash,
+    /// Input + output sparsity engine (like our `IN+OUT` scheme).
+    SparseNN,
+}
+
+impl SkipMechanism {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SkipMechanism::SparseTrain => "sparsetrain",
+            SkipMechanism::TensorDash => "tensordash",
+            SkipMechanism::SparseNN => "sparsenn",
+        }
+    }
+
+    /// Lower bound on the effective density the mechanism can reach: a
+    /// 4:1 multiplexer collapses at most four operand slots into one
+    /// cycle no matter how sparse the map is.
+    pub fn density_floor(&self) -> f64 {
+        match self {
+            SkipMechanism::TensorDash => 0.25,
+            _ => 0.0,
+        }
+    }
+
+    /// Effective (performed/dense) density for one (layer, phase) given
+    /// the measured input density `d_in` (from `Scheme::In`) and joint
+    /// input×output density `d_inout` (from `Scheme::InOut`).
+    pub fn effective_density(&self, phase: Phase, d_in: f64, d_inout: f64) -> f64 {
+        let d = match self {
+            SkipMechanism::TensorDash => d_in,
+            SkipMechanism::SparseNN => d_inout,
+            SkipMechanism::SparseTrain => match phase {
+                Phase::Forward | Phase::WeightGrad => d_in,
+                Phase::Backward => d_inout,
+            },
+        };
+        d.max(self.density_floor())
+    }
+
+    /// Which of our schemes' measured energy mixes best approximates the
+    /// mechanism's component breakdown.
+    pub fn energy_mix_scheme(&self) -> Scheme {
+        match self {
+            SkipMechanism::TensorDash => Scheme::In,
+            _ => Scheme::InOut,
+        }
+    }
+}
+
+/// The two measured density summaries every mechanism consumes, pulled
+/// from the shared (cached) sweep runner.
+pub fn measured_summaries(
+    net: &Network,
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    model: &SparsityModel,
+    runner: &SweepRunner,
+) -> (DensitySummary, DensitySummary) {
+    let r_in = runner.one(net, cfg, opts, model, Scheme::In);
+    let r_io = runner.one(net, cfg, opts, model, Scheme::InOut);
+    (DensitySummary::from_result(&r_in), DensitySummary::from_result(&r_io))
+}
+
+/// Iteration latency (ms) of a mechanism at a platform's published peak
+/// throughput: per (layer, phase), the dense FLOPs are scaled by the
+/// effective density the mechanism extracts from the *measured* maps,
+/// then a §6-style mapping-efficiency penalty covers the utilization
+/// gap between ideal skipping and the platform's real dataflow.
+pub fn measured_latency_ms(
+    mechanism: SkipMechanism,
+    mapping_penalty: f64,
+    peak_gops: f64,
+    d_in: &DensitySummary,
+    d_inout: &DensitySummary,
+) -> f64 {
+    // Join the joint densities by (layer, phase); the accumulation order
+    // is the In summary's deterministic per_layer order.
+    let io: BTreeMap<(&str, &str), f64> = d_inout
+        .layers
+        .iter()
+        .map(|l| ((l.name.as_str(), l.phase.label()), l.density))
+        .collect();
+    let mut seconds = 0.0;
+    for l in &d_in.layers {
+        let joint = io.get(&(l.name.as_str(), l.phase.label())).copied().unwrap_or(l.density);
+        let eff = mechanism.effective_density(l.phase, l.density, joint);
+        seconds += 2.0 * l.dense_macs * eff / (peak_gops * 1e9);
+    }
+    seconds * mapping_penalty * 1e3
+}
+
+/// A measured breakdown rescaled so its total matches `total_j`: the
+/// component *mix* stays measured while the envelope comes from the
+/// platform's published power × its measured iteration time.
+pub fn scale_to_total(b: EnergyBreakdown, total_j: f64) -> EnergyBreakdown {
+    let t = b.total();
+    if t > 0.0 {
+        b.scaled(total_j / t)
+    } else {
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn summaries() -> (DensitySummary, DensitySummary) {
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 1, ..SimOptions::default() };
+        let model = SparsityModel::synthetic(17);
+        measured_summaries(&net, &cfg, &opts, &model, &SweepRunner::new(0))
+    }
+
+    #[test]
+    fn tensordash_floor_binds_at_extreme_sparsity() {
+        let m = SkipMechanism::TensorDash;
+        assert_eq!(m.effective_density(Phase::Forward, 0.01, 0.001), 0.25);
+        assert_eq!(m.effective_density(Phase::Forward, 0.6, 0.3), 0.6);
+    }
+
+    #[test]
+    fn sparsetrain_prunes_bp_deeper_than_fp() {
+        let m = SkipMechanism::SparseTrain;
+        // BP reads the joint density, FP only the input density.
+        assert_eq!(m.effective_density(Phase::Backward, 0.5, 0.3), 0.3);
+        assert_eq!(m.effective_density(Phase::Forward, 0.5, 0.3), 0.5);
+        assert_eq!(m.effective_density(Phase::WeightGrad, 0.5, 0.3), 0.5);
+    }
+
+    #[test]
+    fn sparsenn_tracks_joint_density() {
+        let m = SkipMechanism::SparseNN;
+        for p in Phase::ALL {
+            assert_eq!(m.effective_density(p, 0.7, 0.4), 0.4);
+        }
+    }
+
+    #[test]
+    fn measured_latency_orders_mechanisms_sensibly() {
+        let (din, dio) = summaries();
+        let at = |m| measured_latency_ms(m, 1.0, 1000.0, &din, &dio);
+        let dense_s = 2.0 * din.total_dense_macs() / (1000.0 * 1e9) * 1e3;
+        let td = at(SkipMechanism::TensorDash);
+        let st = at(SkipMechanism::SparseTrain);
+        let nn = at(SkipMechanism::SparseNN);
+        // Every mechanism beats dense execution at the same peak, and
+        // the joint-density engine prunes at least as much as the
+        // input-only mux (same maps, no floor bound at these densities).
+        for v in [td, st, nn] {
+            assert!(v < dense_s, "{v} vs dense {dense_s}");
+            assert!(v > 0.0);
+        }
+        assert!(nn <= st + 1e-12, "in+out prunes ≥ sparsetrain: {nn} vs {st}");
+        assert!(st <= td + 1e-12, "bp pruning helps: {st} vs {td}");
+    }
+
+    #[test]
+    fn mapping_penalty_scales_linearly() {
+        let (din, dio) = summaries();
+        let base = measured_latency_ms(SkipMechanism::SparseNN, 1.0, 500.0, &din, &dio);
+        let pen = measured_latency_ms(SkipMechanism::SparseNN, 1.5, 500.0, &din, &dio);
+        assert!((pen / base - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_to_total_preserves_mix() {
+        let b = EnergyBreakdown { mac_j: 3.0, sram_j: 1.0, ..EnergyBreakdown::default() };
+        let s = scale_to_total(b, 8.0);
+        assert!((s.total() - 8.0).abs() < 1e-12);
+        assert!((s.mac_j / s.sram_j - 3.0).abs() < 1e-12);
+        // A zero-total breakdown passes through rather than dividing by 0.
+        let z = scale_to_total(EnergyBreakdown::default(), 5.0);
+        assert_eq!(z.total(), 0.0);
+    }
+}

@@ -1,16 +1,25 @@
 //! Baseline platforms for the Table 2 comparison.
 //!
-//! Two families:
+//! Three families:
 //!
 //! * **Simulator-backed** — DaDianNao (dense) and CNVLUTIN (input-sparse)
 //!   are modeled by running *our* simulator under the matching scheme and
 //!   applying their published clock and a mapping-efficiency penalty
 //!   (§6: "dense variants of our architecture perform 1.9×/1.7× better
 //!   than DaDianNao … primarily due to efficient mapping strategies").
+//! * **Measured-sparsity** — SparseTrain, TensorDash and SparseNN model
+//!   each design's published *skip mechanism* against the per-layer,
+//!   per-phase densities the sweep engine measures (`measured`), so
+//!   their latency and energy move with the sparsity model and, under
+//!   `--replay`, with real trace bitmaps.
 //! * **Analytic** — CPU, GPU, LNPU, SparTANN and Selective-Grad are
 //!   modeled from their published peak throughput, utilization and the
 //!   sparsity phases they support (Table 2 footnotes).
 
+mod measured;
 mod platforms;
 
-pub use platforms::{all_platforms, iteration_latency_ms, Platform, PlatformKind};
+pub use measured::{measured_latency_ms, measured_summaries, scale_to_total, SkipMechanism};
+pub use platforms::{
+    all_platforms, iteration_latency_ms, platform_cost, Platform, PlatformCost, PlatformKind,
+};

@@ -18,9 +18,9 @@ use crate::config::{
     AcceleratorConfig, BitmapPattern, ExecBackend, GatherMode, Scheme, SimOptions, TraceFormat,
     TrainOptions,
 };
-use crate::coordinator::{cosim_from_traces_owned, run_training_pipeline};
+use crate::coordinator::{cosim_from_traces_owned, run_training_pipeline, PreparedCosim};
 use crate::nn::{zoo, Network, Phase};
-use crate::report::{generate, ReportCtx};
+use crate::report::{benchmarks_from_scenario, benchmarks_from_trace, generate, ReportCtx};
 use crate::scenario::{
     adversarial_trace, scenario_report_json, trajectory_figure, AdversarialPattern, ScenarioFile,
 };
@@ -129,7 +129,7 @@ the cached runner (the file owns --networks/--schemes/--seed — see docs/SCENAR
             Command {
                 name: "figure",
                 about: "regenerate a paper figure (fig3b fig3d fig11a fig11b fig12a fig12b \
-fig13 fig15 fig16 fig17 figval | ablations | all)",
+fig13 fig15 fig16 fig17 figval platforms | ablations | all)",
                 opts: vec![
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
@@ -140,6 +140,17 @@ fig13 fig15 fig16 fig17 figval | ablations | all)",
                     opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
                     opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                     opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
+                    opt(
+                        "traces",
+                        "platform comparison: benchmark the trace's network under its \
+measured sparsity (table2/platforms)",
+                    ),
+                    opt(
+                        "scenario",
+                        "platform comparison: one benchmark per expanded scenario point \
+(the file owns --seed — see docs/SCENARIOS.md)",
+                    ),
+                    flag("replay", "with --traces: drive the comparison from the packed bitmaps"),
                 ],
             },
             Command {
@@ -148,12 +159,24 @@ fig13 fig15 fig16 fig17 figval | ablations | all)",
                 opts: vec![
                     opt("out", "also write results JSON into this directory"),
                     opt("batch", "batch size (default 16)"),
+                    opt("seed", "sparsity model seed"),
                     opt("jobs", "sweep worker threads (default: all cores)"),
                     opt("backend", "analytic|exact execution backend (default analytic)"),
                     opt("exact-cap", "exact backend: sampled outputs per tile (default 4096)"),
                     opt("pattern", "exact backend: iid|blobs sampled-bitmap structure"),
                     opt("blob-radius", "blob radius for --pattern blobs (default 2)"),
                     opt("cache", "sweep cache file, or 'none' (default results/sweep-cache.json)"),
+                    opt(
+                        "traces",
+                        "platform comparison: benchmark the trace's network under its \
+measured sparsity (table2)",
+                    ),
+                    opt(
+                        "scenario",
+                        "platform comparison: one benchmark per expanded scenario point \
+(the file owns --seed — see docs/SCENARIOS.md)",
+                    ),
+                    flag("replay", "with --traces: drive the comparison from the packed bitmaps"),
                 ],
             },
             Command {
@@ -322,6 +345,30 @@ fn ctx_from(args: &Args) -> anyhow::Result<ReportCtx> {
     apply_backend_opts(&mut ctx.opts, args)?;
     ctx.model = SparsityModel::synthetic(ctx.opts.seed);
     ctx.sweep = SweepRunner::new(args.opt_usize("jobs", 0)?);
+    // Platform-comparison benchmark overrides (table2 / the `platforms`
+    // figure): a scenario expands one benchmark per point; a trace file
+    // benchmarks its network under the measured model, with `--replay`
+    // additionally arming the packed bitmaps — the same arming as cosim.
+    if let Some(path) = args.opt("scenario") {
+        anyhow::ensure!(
+            args.opt("traces").is_none() && !args.flag("replay"),
+            "--scenario and --traces/--replay are mutually exclusive"
+        );
+        reject_scenario_owned(args, &["seed"])?;
+        let scenario = ScenarioFile::load(Path::new(path))?;
+        let ex = scenario.expand(&ctx.cfg, &ctx.opts)?;
+        ctx.benchmarks = Some(benchmarks_from_scenario(&ex));
+    } else if let Some(path) = args.opt("traces") {
+        let (traces, warnings) = crate::trace::TraceFile::load_lenient(Path::new(path))?;
+        for w in &warnings {
+            eprintln!("figure: trace warning: {w}");
+        }
+        let replay = args.flag("replay");
+        let prep = PreparedCosim::new_owned(traces, replay)?;
+        ctx.benchmarks = Some(benchmarks_from_trace(&prep, &ctx.opts, replay)?);
+    } else if args.flag("replay") {
+        anyhow::bail!("--replay needs --traces");
+    }
     load_sweep_cache(&ctx.sweep, &sweep_cache_path(args));
     Ok(ctx)
 }

@@ -182,6 +182,17 @@ impl PreparedCosim {
         &self.net.name
     }
 
+    /// The resolved network the trace was captured on.
+    pub fn net(&self) -> &crate::nn::Network {
+        &self.net
+    }
+
+    /// Per-layer mean activation sparsity measured from the trace — the
+    /// map a request's [`SparsityModel::measured`] is derived from.
+    pub fn measured_sparsity(&self) -> &std::collections::BTreeMap<String, f64> {
+        &self.measured
+    }
+
     /// The trace's content fingerprint — the resident-bank key.
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint

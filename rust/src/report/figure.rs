@@ -51,7 +51,11 @@ impl Figure {
         for (label, values) in &self.rows {
             s.push_str(&format!("{label:<label_w$}"));
             for v in values {
-                if v.abs() >= 1000.0 {
+                if !v.is_finite() {
+                    // Missing values (e.g. an unpublished spec) render as
+                    // an explicit placeholder, never as NaN/inf text.
+                    s.push_str(&format!(" {:>12}", "n/a"));
+                } else if v.abs() >= 1000.0 {
                     s.push_str(&format!(" {v:>12.1}"));
                 } else {
                     s.push_str(&format!(" {v:>12.3}"));
@@ -72,7 +76,16 @@ impl Figure {
             .map(|(l, vs)| {
                 Json::from_pairs(vec![
                     ("label", l.as_str().into()),
-                    ("values", Json::Arr(vs.iter().map(|v| Json::Num(*v)).collect())),
+                    (
+                        "values",
+                        // Non-finite values would dump as bare `NaN`/`inf`
+                        // tokens — invalid JSON — so they serialize as null.
+                        Json::Arr(
+                            vs.iter()
+                                .map(|v| if v.is_finite() { Json::Num(*v) } else { Json::Null })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -132,5 +145,19 @@ mod tests {
         let j = f.to_json();
         assert_eq!(j.get("id").as_str(), Some("f"));
         assert_eq!(j.get("rows").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn non_finite_values_emit_null_and_na() {
+        let mut f = Figure::new("f", "t", &["a", "b"]);
+        f.row("r", vec![f64::NAN, 2.0]);
+        let dump = f.to_json().dump();
+        assert!(dump.contains("null"), "{dump}");
+        assert!(!dump.contains("NaN"), "{dump}");
+        // The dump must stay parseable JSON.
+        assert!(Json::parse(&dump).is_ok());
+        let r = f.render();
+        assert!(r.contains("n/a"), "{r}");
+        assert!(!r.contains("NaN"), "{r}");
     }
 }

@@ -25,14 +25,80 @@ pub use ablations::{
     ablation_double_buffering, ablation_grid_scaling, ablation_reconfig_spectrum,
     ablation_tile_cv, ablation_wr_threshold,
 };
-pub use tables::{table1_components, table2_platforms};
+pub use tables::{figure_platforms, table1_components, table2_platforms};
 
 use std::sync::Arc;
 
 use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+use crate::coordinator::PreparedCosim;
 use crate::nn::{zoo, Network};
+use crate::scenario::ExpandedScenario;
 use crate::sim::{NetworkSimResult, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
+
+/// One benchmark of the platform comparison (Table 2 / `platforms`
+/// figure): a network simulated under specific options and sparsity
+/// model. The default pair is {vgg16, resnet18} at the context's
+/// options; `--replay` swaps in the trace's network with its bank and
+/// measured model armed, `--scenario` expands one benchmark per point.
+#[derive(Clone)]
+pub struct PlatformBenchmark {
+    /// Column-name prefix (`<label>_ms`, `<label>_mJ`).
+    pub label: String,
+    pub net: Network,
+    pub opts: SimOptions,
+    pub model: SparsityModel,
+}
+
+/// The platform benchmark for one prepared trace, armed exactly like
+/// [`crate::coordinator::cosim_prepared`] arms a co-simulation: the
+/// trace's content fingerprint folds into the cache identity, the
+/// measured model is derived from the trace's per-layer means under the
+/// request seed, and (under replay) the shared bank drives the sim.
+pub fn benchmarks_from_trace(
+    prep: &PreparedCosim,
+    base: &SimOptions,
+    replay: bool,
+) -> anyhow::Result<Vec<PlatformBenchmark>> {
+    let mut opts = base.clone();
+    opts.trace_fingerprint = Some(prep.fingerprint());
+    if replay {
+        let bank = prep
+            .bank()
+            .ok_or_else(|| anyhow::anyhow!("trace was prepared without a replay bank"))?;
+        opts.replay = Some(bank.clone());
+    }
+    let model = SparsityModel::measured(opts.seed, prep.measured_sparsity().clone());
+    Ok(vec![PlatformBenchmark {
+        label: prep.network().to_string(),
+        net: prep.net().clone(),
+        opts,
+        model,
+    }])
+}
+
+/// One platform benchmark per scenario point, armed exactly like
+/// [`crate::scenario::ScenarioFile::expand`] arms its combos (per-point
+/// replay bank + trace fingerprint for adversarial points, the phase's
+/// scaled model otherwise).
+pub fn benchmarks_from_scenario(ex: &ExpandedScenario) -> Vec<PlatformBenchmark> {
+    ex.points
+        .iter()
+        .map(|p| {
+            let mut opts = ex.opts.clone();
+            if let Some((bank, trace_fp)) = &p.replay {
+                opts.replay = Some(bank.clone());
+                opts.trace_fingerprint = Some(*trace_fp);
+            }
+            PlatformBenchmark {
+                label: p.label.clone(),
+                net: p.network.clone(),
+                opts,
+                model: p.model.clone(),
+            }
+        })
+        .collect()
+}
 
 /// Everything a figure generator needs, including the shared parallel
 /// sweep executor: all simulations route through `sweep`, so each
@@ -43,6 +109,9 @@ pub struct ReportCtx {
     pub opts: SimOptions,
     pub model: SparsityModel,
     pub sweep: SweepRunner,
+    /// Platform-comparison benchmarks when a trace or scenario overrides
+    /// the default {vgg16, resnet18} pair.
+    pub benchmarks: Option<Vec<PlatformBenchmark>>,
 }
 
 impl Default for ReportCtx {
@@ -54,6 +123,7 @@ impl Default for ReportCtx {
             opts,
             model,
             sweep: SweepRunner::new(0),
+            benchmarks: None,
         }
     }
 }
@@ -63,6 +133,24 @@ impl ReportCtx {
         let mut ctx = ReportCtx::default();
         ctx.opts.batch = batch;
         ctx
+    }
+
+    /// The platform-comparison benchmarks: the override when one is set,
+    /// the default {vgg16, resnet18} pair at the context's options
+    /// otherwise.
+    pub fn platform_benchmarks(&self) -> Vec<PlatformBenchmark> {
+        if let Some(b) = &self.benchmarks {
+            return b.clone();
+        }
+        [zoo::vgg16(), zoo::resnet18()]
+            .into_iter()
+            .map(|net| PlatformBenchmark {
+                label: net.name.clone(),
+                net,
+                opts: self.opts.clone(),
+                model: self.model.clone(),
+            })
+            .collect()
     }
 
     /// Cached simulation at the context's configuration.
@@ -96,6 +184,7 @@ pub fn generate(id: &str, ctx: &ReportCtx) -> anyhow::Result<Vec<Figure>> {
         "figval" => one(figval_backend(ctx)),
         "table1" => one(table1_components(&ctx.cfg)),
         "table2" => one(table2_platforms(ctx)),
+        "platforms" => one(figure_platforms(ctx)),
         "ablations" => Ok(vec![
             ablation_wr_threshold(ctx),
             ablation_double_buffering(ctx),
@@ -110,7 +199,7 @@ pub fn generate(id: &str, ctx: &ReportCtx) -> anyhow::Result<Vec<Figure>> {
             let mut out = Vec::new();
             for id in [
                 "fig3b", "fig3d", "fig11a", "fig11b", "fig12a", "fig12b", "fig13", "fig15",
-                "fig16", "fig17", "table1", "table2",
+                "fig16", "fig17", "table1", "table2", "platforms",
             ] {
                 out.extend(generate(id, ctx)?);
             }

@@ -1,10 +1,9 @@
 //! Table 1 (component specs) and Table 2 (platform comparison).
 
-use crate::baselines::{all_platforms, iteration_latency_ms};
+use crate::baselines::{all_platforms, platform_cost, PlatformCost};
 use crate::config::AcceleratorConfig;
-use crate::nn::zoo;
 
-use super::{Figure, ReportCtx};
+use super::{Figure, PlatformBenchmark, ReportCtx};
 
 /// Table 1: component power/area, PE and node totals, derived from the
 /// configuration (the paper's synthesis numbers are config constants).
@@ -41,25 +40,109 @@ pub fn table1_components(cfg: &AcceleratorConfig) -> Figure {
     fig
 }
 
-/// Table 2: platform comparison with per-iteration latency for VGG-16 and
-/// ResNet-18 at the evaluation batch size.
+/// Deterministic provenance suffix for the platform comparison: base
+/// batch/seed plus any trace/scenario fingerprints the benchmarks carry
+/// (content fingerprints, never filesystem paths — the note must be
+/// byte-identical across serve/CLI and `--jobs` levels).
+fn platform_notes(ctx: &ReportCtx, benches: &[PlatformBenchmark]) -> String {
+    let mut s = format!("batch {}, seed {}", ctx.opts.batch, ctx.opts.seed);
+    let mut traces: Vec<u64> =
+        benches.iter().filter_map(|b| b.opts.trace_fingerprint).collect();
+    traces.sort_unstable();
+    traces.dedup();
+    for fp in traces {
+        s.push_str(&format!(", trace {fp:016x}"));
+    }
+    let mut scenarios: Vec<u64> =
+        benches.iter().filter_map(|b| b.opts.scenario_fingerprint).collect();
+    scenarios.sort_unstable();
+    scenarios.dedup();
+    for fp in scenarios {
+        s.push_str(&format!(", scenario {fp:016x}"));
+    }
+    s
+}
+
+/// Per-platform costs for every benchmark, rows × benchmarks.
+fn platform_cost_matrix(
+    ctx: &ReportCtx,
+    benches: &[PlatformBenchmark],
+) -> Vec<(crate::baselines::Platform, Vec<PlatformCost>)> {
+    all_platforms(&ctx.cfg)
+        .into_iter()
+        .map(|p| {
+            let costs = benches
+                .iter()
+                .map(|b| platform_cost(&p, &b.net, &ctx.cfg, &b.opts, &b.model, &ctx.sweep))
+                .collect();
+            (p, costs)
+        })
+        .collect()
+}
+
+/// Table 2: platform comparison — published specs plus, per benchmark,
+/// the measured training-iteration latency (ms) and energy (mJ). The
+/// benchmark set defaults to {VGG-16, ResNet-18} and is overridden by
+/// `--replay` (the trace's network under its measured maps) or
+/// `--scenario` (one benchmark per expanded point).
 pub fn table2_platforms(ctx: &ReportCtx) -> Figure {
+    let benches = ctx.platform_benchmarks();
+    let mut columns: Vec<String> =
+        ["power_W", "peak_GOps", "eff_GOps_W", "area_mm2"].map(String::from).into();
+    for b in &benches {
+        columns.push(format!("{}_ms", b.label));
+        columns.push(format!("{}_mJ", b.label));
+    }
+    let cols: Vec<&str> = columns.iter().map(|c| c.as_str()).collect();
     let mut fig = Figure::new(
         "table2",
-        "Platform comparison (training iteration latency, ms)",
-        &["power_W", "peak_GOps", "eff_GOps_W", "vgg16_ms", "resnet18_ms"],
+        "Platform comparison (training iteration latency ms / energy mJ)",
+        &cols,
     );
-    fig.notes = format!("batch {}, seed {}", ctx.opts.batch, ctx.opts.seed);
-    let vgg = zoo::vgg16();
-    let resnet = zoo::resnet18();
-    for p in all_platforms() {
-        let vgg_ms = iteration_latency_ms(&p, &vgg, &ctx.cfg, &ctx.opts, &ctx.model, &ctx.sweep);
-        let res_ms =
-            iteration_latency_ms(&p, &resnet, &ctx.cfg, &ctx.opts, &ctx.model, &ctx.sweep);
-        fig.row(
-            p.name,
-            vec![p.power_w, p.peak_gops, p.energy_eff_gops_w, vgg_ms, res_ms],
-        );
+    fig.notes = platform_notes(ctx, &benches);
+    for (p, costs) in platform_cost_matrix(ctx, &benches) {
+        let mut vals = vec![
+            p.power_w,
+            p.peak_gops,
+            p.energy_eff_gops_w,
+            // Unpublished area renders as n/a and serializes as null.
+            p.area_mm2.unwrap_or(f64::NAN),
+        ];
+        for c in &costs {
+            vals.push(c.latency_ms);
+            vals.push(c.energy_j * 1e3);
+        }
+        fig.row(p.name, vals);
+    }
+    fig
+}
+
+/// `platforms` figure: every platform's latency and energy as a ratio
+/// over This Work, per benchmark — the comparison chart behind Table 2
+/// (This Work's row is 1.0 everywhere by construction).
+pub fn figure_platforms(ctx: &ReportCtx) -> Figure {
+    let benches = ctx.platform_benchmarks();
+    let mut columns: Vec<String> = Vec::new();
+    for b in &benches {
+        columns.push(format!("{}_latency_x", b.label));
+        columns.push(format!("{}_energy_x", b.label));
+    }
+    let cols: Vec<&str> = columns.iter().map(|c| c.as_str()).collect();
+    let mut fig = Figure::new(
+        "platforms",
+        "Platform comparison: latency/energy relative to This Work (x)",
+        &cols,
+    );
+    fig.notes = platform_notes(ctx, &benches);
+    let matrix = platform_cost_matrix(ctx, &benches);
+    let ours = &matrix.last().expect("platform list is never empty").1;
+    for (p, costs) in &matrix {
+        let mut vals = Vec::new();
+        for (c, o) in costs.iter().zip(ours.iter()) {
+            vals.push(c.latency_ms / o.latency_ms);
+            vals.push(c.energy_j / o.energy_j);
+        }
+        fig.row(p.name, vals);
     }
     fig
 }
@@ -80,12 +163,69 @@ mod tests {
     fn table2_this_work_wins_among_big_accelerators() {
         let ctx = ReportCtx::with_batch(4);
         let f = table2_platforms(&ctx);
-        assert_eq!(f.rows.len(), 8);
+        assert_eq!(f.rows.len(), 11);
         let ours_vgg = f.value("This Work", "vgg16_ms").unwrap();
         let ddn_vgg = f.value("DaDianNao", "vgg16_ms").unwrap();
         let cnv_vgg = f.value("CNVLUTIN", "vgg16_ms").unwrap();
         let cpu_vgg = f.value("Dual Xeon E5 2560 v3", "vgg16_ms").unwrap();
         assert!(ours_vgg < ddn_vgg && ddn_vgg > cnv_vgg && cnv_vgg > ours_vgg);
         assert!(cpu_vgg / ours_vgg > 10.0, "order of magnitude vs CPU");
+        // The measured-sparsity rows are present with live latencies.
+        for name in ["SparseNN", "SparseTrain", "TensorDash"] {
+            let ms = f.value(name, "vgg16_ms").unwrap();
+            assert!(ms.is_finite() && ms > 0.0, "{name}: {ms}");
+        }
+    }
+
+    #[test]
+    fn table2_has_area_and_energy_columns() {
+        let ctx = ReportCtx::with_batch(2);
+        let f = table2_platforms(&ctx);
+        // CPU publishes no die area — explicit n/a, not a number.
+        assert!(f.value("Dual Xeon E5 2560 v3", "area_mm2").unwrap().is_nan());
+        assert!(f.value("This Work", "area_mm2").unwrap() > 0.0);
+        // Measured energy per iteration, in mJ, for every benchmark.
+        for col in ["vgg16_mJ", "resnet18_mJ"] {
+            let ours = f.value("This Work", col).unwrap();
+            let gpu = f.value("NVidia GTX 1080 Ti", col).unwrap();
+            assert!(ours > 0.0 && gpu > 0.0);
+            assert!(gpu > ours, "GPU burns more energy per iteration ({col})");
+        }
+        // The serialized table must stay valid JSON despite the n/a cell.
+        assert!(crate::util::json::Json::parse(&f.to_json().dump()).is_ok());
+    }
+
+    #[test]
+    fn platforms_figure_normalizes_to_this_work() {
+        let ctx = ReportCtx::with_batch(2);
+        let f = figure_platforms(&ctx);
+        assert_eq!(f.rows.len(), 11);
+        for col in ["vgg16_latency_x", "vgg16_energy_x", "resnet18_latency_x"] {
+            assert!((f.value("This Work", col).unwrap() - 1.0).abs() < 1e-12);
+        }
+        // Simulator-consuming accelerator rows sit above 1.0 on latency.
+        for name in ["DaDianNao", "CNVLUTIN", "SparseNN", "SparseTrain", "TensorDash"] {
+            let x = f.value(name, "resnet18_latency_x").unwrap();
+            assert!(x > 1.0, "{name}: {x}");
+        }
+    }
+
+    #[test]
+    fn table2_responds_to_benchmark_override() {
+        use crate::nn::zoo;
+        let ctx = ReportCtx::with_batch(2);
+        let mut ctx2 = ReportCtx::with_batch(2);
+        ctx2.benchmarks = Some(vec![PlatformBenchmark {
+            label: "agos_cnn@test".to_string(),
+            net: zoo::agos_cnn(),
+            opts: ctx2.opts.clone(),
+            model: ctx2.model.clone(),
+        }]);
+        let default = table2_platforms(&ctx);
+        let overridden = table2_platforms(&ctx2);
+        assert!(default.col("vgg16_ms").is_some());
+        assert!(overridden.col("vgg16_ms").is_none());
+        let ms = overridden.value("This Work", "agos_cnn@test_ms").unwrap();
+        assert!(ms.is_finite() && ms > 0.0);
     }
 }

@@ -19,8 +19,11 @@
 //!   `agos cosim --out`. The decoded trace (and its replay bank) stays
 //!   resident keyed by content fingerprint.
 //! * `{"cmd": "figure", "id": …}` / `{"cmd": "table", "id": …}` — the
-//!   named report generators; result `{"figures": [...]}` with each
-//!   figure exactly as `Figure::save` writes it.
+//!   named report generators. A single-figure id returns that figure
+//!   document directly (byte-identical to the cold CLI's `--out` file);
+//!   multi-figure ids (`ablations`, `all`) return `{"figures": [...]}`.
+//!   Optional `"traces"`/`"replay"`/`"scenario"` fields override the
+//!   platform-comparison benchmarks exactly like the CLI flags.
 //!
 //! Warm-state lifetime: banks and gather plans live until the process
 //! exits; the sweep cache is loaded from the configured spill at bind
@@ -44,7 +47,7 @@ use crate::config::{
 };
 use crate::coordinator::{cosim_prepared, PreparedCosim};
 use crate::nn::zoo;
-use crate::report::{generate, ReportCtx};
+use crate::report::{benchmarks_from_scenario, benchmarks_from_trace, generate, ReportCtx};
 use crate::scenario::{scenario_report_json, ScenarioFile};
 use crate::sim::{sweep_report_json, GatherPlanCache, SweepCache, SweepPlan, SweepRunner};
 use crate::sparsity::SparsityModel;
@@ -251,14 +254,52 @@ impl ServeState {
             .ok_or_else(|| anyhow::anyhow!("figure/table request needs an 'id'"))?;
         let opts = self.opts_from(req)?;
         let model = SparsityModel::synthetic(opts.seed);
-        let ctx = ReportCtx {
+        let mut ctx = ReportCtx {
             cfg: self.cfg.clone(),
             opts,
             model,
             sweep: self.runner(),
+            benchmarks: None,
         };
-        let figures: Vec<Json> = generate(id, &ctx)?.iter().map(|f| f.to_json()).collect();
-        Ok(Json::from_pairs(vec![("figures", Json::Arr(figures))]))
+        // Platform-comparison benchmark overrides, mirroring the CLI's
+        // `table --scenario/--traces/--replay` flags (table2/platforms).
+        if let Some(path) = req_str(req, "scenario")? {
+            anyhow::ensure!(
+                matches!(req.get("traces"), Json::Null) && matches!(req.get("replay"), Json::Null),
+                "'scenario' and 'traces'/'replay' are mutually exclusive"
+            );
+            anyhow::ensure!(
+                matches!(req.get("seed"), Json::Null),
+                "a scenario comparison owns 'seed': the file is self-contained, edit it instead"
+            );
+            let scenario = ScenarioFile::load(Path::new(path))?;
+            let ex = scenario.expand(&self.cfg, &ctx.opts)?;
+            ctx.benchmarks = Some(benchmarks_from_scenario(&ex));
+        } else if let Some(path) = req_str(req, "traces")? {
+            let replay = req_bool(req, "replay", false)?;
+            let prep = self.prepared_for(Path::new(path))?;
+            if replay && !prep.has_bank() {
+                anyhow::bail!(
+                    "trace file for '{}' carries no bitmap payloads to replay",
+                    prep.network()
+                );
+            }
+            ctx.benchmarks = Some(benchmarks_from_trace(&prep, &ctx.opts, replay)?);
+        } else if req_bool(req, "replay", false)? {
+            anyhow::bail!("'replay' needs a 'traces' path");
+        }
+        let figures = generate(id, &ctx)?;
+        // A single-figure id returns the figure document itself — the
+        // same bytes the cold CLI's `--out` writes — so `agos request
+        // --out` diffs clean against `agos table/figure --out`.
+        // Multi-figure ids (`ablations`, `all`) keep the list wrapper.
+        if figures.len() == 1 {
+            return Ok(figures[0].to_json());
+        }
+        Ok(Json::from_pairs(vec![(
+            "figures",
+            Json::Arr(figures.iter().map(|f| f.to_json()).collect()),
+        )]))
     }
 
     /// Dispatch one request document to its handler. Compute commands

@@ -1,0 +1,142 @@
+//! Measured per-layer, per-phase density summaries extracted from
+//! simulation results — the bridge between the sweep engine's measured
+//! MAC counts and the analytic platform models in `baselines`.
+//!
+//! A [`NetworkSimResult`] already carries, for every (layer, phase)
+//! entry, the dense MAC count the layer's geometry implies and the MACs
+//! the simulated scheme actually performed. The ratio is the *measured*
+//! density the scheme could exploit: under `Scheme::In` it is the input
+//! operand density, under `Scheme::InOut` the joint input×output
+//! density. Platform models that describe a concrete skip mechanism
+//! (TensorDash's 4:1 operand multiplexer, SparseTrain's BP gradient
+//! pruning, SparseNN's input+output engine) consume these summaries
+//! instead of hand-set constants — and because the source result comes
+//! from the sweep runner, a `--replay` run feeds them real trace
+//! bitmaps through the exact same path.
+
+use crate::nn::Phase;
+
+use super::engine::NetworkSimResult;
+
+/// Measured density of one (layer, phase) entry under one scheme.
+#[derive(Clone, Debug)]
+pub struct LayerDensity {
+    pub name: String,
+    pub phase: Phase,
+    /// Batch-aggregated dense MAC count (geometry, scheme-independent).
+    pub dense_macs: f64,
+    /// performed/dense under the source scheme, clamped to [0, 1]:
+    /// the fraction of dense work the scheme's sparsity left standing.
+    pub density: f64,
+}
+
+/// Per-layer, per-phase measured densities of one simulation result.
+#[derive(Clone, Debug)]
+pub struct DensitySummary {
+    /// The scheme the densities were measured under.
+    pub scheme: crate::config::Scheme,
+    pub layers: Vec<LayerDensity>,
+}
+
+impl DensitySummary {
+    /// Extract the summary from a simulated (possibly replayed) result.
+    pub fn from_result(r: &NetworkSimResult) -> DensitySummary {
+        let layers = r
+            .per_layer
+            .iter()
+            .map(|l| LayerDensity {
+                name: l.name.clone(),
+                phase: l.phase,
+                dense_macs: l.dense_macs,
+                density: if l.dense_macs > 0.0 {
+                    (l.performed_macs / l.dense_macs).clamp(0.0, 1.0)
+                } else {
+                    1.0
+                },
+            })
+            .collect();
+        DensitySummary { scheme: r.scheme, layers }
+    }
+
+    /// MAC-weighted mean density of one phase.
+    pub fn phase_density(&self, phase: Phase) -> f64 {
+        let (mut performed, mut dense) = (0.0, 0.0);
+        for l in self.layers.iter().filter(|l| l.phase == phase) {
+            performed += l.dense_macs * l.density;
+            dense += l.dense_macs;
+        }
+        if dense > 0.0 {
+            performed / dense
+        } else {
+            1.0
+        }
+    }
+
+    /// MAC-weighted mean density across all phases.
+    pub fn overall_density(&self) -> f64 {
+        let (mut performed, mut dense) = (0.0, 0.0);
+        for l in &self.layers {
+            performed += l.dense_macs * l.density;
+            dense += l.dense_macs;
+        }
+        if dense > 0.0 {
+            performed / dense
+        } else {
+            1.0
+        }
+    }
+
+    /// Total dense MACs across all (layer, phase) entries.
+    pub fn total_dense_macs(&self) -> f64 {
+        self.layers.iter().map(|l| l.dense_macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, Scheme, SimOptions};
+    use crate::nn::zoo;
+    use crate::sim::simulate_network;
+    use crate::sparsity::SparsityModel;
+
+    fn summary(scheme: Scheme) -> DensitySummary {
+        let net = zoo::agos_cnn();
+        let cfg = AcceleratorConfig::default();
+        let opts = SimOptions { batch: 1, ..SimOptions::default() };
+        let model = SparsityModel::synthetic(11);
+        DensitySummary::from_result(&simulate_network(&net, &cfg, &opts, &model, scheme))
+    }
+
+    #[test]
+    fn dense_scheme_measures_full_density() {
+        let s = summary(Scheme::Dense);
+        assert!((s.overall_density() - 1.0).abs() < 1e-9, "{}", s.overall_density());
+        for p in Phase::ALL {
+            assert!((s.phase_density(p) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sparser_schemes_measure_lower_density() {
+        let d_in = summary(Scheme::In).overall_density();
+        let d_io = summary(Scheme::InOut).overall_density();
+        assert!(d_in < 1.0, "input sparsity must show up: {d_in}");
+        assert!(d_io <= d_in + 1e-12, "in+out prunes at least as much: {d_io} vs {d_in}");
+        for d in [d_in, d_io] {
+            assert!((0.0..=1.0).contains(&d));
+        }
+    }
+
+    #[test]
+    fn weights_follow_dense_macs() {
+        let s = summary(Scheme::In);
+        assert!(s.total_dense_macs() > 0.0);
+        // The overall density is bounded by the per-phase extremes.
+        let phases: Vec<f64> = Phase::ALL.iter().map(|p| s.phase_density(*p)).collect();
+        let lo = phases.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = phases.iter().cloned().fold(0.0f64, f64::max);
+        let overall = s.overall_density();
+        assert!(overall >= lo - 1e-12 && overall <= hi + 1e-12, "{lo} <= {overall} <= {hi}");
+    }
+}

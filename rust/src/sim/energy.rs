@@ -31,6 +31,21 @@ impl EnergyBreakdown {
             + self.static_j
     }
 
+    /// Every component scaled by `f` — the building block for deriving a
+    /// foreign platform's breakdown from a measured one (the *mix* stays
+    /// measured; the caller sets the total via the scale factor).
+    pub fn scaled(&self, f: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            mac_j: self.mac_j * f,
+            regfile_j: self.regfile_j * f,
+            adder_tree_j: self.adder_tree_j * f,
+            encoder_j: self.encoder_j * f,
+            sram_j: self.sram_j * f,
+            dram_j: self.dram_j * f,
+            static_j: self.static_j * f,
+        }
+    }
+
     pub fn add(&mut self, other: &EnergyBreakdown) {
         self.mac_j += other.mac_j;
         self.regfile_j += other.regfile_j;
@@ -149,6 +164,16 @@ mod tests {
         let e2 = EnergyBreakdown::from_json(&Json::parse(&e.to_json().dump()).unwrap()).unwrap();
         assert_eq!(e, e2);
         assert!(EnergyBreakdown::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn scaled_multiplies_every_component() {
+        let cfg = AcceleratorConfig::default();
+        let e = layer_energy(&cfg, 1e7, 1e5, 1e6, 1e6, 1e5, 1e5);
+        let s = e.scaled(0.5);
+        assert!((s.total() - 0.5 * e.total()).abs() < 1e-15);
+        assert!((s.mac_j - 0.5 * e.mac_j).abs() < 1e-18);
+        assert!((s.static_j - 0.5 * e.static_j).abs() < 1e-18);
     }
 
     #[test]

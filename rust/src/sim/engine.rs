@@ -77,6 +77,17 @@ impl NetworkSimResult {
         self.totals.values().map(|t| t.energy.total()).sum()
     }
 
+    /// Component-wise energy summed across all three phases — the
+    /// measured per-iteration [`EnergyBreakdown`] the platform
+    /// comparison's simulator-consuming rows start from.
+    pub fn energy_breakdown(&self) -> EnergyBreakdown {
+        let mut acc = EnergyBreakdown::default();
+        for t in self.totals.values() {
+            acc.add(&t.energy);
+        }
+        acc
+    }
+
     /// Wall-clock per training iteration at the configured frequency.
     pub fn iteration_seconds(&self, cfg: &AcceleratorConfig) -> f64 {
         self.total_cycles() / cfg.freq_hz

@@ -19,6 +19,7 @@ mod pe;
 mod adder_tree;
 mod backend;
 mod blocking;
+mod density;
 mod tile;
 mod wdu;
 mod memory;
@@ -36,6 +37,7 @@ pub use exact::{count_bits_range, random_bitmap, ExactOutput, ExactPe, OperandPa
 pub use plan::{GatherPlan, GatherPlanCache, PlannedGather, SkipStats};
 pub use replay::{PairMaps, ReplayBank, ReplayMap, StepMaps, TaskMaps};
 pub use blocking::synapse_passes;
+pub use density::{DensitySummary, LayerDensity};
 pub use energy::{layer_energy, EnergyBreakdown};
 pub use engine::{
     build_image_tasks, build_task, image_stream, simulate_image, simulate_network,
